@@ -1,0 +1,78 @@
+//! Ablation study over the design choices DESIGN.md calls out:
+//!
+//!   1. optimizer: Adam (FedPM practice) vs plain SGD — shows Adam is
+//!      the mechanism that makes the tiny per-param regularizer gradient
+//!      actually prune (DESIGN.md §Implementation findings).
+//!   2. aggregation: eq. 8 mean vs Beta-posterior damping.
+//!   3. robustness: full participation vs 40% sampling vs 30% dropout.
+//!
+//! Run: `cargo run --release --example ablation [rounds]`
+
+use anyhow::Result;
+use fedsrn::config::{Algorithm, ExperimentConfig};
+use fedsrn::coordinator::Experiment;
+use fedsrn::fl::MetricsSink;
+
+fn base(rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp_tiny".into();
+    cfg.dataset = "tiny".into();
+    cfg.algorithm = Algorithm::FedPMReg;
+    cfg.lambda = 3.0;
+    cfg.clients = 10;
+    cfg.rounds = rounds;
+    cfg.train_samples = 1500;
+    cfg.test_samples = 300;
+    cfg.lr = 0.1;
+    cfg.seed = 2023;
+    cfg
+}
+
+fn run(label: &str, cfg: ExperimentConfig) -> Result<(String, f64, f64)> {
+    eprintln!("--- {label} ---");
+    let mut sink = MetricsSink::new("", 10_000)?;
+    let mut exp = Experiment::build(cfg)?;
+    let s = exp.run(&mut sink)?;
+    Ok((label.to_string(), s.final_accuracy, s.avg_est_bpp))
+}
+
+fn main() -> Result<()> {
+    let rounds: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(25);
+    let mut rows = Vec::new();
+
+    // 1. optimizer
+    rows.push(run("adam (default)", base(rounds))?);
+    let mut cfg = base(rounds);
+    cfg.adam = false;
+    cfg.lr = 10.0; // SGD needs a far larger lr to move scores at all
+    rows.push(run("sgd lr=10", cfg)?);
+
+    // 2. aggregation
+    let mut cfg = base(rounds);
+    cfg.bayes_prior = 2.0;
+    rows.push(run("bayes prior=2", cfg)?);
+
+    // 3. robustness
+    let mut cfg = base(rounds);
+    cfg.participation = 0.4;
+    rows.push(run("participation=0.4", cfg)?);
+    let mut cfg = base(rounds);
+    cfg.dropout = 0.3;
+    rows.push(run("dropout=0.3", cfg)?);
+
+    println!("\n== ablation (mlp_tiny, lambda=3, {rounds} rounds) ==");
+    println!("{:<20} {:>9} {:>10}", "variant", "final_acc", "avg_estBpp");
+    for (label, acc, bpp) in &rows {
+        println!("{label:<20} {acc:>9.4} {bpp:>10.4}");
+    }
+    println!(
+        "\nexpected shape: adam sparsifies (Bpp well below 1.0) while sgd
+cannot; bayes damping trades a slightly slower Bpp drop for smoother
+early rounds; sampling/dropout cost convergence speed, not correctness."
+    );
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Figure 1 driver: IID FedPM vs FedPM+regularizer.
+//!
+//! Reproduces the paper's Fig. 1 series (validation accuracy and average
+//! Bpp vs rounds) for one dataset. The full-scale paper setup (conv
+//! models, 128-batch, hundreds of rounds) runs through the same harness
+//! with `--model conv4_mnist` once those artifacts are exported; the
+//! default here is the CPU-scale MLP configuration from DESIGN.md
+//! §Substitutions.
+//!
+//! Run: `cargo run --release --example fig1_iid [dataset] [rounds]`
+
+use anyhow::Result;
+use fedsrn::coordinator::figures;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("mnist").to_string();
+    let rounds: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(30);
+    let model = figures::default_model_for(&dataset);
+    let curves = figures::run_fig1(&dataset, model, rounds, 10, 2023, "runs/fig1")?;
+    // Paper-vs-measured note (sec. IV: MNIST 0.8, CIFAR10 0.31,
+    // CIFAR100 0.25 Bpp saved at matched accuracy).
+    let base = &curves[0].summary;
+    let reg = &curves[1].summary;
+    println!(
+        "\npaper-vs-measured: Bpp saved = {:.3} (paper: mnist 0.8 / cifar10 0.31 / cifar100 0.25), acc delta = {:+.4}",
+        base.avg_est_bpp - reg.avg_est_bpp,
+        reg.final_accuracy - base.final_accuracy
+    );
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Figure 2 driver: non-IID accuracy/Bpp trade-off.
+//!
+//! Reproduces the paper's Fig. 2: 30 devices, c classes each, lambda
+//! sweep of the regularized algorithm against FedPM, Top-k (at the same
+//! sparsity), and MV-SignSGD.
+//!
+//! Run: `cargo run --release --example fig2_noniid [dataset] [c] [rounds]`
+
+use anyhow::Result;
+use fedsrn::coordinator::figures;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("mnist").to_string();
+    let c: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let rounds: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(30);
+    let model = figures::default_model_for(&dataset);
+    let lambdas = [0.5f32, 2.0];
+    figures::run_fig2(&dataset, model, rounds, 30, c, &lambdas, 2023, "runs/fig2")?;
+    println!(
+        "\npaper reference (Fig. 2): MNIST c=2 lambda=1 saves ~0.35 Bpp at ~-2% acc; \
+         Top-k and MV-SignSGD converge fast early but plateau below FedPM."
+    );
+    Ok(())
+}

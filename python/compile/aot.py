@@ -1,0 +1,202 @@
+"""AOT exporter: lower the L2 programs to HLO text + weight blobs.
+
+This is the ONLY place Python runs in the whole system, and it runs once
+(`make artifacts`). For each requested model it emits into `artifacts/`:
+
+    <model>.local_train.hlo.txt   client local phase (scan of STE-SGD)
+    <model>.eval.hlo.txt          masked evaluation of a binary mask
+    <model>.dense_grad.hlo.txt    dense fwd/bwd (SignSGD/FedAvg baselines)
+    <model>.weights.bin           frozen w_init, flat f32 little-endian
+    <model>.meta                  key=value manifest the Rust side parses
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DEFAULT_MODELS = ["mlp_tiny", "mlp_mnist", "mlp_cifar10"]
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text (the rust-loadable interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_model(
+    spec: M.ModelSpec,
+    out: pathlib.Path,
+    *,
+    batch: int,
+    steps: int,
+    eval_chunk: int,
+    seed: int,
+    with_dense: bool = True,
+) -> dict:
+    """Export one model's programs + weights; returns the manifest dict."""
+    n = M.n_params(spec)
+    d = spec.input_dim
+
+    # --- frozen weights (the paper's "seed" broadcast, materialized) ----
+    weights = np.asarray(M.init_weights(spec, seed), dtype=np.float32)
+    (out / f"{spec.name}.weights.bin").write_bytes(
+        weights.astype("<f4").tobytes()
+    )
+
+    # --- local_train: wrap to return a flat tuple for rust unwrapping ---
+    local_train = M.make_local_train(spec)
+
+    def lt(scores, weights, xs, ys, seed_, lam, lr, det, opt):
+        s_out, metrics = local_train(
+            scores, weights, xs, ys, seed_, lam, lr, det, opt
+        )
+        return (s_out, metrics)
+
+    lt_lowered = jax.jit(lt).lower(
+        _sds((n,)),
+        _sds((n,)),
+        _sds((steps, batch, d)),
+        _sds((steps, batch), jnp.int32),
+        _sds((), jnp.int32),
+        _sds(()),
+        _sds(()),
+        _sds(()),
+        _sds(()),
+    )
+    (out / f"{spec.name}.local_train.hlo.txt").write_text(
+        to_hlo_text(lt_lowered)
+    )
+
+    # --- eval -----------------------------------------------------------
+    ev = M.make_eval(spec)
+
+    def evf(mask, weights, x, y):
+        return (ev(mask, weights, x, y),)
+
+    ev_lowered = jax.jit(evf).lower(
+        _sds((n,)),
+        _sds((n,)),
+        _sds((eval_chunk, d)),
+        _sds((eval_chunk,), jnp.int32),
+    )
+    (out / f"{spec.name}.eval.hlo.txt").write_text(to_hlo_text(ev_lowered))
+
+    # --- dense_grad (baselines) ------------------------------------------
+    if with_dense:
+        dg = M.make_dense_grad(spec)
+
+        def dgf(weights, x, y):
+            return dg(weights, x, y)
+
+        dg_lowered = jax.jit(dgf).lower(
+            _sds((n,)),
+            _sds((batch, d)),
+            _sds((batch,), jnp.int32),
+        )
+        (out / f"{spec.name}.dense_grad.hlo.txt").write_text(
+            to_hlo_text(dg_lowered)
+        )
+
+    # Per-layer flat layout: "K*N@offset" triples let the Rust side
+    # compute layer-resolved sparsity without knowing model structure.
+    layers = ",".join(
+        f"{k}x{nn}@{off}" for off, (k, nn) in M.param_layout(spec)
+    )
+    manifest = {
+        "model": spec.name,
+        "layers": layers,
+        "n_params": n,
+        "input_dim": d,
+        "n_classes": spec.n_classes,
+        "batch": batch,
+        "steps": steps,
+        "eval_chunk": eval_chunk,
+        "weight_seed": seed,
+        "has_dense_grad": int(with_dense),
+        "weights_file": f"{spec.name}.weights.bin",
+        "local_train_file": f"{spec.name}.local_train.hlo.txt",
+        "eval_file": f"{spec.name}.eval.hlo.txt",
+        "dense_grad_file": f"{spec.name}.dense_grad.hlo.txt"
+        if with_dense
+        else "",
+    }
+    with open(out / f"{spec.name}.meta", "w") as f:
+        for k, v in manifest.items():
+            f.write(f"{k}={v}\n")
+    return manifest
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument(
+        "--models",
+        default=",".join(DEFAULT_MODELS),
+        help="comma-separated model names (see model.build_models)",
+    )
+    p.add_argument("--batch", type=int, default=64, help="minibatch size B")
+    p.add_argument(
+        "--steps", type=int, default=6, help="minibatches per local_train call"
+    )
+    p.add_argument(
+        "--eval-chunk", type=int, default=256, help="eval rows per call"
+    )
+    p.add_argument("--seed", type=int, default=2023, help="weight seed")
+    p.add_argument(
+        "--no-dense",
+        action="store_true",
+        help="skip the dense_grad baseline export (faster)",
+    )
+    args = p.parse_args(argv)
+
+    registry = M.build_models()
+    names = [m.strip() for m in args.models.split(",") if m.strip()]
+    unknown = [m for m in names if m not in registry]
+    if unknown:
+        sys.exit(f"unknown models {unknown}; known: {sorted(registry)}")
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    for name in names:
+        spec = registry[name]
+        man = export_model(
+            spec,
+            out,
+            batch=args.batch,
+            steps=args.steps,
+            eval_chunk=args.eval_chunk,
+            seed=args.seed,
+            with_dense=not args.no_dense,
+        )
+        print(
+            f"exported {name}: n={man['n_params']} "
+            f"B={args.batch} S={args.steps} T={args.eval_chunk}"
+        )
+    # Build stamp consumed by the Makefile dependency rule.
+    (out / ".stamp").write_text(",".join(names) + "\n")
+
+
+if __name__ == "__main__":
+    main()

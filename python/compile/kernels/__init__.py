@@ -1,0 +1,14 @@
+"""L1 Pallas kernels (build-time only; lowered into the exported HLO).
+
+Public surface:
+    masked_dense(x, s, w, u)  — differentiable masked matmul (STE vjp)
+    dense_matmul(x, w)        — plain tiled matmul (baseline path)
+    mask_stats(s, u)          — fused regularizer-sum + mask popcount
+    ref.*                     — pure-jnp oracles for all of the above
+"""
+
+from . import ref
+from .masked_matmul import dense_matmul, masked_dense
+from .mask_stats import mask_stats
+
+__all__ = ["masked_dense", "dense_matmul", "mask_stats", "ref"]

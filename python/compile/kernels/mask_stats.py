@@ -1,0 +1,61 @@
+"""Fused reduction kernel: regularizer numerator + active-parameter count.
+
+The local loss (paper eq. 12) adds (lambda/n) * sum_j sigmoid(s_j); the
+Bpp logging needs the number of ones in the sampled mask. Both are single
+passes over the flat score vector, so one Pallas kernel produces both in
+one sweep — the sigmoid is computed once per element and feeds both the
+sum and the compare.
+
+Output layout: float32 (2,) = [ sum sigmoid(s),  sum 1[u < sigmoid(s)] ].
+Oracle: kernels.ref.mask_stats_ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .masked_matmul import INTERPRET, _PAD_SCORE
+
+DEF_BLOCK = 4096
+
+
+def _stats_kernel(s_ref, u_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    theta = jax.nn.sigmoid(s_ref[...])
+    active = jnp.where(u_ref[...] < theta, 1.0, 0.0)
+    o_ref[0] += jnp.sum(theta)
+    o_ref[1] += jnp.sum(active)
+
+
+def mask_stats(s, u, *, block=DEF_BLOCK):
+    """(sum sigmoid(s), popcount of sampled mask) over flat vectors.
+
+    s, u: float32 (n,). Padding uses _PAD_SCORE / 1.0 so padded entries
+    contribute sigmoid ~= 0 and mask = 0 (mathematically inert).
+    """
+    (n,) = s.shape
+    assert u.shape == (n,)
+    blk = min(block, n) if n > 0 else 1
+    rem = (-n) % blk
+    if rem:
+        s = jnp.pad(s, (0, rem), constant_values=_PAD_SCORE)
+        u = jnp.pad(u, (0, rem), constant_values=1.0)
+    grid = ((n + rem) // blk,)
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
+        interpret=INTERPRET,
+    )(s, u)

@@ -1,0 +1,398 @@
+"""Pallas kernels for the masked affine transform (the paper's hot spot).
+
+Every layer of a score-parameterized sub-network (paper eq. 5) evaluates
+
+    y = x @ (m * w),       m = 1[u < sigmoid(s)]
+
+and every STE backward pass (eq. 7) evaluates the two matching cotangents.
+These three matmul-shaped computations dominate FLOPs, so each is a tiled
+Pallas kernel with the mask generation FUSED into the tile loop: sigmoid,
+compare, and select all happen on tiles already resident in VMEM, so
+masking costs zero extra HBM traffic compared to a plain matmul.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): block shapes are multiples
+of (8, 128) so each tile feeds the MXU directly; the mask select is VPU
+work on the same VMEM residency. On CPU we lower with ``interpret=True``
+(the image's PJRT CPU plugin cannot execute Mosaic custom-calls); the
+BlockSpec structure is unchanged.
+
+Autodiff: ``masked_dense`` carries a ``jax.custom_vjp`` implementing the
+straight-through estimator, so L2 model code simply calls
+``jax.grad(loss)`` and gets STE score gradients computed by the backward
+kernels below.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# CPU PJRT cannot run Mosaic custom-calls; interpret mode lowers the same
+# BlockSpec schedule to plain HLO (see /opt/xla-example/README.md).
+INTERPRET = True
+
+# Default tile shape: (bm, bk) x (bk, bn). Multiples of the (8, 128) TPU
+# register tile so the same BlockSpec maps onto MXU passes unchanged.
+DEF_BM = 64
+DEF_BK = 128
+DEF_BN = 128
+
+
+def _pick_block(dim: int, pref: int, quantum: int) -> int:
+    """Largest block <= pref that is a multiple of `quantum` dividing the
+    (already padded) dimension; falls back to the dimension itself."""
+    b = min(pref, dim)
+    # dim is padded to a multiple of `quantum`, so searching downward in
+    # steps of `quantum` always terminates at a divisor.
+    while b > quantum:
+        if dim % b == 0:
+            return b
+        b -= quantum
+    return quantum if dim % quantum == 0 else dim
+
+
+def _pad_to(a: jnp.ndarray, axis: int, multiple: int, value: float):
+    size = a.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: y[M,N] = x[M,K] @ (1[u < sigmoid(s)] * w)[K,N]
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, s_ref, w_ref, u_ref, o_ref):
+    """One (bm, bn) output tile, accumulated over the K grid axis.
+
+    Grid = (M/bm, N/bn, K/bk); the output BlockSpec maps every k to the
+    same (i, j) tile, so o_ref acts as the f32 accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Fused mask materialization: sigmoid + compare + select on the VMEM
+    # tile, then one MXU-shaped dot.
+    theta = jax.nn.sigmoid(s_ref[...])
+    mw = jnp.where(u_ref[...] < theta, w_ref[...], 0.0)
+    o_ref[...] += jnp.dot(
+        x_ref[...], mw, preferred_element_type=jnp.float32
+    )
+
+
+def _fwd_call(x, s, w, u, bm, bk, bn):
+    m_dim, k_dim = x.shape
+    _, n_dim = w.shape
+    grid = (m_dim // bm, n_dim // bn, k_dim // bk)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        interpret=INTERPRET,
+    )(x, s, w, u)
+
+
+# ---------------------------------------------------------------------------
+# Backward-to-input kernel: dx[M,K] = g[M,N] @ (m * w)[K,N]^T
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dx_kernel(g_ref, s_ref, w_ref, u_ref, o_ref):
+    """One (bm, bk) dx tile accumulated over the N grid axis.
+
+    Grid = (M/bm, K/bk, N/bn). The masked weight tile is recomputed here
+    rather than saved as a residual — recompute is one VPU pass over a
+    tile already needed in VMEM, vs. an extra (K, N) f32 HBM round-trip.
+    """
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    theta = jax.nn.sigmoid(s_ref[...])
+    mw = jnp.where(u_ref[...] < theta, w_ref[...], 0.0)
+    o_ref[...] += jnp.dot(
+        g_ref[...], mw.T, preferred_element_type=jnp.float32
+    )
+
+
+def _bwd_dx_call(g, s, w, u, bm, bk, bn):
+    m_dim, n_dim = g.shape
+    k_dim = w.shape[0]
+    grid = (m_dim // bm, k_dim // bk, n_dim // bn)
+    return pl.pallas_call(
+        _bwd_dx_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),
+            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),
+            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),
+            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, k_dim), jnp.float32),
+        interpret=INTERPRET,
+    )(g, s, w, u)
+
+
+# ---------------------------------------------------------------------------
+# Backward-to-score kernel (STE): ds[K,N] = (x^T g) * w * sigmoid'(s)
+# ---------------------------------------------------------------------------
+
+
+def _bwd_ds_kernel(x_ref, g_ref, s_ref, w_ref, o_ref, *, nm: int):
+    """One (bk, bn) ds tile: accumulate x^T g over the M grid axis, then
+    on the last M step scale elementwise by w * sigmoid'(s) (the straight-
+    through factor, paper eq. 7)."""
+    m = pl.program_id(2)
+
+    @pl.when(m == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].T, g_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(m == nm - 1)
+    def _finalize():
+        theta = jax.nn.sigmoid(s_ref[...])
+        o_ref[...] *= w_ref[...] * theta * (1.0 - theta)
+
+
+def _bwd_ds_call(x, g, s, w, bm, bk, bn):
+    m_dim, k_dim = x.shape
+    n_dim = g.shape[1]
+    nm = m_dim // bm
+    grid = (k_dim // bk, n_dim // bn, nm)
+    return pl.pallas_call(
+        functools.partial(_bwd_ds_kernel, nm=nm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, m: (m, i)),
+            pl.BlockSpec((bm, bn), lambda i, j, m: (m, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, m: (i, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, m: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, m: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k_dim, n_dim), jnp.float32),
+        interpret=INTERPRET,
+    )(x, g, s, w)
+
+
+# ---------------------------------------------------------------------------
+# Padding wrapper + custom_vjp
+# ---------------------------------------------------------------------------
+
+# Scores on padded entries are -BIG so sigmoid ~= 0 and the padded mask is
+# all-zero; padded x columns are 0 so they contribute nothing either way.
+_PAD_SCORE = -1e9
+
+
+def _padded_shapes(m_dim, k_dim, n_dim, bm, bk, bn):
+    pad = lambda d, b: d + ((-d) % b)
+    return pad(m_dim, bm), pad(k_dim, bk), pad(n_dim, bn)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _masked_dense_core(x, s, w, u, bm, bk, bn):
+    return _fwd_call(x, s, w, u, bm, bk, bn)
+
+
+def _core_fwd(x, s, w, u, bm, bk, bn):
+    y = _fwd_call(x, s, w, u, bm, bk, bn)
+    return y, (x, s, w, u)
+
+
+def _core_bwd(bm, bk, bn, res, g):
+    x, s, w, u = res
+    dx = _bwd_dx_call(g, s, w, u, bm, bk, bn)
+    ds = _bwd_ds_call(x, g, s, w, bm, bk, bn)
+    # Frozen weights and uniforms are non-trainable: zero cotangents
+    # (DCE'd by XLA since nothing consumes them).
+    return dx, ds, jnp.zeros_like(w), jnp.zeros_like(u)
+
+
+_masked_dense_core.defvjp(_core_fwd, _core_bwd)
+
+
+def masked_dense(x, s, w, u, *, bm=DEF_BM, bk=DEF_BK, bn=DEF_BN):
+    """Differentiable masked dense layer y = x @ (1[u < sigmoid(s)] * w).
+
+    Shapes: x (M, K); s, w, u (K, N) -> (M, N) float32. Arbitrary shapes
+    are padded up to tile multiples (padding is mathematically inert: see
+    _PAD_SCORE) and the result is sliced back. Gradients flow to `x` and,
+    via the straight-through estimator, to `s`; `w` and `u` are frozen.
+    """
+    m_dim, k_dim = x.shape
+    k2, n_dim = w.shape
+    assert k_dim == k2, f"shape mismatch: x K={k_dim} vs w K={k2}"
+    assert s.shape == w.shape == u.shape
+
+    # Quantum 8 on M (sublane), 128 on K/N (lane) mirrors the TPU tile.
+    # Pad each dim to its quantum, then pick the largest block <= pref
+    # that divides the padded dim; padding to a block multiple afterwards
+    # is then exactly the quantum padding (see _pick_block).
+    pm, pk, pn = _padded_shapes(m_dim, k_dim, n_dim, 8, 128, 128)
+    bm_ = _pick_block(pm, bm, 8)
+    bk_ = _pick_block(pk, bk, 128)
+    bn_ = _pick_block(pn, bn, 128)
+
+    xp = _pad_to(_pad_to(x, 0, bm_, 0.0), 1, bk_, 0.0)
+    sp = _pad_to(_pad_to(s, 0, bk_, _PAD_SCORE), 1, bn_, _PAD_SCORE)
+    wp = _pad_to(_pad_to(w, 0, bk_, 0.0), 1, bn_, 0.0)
+    up = _pad_to(_pad_to(u, 0, bk_, 1.0), 1, bn_, 1.0)
+
+    y = _masked_dense_core(xp, sp, wp, up, bm_, bk_, bn_)
+    return y[:m_dim, :n_dim]
+
+
+# ---------------------------------------------------------------------------
+# Plain dense matmul kernels (baseline path: SignSGD / FedAvg / eval).
+# Unlike masked_dense, weights here ARE trainable, so this carries its own
+# custom_vjp with real dx and dw kernels.
+# ---------------------------------------------------------------------------
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """o[i,j] += a[i,k] @ b[k,j], K on grid axis 2."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _mm_call(a, b, bm, bk, bn):
+    m_dim, k_dim = a.shape
+    n_dim = b.shape[1]
+    grid = (m_dim // bm, n_dim // bn, k_dim // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def _mm_bt_kernel(g_ref, b_ref, o_ref):
+    """o[i,k] += g[i,n] @ b[k,n]^T, N on grid axis 2 (dx pass)."""
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        g_ref[...], b_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def _mm_bt_call(g, b, bm, bk, bn):
+    m_dim, n_dim = g.shape
+    k_dim = b.shape[0]
+    grid = (m_dim // bm, k_dim // bk, n_dim // bn)
+    return pl.pallas_call(
+        _mm_bt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),
+            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, k_dim), jnp.float32),
+        interpret=INTERPRET,
+    )(g, b)
+
+
+def _mm_at_kernel(a_ref, g_ref, o_ref):
+    """o[k,n] += a[m,k]^T @ g[m,n], M on grid axis 2 (dw pass)."""
+    m = pl.program_id(2)
+
+    @pl.when(m == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, g_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _mm_at_call(a, g, bm, bk, bn):
+    m_dim, k_dim = a.shape
+    n_dim = g.shape[1]
+    grid = (k_dim // bk, n_dim // bn, m_dim // bm)
+    return pl.pallas_call(
+        _mm_at_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, m: (m, i)),
+            pl.BlockSpec((bm, bn), lambda i, j, m: (m, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, m: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k_dim, n_dim), jnp.float32),
+        interpret=INTERPRET,
+    )(a, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _dense_core(x, w, bm, bk, bn):
+    return _mm_call(x, w, bm, bk, bn)
+
+
+def _dense_fwd(x, w, bm, bk, bn):
+    return _mm_call(x, w, bm, bk, bn), (x, w)
+
+
+def _dense_bwd(bm, bk, bn, res, g):
+    x, w = res
+    dx = _mm_bt_call(g, w, bm, bk, bn)
+    dw = _mm_at_call(x, g, bm, bk, bn)
+    return dx, dw
+
+
+_dense_core.defvjp(_dense_fwd, _dense_bwd)
+
+
+def dense_matmul(x, w, *, bm=DEF_BM, bk=DEF_BK, bn=DEF_BN):
+    """Plain tiled dense matmul y = x @ w (Pallas), differentiable in both
+    arguments. Baseline path for MV-SignSGD / FedAvg and the masked-eval
+    forward (where the mask is folded into w elementwise at L2)."""
+    m_dim, k_dim = x.shape
+    k2, n_dim = w.shape
+    assert k_dim == k2, f"shape mismatch: x K={k_dim} vs w K={k2}"
+    pm, pk, pn = _padded_shapes(m_dim, k_dim, n_dim, 8, 128, 128)
+    bm_ = _pick_block(pm, bm, 8)
+    bk_ = _pick_block(pk, bk, 128)
+    bn_ = _pick_block(pn, bn, 128)
+    xp = _pad_to(_pad_to(x, 0, bm_, 0.0), 1, bk_, 0.0)
+    wp = _pad_to(_pad_to(w, 0, bk_, 0.0), 1, bn_, 0.0)
+    y = _dense_core(xp, wp, bm_, bk_, bn_)
+    return y[:m_dim, :n_dim]

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with nothing but `jax.numpy` primitives. The pytest suite (and the
+hypothesis sweeps) assert `assert_allclose(kernel(...), ref(...))` over a
+grid of shapes/dtypes, so the kernels can be refactored for performance
+without ever silently changing numerics.
+
+Math recap (paper eq. 5-7):
+    theta = sigmoid(s)                    # per-parameter keep probability
+    m     = 1[u < theta]                  # sampled binary mask, u ~ U[0,1)
+    y     = x @ (m * w)                   # masked affine transform
+
+Straight-through estimator (STE) for the backward pass:
+    dm/dtheta ~= 1   =>   ds = (x^T g) * w * sigmoid'(s)
+where sigmoid'(s) = theta * (1 - theta).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sigmoid(s: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable logistic function (matches jax.nn.sigmoid)."""
+    return 1.0 / (1.0 + jnp.exp(-s))
+
+
+def bernoulli_mask(s: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Sampled binary mask m = 1[u < sigmoid(s)] as float32 {0, 1}."""
+    return (u < sigmoid(s)).astype(jnp.float32)
+
+
+def masked_dense_ref(x, s, w, u):
+    """Forward oracle: y = x @ (m * w), m = 1[u < sigmoid(s)].
+
+    x: (M, K) activations; s, w, u: (K, N) scores / frozen weights /
+    uniforms. Returns (M, N) float32.
+    """
+    m = bernoulli_mask(s, u)
+    return jnp.dot(x, m * w, preferred_element_type=jnp.float32)
+
+
+def masked_dense_dx_ref(g, s, w, u):
+    """Backward-to-input oracle: dx = g @ (m * w)^T.
+
+    g: (M, N) upstream cotangent. Returns (M, K).
+    """
+    m = bernoulli_mask(s, u)
+    return jnp.dot(g, (m * w).T, preferred_element_type=jnp.float32)
+
+
+def masked_dense_ds_ref(x, g, s, w):
+    """Backward-to-score oracle (STE): ds = (x^T g) * w * sigmoid'(s).
+
+    Note the uniforms drop out: straight-through treats dm/dtheta = 1
+    regardless of the sampled outcome. Returns (K, N).
+    """
+    theta = sigmoid(s)
+    return jnp.dot(x.T, g, preferred_element_type=jnp.float32) * w * (
+        theta * (1.0 - theta)
+    )
+
+
+def dense_matmul_ref(x, w):
+    """Plain dense oracle (baseline path): y = x @ w."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def mask_stats_ref(s, u):
+    """Stats oracle: (sum sigmoid(s), sum 1[u < sigmoid(s)]).
+
+    The first entry is the regularizer numerator (paper eq. 12); the
+    second is the number of active parameters in the sampled mask, used
+    for sparsity logging. Returns shape (2,) float32.
+    """
+    theta = sigmoid(s)
+    m = (u < theta).astype(jnp.float32)
+    return jnp.stack([jnp.sum(theta), jnp.sum(m)])

@@ -1,0 +1,468 @@
+"""L2: score-parameterized masked networks (paper eq. 5-7, 12), in JAX.
+
+This module defines the model zoo and the three programs the Rust
+coordinator executes through PJRT:
+
+  * ``make_local_train(spec, ...)`` — one client's local phase: a
+    ``lax.scan`` over S minibatches of STE-SGD on the score vector with
+    the entropy-proxy regularizer (eq. 12) folded into the local loss.
+    One PJRT call per local phase, not per minibatch.
+  * ``make_eval(spec, ...)`` — masked-forward evaluation of a *binary
+    mask* (sampled or thresholded server-side, in Rust).
+  * ``make_dense_grad(spec, ...)`` — plain dense forward/backward used by
+    the MV-SignSGD and FedAvg baselines.
+
+All parameters live in ONE flat f32 vector (scores, weights, masks and
+uniforms all share the same layout, computed by ``param_layout``); the
+Rust side never needs to know layer shapes. Every matmul-shaped op goes
+through the L1 Pallas kernels (`kernels.masked_dense` / `dense_matmul`).
+
+Networks follow the strong-LTH conventions of Ramanujan et al. '19 /
+Zhou et al. '19 / FedPM: no biases, no batch-norm; frozen weights drawn
+from the signed-constant distribution U{-sc, +sc} with sc the std of the
+Kaiming Normal initializer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import masked_dense, dense_matmul, mask_stats
+
+# ---------------------------------------------------------------------------
+# Model specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    """3x3 SAME convolution (no bias), ReLU applied by the forward pass."""
+
+    cin: int
+    cout: int
+    ksize: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    """2x2 max-pool, stride 2."""
+
+    window: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    """Fully-connected layer (no bias)."""
+
+    din: int
+    dout: int
+
+
+Layer = object  # Conv | Pool | Dense
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A network: input geometry + layer stack.
+
+    input_hwc is (H, W, C) for conv stacks or (D,) for pure MLPs; the wire
+    format is always the flattened (B, prod(input_hwc)) f32 tensor.
+    """
+
+    name: str
+    input_hwc: Tuple[int, ...]
+    layers: Tuple[Layer, ...]
+    n_classes: int
+
+    @property
+    def input_dim(self) -> int:
+        return int(math.prod(self.input_hwc))
+
+
+def _convnet(name, hwc, widths, fc, n_classes):
+    """Ramanujan-style Conv-N: pairs of 3x3 convs with pools between
+    groups, then an FC head. `widths` is the per-group channel list, e.g.
+    (64, 128) -> conv64,conv64,pool,conv128,conv128,pool."""
+    h, w, c = hwc
+    layers: List[Layer] = []
+    cin = c
+    for width in widths:
+        layers.append(Conv(cin, width))
+        layers.append(Conv(width, width))
+        layers.append(Pool())
+        cin = width
+        h //= 2
+        w //= 2
+    flat = h * w * cin
+    dims = [flat, *fc, n_classes]
+    for din, dout in zip(dims[:-1], dims[1:]):
+        layers.append(Dense(din, dout))
+    return ModelSpec(name, hwc, tuple(layers), n_classes)
+
+
+def _mlp(name, dims, n_classes, hwc=None):
+    layers = tuple(
+        Dense(din, dout) for din, dout in zip(dims[:-1], dims[1:])
+    )
+    return ModelSpec(name, hwc or (dims[0],), layers, n_classes)
+
+
+def build_models() -> Dict[str, ModelSpec]:
+    """The model registry. Paper models (4/6/10-Conv as in Zhou et al.)
+    plus MLP variants used for fast CPU-scale experiments and tests."""
+    return {
+        # Fast models for CPU-scale runs and the rust integration tests.
+        "mlp_tiny": _mlp("mlp_tiny", [64, 64, 10], 10),
+        "mlp_mnist": _mlp(
+            "mlp_mnist", [784, 256, 256, 10], 10, hwc=(28, 28, 1)
+        ),
+        "mlp_cifar10": _mlp(
+            "mlp_cifar10", [3072, 256, 256, 10], 10, hwc=(32, 32, 3)
+        ),
+        "mlp_cifar100": _mlp(
+            "mlp_cifar100", [3072, 512, 256, 100], 100, hwc=(32, 32, 3)
+        ),
+        # Paper models (sec. IV): 4Conv on MNIST, 6Conv on CIFAR10,
+        # 10Conv on CIFAR100, FC head 256-256-classes.
+        "conv2_mnist": _convnet(
+            "conv2_mnist", (28, 28, 1), (32,), (256,), 10
+        ),
+        "conv4_mnist": _convnet(
+            "conv4_mnist", (28, 28, 1), (64, 64), (256, 256), 10
+        ),
+        "conv6_cifar10": _convnet(
+            "conv6_cifar10", (32, 32, 3), (64, 128, 256), (256, 256), 10
+        ),
+        "conv10_cifar100": _convnet(
+            "conv10_cifar100",
+            (32, 32, 3),
+            (64, 64, 128, 128, 256),
+            (256, 256),
+            100,
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout
+# ---------------------------------------------------------------------------
+
+
+def layer_param_shapes(spec: ModelSpec) -> List[Tuple[int, int]]:
+    """(K, N) im2col-style weight matrix per parameterized layer.
+
+    Convs are stored as (ksize*ksize*cin, cout) — exactly the shape the
+    im2col matmul consumes, so slicing the flat vector is a free reshape.
+    """
+    shapes = []
+    for layer in spec.layers:
+        if isinstance(layer, Conv):
+            shapes.append((layer.ksize * layer.ksize * layer.cin, layer.cout))
+        elif isinstance(layer, Dense):
+            shapes.append((layer.din, layer.dout))
+    return shapes
+
+
+def param_layout(spec: ModelSpec) -> List[Tuple[int, Tuple[int, int]]]:
+    """[(flat offset, (K, N))] per parameterized layer."""
+    out, off = [], 0
+    for shape in layer_param_shapes(spec):
+        out.append((off, shape))
+        off += shape[0] * shape[1]
+    return out
+
+
+def n_params(spec: ModelSpec) -> int:
+    return sum(k * n for k, n in layer_param_shapes(spec))
+
+
+def _split_flat(spec: ModelSpec, flat: jnp.ndarray) -> List[jnp.ndarray]:
+    """Flat (n,) vector -> per-layer (K, N) views (static slices)."""
+    return [
+        flat[off : off + k * n].reshape(k, n)
+        for off, (k, n) in param_layout(spec)
+    ]
+
+
+def init_weights(spec: ModelSpec, seed: int) -> jnp.ndarray:
+    """Frozen random weights: signed-constant U{-sc, sc} per layer, with
+    sc the Kaiming-Normal std sqrt(2 / fan_in) (paper sec. IV)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for i, (k, n) in enumerate(layer_param_shapes(spec)):
+        sc = math.sqrt(2.0 / k)
+        sign = jax.random.rademacher(
+            jax.random.fold_in(key, i), (k * n,), dtype=jnp.float32
+        )
+        chunks.append(sign * sc)
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _im2col(x: jnp.ndarray, ksize: int) -> jnp.ndarray:
+    """SAME-padding patch extraction: (B,H,W,C) -> (B*H*W, k*k*C).
+
+    Pure data movement (k*k static slices + concat); the matmul that
+    consumes the result is the L1 Pallas kernel. Patch order (di, dj, c)
+    matches the (k*k*cin, cout) weight layout in layer_param_shapes.
+    """
+    b, h, w, c = x.shape
+    pad = ksize // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = [
+        xp[:, di : di + h, dj : dj + w, :]
+        for di in range(ksize)
+        for dj in range(ksize)
+    ]
+    patches = jnp.concatenate(cols, axis=-1)  # (B, H, W, k*k*C)
+    return patches.reshape(b * h * w, ksize * ksize * c)
+
+
+def _maxpool(x: jnp.ndarray, window: int) -> jnp.ndarray:
+    """(B,H,W,C) 2x2/stride-2 max pool via reduce_window."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, window, window, 1),
+        (1, window, window, 1),
+        "VALID",
+    )
+
+
+def _forward(
+    spec: ModelSpec,
+    x_flat: jnp.ndarray,
+    matmul: Callable[[int, jnp.ndarray, Tuple[int, int]], jnp.ndarray],
+) -> jnp.ndarray:
+    """Shared forward skeleton; `matmul(layer_idx, cols, (K, N))` supplies
+    the (masked or dense) affine transform for parameterized layer i."""
+    b = x_flat.shape[0]
+    if len(spec.input_hwc) == 3:
+        h, w, c = spec.input_hwc
+        x = x_flat.reshape(b, h, w, c)
+    else:
+        x = x_flat
+    li = 0  # parameterized-layer index
+    n_param_layers = len(layer_param_shapes(spec))
+    for layer in spec.layers:
+        if isinstance(layer, Conv):
+            bb, h, w, c = x.shape
+            cols = _im2col(x, layer.ksize)
+            y = matmul(li, cols, (layer.ksize**2 * layer.cin, layer.cout))
+            x = jax.nn.relu(y).reshape(bb, h, w, layer.cout)
+            li += 1
+        elif isinstance(layer, Pool):
+            x = _maxpool(x, layer.window)
+        elif isinstance(layer, Dense):
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            y = matmul(li, x, (layer.din, layer.dout))
+            li += 1
+            # ReLU on every FC layer except the logits.
+            x = y if li == n_param_layers else jax.nn.relu(y)
+        else:  # pragma: no cover - spec construction guards this
+            raise TypeError(f"unknown layer {layer!r}")
+    return x  # logits (B, n_classes)
+
+
+def forward_masked(spec, x_flat, s_flat, w_flat, u_flat):
+    """Stochastic sub-network forward: logits of y_m, m = 1[u < sig(s)].
+
+    Differentiable w.r.t. s via the STE custom_vjp in the Pallas kernel.
+    """
+    ss, ws, us = (
+        _split_flat(spec, v) for v in (s_flat, w_flat, u_flat)
+    )
+    ss, ws, us = list(ss), list(ws), list(us)
+
+    def matmul(i, cols, shape):
+        return masked_dense(cols, ss[i], ws[i], us[i])
+
+    return _forward(spec, x_flat, matmul)
+
+
+def forward_with_mask(spec, x_flat, m_flat, w_flat):
+    """Deterministic sub-network forward given a binary mask (server-side
+    sampled / thresholded). Masking is elementwise at L2; the matmul is
+    the plain tiled Pallas kernel."""
+    ms, ws = list(_split_flat(spec, m_flat)), list(_split_flat(spec, w_flat))
+
+    def matmul(i, cols, shape):
+        return dense_matmul(cols, ms[i] * ws[i])
+
+    return _forward(spec, x_flat, matmul)
+
+
+def forward_dense(spec, x_flat, w_flat):
+    """Plain dense forward (baseline path for SignSGD / FedAvg)."""
+    ws = list(_split_flat(spec, w_flat))
+
+    def matmul(i, cols, shape):
+        return dense_matmul(cols, ws[i])
+
+    return _forward(spec, x_flat, matmul)
+
+
+# ---------------------------------------------------------------------------
+# Losses and exported programs
+# ---------------------------------------------------------------------------
+
+
+def _ce_loss(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy from logits; y int32 class ids."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _correct(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+
+def make_local_train(spec: ModelSpec):
+    """Build the client local-phase program (paper eq. 6-7 + eq. 12).
+
+    Signature (all f32 unless noted):
+        scores  (n,)           carried score vector s_i
+        weights (n,)           frozen w_init
+        xs      (S, B, D)      minibatch inputs
+        ys      (S, B) int32   minibatch labels
+        seed    i32 scalar     per-(client, round) Bernoulli stream seed
+        lam     f32 scalar     regularization strength lambda
+        lr      f32 scalar     SGD learning rate eta
+        det     f32 scalar     0.0 = stochastic sampling (FedPM);
+                               1.0 = deterministic masking u == 0.5, i.e.
+                               m = 1[sigmoid(s) > 0.5] (FedMask-style)
+        opt     f32 scalar     0.0 = plain SGD; 1.0 = Adam (beta1=0.9,
+                               beta2=0.999) — FedPM optimizes scores with
+                               Adam, which is what lets the tiny per-param
+                               regularizer gradient lambda/n actually
+                               prune redundant parameters (the normalized
+                               update magnitude is lr whenever the data
+                               gradient is ~0 but the reg push is
+                               consistent). Adam state is local to the
+                               call (re-warmed per S-step scan), akin to
+                               the paper's per-round local optimization.
+    Returns:
+        new_scores (n,)
+        metrics    (4,) = [mean loss, total correct,
+                           sum sigmoid(s') (regularizer numerator),
+                           active count of a mask sampled from s']
+    """
+    n = n_params(spec)
+
+    def local_train(scores, weights, xs, ys, seed, lam, lr, det, opt):
+        # 'rbg' keys lower to the XLA RngBitGenerator op, ~1.5x cheaper
+        # than threefry on CPU/TPU for the (steps x n) uniform draws —
+        # measured 167 -> 143 ms/call on mlp_mnist (EXPERIMENTS.md §Perf).
+        base = jax.random.key(seed.astype(jnp.uint32), impl="rbg")
+        b1, b2, eps = 0.9, 0.999, 1e-8
+
+        def loss_fn(s, x, y, u):
+            logits = forward_masked(spec, x, s, weights, u)
+            # eq. 12: CE + (lambda/n) * sum_j sigmoid(s_j)
+            reg = jnp.sum(jax.nn.sigmoid(s)) / float(n)
+            return _ce_loss(logits, y) + lam * reg, logits
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def step(carry, inp):
+            s, m, v, t = carry
+            x, y, h = inp
+            u_rand = jax.random.uniform(jax.random.fold_in(base, h), (n,))
+            # det=1 pins u to 0.5: masked_dense's strict `u < sigma(s)`
+            # then yields the deterministic mask 1[sigma(s) > 0.5].
+            u = det * 0.5 + (1.0 - det) * u_rand
+            (loss, logits), g = grad_fn(s, x, y, u)
+            # Adam (opt=1) or plain SGD (opt=0), blended by the flag so
+            # one compiled program serves both.
+            t = t + 1.0
+            m = b1 * m + (1.0 - b1) * g
+            v = b2 * v + (1.0 - b2) * g * g
+            mhat = m / (1.0 - b1**t)
+            vhat = v / (1.0 - b2**t)
+            adam_step = mhat / (jnp.sqrt(vhat) + eps)
+            s = s - lr * (opt * adam_step + (1.0 - opt) * g)
+            return (s, m, v, t), (loss, _correct(logits, y))
+
+        steps = jnp.arange(xs.shape[0], dtype=jnp.uint32)
+        carry0 = (scores, jnp.zeros((n,)), jnp.zeros((n,)), jnp.float32(0.0))
+        (s_out, _, _, _), (losses, corrects) = jax.lax.scan(
+            step, carry0, (xs, ys, steps)
+        )
+        # Final sparsity stats through the fused L1 reduction kernel.
+        u_fin = jax.random.uniform(jax.random.fold_in(base, 0x5EED), (n,))
+        stats = mask_stats(s_out, u_fin)
+        metrics = jnp.stack(
+            [jnp.mean(losses), jnp.sum(corrects), stats[0], stats[1]]
+        )
+        return s_out, metrics
+
+    return local_train
+
+
+def make_eval(spec: ModelSpec):
+    """Build the masked-eval program.
+
+    Signature: mask (n,), weights (n,), x (T, D), y (T,) int32
+    Returns (2,) = [correct count, summed CE loss].
+
+    Rows with y < 0 are PADDING (the Rust side pads the last chunk of an
+    arbitrary-size test set): they contribute to neither count nor loss.
+    """
+
+    def eval_mask(mask, weights, x, y):
+        logits = forward_with_mask(spec, x, mask, weights)
+        logp = jax.nn.log_softmax(logits)
+        valid = (y >= 0).astype(jnp.float32)
+        y_safe = jnp.maximum(y, 0)
+        per_row = -jnp.take_along_axis(logp, y_safe[:, None], axis=1)[:, 0]
+        loss_sum = jnp.sum(per_row * valid)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=1) == y).astype(jnp.float32) * valid
+        )
+        return jnp.stack([correct, loss_sum])
+
+    return eval_mask
+
+
+def make_dense_grad(spec: ModelSpec):
+    """Build the dense forward/backward program (SignSGD / FedAvg
+    baselines).
+
+    Signature: weights (n,), x (B, D), y (B,) int32
+    Returns (grads (n,), metrics (2,) = [mean loss, correct]).
+
+    Rows with y < 0 are padding (Rust pads ragged last batches): they are
+    excluded from both the loss mean and the gradient.
+    """
+
+    def dense_grad(weights, x, y):
+        valid = (y >= 0).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(valid), 1.0)
+        y_safe = jnp.maximum(y, 0)
+
+        def loss_fn(w):
+            logits = forward_dense(spec, x, w)
+            logp = jax.nn.log_softmax(logits)
+            per_row = -jnp.take_along_axis(logp, y_safe[:, None], axis=1)[:, 0]
+            return jnp.sum(per_row * valid) / denom, logits
+
+        (loss, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            weights
+        )
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=1) == y).astype(jnp.float32) * valid
+        )
+        return g, jnp.stack([loss, correct])
+
+    return dense_grad

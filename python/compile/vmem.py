@@ -1,0 +1,177 @@
+"""TPU resource estimator for the L1 Pallas kernels.
+
+interpret=True gives CPU-numpy execution only, so real-TPU performance
+is *estimated structurally* from the BlockSpec schedule (DESIGN.md
+§Perf): for each kernel invocation shape this module reports
+
+  * VMEM residency per grid step (all tiles the kernel touches),
+  * MXU utilization = useful MACs / MACs of the padded tile schedule,
+  * arithmetic intensity (FLOPs per HBM byte, assuming each tile is
+    fetched once per grid step it appears in),
+  * roofline-projected time on a TPU-v4-like core (275 TFLOP/s bf16,
+    1.2 TB/s HBM, 16 MiB VMEM) and the implied efficiency ratio.
+
+Run `python -m compile.vmem` for the table the DESIGN.md §Perf section
+embeds; pytest checks the arithmetic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List
+
+from . import model as M
+from .kernels.masked_matmul import DEF_BK, DEF_BM, DEF_BN, _pick_block
+
+# TPU-v4-like envelope (per core).
+PEAK_FLOPS = 275e12  # bf16 MXU
+HBM_BW = 1.2e12  # bytes/s
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class KernelEstimate:
+    """Structural estimate for one masked_dense invocation shape."""
+
+    name: str
+    m: int
+    k: int
+    n: int
+    bm: int
+    bk: int
+    bn: int
+
+    @property
+    def padded(self):
+        pad = lambda d, b: d + ((-d) % b)
+        return pad(self.m, self.bm), pad(self.k, self.bk), pad(self.n, self.bn)
+
+    @property
+    def grid(self):
+        pm, pk, pn = self.padded
+        return pm // self.bm, pn // self.bn, pk // self.bk
+
+    @property
+    def vmem_per_step(self) -> int:
+        """Bytes resident per grid step: x tile + (s, w, u) tiles +
+        output accumulator tile, all f32."""
+        return 4 * (
+            self.bm * self.bk  # x
+            + 3 * self.bk * self.bn  # s, w, u
+            + self.bm * self.bn  # acc
+        )
+
+    @property
+    def useful_macs(self) -> int:
+        return self.m * self.k * self.n
+
+    @property
+    def padded_macs(self) -> int:
+        pm, pk, pn = self.padded
+        return pm * pk * pn
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Fraction of issued MACs that are useful (padding waste)."""
+        return self.useful_macs / self.padded_macs
+
+    @property
+    def hbm_bytes(self) -> int:
+        """Bytes moved per invocation: every tile fetched once per grid
+        step that references it + one output writeback."""
+        gm, gn, gk = self.grid
+        return 4 * (
+            gm * gk * gn * self.bm * self.bk  # x tiles (re-fetched per n)
+            + gk * gn * gm * 3 * self.bk * self.bn  # s,w,u tiles (per m)
+            + gm * gn * self.bm * self.bn  # output writeback
+        )
+
+    @property
+    def flops(self) -> int:
+        # 2 FLOPs per MAC on the padded schedule + the fused mask ops
+        # (sigmoid+cmp+select ~ 4 VPU flops per (k,n) element per m-tile)
+        gm = self.grid[0]
+        pm, pk, pn = self.padded
+        return 2 * self.padded_macs + 4 * gm * pk * pn
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / self.hbm_bytes
+
+    @property
+    def roofline_time_s(self) -> float:
+        """max(compute-bound, bandwidth-bound) time on the envelope."""
+        return max(self.flops / PEAK_FLOPS, self.hbm_bytes / HBM_BW)
+
+    @property
+    def efficiency_ratio(self) -> float:
+        """Achievable fraction of peak under this schedule's roofline
+        (the paper-efficiency metric DESIGN.md §Perf targets)."""
+        compute_time = self.flops / PEAK_FLOPS
+        return (compute_time / self.roofline_time_s) * self.mxu_utilization
+
+    def fits_vmem(self) -> bool:
+        # double-buffered: 2x tiles in flight
+        return 2 * self.vmem_per_step <= VMEM_BYTES
+
+    def row(self) -> str:
+        gm, gn, gk = self.grid
+        return (
+            f"{self.name:<26} {self.m:>6}x{self.k:<6}x{self.n:<5}"
+            f" ({self.bm:>3},{self.bk:>3},{self.bn:>3})"
+            f" {gm * gn * gk:>5} {self.vmem_per_step / 1024:>8.0f}K"
+            f" {'Y' if self.fits_vmem() else 'N':>4}"
+            f" {self.mxu_utilization:>6.2f} {self.arithmetic_intensity:>7.1f}"
+            f" {self.roofline_time_s * 1e6:>9.2f}us {self.efficiency_ratio:>6.2f}"
+        )
+
+
+def estimate(name: str, m: int, k: int, n: int) -> KernelEstimate:
+    """Apply the same block-picking logic as the kernel wrapper."""
+    pad = lambda d, q: d + ((-d) % q)
+    pm, pk, pn = pad(m, 8), pad(k, 128), pad(n, 128)
+    return KernelEstimate(
+        name,
+        m,
+        k,
+        n,
+        _pick_block(pm, DEF_BM, 8),
+        _pick_block(pk, DEF_BK, 128),
+        _pick_block(pn, DEF_BN, 128),
+    )
+
+
+def model_estimates(model_name: str, batch: int = 64) -> List[KernelEstimate]:
+    """Per-layer masked_dense estimates for one model's forward pass."""
+    spec = M.build_models()[model_name]
+    out = []
+    rows = batch
+    if len(spec.input_hwc) == 3:
+        h, w, _ = spec.input_hwc
+        conv_rows = batch * h * w
+    else:
+        conv_rows = batch
+    for i, (k, n) in enumerate(M.layer_param_shapes(spec)):
+        layer = [l for l in spec.layers if isinstance(l, (M.Conv, M.Dense))][i]
+        m_rows = conv_rows if isinstance(layer, M.Conv) else rows
+        out.append(estimate(f"{model_name}/L{i}", m_rows, k, n))
+    return out
+
+
+HEADER = (
+    f"{'kernel':<26} {'M x K x N':<20} {'blocks':<13} {'grid':>5} "
+    f"{'VMEM/step':>9} {'fit':>4} {'MXUutil':>6} {'FLOP/B':>7} "
+    f"{'roofline':>11} {'eff':>6}"
+)
+
+
+def main() -> None:
+    print(HEADER)
+    for model in ["mlp_tiny", "mlp_mnist", "mlp_cifar10", "conv4_mnist"]:
+        for est in model_estimates(model):
+            print(est.row())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compute layer: every kernel
+is checked against its oracle over hand-picked shapes (tile-aligned,
+tile-straddling, degenerate) and a hypothesis sweep of random shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense_matmul, mask_stats, masked_dense, ref
+
+TOL = dict(rtol=1e-4, atol=1e-5)
+# Backward passes accumulate across tiles in a different order than the
+# single-dot oracle; magnitudes reach ~1e3, so scale the tolerance.
+TOL_GRAD = dict(rtol=2e-3, atol=1e-3)
+
+
+def _rand(key, *shapes):
+    ks = jax.random.split(key, len(shapes))
+    return [jax.random.normal(k, s, dtype=jnp.float32) for k, s in zip(ks, shapes)]
+
+
+def _inputs(m, k, n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x, s, w = _rand(key, (m, k), (k, n), (k, n))
+    u = jax.random.uniform(jax.random.fold_in(key, 99), (k, n))
+    return x, s, w, u
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+SHAPES = [
+    (8, 128, 128),     # exactly one tile
+    (64, 256, 256),    # multiple tiles, aligned
+    (1, 1, 1),         # degenerate
+    (3, 7, 5),         # tiny unaligned
+    (20, 70, 33),      # unaligned all dims
+    (65, 129, 130),    # tile + 1 straddle
+    (128, 784, 10),    # MLP-logits-like (small N)
+    (16, 900, 256),    # conv-im2col-like
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_masked_dense_forward(m, k, n):
+    x, s, w, u = _inputs(m, k, n)
+    got = masked_dense(x, s, w, u)
+    want = ref.masked_dense_ref(x, s, w, u)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_masked_dense_grads(m, k, n):
+    x, s, w, u = _inputs(m, k, n, seed=1)
+
+    def f(x, s):
+        return jnp.sum(masked_dense(x, s, w, u) ** 2)
+
+    gx, gs = jax.grad(f, argnums=(0, 1))(x, s)
+    g = 2.0 * ref.masked_dense_ref(x, s, w, u)
+    np.testing.assert_allclose(
+        gx, ref.masked_dense_dx_ref(g, s, w, u), **TOL_GRAD
+    )
+    np.testing.assert_allclose(
+        gs, ref.masked_dense_ds_ref(x, g, s, w), **TOL_GRAD
+    )
+
+
+def test_forward_under_jit_and_vjp_consistency():
+    x, s, w, u = _inputs(24, 100, 40, seed=2)
+    got = jax.jit(masked_dense)(x, s, w, u)
+    np.testing.assert_allclose(got, ref.masked_dense_ref(x, s, w, u), **TOL)
+    # custom_vjp forward must agree with the primal path
+    y, vjp = jax.vjp(lambda s_: masked_dense(x, s_, w, u), s)
+    np.testing.assert_allclose(y, got, **TOL)
+    (ds,) = vjp(jnp.ones_like(y))
+    np.testing.assert_allclose(
+        ds, ref.masked_dense_ds_ref(x, jnp.ones_like(y), s, w), **TOL
+    )
+
+
+def test_extreme_scores_saturate_mask():
+    """sigmoid(+-big) -> mask all-ones / all-zeros exactly."""
+    x, _, w, u = _inputs(8, 32, 16, seed=3)
+    hi = jnp.full((32, 16), 50.0)
+    lo = jnp.full((32, 16), -50.0)
+    np.testing.assert_allclose(
+        masked_dense(x, hi, w, u), ref.dense_matmul_ref(x, w), **TOL
+    )
+    np.testing.assert_allclose(
+        masked_dense(x, lo, w, u), jnp.zeros((8, 16)), atol=1e-6
+    )
+
+
+def test_mask_is_binary_event_u_equals_theta():
+    """The mask convention is strict: m = 1[u < sigma(s)], so u == theta
+    must yield 0 (matters for the deterministic FedMask u=0.5 trick)."""
+    x = jnp.ones((1, 4))
+    w = jnp.ones((4, 1))
+    s = jnp.zeros((4, 1))        # theta = 0.5 exactly
+    u = jnp.full((4, 1), 0.5)    # u == theta -> mask 0
+    np.testing.assert_allclose(masked_dense(x, s, w, u), [[0.0]], atol=0)
+    u2 = jnp.full((4, 1), 0.4999)
+    np.testing.assert_allclose(masked_dense(x, s, w, u2), [[4.0]], atol=1e-6)
+
+
+def test_frozen_inputs_get_zero_grads():
+    x, s, w, u = _inputs(8, 16, 8, seed=4)
+    gw, gu = jax.grad(
+        lambda w_, u_: jnp.sum(masked_dense(x, s, w_, u_)), argnums=(0, 1)
+    )(w, u)
+    np.testing.assert_allclose(gw, jnp.zeros_like(w), atol=0)
+    np.testing.assert_allclose(gu, jnp.zeros_like(u), atol=0)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 128, 128), (20, 70, 33), (65, 129, 130)])
+def test_dense_matmul(m, k, n):
+    x, _, w, _ = _inputs(m, k, n, seed=5)
+    np.testing.assert_allclose(
+        dense_matmul(x, w), ref.dense_matmul_ref(x, w), **TOL
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 128, 128), (20, 70, 33), (64, 256, 256)])
+def test_dense_matmul_grads(m, k, n):
+    """dense_matmul must carry REAL weight gradients (the SignSGD /
+    FedAvg baselines train weights through it — regression test for the
+    zero-dw custom_vjp bug)."""
+    x, _, w, _ = _inputs(m, k, n, seed=6)
+
+    def f(x_, w_):
+        return jnp.sum(dense_matmul(x_, w_) ** 2)
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    g = 2.0 * ref.dense_matmul_ref(x, w)
+    np.testing.assert_allclose(gx, g @ w.T, **TOL_GRAD)
+    np.testing.assert_allclose(gw, x.T @ g, **TOL_GRAD)
+    assert float(jnp.max(jnp.abs(gw))) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# mask_stats
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 7, 4096, 5000, 12288])
+def test_mask_stats(n):
+    key = jax.random.PRNGKey(n)
+    s = jax.random.normal(key, (n,)) * 3.0
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    got = mask_stats(s, u)
+    want = ref.mask_stats_ref(s, u)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_mask_stats_all_active_and_none():
+    n = 1000
+    u = jnp.full((n,), 0.5)
+    hi = mask_stats(jnp.full((n,), 40.0), u)
+    lo = mask_stats(jnp.full((n,), -40.0), u)
+    np.testing.assert_allclose(hi, [n, n], rtol=1e-6)
+    np.testing.assert_allclose(lo, [0.0, 0.0], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: random shapes + seeds against the oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 200),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_masked_dense(m, k, n, seed):
+    x, s, w, u = _inputs(m, k, n, seed=seed)
+    np.testing.assert_allclose(
+        masked_dense(x, s, w, u), ref.masked_dense_ref(x, s, w, u), **TOL
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 100),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_ste_grad(m, k, n, seed):
+    x, s, w, u = _inputs(m, k, n, seed=seed)
+    gs = jax.grad(lambda s_: jnp.sum(masked_dense(x, s_, w, u)))(s)
+    np.testing.assert_allclose(
+        gs,
+        ref.masked_dense_ds_ref(x, jnp.ones((m, n), jnp.float32), s, w),
+        **TOL,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 20000), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_mask_stats(n, seed):
+    key = jax.random.PRNGKey(seed)
+    s = jax.random.normal(key, (n,)) * 4.0
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    np.testing.assert_allclose(
+        mask_stats(s, u), ref.mask_stats_ref(s, u), rtol=2e-4, atol=1e-3
+    )

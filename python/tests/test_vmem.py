@@ -1,0 +1,56 @@
+"""Checks for the structural TPU estimator (perf deliverable)."""
+
+import pytest
+
+from compile import vmem
+from compile.vmem import estimate, model_estimates
+
+
+def test_padding_and_grid():
+    e = estimate("t", 64, 784, 256)
+    assert e.padded == (64, 896, 256)
+    gm, gn, gk = e.grid
+    assert gm * e.bm == 64 and gn * e.bn == 256 and gk * e.bk == 896
+
+
+def test_vmem_accounting_exact():
+    e = estimate("t", 64, 128, 128)
+    # bm=64, bk=128, bn=128: x=64*128, s/w/u=3*128*128, acc=64*128 (f32)
+    assert e.vmem_per_step == 4 * (64 * 128 + 3 * 128 * 128 + 64 * 128)
+    assert e.fits_vmem()
+
+
+def test_mxu_utilization_bounds():
+    aligned = estimate("a", 64, 256, 256)
+    assert aligned.mxu_utilization == 1.0
+    ragged = estimate("r", 60, 130, 10)
+    assert 0.0 < ragged.mxu_utilization < 1.0
+    # utilization = useful / padded by definition
+    assert ragged.mxu_utilization == pytest.approx(
+        ragged.useful_macs / ragged.padded_macs
+    )
+
+
+def test_roofline_sane():
+    e = estimate("t", 64, 784, 256)
+    assert e.roofline_time_s > 0
+    assert 0 < e.efficiency_ratio <= 1.0
+    # tiny matmuls are bandwidth-bound: efficiency well below 1
+    small = estimate("s", 8, 128, 128)
+    assert small.efficiency_ratio < 0.5
+
+
+def test_model_estimates_cover_all_layers():
+    ests = model_estimates("mlp_mnist")
+    assert len(ests) == 3  # 784-256-256-10
+    assert all(e.fits_vmem() for e in ests)
+    conv = model_estimates("conv4_mnist", batch=16)
+    assert len(conv) == 7  # 4 convs + 3 FC
+    # conv im2col rows = batch * H * W
+    assert conv[0].m == 16 * 28 * 28
+
+
+def test_table_renders():
+    row = estimate("x", 64, 784, 256).row()
+    assert "x" in row and "us" in row
+    assert vmem.HEADER.split()[0] == "kernel"

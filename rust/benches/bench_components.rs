@@ -1,0 +1,150 @@
+//! Component benchmarks: the coordinator hot paths in isolation.
+//!
+//! Covers every stage of a round EXCEPT model compute: entropy coding
+//! (encode + decode at several densities), eq. 8 aggregation, Bernoulli
+//! mask sampling, top-k selection, and the PJRT call overhead
+//! (local_train / eval on the tiny model = FFI + transfer dominated).
+//!
+//! Run: `cargo bench --bench bench_components [-- filter]`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{bench, filter_from_args, should_run};
+use fedsrn::compress::{self, Method};
+use fedsrn::mask::{sample_mask, topk_mask, MaskAggregator, ProbMask};
+use fedsrn::runtime::ModelRuntime;
+use fedsrn::util::{BitVec, Xoshiro256};
+
+const N: usize = 268_800; // mlp_mnist-sized masks
+
+fn random_mask(n: usize, p: f64, seed: u64) -> BitVec {
+    let mut rng = Xoshiro256::new(seed);
+    BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < p), n)
+}
+
+fn main() {
+    let filter = filter_from_args();
+    println!("== component benches (n = {N} params) ==");
+
+    // --- codecs ---------------------------------------------------------
+    for &p in &[0.5, 0.1, 0.02] {
+        let mask = random_mask(N, p, 7);
+        for method in [Method::Arithmetic, Method::Golomb, Method::Raw] {
+            let name = format!("encode/{method:?}/p={p}");
+            if should_run(&filter, &name) {
+                let enc = compress::encode_with(&mask, method);
+                let r = bench(&name, 1.0, 200, || {
+                    std::hint::black_box(compress::encode_with(&mask, method));
+                });
+                r.print(&format!(
+                    "{:>7.1} Mbit/s  {:.4} Bpp",
+                    N as f64 / r.mean_s / 1e6,
+                    enc.bpp(N)
+                ));
+            }
+            let name = format!("decode/{method:?}/p={p}");
+            if should_run(&filter, &name) {
+                let enc = compress::encode_with(&mask, method);
+                let r = bench(&name, 1.0, 200, || {
+                    std::hint::black_box(compress::decode(&enc, N));
+                });
+                r.print(&format!("{:>7.1} Mbit/s", N as f64 / r.mean_s / 1e6));
+            }
+        }
+    }
+
+    // --- aggregation (eq. 8): word-scan vs scalar A/B ---------------------
+    for &p in &[0.5, 0.1] {
+        let masks: Vec<BitVec> = (0..10).map(|i| random_mask(N, p, i)).collect();
+        let name = format!("aggregate/10c/wordscan/p={p}");
+        if should_run(&filter, &name) {
+            let r = bench(&name, 1.5, 100, || {
+                let mut agg = MaskAggregator::new(N);
+                for m in &masks {
+                    agg.add_mask(m, 1.0);
+                }
+                std::hint::black_box(agg.finalize());
+            });
+            r.print(&format!(
+                "{:>7.1} Mparam/s",
+                (N * masks.len()) as f64 / r.mean_s / 1e6
+            ));
+        }
+        let name = format!("aggregate/10c/scalar/p={p}");
+        if should_run(&filter, &name) {
+            let r = bench(&name, 1.5, 100, || {
+                let mut agg = MaskAggregator::new(N);
+                for m in &masks {
+                    agg.add_mask_scalar(m, 1.0);
+                }
+                std::hint::black_box(agg.finalize());
+            });
+            r.print(&format!(
+                "{:>7.1} Mparam/s",
+                (N * masks.len()) as f64 / r.mean_s / 1e6
+            ));
+        }
+    }
+
+    // --- sampling & top-k -------------------------------------------------
+    let theta = ProbMask::uniform_random(N, 3);
+    if should_run(&filter, "sample_mask") {
+        let r = bench("sample_mask/philox", 1.0, 200, || {
+            std::hint::black_box(sample_mask(&theta, 42));
+        });
+        r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.mean_s / 1e6));
+    }
+    let scores: Vec<f32> = {
+        let mut rng = Xoshiro256::new(9);
+        (0..N).map(|_| rng.next_normal() as f32).collect()
+    };
+    if should_run(&filter, "topk") {
+        let r = bench("topk/frac=0.3", 1.0, 200, || {
+            std::hint::black_box(topk_mask(&scores, 0.3));
+        });
+        r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.mean_s / 1e6));
+    }
+
+    // --- logit broadcast (scores from theta) ------------------------------
+    if should_run(&filter, "broadcast_scores") {
+        let r = bench("broadcast_scores/logit", 1.0, 200, || {
+            std::hint::black_box(theta.to_scores());
+        });
+        r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.mean_s / 1e6));
+    }
+
+    // --- PJRT call path (tiny model: overhead-dominated) -------------------
+    if let Ok(rt) = ModelRuntime::load(std::path::Path::new("artifacts"), "mlp_tiny") {
+        let (n, dim, batch, steps) = (
+            rt.manifest.n_params,
+            rt.manifest.input_dim,
+            rt.manifest.batch,
+            rt.manifest.steps,
+        );
+        let scores = vec![0.0f32; n];
+        let mut rng = Xoshiro256::new(1);
+        let xs: Vec<f32> =
+            (0..steps * batch * dim).map(|_| rng.next_normal() as f32).collect();
+        let ys: Vec<i32> = (0..steps * batch).map(|_| rng.below(10) as i32).collect();
+        if should_run(&filter, "pjrt/local_train") {
+            let r = bench("pjrt/local_train/mlp_tiny(6 steps)", 3.0, 100, || {
+                std::hint::black_box(
+                    rt.local_train(&scores, &xs, &ys, 1, 1.0, 0.1, false, true).unwrap(),
+                );
+            });
+            r.print(&format!("{:>7.1} steps/s", 6.0 / r.mean_s));
+        }
+        let mask = vec![1.0f32; n];
+        let tx: Vec<f32> = (0..256 * dim).map(|_| rng.next_normal() as f32).collect();
+        let ty: Vec<i32> = (0..256).map(|_| rng.below(10) as i32).collect();
+        if should_run(&filter, "pjrt/eval") {
+            let r = bench("pjrt/eval/mlp_tiny(256 rows)", 3.0, 100, || {
+                std::hint::black_box(rt.eval_mask(&mask, &tx, &ty).unwrap());
+            });
+            r.print(&format!("{:>7.1} rows/s", 256.0 / r.mean_s));
+        }
+    } else {
+        eprintln!("(skipping PJRT benches: run `make artifacts` first)");
+    }
+}

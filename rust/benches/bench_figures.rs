@@ -1,0 +1,154 @@
+//! Figure benchmarks: one end-to-end measurement per paper table/figure.
+//!
+//! Each bench runs a scaled-down version of the corresponding experiment
+//! through the full stack (PJRT compute + coding + aggregation), checks
+//! the figure's QUALITATIVE claim, and reports round throughput:
+//!
+//!   fig1/<dataset>  — IID: reg saves Bpp at matched accuracy (Fig. 1)
+//!   fig2/<dataset>  — non-IID: lambda trades accuracy for Bpp (Fig. 2)
+//!   storage         — seed+mask vs dense float storage (conclusion)
+//!
+//! Run: `cargo bench --bench bench_figures [-- filter]`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{filter_from_args, fmt_s, should_run};
+use fedsrn::config::{Algorithm, ExperimentConfig, Partition};
+use fedsrn::coordinator::Experiment;
+use fedsrn::fl::MetricsSink;
+
+struct FigRun {
+    label: String,
+    acc: f64,
+    bpp: f64,
+    secs_per_round: f64,
+}
+
+fn run(label: &str, cfg: ExperimentConfig) -> FigRun {
+    let t0 = std::time::Instant::now();
+    let rounds = cfg.rounds;
+    let mut sink = MetricsSink::new("", 10_000).unwrap();
+    let mut exp = Experiment::build(cfg).unwrap();
+    let summary = exp.run(&mut sink).unwrap();
+    FigRun {
+        label: label.to_string(),
+        acc: summary.final_accuracy,
+        bpp: summary.avg_est_bpp,
+        secs_per_round: t0.elapsed().as_secs_f64() / rounds as f64,
+    }
+}
+
+fn base(model: &str, dataset: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = model.into();
+    cfg.dataset = dataset.into();
+    cfg.clients = 6;
+    cfg.rounds = 10;
+    cfg.train_samples = 900;
+    cfg.test_samples = 240;
+    cfg.lr = 0.1;
+    cfg.eval_every = 5;
+    cfg
+}
+
+fn print_run(r: &FigRun) {
+    println!(
+        "  {:<22} acc {:>7.4}  estBpp {:>7.4}  {:>10}/round",
+        r.label,
+        r.acc,
+        r.bpp,
+        fmt_s(r.secs_per_round)
+    );
+}
+
+fn main() {
+    let filter = filter_from_args();
+
+    // ---- Fig. 1 (IID): per dataset, FedPM vs FedPM+reg ------------------
+    for (dataset, model) in [("tiny", "mlp_tiny"), ("mnist", "mlp_mnist")] {
+        let name = format!("fig1/{dataset}");
+        if !should_run(&filter, &name) {
+            continue;
+        }
+        if fedsrn::runtime::Manifest::load(std::path::Path::new("artifacts"), model).is_err() {
+            eprintln!("skipping {name}: export {model} artifacts first");
+            continue;
+        }
+        println!("== {name} (IID, 6 devices, 10 rounds, scaled-down) ==");
+        let mut cfg = base(model, dataset);
+        cfg.algorithm = Algorithm::FedPM;
+        let fedpm = run("fedpm", cfg);
+        let mut cfg = base(model, dataset);
+        cfg.algorithm = Algorithm::FedPMReg;
+        cfg.lambda = if dataset == "tiny" { 3.0 } else { 1.0 };
+        let reg = run("fedpm_reg", cfg);
+        print_run(&fedpm);
+        print_run(&reg);
+        let ok = reg.bpp < fedpm.bpp - 0.02 && reg.acc > fedpm.acc - 0.15;
+        println!(
+            "  figure-1 shape {}: Bpp saved {:.3}, acc delta {:+.4}\n",
+            if ok { "HOLDS" } else { "VIOLATED" },
+            fedpm.bpp - reg.bpp,
+            reg.acc - fedpm.acc
+        );
+    }
+
+    // ---- Fig. 2 (non-IID): lambda sweep + baselines ----------------------
+    if should_run(&filter, "fig2/tiny") {
+        println!("== fig2/tiny (non-IID c=2, 10 devices, 10 rounds) ==");
+        let mk = |algo: Algorithm, lambda: f32, label: &str| {
+            let mut cfg = base("mlp_tiny", "tiny");
+            cfg.clients = 10;
+            cfg.partition = Partition::NonIid { c: 2 };
+            cfg.algorithm = algo;
+            cfg.lambda = lambda;
+            run(label, cfg)
+        };
+        let fedpm = mk(Algorithm::FedPM, 0.0, "fedpm");
+        let reg_lo = mk(Algorithm::FedPMReg, 1.0, "reg(l=1)");
+        let reg_hi = mk(Algorithm::FedPMReg, 10.0, "reg(l=10)");
+        let topk = mk(Algorithm::TopK, 0.0, "topk");
+        let sgd = {
+            let mut cfg = base("mlp_tiny", "tiny");
+            cfg.clients = 10;
+            cfg.partition = Partition::NonIid { c: 2 };
+            cfg.algorithm = Algorithm::SignSGD;
+            cfg.rounds = 30;
+            cfg.server_lr = 0.005;
+            run("mv_signsgd", cfg)
+        };
+        for r in [&fedpm, &reg_lo, &reg_hi, &topk, &sgd] {
+            print_run(r);
+        }
+        let monotone = reg_hi.bpp < reg_lo.bpp && reg_lo.bpp < fedpm.bpp;
+        println!(
+            "  figure-2 shape {}: lambda monotone in Bpp ({:.3} < {:.3} < {:.3})\n",
+            if monotone { "HOLDS" } else { "VIOLATED" },
+            reg_hi.bpp,
+            reg_lo.bpp,
+            fedpm.bpp
+        );
+    }
+
+    // ---- storage table (conclusion: model = seed + mask) ------------------
+    if should_run(&filter, "storage") {
+        println!("== storage (seed+mask vs dense float) ==");
+        use fedsrn::coordinator::Checkpoint;
+        use fedsrn::util::{BitVec, Xoshiro256};
+        let n = 268_800;
+        for &density in &[0.5, 0.12, 0.02] {
+            let mut rng = Xoshiro256::new(5);
+            let mask =
+                BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < density), n);
+            let ck = Checkpoint::new("mlp_mnist", 2023, n, &mask);
+            println!(
+                "  density {:>5.2}: checkpoint {:>8} B vs dense {:>9} B  ({:>6.1}x)",
+                density,
+                ck.size_bytes(),
+                ck.dense_size_bytes(),
+                ck.compression_factor()
+            );
+        }
+    }
+}

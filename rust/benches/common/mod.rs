@@ -1,0 +1,81 @@
+//! Minimal benchmark harness (criterion is not available offline).
+//!
+//! Measures wall-clock over repeated runs with warmup, reports
+//! mean / p50 / p95 and derived throughput. Used by both bench binaries
+//! via `#[path]` include.
+
+use std::time::Instant;
+
+/// One measured benchmark result.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self, extra: &str) {
+        println!(
+            "{:<44} {:>7} it  mean {:>10} p50 {:>10} p95 {:>10}  {}",
+            self.name,
+            self.iters,
+            fmt_s(self.mean_s),
+            fmt_s(self.p50_s),
+            fmt_s(self.p95_s),
+            extra
+        );
+    }
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Run `f` repeatedly: a few warmup iterations, then timed iterations
+/// until ~`budget_s` seconds or `max_iters`, whichever first.
+pub fn bench(name: &str, budget_s: f64, max_iters: usize, mut f: impl FnMut()) -> BenchResult {
+    // warmup
+    for _ in 0..2 {
+        f();
+    }
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < budget_s && times.len() < max_iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_s: mean,
+        p50_s: times[times.len() / 2],
+        p95_s: times[((times.len() as f64 * 0.95) as usize)
+            .min(times.len().saturating_sub(1))],
+    }
+}
+
+/// `cargo bench -- <filter>` support.
+pub fn filter_from_args() -> Option<String> {
+    // cargo passes "--bench" plus user args after `--`
+    std::env::args().skip(1).find(|a| !a.starts_with('-'))
+}
+
+pub fn should_run(filter: &Option<String>, name: &str) -> bool {
+    match filter {
+        None => true,
+        Some(f) => name.contains(f.as_str()),
+    }
+}

@@ -1,0 +1,91 @@
+//! Dense FedAvg baseline (McMahan et al. '17): the 32 bit-per-parameter
+//! reference point every compression scheme is measured against.
+//!
+//! Each device runs `local_epochs` of minibatch SGD on a local copy of
+//! the dense weights (through the AOT `dense_grad` program) and uploads
+//! the full float vector; the server takes the |D_i|-weighted average.
+
+use anyhow::Result;
+
+use super::{EvalModel, RoundCtx, RoundStats, Strategy};
+
+/// FedAvg server + model state. The dense local SGD learning rate is
+/// taken from `RoundCtx.server_lr` (distinct from the score lr).
+pub struct FedAvg {
+    weights: Vec<f32>,
+}
+
+impl FedAvg {
+    pub fn new(init_weights: Vec<f32>) -> Self {
+        Self { weights: init_weights }
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+}
+
+impl Strategy for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn run_round(&mut self, ctx: &mut RoundCtx) -> Result<RoundStats> {
+        let n = self.weights.len();
+        let batch = ctx.rt.manifest.batch;
+        let mut acc = vec![0.0f64; n];
+        let mut weight_sum = 0.0f64;
+        let mut train_loss = 0.0f64;
+        let lr = ctx.server_lr;
+
+        for (i, client) in ctx.clients.iter_mut().enumerate() {
+            ctx.comm.add_float_downlink();
+            let mut w_local = self.weights.clone();
+            let steps = client.steps_per_round(batch, ctx.local_epochs).max(1);
+            let mut last_loss = 0.0f32;
+            for _ in 0..steps {
+                let (xs, ys) = client.gather_call_batches(ctx.data, 1, batch);
+                let (grads, loss, _c) = ctx.rt.dense_grad(&w_local, &xs, &ys)?;
+                for (w, g) in w_local.iter_mut().zip(&grads) {
+                    *w -= lr * g;
+                }
+                last_loss = loss;
+            }
+            train_loss += (last_loss as f64 - train_loss) / (i + 1) as f64;
+            // UL: full dense floats.
+            ctx.comm.add_dense_uplink();
+            let cw = client.weight();
+            for (a, &w) in acc.iter_mut().zip(&w_local) {
+                *a += cw * w as f64;
+            }
+            weight_sum += cw;
+        }
+        for (w, &a) in self.weights.iter_mut().zip(&acc) {
+            *w = (a / weight_sum) as f32;
+        }
+        Ok(RoundStats { train_loss, mean_theta: 0.0, mask_density: 1.0 })
+    }
+
+    fn eval_model(&self, _round: usize) -> EvalModel {
+        EvalModel::Dense(self.weights.clone())
+    }
+
+    fn storage_bits(&self) -> u64 {
+        self.weights.len() as u64 * 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storage_and_eval_shape() {
+        let f = FedAvg::new(vec![0.5; 100]);
+        assert_eq!(f.storage_bits(), 3200);
+        match f.eval_model(0) {
+            EvalModel::Dense(w) => assert_eq!(w.len(), 100),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! The FedPM family: stochastic / deterministic / top-k mask training
+//! over a frozen random network (paper sec. II-III).
+//!
+//! One round:
+//!   1. DL: server broadcasts theta(t) as scores s = logit(theta).
+//!   2. Each device runs local STE-SGD on its score vector with loss
+//!      eq. 12 (cross-entropy + (lambda/n) * sum sigmoid(s)).
+//!   3. UL: the device ships ONE binary mask derived from its local
+//!      theta-hat:  m ~ Bern(theta-hat)        (Stochastic — FedPM/ours)
+//!                  m  = 1[theta-hat > 1/2]    (Deterministic — FedMask)
+//!                  m  = top-k(s)              (TopK baseline)
+//!      entropy-coded through the MaskCodec.
+//!   4. Server decodes, weighted-averages into theta(t+1) (eq. 8).
+//!
+//! The paper's algorithm is Stochastic with lambda > 0; lambda comes
+//! from the round context so the same strategy object runs FedPM (0)
+//! and FedPM+reg (>0).
+
+use anyhow::Result;
+
+use crate::compress;
+use crate::fl::Server;
+use crate::mask::{sample_mask, topk_mask, ProbMask};
+use crate::util::BitVec;
+
+use super::{EvalModel, RoundCtx, RoundStats, Strategy};
+
+/// Uplink mask construction mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MaskMode {
+    /// m ~ Bernoulli(sigma(s)) — FedPM / FedPM+reg (the paper).
+    Stochastic,
+    /// m = 1[sigma(s) > 0.5]; local training also masks
+    /// deterministically (FedMask's biased updates).
+    Deterministic,
+    /// m = top-k(|scores| by value); local training stochastic.
+    TopK { frac: f64 },
+}
+
+/// FedPM-family strategy state.
+pub struct MaskStrategy {
+    server: Server,
+    mode: MaskMode,
+    seed: u64,
+}
+
+impl MaskStrategy {
+    pub fn new(n_params: usize, seed: u64, mode: MaskMode) -> Self {
+        Self::with_agg(n_params, seed, mode, crate::fl::server::AggMode::Mean)
+    }
+
+    pub fn with_agg(
+        n_params: usize,
+        seed: u64,
+        mode: MaskMode,
+        agg: crate::fl::server::AggMode,
+    ) -> Self {
+        Self { server: Server::with_agg(n_params, seed, agg), mode, seed }
+    }
+
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    /// Build this client's uplink mask from its updated scores.
+    fn uplink_mask(&self, scores: &[f32], client: usize, round: usize) -> BitVec {
+        match self.mode {
+            MaskMode::Stochastic => {
+                let theta = ProbMask::from_scores(scores);
+                let seed = self
+                    .seed
+                    .wrapping_mul(0xA24B_AED4_963E_E407)
+                    .wrapping_add(((round as u64) << 24) | client as u64);
+                sample_mask(&theta, seed)
+            }
+            MaskMode::Deterministic => ProbMask::from_scores(scores).threshold(),
+            MaskMode::TopK { frac } => topk_mask(scores, frac),
+        }
+    }
+}
+
+impl Strategy for MaskStrategy {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            MaskMode::Stochastic => "fedpm_family",
+            MaskMode::Deterministic => "fedmask",
+            MaskMode::TopK { .. } => "topk",
+        }
+    }
+
+    fn run_round(&mut self, ctx: &mut RoundCtx) -> Result<RoundStats> {
+        let deterministic = self.mode == MaskMode::Deterministic;
+        let round = ctx.round;
+        // Partial participation: sample this round's cohort (the paper's
+        // setting is fraction=1 / dropout=0 -> everyone, no drops).
+        let cohort = ctx.participation.sample_round(ctx.clients.len(), ctx.seed, round);
+        let scores = self.server.broadcast_scores(ctx.comm, cohort.len());
+
+        let mut train_loss = 0.0f64;
+        let mut reporters = 0usize;
+        for (pos, &ci) in cohort.iter().enumerate() {
+            let client = &mut ctx.clients[ci];
+            let (s_i, met) = client.local_phase(
+                ctx.rt,
+                ctx.data,
+                scores.clone(),
+                round,
+                ctx.lambda,
+                ctx.lr,
+                ctx.local_epochs,
+                deterministic,
+                ctx.adam,
+            )?;
+            // Failure injection: the device trained but its uplink never
+            // arrives; the server must tolerate the gap.
+            if ctx.participation.drops(pos, ctx.seed, round, client.id) {
+                continue;
+            }
+            reporters += 1;
+            train_loss += (met.mean_loss as f64 - train_loss) / reporters as f64;
+            let mask = self.uplink_mask(&s_i, client.id, round);
+            let enc = compress::encode(&mask);
+            self.server.receive_mask(&enc, client.weight(), ctx.comm)?;
+        }
+        self.server.finish_round()?;
+
+        let theta = self.server.theta();
+        Ok(RoundStats {
+            train_loss,
+            mean_theta: theta.mean_theta(),
+            mask_density: self.server.eval_mask_sampled(round).density(),
+        })
+    }
+
+    fn eval_model(&self, round: usize) -> EvalModel {
+        EvalModel::Masked(self.server.eval_mask_sampled(round).to_f32())
+    }
+
+    fn storage_bits(&self) -> u64 {
+        // seed (64b) + structure id (negligible) + coded threshold mask.
+        64 + self.server.checkpoint_mask().wire_bytes() as u64 * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uplink_modes_differ_as_specified() {
+        let strat_s = MaskStrategy::new(100, 1, MaskMode::Stochastic);
+        let strat_d = MaskStrategy::new(100, 1, MaskMode::Deterministic);
+        let strat_k = MaskStrategy::new(100, 1, MaskMode::TopK { frac: 0.25 });
+        // scores: first 30 strongly positive, rest strongly negative
+        let scores: Vec<f32> =
+            (0..100).map(|i| if i < 30 { 8.0 } else { -8.0 }).collect();
+        let det = strat_d.uplink_mask(&scores, 0, 0);
+        assert_eq!(det.count_ones(), 30);
+        let sto = strat_s.uplink_mask(&scores, 0, 0);
+        assert_eq!(sto.count_ones(), 30); // saturated sigmoid: same as det
+        let top = strat_k.uplink_mask(&scores, 0, 0);
+        assert_eq!(top.count_ones(), 25); // exactly k
+        assert!((0..25).all(|i| top.get(i) == (i < 25) || scores[i] > 0.0));
+    }
+
+    #[test]
+    fn stochastic_sampling_is_seeded_per_client_round() {
+        let strat = MaskStrategy::new(1000, 9, MaskMode::Stochastic);
+        let scores = vec![0.0f32; 1000]; // theta = 0.5
+        let a = strat.uplink_mask(&scores, 0, 0);
+        let b = strat.uplink_mask(&scores, 0, 0);
+        assert_eq!(a, b, "same client+round must resample identically");
+        assert_ne!(a, strat.uplink_mask(&scores, 1, 0));
+        assert_ne!(a, strat.uplink_mask(&scores, 0, 1));
+    }
+
+    #[test]
+    fn storage_bits_scale_with_sparsity() {
+        // a server whose theta is mostly 0 stores a much smaller mask
+        let dense = MaskStrategy::new(50_000, 1, MaskMode::Stochastic);
+        let bits_uniform = dense.storage_bits();
+        // uniform theta -> threshold density ~0.5 -> ~1 bpp
+        assert!(bits_uniform > 40_000, "{bits_uniform}");
+        assert!(bits_uniform < 60_000, "{bits_uniform}");
+    }
+
+    #[test]
+    fn eval_model_is_binary() {
+        let strat = MaskStrategy::new(500, 2, MaskMode::Stochastic);
+        let EvalModel::Masked(m) = strat.eval_model(0) else {
+            panic!("mask strategies evaluate masked models")
+        };
+        assert_eq!(m.len(), 500);
+        assert!(m.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+}

@@ -1,0 +1,125 @@
+//! Federated algorithms: the paper's method + every baseline it
+//! compares against (sec. IV).
+//!
+//! * [`MaskStrategy`] — the FedPM family over frozen random weights:
+//!   stochastic masks with the entropy-proxy regularizer (**ours**,
+//!   lambda > 0), plain FedPM (lambda = 0), FedMask-style deterministic
+//!   masking, and Top-k score masking. One implementation, four uplink /
+//!   sampling modes — exactly how the paper frames them.
+//! * [`SignSgd`] — Majority-Vote SignSGD (Bernstein et al. '18): dense
+//!   weights, 1-bit sign uplink, majority-vote server step.
+//! * [`FedAvg`] — dense float FedAvg as the 32 Bpp reference point.
+//!
+//! Each strategy owns its round semantics behind the [`Strategy`] trait;
+//! the coordinator drives rounds and evaluation uniformly.
+
+pub mod fedavg;
+pub mod mask_training;
+pub mod signsgd;
+
+pub use fedavg::FedAvg;
+pub use mask_training::{MaskMode, MaskStrategy};
+pub use signsgd::SignSgd;
+
+use anyhow::Result;
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::data::Dataset;
+use crate::fl::{Client, RoundComm};
+use crate::fl::server::AggMode;
+use crate::runtime::ModelRuntime;
+
+/// Aggregation mode from config: bayes_prior > 0 turns on the
+/// Beta-posterior server (FedPM's Bayesian aggregation ablation).
+fn agg_mode(cfg: &ExperimentConfig) -> AggMode {
+    if cfg.bayes_prior > 0.0 {
+        AggMode::Bayes { prior: cfg.bayes_prior }
+    } else {
+        AggMode::Mean
+    }
+}
+
+/// What the evaluator should run this round.
+pub enum EvalModel {
+    /// Binary mask (f32 0/1) over the frozen random weights.
+    Masked(Vec<f32>),
+    /// Dense weight vector (baselines).
+    Dense(Vec<f32>),
+}
+
+/// Per-round training statistics surfaced to the metrics sink.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundStats {
+    /// Mean client train loss (incl. regularizer where applicable).
+    pub train_loss: f64,
+    /// Mean global keep-probability after aggregation (mask algos).
+    pub mean_theta: f64,
+    /// Density of the current global mask (mask algos; signs for MV).
+    pub mask_density: f64,
+}
+
+/// Everything a strategy needs to run one communication round.
+pub struct RoundCtx<'a> {
+    pub rt: &'a ModelRuntime,
+    pub data: &'a Dataset,
+    pub clients: &'a mut [Client],
+    pub round: usize,
+    pub comm: &'a mut RoundComm,
+    pub lambda: f32,
+    pub lr: f32,
+    pub local_epochs: usize,
+    pub topk_frac: f64,
+    pub server_lr: f32,
+    /// Optimize scores with Adam (FedPM practice) vs plain SGD.
+    pub adam: bool,
+    /// Participation/failure model (fraction=1, dropout=0 = the paper).
+    pub participation: crate::fl::Participation,
+    /// Root experiment seed (participation sampling etc.).
+    pub seed: u64,
+}
+
+/// A federated training algorithm.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Execute one communication round (DL broadcast, local training,
+    /// UL aggregation, server update).
+    fn run_round(&mut self, ctx: &mut RoundCtx) -> Result<RoundStats>;
+
+    /// The current global model for evaluation.
+    fn eval_model(&self, round: usize) -> EvalModel;
+
+    /// Bits needed to persist the final model (the paper's storage
+    /// claim: seed + coded mask vs dense floats).
+    fn storage_bits(&self) -> u64;
+}
+
+/// Instantiate the strategy an experiment config asks for.
+pub fn build_strategy(
+    cfg: &ExperimentConfig,
+    n_params: usize,
+    init_weights: &[f32],
+) -> Box<dyn Strategy> {
+    match cfg.algorithm {
+        Algorithm::FedPMReg | Algorithm::FedPM => Box::new(MaskStrategy::with_agg(
+            n_params,
+            cfg.seed,
+            MaskMode::Stochastic,
+            agg_mode(cfg),
+        )),
+        Algorithm::FedMask => Box::new(MaskStrategy::with_agg(
+            n_params,
+            cfg.seed,
+            MaskMode::Deterministic,
+            agg_mode(cfg),
+        )),
+        Algorithm::TopK => Box::new(MaskStrategy::with_agg(
+            n_params,
+            cfg.seed,
+            MaskMode::TopK { frac: cfg.topk_frac },
+            agg_mode(cfg),
+        )),
+        Algorithm::SignSGD => Box::new(SignSgd::new(init_weights.to_vec())),
+        Algorithm::FedAvg => Box::new(FedAvg::new(init_weights.to_vec())),
+    }
+}

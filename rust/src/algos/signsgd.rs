@@ -1,0 +1,113 @@
+//! Majority-Vote SignSGD baseline (Bernstein et al. '18; Fig. 2).
+//!
+//! Dense weights; per round each device computes a minibatch gradient
+//! through the AOT `dense_grad` program and uploads only the SIGN of
+//! each coordinate (1 bit/param). The server takes the dataset-weighted
+//! majority vote and steps `w -= server_lr * sign(vote)`.
+//!
+//! Communication: uplink is a ~50% dense bit vector (entropy ~1 Bpp,
+//! basically incompressible — this is exactly the contrast with the
+//! regularized masks). Note the final model still needs float storage,
+//! unlike the strong-LTH seed+mask representation (paper's remark).
+
+use anyhow::Result;
+
+use crate::compress;
+use crate::mask::aggregate::majority_vote_signs;
+use crate::util::BitVec;
+
+use super::{EvalModel, RoundCtx, RoundStats, Strategy};
+
+/// MV-SignSGD server + model state.
+pub struct SignSgd {
+    weights: Vec<f32>,
+}
+
+impl SignSgd {
+    pub fn new(init_weights: Vec<f32>) -> Self {
+        Self { weights: init_weights }
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
+    fn apply_vote(&mut self, vote: &BitVec, lr: f32) {
+        for (w, bit) in self.weights.iter_mut().zip(vote.iter()) {
+            *w -= if bit { lr } else { -lr };
+        }
+    }
+}
+
+impl Strategy for SignSgd {
+    fn name(&self) -> &'static str {
+        "mv_signsgd"
+    }
+
+    fn run_round(&mut self, ctx: &mut RoundCtx) -> Result<RoundStats> {
+        let n = self.weights.len();
+        let mut signs: Vec<BitVec> = Vec::with_capacity(ctx.clients.len());
+        let mut weights_of: Vec<f64> = Vec::with_capacity(ctx.clients.len());
+        let mut train_loss = 0.0f64;
+        let batch = ctx.rt.manifest.batch;
+
+        for (i, client) in ctx.clients.iter_mut().enumerate() {
+            // DL: dense weight broadcast (32 Bpp — counted).
+            ctx.comm.add_float_downlink();
+            // One minibatch gradient (parallel SignSGD semantics).
+            let (xs, ys) = client.gather_call_batches(ctx.data, 1, batch);
+            let (grads, loss, _correct) = ctx.rt.dense_grad(&self.weights, &xs, &ys)?;
+            train_loss += (loss as f64 - train_loss) / (i + 1) as f64;
+            // UL: sign bits (1 = positive gradient step direction).
+            let sign_bits =
+                BitVec::from_iter_len(grads.iter().map(|&g| g > 0.0), n);
+            let enc = compress::encode(&sign_bits);
+            ctx.comm.add_mask_uplink(&sign_bits, &enc);
+            signs.push(sign_bits);
+            weights_of.push(client.weight());
+        }
+
+        let vote = majority_vote_signs(&signs, &weights_of);
+        let density = vote.density();
+        self.apply_vote(&vote, ctx.server_lr);
+
+        Ok(RoundStats { train_loss, mean_theta: 0.0, mask_density: density })
+    }
+
+    fn eval_model(&self, _round: usize) -> EvalModel {
+        EvalModel::Dense(self.weights.clone())
+    }
+
+    fn storage_bits(&self) -> u64 {
+        // dense float model — the paper's storage contrast
+        self.weights.len() as u64 * 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vote_moves_weights_opposite_to_majority_gradient_sign() {
+        let mut s = SignSgd::new(vec![0.0; 4]);
+        let vote = BitVec::from_bools(&[true, false, true, false]);
+        s.apply_vote(&vote, 0.5);
+        assert_eq!(s.weights(), &[-0.5, 0.5, -0.5, 0.5]);
+    }
+
+    #[test]
+    fn storage_is_dense() {
+        let s = SignSgd::new(vec![0.0; 1000]);
+        assert_eq!(s.storage_bits(), 32_000);
+    }
+
+    #[test]
+    fn eval_model_is_dense() {
+        let s = SignSgd::new(vec![1.0; 8]);
+        match s.eval_model(0) {
+            EvalModel::Dense(w) => assert_eq!(w, vec![1.0; 8]),
+            _ => panic!("signsgd evaluates dense weights"),
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Dependency-free command-line parsing for the fedsrn launcher.
+//!
+//! Grammar: `fedsrn <command> [positional] [--flag value | --flag]...`
+//! with `--set key=value` collecting config overrides. Deliberately
+//! tiny; loud errors over clever inference.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        let Some(cmd) = it.next() else {
+            bail!("missing command (try `fedsrn help`)");
+        };
+        out.command = cmd.clone();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if flag.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if flag == "set" {
+                    let Some(kv) = it.next() else {
+                        bail!("--set needs key=value");
+                    };
+                    let Some((k, v)) = kv.split_once('=') else {
+                        bail!("--set expects key=value, got '{kv}'");
+                    };
+                    out.overrides.push((k.to_string(), v.to_string()));
+                    continue;
+                }
+                // flag with a value unless next token is another flag/end
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        out.flags.insert(flag.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => {
+                        out.flags.insert(flag.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    /// Reject unknown flags (catches typos early).
+    pub fn ensure_known_flags(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let v: Vec<String> = s.split_whitespace().map(str::to_string).collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn commands_flags_positionals() {
+        let a = parse("figure fig1 --dataset mnist --rounds 50 --quiet");
+        assert_eq!(a.command, "figure");
+        assert_eq!(a.positional, vec!["fig1"]);
+        assert_eq!(a.flag("dataset"), Some("mnist"));
+        assert_eq!(a.flag_parse("rounds", 0usize).unwrap(), 50);
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.flag_parse("missing", 7i32).unwrap(), 7);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let a = parse("train --set lambda=0.5 --set clients=30");
+        assert_eq!(
+            a.overrides,
+            vec![("lambda".into(), "0.5".into()), ("clients".into(), "30".into())]
+        );
+    }
+
+    #[test]
+    fn errors() {
+        let v: Vec<String> = vec![];
+        assert!(Args::parse(&v).is_err());
+        let v: Vec<String> = ["train", "--set", "oops"].iter().map(|s| s.to_string()).collect();
+        assert!(Args::parse(&v).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("train --typo 3");
+        assert!(a.ensure_known_flags(&["config"]).is_err());
+        assert!(a.ensure_known_flags(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse("x --a --b 3");
+        assert_eq!(a.flag("a"), Some("true"));
+        assert_eq!(a.flag("b"), Some("3"));
+    }
+}

@@ -1,0 +1,179 @@
+//! Bit-granular I/O used by every entropy coder in this module.
+//!
+//! Bits are written MSB-first within each byte; the writer tracks the
+//! exact bit count so communication accounting can report fractional
+//! bytes honestly.
+
+/// MSB-first bit writer over a growable byte buffer.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    /// Bits already used in the final byte (0..8).
+    bit_pos: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        if self.bit_pos == 0 {
+            self.bytes.push(0);
+        }
+        if bit {
+            let last = self.bytes.len() - 1;
+            self.bytes[last] |= 1 << (7 - self.bit_pos);
+        }
+        self.bit_pos = (self.bit_pos + 1) % 8;
+    }
+
+    /// Write the low `n` bits of `v`, most significant first.
+    pub fn put_bits(&mut self, v: u64, n: u8) {
+        debug_assert!(n <= 64);
+        for i in (0..n).rev() {
+            self.put_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// `q` one-bits followed by a zero (unary code).
+    pub fn put_unary(&mut self, q: u64) {
+        for _ in 0..q {
+            self.put_bit(true);
+        }
+        self.put_bit(false);
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> usize {
+        if self.bit_pos == 0 {
+            self.bytes.len() * 8
+        } else {
+            (self.bytes.len() - 1) * 8 + self.bit_pos as usize
+        }
+    }
+
+    /// Finish and return the padded byte buffer.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize, // bit cursor
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    /// Next bit; reads 0 past the end (coders carry explicit lengths, so
+    /// trailing-zero padding is never ambiguous).
+    #[inline]
+    pub fn get_bit(&mut self) -> bool {
+        let byte = self.pos / 8;
+        let bit = if byte < self.bytes.len() {
+            (self.bytes[byte] >> (7 - (self.pos % 8))) & 1 == 1
+        } else {
+            false
+        };
+        self.pos += 1;
+        bit
+    }
+
+    /// Read `n` bits MSB-first into the low bits of the result.
+    pub fn get_bits(&mut self, n: u8) -> u64 {
+        debug_assert!(n <= 64);
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.get_bit() as u64;
+        }
+        v
+    }
+
+    /// Count ones until the terminating zero (unary decode).
+    pub fn get_unary(&mut self) -> u64 {
+        let mut q = 0;
+        while self.get_bit() {
+            q += 1;
+            debug_assert!(q < 1 << 40, "runaway unary decode");
+        }
+        q
+    }
+
+    /// Bits consumed so far.
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_roundtrip() {
+        let bits: Vec<bool> = (0..100).map(|i| (i * 7) % 3 == 0).collect();
+        let mut w = BitWriter::new();
+        for &b in &bits {
+            w.put_bit(b);
+        }
+        assert_eq!(w.bit_len(), 100);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(r.get_bit(), b, "bit {i}");
+        }
+    }
+
+    #[test]
+    fn bits_roundtrip() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b101101, 6);
+        w.put_bits(0xFFFF_FFFF_FFFF, 48);
+        w.put_bits(0, 1);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(6), 0b101101);
+        assert_eq!(r.get_bits(48), 0xFFFF_FFFF_FFFF);
+        assert_eq!(r.get_bits(1), 0);
+    }
+
+    #[test]
+    fn unary_roundtrip() {
+        let vals = [0u64, 1, 2, 7, 31, 100];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.put_unary(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(r.get_unary(), v);
+        }
+    }
+
+    #[test]
+    fn read_past_end_is_zero() {
+        let mut r = BitReader::new(&[0xFF]);
+        assert_eq!(r.get_bits(8), 0xFF);
+        assert_eq!(r.get_bits(8), 0);
+    }
+
+    #[test]
+    fn bit_len_partial_byte() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b101, 3);
+        assert_eq!(w.bit_len(), 3);
+        assert_eq!(w.as_bytes().len(), 1);
+    }
+}

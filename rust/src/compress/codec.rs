@@ -1,0 +1,190 @@
+//! Mask codec: the uplink wire format.
+//!
+//! Races the adaptive arithmetic coder against Golomb-Rice and the raw
+//! 1-bit-per-parameter packing, and ships whichever is smallest. A 1-byte
+//! header + u32 one-count keeps the format self-describing (the decoder
+//! needs `len` from the session context, like any FL round does).
+//!
+//! This is what turns the paper's "≤ 1 Bpp" bound into actually-measured
+//! uplink bytes in the experiment logs.
+
+use super::{arithmetic, golomb};
+use crate::util::BitVec;
+
+/// Codec id in the wire header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Raw = 0,
+    Arithmetic = 1,
+    Golomb = 2,
+}
+
+impl Method {
+    fn from_u8(b: u8) -> Option<Self> {
+        match b {
+            0 => Some(Method::Raw),
+            1 => Some(Method::Arithmetic),
+            2 => Some(Method::Golomb),
+            _ => None,
+        }
+    }
+}
+
+/// An encoded mask as it would travel on the uplink.
+#[derive(Debug, Clone)]
+pub struct Encoded {
+    pub method: Method,
+    pub ones: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Encoded {
+    /// Total wire bytes: header (1) + one-count (4) + payload.
+    pub fn wire_bytes(&self) -> usize {
+        1 + 4 + self.payload.len()
+    }
+
+    /// Wire bits per mask parameter.
+    pub fn bpp(&self, n: usize) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.wire_bytes() as f64 * 8.0 / n as f64
+        }
+    }
+
+    /// Serialize to a flat byte vector.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        out.push(self.method as u8);
+        out.extend_from_slice(&self.ones.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse from a flat byte vector.
+    pub fn from_bytes(bytes: &[u8]) -> Option<Self> {
+        if bytes.len() < 5 {
+            return None;
+        }
+        let method = Method::from_u8(bytes[0])?;
+        let ones = u32::from_le_bytes(bytes[1..5].try_into().ok()?);
+        Some(Self { method, ones, payload: bytes[5..].to_vec() })
+    }
+}
+
+fn pack_raw(mask: &BitVec) -> Vec<u8> {
+    let mut out = vec![0u8; mask.raw_bytes()];
+    for (i, bit) in mask.iter().enumerate() {
+        if bit {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+fn unpack_raw(bytes: &[u8], len: usize) -> BitVec {
+    BitVec::from_iter_len(
+        (0..len).map(|i| (bytes[i / 8] >> (i % 8)) & 1 == 1),
+        len,
+    )
+}
+
+/// Encode with whichever method is smallest for this mask.
+pub fn encode(mask: &BitVec) -> Encoded {
+    let ones = mask.count_ones() as u32;
+    let raw = pack_raw(mask);
+    let arith = arithmetic::encode(mask);
+    let gol = golomb::encode(mask);
+    let (method, payload) =
+        if arith.len() <= gol.len() && arith.len() <= raw.len() {
+            (Method::Arithmetic, arith)
+        } else if gol.len() <= raw.len() {
+            (Method::Golomb, gol)
+        } else {
+            (Method::Raw, raw)
+        };
+    Encoded { method, ones, payload }
+}
+
+/// Encode with a forced method (for benchmarking individual coders).
+pub fn encode_with(mask: &BitVec, method: Method) -> Encoded {
+    let ones = mask.count_ones() as u32;
+    let payload = match method {
+        Method::Raw => pack_raw(mask),
+        Method::Arithmetic => arithmetic::encode(mask),
+        Method::Golomb => golomb::encode(mask),
+    };
+    Encoded { method, ones, payload }
+}
+
+/// Decode an uplink mask of `len` parameters.
+pub fn decode(enc: &Encoded, len: usize) -> BitVec {
+    match enc.method {
+        Method::Raw => unpack_raw(&enc.payload, len),
+        Method::Arithmetic => arithmetic::decode(&enc.payload, len),
+        Method::Golomb => golomb::decode(&enc.payload, len, enc.ones as usize),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn random_mask(n: usize, p: f64, seed: u64) -> BitVec {
+        let mut rng = Xoshiro256::new(seed);
+        BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < p), n)
+    }
+
+    #[test]
+    fn roundtrip_all_densities() {
+        for &p in &[0.0, 0.005, 0.05, 0.3, 0.5, 0.8, 1.0] {
+            let m = random_mask(30_000, p, 21);
+            let enc = encode(&m);
+            assert_eq!(decode(&enc, m.len()), m, "p={p} method={:?}", enc.method);
+        }
+    }
+
+    #[test]
+    fn never_worse_than_raw_plus_header() {
+        for &p in &[0.01, 0.5, 0.99] {
+            let m = random_mask(10_000, p, 4);
+            let enc = encode(&m);
+            assert!(enc.payload.len() <= m.raw_bytes(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn picks_entropy_coder_for_sparse() {
+        let m = random_mask(50_000, 0.02, 6);
+        let enc = encode(&m);
+        assert_ne!(enc.method, Method::Raw);
+        assert!(enc.bpp(m.len()) < 0.25, "bpp={}", enc.bpp(m.len()));
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let m = random_mask(5_000, 0.1, 8);
+        let enc = encode(&m);
+        let parsed = Encoded::from_bytes(&enc.to_bytes()).unwrap();
+        assert_eq!(parsed.method, enc.method);
+        assert_eq!(parsed.ones, enc.ones);
+        assert_eq!(decode(&parsed, m.len()), m);
+    }
+
+    #[test]
+    fn forced_methods_all_roundtrip() {
+        let m = random_mask(8_000, 0.07, 10);
+        for method in [Method::Raw, Method::Arithmetic, Method::Golomb] {
+            let enc = encode_with(&m, method);
+            assert_eq!(decode(&enc, m.len()), m, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_garbage() {
+        assert!(Encoded::from_bytes(&[]).is_none());
+        assert!(Encoded::from_bytes(&[9, 0, 0, 0, 0, 1]).is_none());
+    }
+}

@@ -1,0 +1,12 @@
+//! Uplink compression substrate: bitstreams + entropy coders + codec.
+//!
+//! `codec::encode` is the production entry point (used by the FL client
+//! to produce wire bytes); `arithmetic` / `golomb` are also public for
+//! the component benchmarks and the codec ablation.
+
+pub mod arithmetic;
+pub mod bitstream;
+pub mod codec;
+pub mod golomb;
+
+pub use codec::{decode, encode, encode_with, Encoded, Method};

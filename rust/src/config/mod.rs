@@ -1,0 +1,345 @@
+//! Experiment configuration: typed configs + a dependency-free TOML
+//! subset parser.
+//!
+//! Configs drive the launcher exactly like Megatron/MaxText-style config
+//! files drive theirs: `fedsrn train --config experiments/fig1.toml`
+//! with CLI overrides on top. The parser supports the subset we use:
+//! `[section]` headers, `key = value` with string / int / float / bool,
+//! and `#` comments — and rejects anything else loudly rather than
+//! guessing.
+
+pub mod parse;
+
+pub use parse::{parse_toml, TomlValue};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Which algorithm drives the federation (paper + baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// FedPM with the paper's entropy-proxy regularizer (lambda > 0).
+    FedPMReg,
+    /// Original FedPM (consistent objective, lambda = 0).
+    FedPM,
+    /// FedMask-style deterministic masking (threshold, biased updates).
+    FedMask,
+    /// Top-k score masking (Fig. 2 baseline).
+    TopK,
+    /// Majority-vote SignSGD (Fig. 2 baseline; dense weights).
+    SignSGD,
+    /// Dense FedAvg (float uplink reference point).
+    FedAvg,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fedpm_reg" | "fedpmreg" | "ours" => Algorithm::FedPMReg,
+            "fedpm" => Algorithm::FedPM,
+            "fedmask" => Algorithm::FedMask,
+            "topk" | "top-k" => Algorithm::TopK,
+            "signsgd" | "mv-signsgd" | "mv_signsgd" => Algorithm::SignSGD,
+            "fedavg" => Algorithm::FedAvg,
+            other => bail!("unknown algorithm '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::FedPMReg => "fedpm_reg",
+            Algorithm::FedPM => "fedpm",
+            Algorithm::FedMask => "fedmask",
+            Algorithm::TopK => "topk",
+            Algorithm::SignSGD => "signsgd",
+            Algorithm::FedAvg => "fedavg",
+        }
+    }
+
+    /// Does this algorithm ship binary masks (vs dense floats) uplink?
+    pub fn uplink_is_binary(&self) -> bool {
+        !matches!(self, Algorithm::FedAvg)
+    }
+}
+
+/// Data distribution across devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    Iid,
+    /// Non-IID with `c` classes per device.
+    NonIid { c: usize },
+}
+
+/// Full experiment description (one figure line = one config).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Exported model name (see python/compile/model.py registry).
+    pub model: String,
+    /// Dataset name: mnist | cifar10 | cifar100 | tiny.
+    pub dataset: String,
+    pub algorithm: Algorithm,
+    pub partition: Partition,
+    /// Number of federated devices K.
+    pub clients: usize,
+    /// Communication rounds T.
+    pub rounds: usize,
+    /// Local epochs per round (paper: 3).
+    pub local_epochs: usize,
+    /// Regularization strength lambda (eq. 12); 0 recovers FedPM.
+    pub lambda: f32,
+    /// Local SGD learning rate eta.
+    pub lr: f32,
+    /// Top-k keep fraction (TopK algorithm only).
+    pub topk_frac: f64,
+    /// SignSGD server step size.
+    pub server_lr: f32,
+    /// Training samples synthesized (or subsampled) per experiment.
+    pub train_samples: usize,
+    /// Held-out evaluation samples.
+    pub test_samples: usize,
+    /// Evaluate every this many rounds.
+    pub eval_every: usize,
+    /// Optimize local scores with Adam (FedPM practice) vs plain SGD.
+    pub adam: bool,
+    /// Fraction of devices sampled per round (paper: 1.0).
+    pub participation: f64,
+    /// Probability a sampled device drops before its uplink lands.
+    pub dropout: f64,
+    /// Server aggregation: eq. 8 mean, or Beta-posterior damping.
+    pub bayes_prior: f64,
+    /// Root seed for everything.
+    pub seed: u64,
+    /// Directory with AOT artifacts.
+    pub artifacts_dir: String,
+    /// Output metrics file (JSONL); empty = stdout summary only.
+    pub out: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            model: "mlp_mnist".into(),
+            dataset: "mnist".into(),
+            algorithm: Algorithm::FedPMReg,
+            partition: Partition::Iid,
+            clients: 10,
+            rounds: 30,
+            local_epochs: 3,
+            lambda: 1.0,
+            lr: 0.2,
+            topk_frac: 0.3,
+            server_lr: 0.001,
+            train_samples: 2000,
+            test_samples: 512,
+            eval_every: 1,
+            adam: true,
+            participation: 1.0,
+            dropout: 0.0,
+            bayes_prior: 0.0,
+            seed: 2023,
+            artifacts_dir: "artifacts".into(),
+            out: String::new(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML file ([experiment] section) + defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = Self::default();
+        let flat = |doc: &BTreeMap<String, BTreeMap<String, TomlValue>>,
+                    sect: &str|
+         -> BTreeMap<String, TomlValue> {
+            doc.get(sect).cloned().unwrap_or_default()
+        };
+        let mut kv = flat(&doc, "");
+        kv.extend(flat(&doc, "experiment"));
+        for (k, v) in kv {
+            cfg.apply(&k, &v.to_string_raw())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one key=value override (CLI and TOML share this path).
+    pub fn apply(&mut self, key: &str, val: &str) -> Result<()> {
+        match key {
+            "model" => self.model = val.to_string(),
+            "dataset" => self.dataset = val.to_string(),
+            "algorithm" => self.algorithm = Algorithm::parse(val)?,
+            "partition" => {
+                self.partition = match val {
+                    "iid" => Partition::Iid,
+                    other => {
+                        if let Some(c) = other.strip_prefix("noniid") {
+                            let c = c.trim_matches(|ch| ch == '_' || ch == '-');
+                            Partition::NonIid { c: c.parse().context("noniid_<c>")? }
+                        } else {
+                            bail!("partition must be iid | noniid_<c>")
+                        }
+                    }
+                }
+            }
+            "clients" => self.clients = val.parse()?,
+            "rounds" => self.rounds = val.parse()?,
+            "local_epochs" => self.local_epochs = val.parse()?,
+            "lambda" => self.lambda = val.parse()?,
+            "lr" => self.lr = val.parse()?,
+            "topk_frac" => self.topk_frac = val.parse()?,
+            "server_lr" => self.server_lr = val.parse()?,
+            "train_samples" => self.train_samples = val.parse()?,
+            "test_samples" => self.test_samples = val.parse()?,
+            "eval_every" => self.eval_every = val.parse()?,
+            "adam" => self.adam = val.parse()?,
+            "participation" => self.participation = val.parse()?,
+            "dropout" => self.dropout = val.parse()?,
+            "bayes_prior" => self.bayes_prior = val.parse()?,
+            "optimizer" => {
+                self.adam = match val {
+                    "adam" => true,
+                    "sgd" => false,
+                    other => bail!("optimizer must be adam|sgd, got '{other}'"),
+                }
+            }
+            "seed" => self.seed = val.parse()?,
+            "artifacts_dir" => self.artifacts_dir = val.to_string(),
+            "out" => self.out = val.to_string(),
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Sanity-check cross-field constraints before launch.
+    pub fn validate(&self) -> Result<()> {
+        if self.clients == 0 {
+            bail!("clients must be > 0");
+        }
+        if self.rounds == 0 {
+            bail!("rounds must be > 0");
+        }
+        if self.local_epochs == 0 {
+            bail!("local_epochs must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.topk_frac) {
+            bail!("topk_frac must be in [0,1]");
+        }
+        if self.lambda < 0.0 {
+            bail!("lambda must be >= 0");
+        }
+        if self.train_samples < self.clients {
+            bail!("need at least one sample per client");
+        }
+        if let Partition::NonIid { c } = self.partition {
+            if c == 0 {
+                bail!("noniid c must be >= 1");
+            }
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be > 0");
+        }
+        if !(self.participation > 0.0 && self.participation <= 1.0) {
+            bail!("participation must be in (0,1]");
+        }
+        if !(0.0..1.0).contains(&self.dropout) {
+            bail!("dropout must be in [0,1)");
+        }
+        if self.bayes_prior < 0.0 {
+            bail!("bayes_prior must be >= 0");
+        }
+        Ok(())
+    }
+
+    /// FedPM is exactly FedPMReg with lambda = 0; normalize so the algos
+    /// layer only needs one implementation.
+    pub fn effective_lambda(&self) -> f32 {
+        match self.algorithm {
+            Algorithm::FedPM => 0.0,
+            _ => self.lambda,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            # figure 2a, lambda sweep point
+            [experiment]
+            model = "mlp_mnist"
+            dataset = "mnist"
+            algorithm = "fedpm_reg"
+            partition = "noniid_2"
+            clients = 30
+            rounds = 100
+            lambda = 0.1
+            lr = 0.25
+            seed = 7
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.clients, 30);
+        assert_eq!(cfg.partition, Partition::NonIid { c: 2 });
+        assert_eq!(cfg.algorithm, Algorithm::FedPMReg);
+        assert!((cfg.lambda - 0.1).abs() < 1e-6);
+        assert_eq!(cfg.seed, 7);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ExperimentConfig::from_toml_str("typo_key = 3").is_err());
+    }
+
+    #[test]
+    fn algorithm_parse_aliases() {
+        assert_eq!(Algorithm::parse("ours").unwrap(), Algorithm::FedPMReg);
+        assert_eq!(Algorithm::parse("MV-SignSGD").unwrap(), Algorithm::SignSGD);
+        assert!(Algorithm::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.clients = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.topk_frac = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.partition = Partition::NonIid { c: 0 };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fedpm_lambda_normalized_to_zero() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.algorithm = Algorithm::FedPM;
+        cfg.lambda = 5.0;
+        assert_eq!(cfg.effective_lambda(), 0.0);
+        cfg.algorithm = Algorithm::FedPMReg;
+        assert_eq!(cfg.effective_lambda(), 5.0);
+    }
+
+    #[test]
+    fn uplink_kind() {
+        assert!(Algorithm::FedPMReg.uplink_is_binary());
+        assert!(!Algorithm::FedAvg.uplink_is_binary());
+    }
+}

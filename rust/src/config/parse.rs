@@ -1,0 +1,161 @@
+//! Minimal TOML-subset parser (no external dependencies).
+//!
+//! Supported: `[section]` headers, `key = value` pairs where value is a
+//! quoted string, integer, float, or bool; full-line and trailing `#`
+//! comments; blank lines. Arrays/tables/multiline strings are NOT
+//! supported and produce an error — experiment configs never need them
+//! and silent misparses are worse than a loud failure.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    /// The raw string form used by `ExperimentConfig::apply`.
+    pub fn to_string_raw(&self) -> String {
+        match self {
+            TomlValue::Str(s) => s.clone(),
+            TomlValue::Int(i) => i.to_string(),
+            TomlValue::Float(f) => f.to_string(),
+            TomlValue::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+/// Parse a TOML-subset document into section -> key -> value.
+/// Keys before any `[section]` land in the "" section.
+pub fn parse_toml(
+    text: &str,
+) -> Result<BTreeMap<String, BTreeMap<String, TomlValue>>> {
+    let mut doc: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected key = value, got '{line}'", lineno + 1);
+        };
+        let key = k.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(v.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.entry(section.clone()).or_default().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must survive.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if v.is_empty() {
+        bail!("missing value");
+    }
+    if let Some(stripped) = v.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("unterminated string literal");
+        };
+        if inner.contains('"') {
+            bail!("embedded quotes not supported");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if v.starts_with('[') {
+        bail!("arrays not supported by this parser");
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{v}' (quote strings)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            r#"
+            top = 1
+            [a]
+            s = "hello"   # trailing comment
+            i = -42
+            f = 3.5
+            b = true
+            [b]
+            x = 0.1
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlValue::Int(1));
+        assert_eq!(doc["a"]["s"], TomlValue::Str("hello".into()));
+        assert_eq!(doc["a"]["i"], TomlValue::Int(-42));
+        assert_eq!(doc["a"]["f"], TomlValue::Float(3.5));
+        assert_eq!(doc["a"]["b"], TomlValue::Bool(true));
+        assert_eq!(doc["b"]["x"], TomlValue::Float(0.1));
+    }
+
+    #[test]
+    fn hash_inside_string_survives() {
+        let doc = parse_toml(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc[""]["k"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(parse_toml("[unterminated").is_err());
+        assert!(parse_toml("novalue =").is_err());
+        assert!(parse_toml("= 3").is_err());
+        assert!(parse_toml("k = [1, 2]").is_err());
+        assert!(parse_toml("k = \"open").is_err());
+        assert!(parse_toml("just a line").is_err());
+    }
+
+    #[test]
+    fn raw_strings() {
+        assert_eq!(TomlValue::Int(7).to_string_raw(), "7");
+        assert_eq!(TomlValue::Bool(false).to_string_raw(), "false");
+        assert_eq!(TomlValue::Str("x".into()).to_string_raw(), "x");
+    }
+}

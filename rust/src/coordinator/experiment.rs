@@ -1,0 +1,239 @@
+//! Experiment runner: config -> data -> clients -> rounds -> metrics.
+//!
+//! This is the launcher core: everything an experiment needs is derived
+//! deterministically from the [`ExperimentConfig`], so a config file (or
+//! a figure harness that sweeps configs) fully specifies a run.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::algos::{build_strategy, EvalModel, RoundCtx, Strategy};
+use crate::config::{ExperimentConfig, Partition};
+use crate::data::{loader, partition_iid, partition_noniid, Dataset, SynthSpec, Synthetic};
+use crate::fl::{Client, CommTotals, MetricsSink, RoundComm, RoundRecord};
+use crate::runtime::ModelRuntime;
+
+/// Per-device evaluation view: which test rows match the device's
+/// target distribution (all rows for IID; own-classes rows non-IID).
+struct EvalShard {
+    x: Vec<f32>,
+    y: Vec<i32>,
+}
+
+/// A fully-materialized experiment ready to run.
+pub struct Experiment {
+    pub cfg: ExperimentConfig,
+    rt: ModelRuntime,
+    train: Dataset,
+    clients: Vec<Client>,
+    eval_shards: Vec<EvalShard>,
+    strategy: Box<dyn Strategy>,
+    pub totals: CommTotals,
+}
+
+/// End-of-run summary the figure harnesses print.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub algorithm: String,
+    pub final_accuracy: f64,
+    /// Mean est. Bpp (eq. 13) over all rounds — the paper's reported
+    /// "average bits per parameter required".
+    pub avg_est_bpp: f64,
+    pub avg_coded_bpp: f64,
+    pub total_ul_mb: f64,
+    pub storage_bits: u64,
+    pub rounds: usize,
+}
+
+impl Experiment {
+    /// Build everything from a validated config.
+    pub fn build(cfg: ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let rt = ModelRuntime::load(Path::new(&cfg.artifacts_dir), &cfg.model)
+            .with_context(|| format!("loading model '{}'", cfg.model))?;
+
+        // --- data: real if present, synthetic otherwise ----------------
+        let (train, test) = Self::load_data(&cfg, rt.manifest.input_dim, rt.manifest.n_classes)?;
+        ensure!(
+            train.dim == rt.manifest.input_dim,
+            "dataset dim {} != model input dim {} (wrong --model/--dataset pairing?)",
+            train.dim,
+            rt.manifest.input_dim
+        );
+
+        // --- partition + device fleet ----------------------------------
+        let shards = match cfg.partition {
+            Partition::Iid => partition_iid(&train, cfg.clients, cfg.seed ^ 0x5A),
+            Partition::NonIid { c } => partition_noniid(&train, cfg.clients, c, cfg.seed ^ 0x5A),
+        };
+        let clients: Vec<Client> = shards
+            .into_iter()
+            .map(|s| {
+                let seed = cfg.seed ^ ((s.client_id as u64 + 1) << 8);
+                Client::new(s, seed)
+            })
+            .collect();
+
+        // --- per-device eval shards ------------------------------------
+        let eval_shards = clients
+            .iter()
+            .map(|c| {
+                let idx: Vec<usize> = (0..test.len())
+                    .filter(|&i| c.shard.classes.contains(&(test.y[i] as usize)))
+                    .collect();
+                let (x, y) = test.gather(&idx);
+                EvalShard { x, y }
+            })
+            .collect();
+
+        let strategy = build_strategy(&cfg, rt.manifest.n_params, rt.weights());
+        Ok(Self { cfg, rt, train, clients, eval_shards, strategy, totals: CommTotals::default() })
+    }
+
+    fn load_data(cfg: &ExperimentConfig, dim: usize, n_classes: usize) -> Result<(Dataset, Dataset)> {
+        if let (Some(tr), Some(te)) = (
+            loader::try_load(&cfg.dataset, true),
+            loader::try_load(&cfg.dataset, false),
+        ) {
+            eprintln!("using real {} data ({} train / {} test)", cfg.dataset, tr.len(), te.len());
+            return Ok((subsample(tr, cfg.train_samples, cfg.seed), subsample(te, cfg.test_samples, cfg.seed ^ 1)));
+        }
+        let mut spec = SynthSpec::by_name(&cfg.dataset)
+            .with_context(|| format!("unknown dataset '{}'", cfg.dataset))?;
+        // Model and dataset must agree on geometry; the synthetic
+        // generator adapts to the model's class count (e.g. cifar100).
+        ensure!(
+            spec.dim() == dim,
+            "dataset '{}' dim {} != model input {}",
+            cfg.dataset,
+            spec.dim(),
+            dim
+        );
+        spec.n_classes = n_classes;
+        let gen = Synthetic::new(spec, cfg.seed ^ 0xDA7A);
+        Ok((gen.generate(cfg.train_samples, 1), gen.generate(cfg.test_samples, 2)))
+    }
+
+    /// Evaluate the strategy's current model over all device targets.
+    fn evaluate(&self, round: usize) -> Result<(f64, f64)> {
+        let model = self.strategy.eval_model(round);
+        let ones = vec![1.0f32; self.rt.manifest.n_params];
+        let mut acc = 0.0;
+        let mut loss = 0.0;
+        // IID shards all have the same class set; dedupe the work by
+        // evaluating once and replicating when every shard is identical.
+        let identical = self
+            .clients
+            .iter()
+            .all(|c| c.shard.classes.len() == self.train.n_classes);
+        let n_eval = if identical { 1 } else { self.eval_shards.len() };
+        for shard in self.eval_shards.iter().take(n_eval) {
+            let m = match &model {
+                EvalModel::Masked(mask) => self.rt.eval_mask(mask, &shard.x, &shard.y)?,
+                EvalModel::Dense(w) => {
+                    self.rt.eval_with_weights(&ones, w, &shard.x, &shard.y)?
+                }
+            };
+            acc += m.accuracy();
+            loss += m.mean_loss();
+        }
+        Ok((acc / n_eval as f64, loss / n_eval as f64))
+    }
+
+    /// Run all rounds, logging one record per round into `sink`.
+    pub fn run(&mut self, sink: &mut MetricsSink) -> Result<RunSummary> {
+        let mut last_acc = 0.0;
+        let mut last_loss = 0.0;
+        let mut est_bpp_sum = 0.0;
+        let mut coded_bpp_sum = 0.0;
+        for round in 1..=self.cfg.rounds {
+            let t0 = Instant::now();
+            let mut comm = RoundComm::new(self.rt.manifest.n_params);
+            let stats = {
+                let mut ctx = RoundCtx {
+                    rt: &self.rt,
+                    data: &self.train,
+                    clients: &mut self.clients,
+                    round,
+                    comm: &mut comm,
+                    lambda: self.cfg.effective_lambda(),
+                    lr: self.cfg.lr,
+                    local_epochs: self.cfg.local_epochs,
+                    topk_frac: self.cfg.topk_frac,
+                    server_lr: self.cfg.server_lr,
+                    adam: self.cfg.adam,
+                    participation: crate::fl::Participation::new(
+                        self.cfg.participation,
+                        self.cfg.dropout,
+                    ),
+                    seed: self.cfg.seed,
+                };
+                self.strategy.run_round(&mut ctx)?
+            };
+            self.totals.add_round(&comm);
+            est_bpp_sum += comm.est_bpp;
+            coded_bpp_sum += comm.measured_bpp();
+
+            if round % self.cfg.eval_every == 0 || round == self.cfg.rounds {
+                let (a, l) = self.evaluate(round)?;
+                last_acc = a;
+                last_loss = l;
+            }
+            sink.push(RoundRecord {
+                round,
+                accuracy: last_acc,
+                loss: last_loss,
+                train_loss: stats.train_loss,
+                est_bpp: comm.est_bpp,
+                coded_bpp: comm.measured_bpp(),
+                mean_theta: stats.mean_theta,
+                mask_density: stats.mask_density,
+                secs: t0.elapsed().as_secs_f64(),
+            })?;
+        }
+        sink.flush()?;
+        // Perf telemetry: per-program wall-clock breakdown (FEDSRN_TIMERS=1).
+        if std::env::var("FEDSRN_TIMERS").is_ok() {
+            eprintln!("--- runtime timer breakdown ---");
+            for (label, secs, calls) in self.rt.timers.borrow().summary() {
+                eprintln!(
+                    "{label:<24} {secs:>9.3}s over {calls:>6} calls ({:.2}ms/call)",
+                    secs / calls.max(1) as f64 * 1e3
+                );
+            }
+        }
+        Ok(RunSummary {
+            algorithm: self.cfg.algorithm.name().to_string(),
+            final_accuracy: sink.tail_mean(3, |r| r.accuracy),
+            avg_est_bpp: est_bpp_sum / self.cfg.rounds as f64,
+            avg_coded_bpp: coded_bpp_sum / self.cfg.rounds as f64,
+            total_ul_mb: self.totals.ul_megabytes(),
+            storage_bits: self.strategy.storage_bits(),
+            rounds: self.cfg.rounds,
+        })
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.rt
+    }
+
+    /// The strategy's current global model (for checkpointing).
+    pub fn strategy_eval_model(&self) -> EvalModel {
+        self.strategy.eval_model(self.cfg.rounds)
+    }
+}
+
+/// Random subsample (without replacement) to the requested size.
+fn subsample(d: Dataset, n: usize, seed: u64) -> Dataset {
+    if n >= d.len() {
+        return d;
+    }
+    let mut rng = crate::util::Xoshiro256::new(seed);
+    let mut idx: Vec<usize> = (0..d.len()).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(n);
+    let (x, y) = d.gather(&idx);
+    Dataset::new(x, y, d.dim, d.n_classes)
+}

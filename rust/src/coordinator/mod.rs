@@ -1,0 +1,8 @@
+//! Coordinator: experiment lifecycle, figure harnesses, checkpoints.
+
+pub mod checkpoint;
+pub mod experiment;
+pub mod figures;
+
+pub use checkpoint::Checkpoint;
+pub use experiment::{Experiment, RunSummary};

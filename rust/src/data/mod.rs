@@ -1,0 +1,177 @@
+//! Dataset substrate: in-memory datasets, shards, and batch iteration.
+//!
+//! The paper trains on MNIST / CIFAR10 / CIFAR100. Real files are loaded
+//! when present (see [`loader`]); otherwise the seed-deterministic
+//! synthetic generators in [`synthetic`] produce shape-compatible,
+//! learnable class-template data (DESIGN.md §Substitutions). Either way
+//! the rest of the system only ever sees this module's `Dataset`.
+
+pub mod loader;
+pub mod partition;
+pub mod synthetic;
+
+pub use partition::{partition_iid, partition_noniid, Shard};
+pub use synthetic::{SynthSpec, Synthetic};
+
+use crate::util::Xoshiro256;
+
+/// A dense in-memory classification dataset.
+///
+/// Rows are flattened f32 features (the wire layout the PJRT programs
+/// take); labels are int32 class ids in [0, n_classes).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub dim: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<i32>, dim: usize, n_classes: usize) -> Self {
+        assert_eq!(x.len(), y.len() * dim, "feature/label size mismatch");
+        assert!(y.iter().all(|&l| (l as usize) < n_classes));
+        Self { x, y, dim, n_classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// One row's features.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Gather rows by index into contiguous (x, y) buffers.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+
+    /// Per-class index lists.
+    pub fn class_indices(&self) -> Vec<Vec<usize>> {
+        let mut per = vec![Vec::new(); self.n_classes];
+        for (i, &l) in self.y.iter().enumerate() {
+            per[l as usize].push(i);
+        }
+        per
+    }
+}
+
+/// Cyclic minibatch sampler over a shard's indices: reshuffles each epoch
+/// with its own RNG stream, yielding exactly `batch` indices per call
+/// (wrapping across epochs like the usual FL local loader).
+#[derive(Debug, Clone)]
+pub struct BatchSampler {
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Xoshiro256,
+}
+
+impl BatchSampler {
+    pub fn new(indices: Vec<usize>, seed: u64) -> Self {
+        assert!(!indices.is_empty(), "cannot sample from an empty shard");
+        let mut rng = Xoshiro256::new(seed);
+        let mut order = indices;
+        rng.shuffle(&mut order);
+        Self { order, cursor: 0, rng }
+    }
+
+    /// Next `batch` indices (wraps + reshuffles at epoch boundaries).
+    pub fn next_batch(&mut self, batch: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            if self.cursor == self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            out.push(self.order[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+
+    /// Number of batches per epoch (ceil).
+    pub fn batches_per_epoch(&self, batch: usize) -> usize {
+        self.order.len().div_ceil(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let n = 10;
+        let dim = 3;
+        let x: Vec<f32> = (0..n * dim).map(|i| i as f32).collect();
+        let y: Vec<i32> = (0..n as i32).map(|i| i % 2).collect();
+        Dataset::new(x, y, dim, 2)
+    }
+
+    #[test]
+    fn row_and_gather() {
+        let d = toy();
+        assert_eq!(d.row(2), &[6.0, 7.0, 8.0]);
+        let (x, y) = d.gather(&[0, 3]);
+        assert_eq!(x, vec![0.0, 1.0, 2.0, 9.0, 10.0, 11.0]);
+        assert_eq!(y, vec![0, 1]);
+    }
+
+    #[test]
+    fn class_indices_partition_everything() {
+        let d = toy();
+        let per = d.class_indices();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].len() + per[1].len(), d.len());
+        assert!(per[0].iter().all(|&i| d.y[i] == 0));
+    }
+
+    #[test]
+    fn sampler_covers_epoch() {
+        let mut s = BatchSampler::new((0..10).collect(), 1);
+        let mut seen = vec![0u32; 10];
+        for _ in 0..5 {
+            for i in s.next_batch(2) {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn sampler_wraps_and_reshuffles() {
+        let mut s = BatchSampler::new((0..4).collect(), 2);
+        let b = s.next_batch(10); // 2.5 epochs
+        assert_eq!(b.len(), 10);
+        let mut counts = [0; 4];
+        for &i in &b {
+            counts[i] += 1;
+        }
+        // every element appears 2 or 3 times
+        assert!(counts.iter().all(|&c| c == 2 || c == 3), "{counts:?}");
+    }
+
+    #[test]
+    fn sampler_deterministic() {
+        let a: Vec<_> = BatchSampler::new((0..8).collect(), 9).next_batch(16);
+        let b: Vec<_> = BatchSampler::new((0..8).collect(), 9).next_batch(16);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn bad_sizes_panic() {
+        Dataset::new(vec![0.0; 5], vec![0, 1], 3, 2);
+    }
+}

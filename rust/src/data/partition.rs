@@ -1,0 +1,210 @@
+//! Federated dataset partitioning (paper sec. IV).
+//!
+//! * IID: shuffle, split evenly across K devices.
+//! * Non-IID: each device is randomly assigned `c` of the classes
+//!   (c ∈ {2,4} in the paper) and only receives samples of those
+//!   classes; each class's sample pool is split evenly among the
+//!   devices holding that class.
+
+use super::Dataset;
+use crate::util::Xoshiro256;
+
+/// One device's view of the dataset: indices into the parent `Dataset`.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub client_id: usize,
+    pub indices: Vec<usize>,
+    /// Classes present on this device (== all classes for IID).
+    pub classes: Vec<usize>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// |D_i| as the aggregation weight of eq. 2 / eq. 8.
+    pub fn weight(&self) -> f64 {
+        self.indices.len() as f64
+    }
+}
+
+/// Evenly distribute shuffled samples across `k` devices.
+pub fn partition_iid(data: &Dataset, k: usize, seed: u64) -> Vec<Shard> {
+    assert!(k > 0 && k <= data.len(), "need 1..=len clients");
+    let mut rng = Xoshiro256::new(seed);
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    rng.shuffle(&mut idx);
+    let all_classes: Vec<usize> = (0..data.n_classes).collect();
+    let base = data.len() / k;
+    let extra = data.len() % k;
+    let mut shards = Vec::with_capacity(k);
+    let mut cursor = 0;
+    for c in 0..k {
+        let take = base + usize::from(c < extra);
+        shards.push(Shard {
+            client_id: c,
+            indices: idx[cursor..cursor + take].to_vec(),
+            classes: all_classes.clone(),
+        });
+        cursor += take;
+    }
+    shards
+}
+
+/// Label-heterogeneous split: each device gets `c` random classes.
+///
+/// Every class is guaranteed at least one holder (otherwise some samples
+/// would vanish from the federation): classes are dealt round-robin
+/// first, then devices fill up to `c` with random extra classes.
+pub fn partition_noniid(data: &Dataset, k: usize, c: usize, seed: u64) -> Vec<Shard> {
+    assert!(k > 0, "need at least one client");
+    assert!(c >= 1 && c <= data.n_classes, "c must be in 1..=n_classes");
+    let mut rng = Xoshiro256::new(seed);
+    let n_classes = data.n_classes;
+
+    // --- assign classes to devices ------------------------------------
+    let mut device_classes: Vec<Vec<usize>> = vec![Vec::new(); k];
+    // Round-robin over a shuffled class list so every class has >= 1
+    // holder whenever k*c >= n_classes (the paper's regimes satisfy it).
+    let mut classes: Vec<usize> = (0..n_classes).collect();
+    rng.shuffle(&mut classes);
+    let mut di = 0;
+    for &cl in &classes {
+        device_classes[di % k].push(cl);
+        di += 1;
+    }
+    // Fill remaining slots with distinct random classes.
+    for slots in device_classes.iter_mut() {
+        while slots.len() < c {
+            let cl = rng.below(n_classes as u64) as usize;
+            if !slots.contains(&cl) {
+                slots.push(cl);
+            }
+        }
+        slots.truncate(c); // if n_classes > k*c, some devices got extras
+        slots.sort_unstable();
+    }
+
+    // --- split each class pool among its holders ----------------------
+    let mut per_class = data.class_indices();
+    for pool in per_class.iter_mut() {
+        rng.shuffle(pool);
+    }
+    let mut holders: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+    for (dev, cls) in device_classes.iter().enumerate() {
+        for &cl in cls {
+            holders[cl].push(dev);
+        }
+    }
+    let mut shards: Vec<Shard> = (0..k)
+        .map(|client_id| Shard {
+            client_id,
+            indices: Vec::new(),
+            classes: device_classes[client_id].clone(),
+        })
+        .collect();
+    for cl in 0..n_classes {
+        let hs = &holders[cl];
+        if hs.is_empty() {
+            continue; // class unassigned (only when k*c < n_classes)
+        }
+        for (j, &sample) in per_class[cl].iter().enumerate() {
+            shards[hs[j % hs.len()]].indices.push(sample);
+        }
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthSpec, Synthetic};
+
+    fn dataset() -> Dataset {
+        Synthetic::new(SynthSpec::tiny(), 5).generate(1000, 1)
+    }
+
+    #[test]
+    fn iid_covers_exactly() {
+        let d = dataset();
+        let shards = partition_iid(&d, 7, 3);
+        let mut all: Vec<usize> =
+            shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..d.len()).collect::<Vec<_>>());
+        // sizes within 1 of each other
+        let sizes: Vec<usize> = shards.iter().map(Shard::len).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn iid_deterministic() {
+        let d = dataset();
+        let a = partition_iid(&d, 4, 9);
+        let b = partition_iid(&d, 4, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices, y.indices);
+        }
+    }
+
+    #[test]
+    fn noniid_respects_class_budget() {
+        let d = dataset();
+        for c in [2usize, 4] {
+            let shards = partition_noniid(&d, 30, c, 11);
+            for s in &shards {
+                assert!(s.classes.len() <= c, "client {} classes {:?}", s.client_id, s.classes);
+                // every sample's label is in the device's class list
+                for &i in &s.indices {
+                    assert!(s.classes.contains(&(d.y[i] as usize)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn noniid_covers_exactly_when_all_classes_held() {
+        let d = dataset();
+        let shards = partition_noniid(&d, 30, 2, 13);
+        let mut all: Vec<usize> =
+            shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), d.len(), "every sample on exactly one device");
+    }
+
+    #[test]
+    fn noniid_every_class_has_a_holder() {
+        let d = dataset();
+        let shards = partition_noniid(&d, 10, 2, 17);
+        let mut held = vec![false; d.n_classes];
+        for s in &shards {
+            for &c in &s.classes {
+                held[c] = true;
+            }
+        }
+        assert!(held.iter().all(|&h| h), "{held:?}");
+    }
+
+    #[test]
+    fn noniid_heterogeneity_differs_across_clients() {
+        let d = dataset();
+        let shards = partition_noniid(&d, 30, 2, 23);
+        let distinct: std::collections::HashSet<Vec<usize>> =
+            shards.iter().map(|s| s.classes.clone()).collect();
+        assert!(distinct.len() > 3, "class assignments should vary");
+    }
+
+    #[test]
+    fn weights_sum_to_dataset_size() {
+        let d = dataset();
+        let shards = partition_noniid(&d, 30, 4, 29);
+        let total: f64 = shards.iter().map(Shard::weight).sum();
+        assert_eq!(total as usize, d.len());
+    }
+}

@@ -1,0 +1,155 @@
+//! Communication accounting: every bit that would cross the network.
+//!
+//! The paper's evaluation axis is uplink bits per parameter, so this is
+//! first-class state, not an afterthought: the client records the coded
+//! size of every uplink payload (masks through [`crate::compress`],
+//! dense floats at 32 Bpp) and the estimated source entropy (eq. 13);
+//! the server records downlink broadcast sizes.
+
+use crate::compress::Encoded;
+use crate::mask::empirical_bpp;
+use crate::util::BitVec;
+
+/// One round's communication totals across all clients.
+#[derive(Debug, Clone, Default)]
+pub struct RoundComm {
+    /// Measured uplink bits (entropy-coded payloads, incl. headers).
+    pub ul_bits: u64,
+    /// Estimated uplink Bpp via eq. 13 (mean over clients).
+    pub est_bpp: f64,
+    /// Downlink bits (global state broadcast).
+    pub dl_bits: u64,
+    /// Number of client uplinks this round.
+    pub clients: usize,
+    /// Model parameter count (denominator for Bpp).
+    pub n_params: usize,
+}
+
+impl RoundComm {
+    pub fn new(n_params: usize) -> Self {
+        Self { n_params, ..Default::default() }
+    }
+
+    /// Record one client's coded binary-mask uplink.
+    pub fn add_mask_uplink(&mut self, mask: &BitVec, enc: &Encoded) {
+        self.ul_bits += enc.wire_bytes() as u64 * 8;
+        // incremental mean of the per-client empirical entropy
+        let h = empirical_bpp(mask);
+        self.est_bpp += (h - self.est_bpp) / (self.clients + 1) as f64;
+        self.clients += 1;
+    }
+
+    /// Record a dense float uplink (FedAvg): 32 bits per parameter.
+    pub fn add_dense_uplink(&mut self) {
+        self.ul_bits += self.n_params as u64 * 32;
+        self.est_bpp += (32.0 - self.est_bpp) / (self.clients + 1) as f64;
+        self.clients += 1;
+    }
+
+    /// Record the downlink broadcast of the global state to one client.
+    /// Mask algorithms ship theta as f32 (the paper's DL is also float,
+    /// its contribution is about the UL); dense ships weights as f32.
+    pub fn add_float_downlink(&mut self) {
+        self.dl_bits += self.n_params as u64 * 32;
+    }
+
+    /// Measured mean uplink bits per parameter per client.
+    pub fn measured_bpp(&self) -> f64 {
+        if self.clients == 0 || self.n_params == 0 {
+            0.0
+        } else {
+            self.ul_bits as f64 / (self.clients as f64 * self.n_params as f64)
+        }
+    }
+}
+
+/// Accumulates communication across rounds (for totals / summaries).
+#[derive(Debug, Clone, Default)]
+pub struct CommTotals {
+    pub ul_bits: u64,
+    pub dl_bits: u64,
+    pub rounds: usize,
+}
+
+impl CommTotals {
+    pub fn add_round(&mut self, rc: &RoundComm) {
+        self.ul_bits += rc.ul_bits;
+        self.dl_bits += rc.dl_bits;
+        self.rounds += 1;
+    }
+
+    pub fn ul_megabytes(&self) -> f64 {
+        self.ul_bits as f64 / 8.0 / 1e6
+    }
+
+    pub fn dl_megabytes(&self) -> f64 {
+        self.dl_bits as f64 / 8.0 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress;
+    use crate::util::Xoshiro256;
+
+    fn mask(n: usize, p: f64, seed: u64) -> BitVec {
+        let mut rng = Xoshiro256::new(seed);
+        BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < p), n)
+    }
+
+    #[test]
+    fn mask_uplink_accounting() {
+        let n = 10_000;
+        let mut rc = RoundComm::new(n);
+        for i in 0..5 {
+            let m = mask(n, 0.5, i);
+            let enc = compress::encode(&m);
+            rc.add_mask_uplink(&m, &enc);
+        }
+        assert_eq!(rc.clients, 5);
+        // p=0.5 masks: measured ~1 Bpp, est ~1.0
+        assert!((rc.est_bpp - 1.0).abs() < 0.01, "est={}", rc.est_bpp);
+        assert!((rc.measured_bpp() - 1.0).abs() < 0.05, "meas={}", rc.measured_bpp());
+    }
+
+    #[test]
+    fn sparse_masks_account_below_one_bpp() {
+        let n = 50_000;
+        let mut rc = RoundComm::new(n);
+        let m = mask(n, 0.02, 1);
+        rc.add_mask_uplink(&m, &compress::encode(&m));
+        assert!(rc.measured_bpp() < 0.25);
+        assert!(rc.est_bpp < 0.25);
+    }
+
+    #[test]
+    fn dense_uplink_is_32bpp() {
+        let mut rc = RoundComm::new(1000);
+        rc.add_dense_uplink();
+        assert_eq!(rc.ul_bits, 32_000);
+        assert_eq!(rc.measured_bpp(), 32.0);
+        assert_eq!(rc.est_bpp, 32.0);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut t = CommTotals::default();
+        let mut rc = RoundComm::new(8000);
+        rc.add_dense_uplink();
+        rc.add_float_downlink();
+        t.add_round(&rc);
+        t.add_round(&rc);
+        assert_eq!(t.rounds, 2);
+        assert_eq!(t.ul_bits, 2 * 8000 * 32);
+        assert_eq!(t.dl_bits, 2 * 8000 * 32);
+        assert!(t.ul_megabytes() > 0.0);
+    }
+
+    #[test]
+    fn empty_round_is_zero() {
+        let rc = RoundComm::new(100);
+        assert_eq!(rc.measured_bpp(), 0.0);
+        assert_eq!(rc.est_bpp, 0.0);
+    }
+}

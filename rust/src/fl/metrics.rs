@@ -1,0 +1,201 @@
+//! Metrics sink: per-round records to JSONL / CSV + console.
+//!
+//! Dependency-free JSON emission (flat records only — nothing here needs
+//! nesting). One record per round is the contract the figure harnesses
+//! and the plotting snippets in EXPERIMENTS.md consume.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One federated round's logged metrics.
+#[derive(Debug, Clone, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Mean validation accuracy over the devices' target distributions.
+    pub accuracy: f64,
+    /// Mean validation loss.
+    pub loss: f64,
+    /// Mean train loss reported by the clients this round.
+    pub train_loss: f64,
+    /// Estimated uplink Bpp (eq. 13).
+    pub est_bpp: f64,
+    /// Measured (entropy-coded) uplink Bpp.
+    pub coded_bpp: f64,
+    /// Mean global keep-probability (sparsity telemetry).
+    pub mean_theta: f64,
+    /// Density of a mask sampled from the current global state.
+    pub mask_density: f64,
+    /// Wall-clock seconds spent in this round.
+    pub secs: f64,
+}
+
+impl RoundRecord {
+    /// Flat JSON object (stable key order).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(256);
+        s.push('{');
+        let mut first = true;
+        let mut kv = |s: &mut String, k: &str, v: String| {
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            let _ = write!(s, "\"{k}\":{v}");
+        };
+        kv(&mut s, "round", self.round.to_string());
+        kv(&mut s, "accuracy", fmt_f64(self.accuracy));
+        kv(&mut s, "loss", fmt_f64(self.loss));
+        kv(&mut s, "train_loss", fmt_f64(self.train_loss));
+        kv(&mut s, "est_bpp", fmt_f64(self.est_bpp));
+        kv(&mut s, "coded_bpp", fmt_f64(self.coded_bpp));
+        kv(&mut s, "mean_theta", fmt_f64(self.mean_theta));
+        kv(&mut s, "mask_density", fmt_f64(self.mask_density));
+        kv(&mut s, "secs", fmt_f64(self.secs));
+        s.push('}');
+        s
+    }
+
+    pub const CSV_HEADER: &'static str =
+        "round,accuracy,loss,train_loss,est_bpp,coded_bpp,mean_theta,mask_density,secs";
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{}",
+            self.round,
+            fmt_f64(self.accuracy),
+            fmt_f64(self.loss),
+            fmt_f64(self.train_loss),
+            fmt_f64(self.est_bpp),
+            fmt_f64(self.coded_bpp),
+            fmt_f64(self.mean_theta),
+            fmt_f64(self.mask_density),
+            fmt_f64(self.secs),
+        )
+    }
+}
+
+/// JSON-safe float formatting (no NaN/inf in the output files).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Where round records go: optional JSONL file + console cadence.
+pub struct MetricsSink {
+    file: Option<BufWriter<File>>,
+    pub echo_every: usize,
+    records: Vec<RoundRecord>,
+}
+
+impl MetricsSink {
+    /// `path` empty -> in-memory + console only.
+    pub fn new(path: &str, echo_every: usize) -> Result<Self> {
+        let file = if path.is_empty() {
+            None
+        } else {
+            if let Some(parent) = Path::new(path).parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            Some(BufWriter::new(
+                File::create(path).with_context(|| format!("creating {path}"))?,
+            ))
+        };
+        Ok(Self { file, echo_every: echo_every.max(1), records: Vec::new() })
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            writeln!(f, "{}", rec.to_json())?;
+        }
+        if rec.round % self.echo_every == 0 {
+            eprintln!(
+                "round {:>4}  acc={:.4}  loss={:.4}  estBpp={:.4}  codedBpp={:.4}  theta={:.4}",
+                rec.round, rec.accuracy, rec.loss, rec.est_bpp, rec.coded_bpp, rec.mean_theta
+            );
+        }
+        self.records.push(rec);
+        Ok(())
+    }
+
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            f.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Mean of the last `k` records' field (for end-of-run summaries).
+    pub fn tail_mean(&self, k: usize, f: impl Fn(&RoundRecord) -> f64) -> f64 {
+        let n = self.records.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let take = k.min(n);
+        self.records[n - take..].iter().map(&f).sum::<f64>() / take as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape() {
+        let rec = RoundRecord { round: 3, accuracy: 0.5, ..Default::default() };
+        let j = rec.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"round\":3"));
+        assert!(j.contains("\"accuracy\":0.500000"));
+        // no NaN leakage
+        let rec = RoundRecord { loss: f64::NAN, ..Default::default() };
+        assert!(rec.to_json().contains("\"loss\":null"));
+    }
+
+    #[test]
+    fn csv_columns_match_header() {
+        let rec = RoundRecord::default();
+        assert_eq!(
+            rec.to_csv().split(',').count(),
+            RoundRecord::CSV_HEADER.split(',').count()
+        );
+    }
+
+    #[test]
+    fn sink_writes_jsonl() {
+        let path = std::env::temp_dir().join(format!("fedsrn_m_{}.jsonl", std::process::id()));
+        let mut sink = MetricsSink::new(path.to_str().unwrap(), 1000).unwrap();
+        for r in 0..3 {
+            sink.push(RoundRecord { round: r, accuracy: r as f64 * 0.1, ..Default::default() })
+                .unwrap();
+        }
+        sink.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.lines().all(|l| l.starts_with('{')));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tail_mean() {
+        let mut sink = MetricsSink::new("", 1000).unwrap();
+        for r in 0..10 {
+            sink.push(RoundRecord { round: r, accuracy: r as f64, ..Default::default() })
+                .unwrap();
+        }
+        assert_eq!(sink.tail_mean(2, |r| r.accuracy), 8.5);
+        assert_eq!(sink.tail_mean(100, |r| r.accuracy), 4.5);
+    }
+}

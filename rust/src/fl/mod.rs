@@ -1,0 +1,17 @@
+//! The federated-learning engine: server, simulated device fleet,
+//! communication accounting, metrics.
+//!
+//! The round loop itself lives in [`crate::algos`] (each algorithm owns
+//! its round semantics) and is driven by [`crate::coordinator`].
+
+pub mod client;
+pub mod participation;
+pub mod comm;
+pub mod metrics;
+pub mod server;
+
+pub use client::Client;
+pub use participation::Participation;
+pub use comm::{CommTotals, RoundComm};
+pub use metrics::{MetricsSink, RoundRecord};
+pub use server::Server;

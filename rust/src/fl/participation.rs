@@ -1,0 +1,131 @@
+//! Client participation & failure model.
+//!
+//! Real federations never see every device every round: devices are
+//! sampled (participation fraction) and some of the sampled ones drop
+//! mid-round (stragglers, battery, network). The paper assumes full
+//! participation; this module generalizes the round loop so the same
+//! code runs the paper's setting (fraction = 1, dropout = 0) and the
+//! robustness ablations in `coordinator::ablation`.
+
+use crate::util::Xoshiro256;
+
+/// Per-round participation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct Participation {
+    /// Fraction of devices sampled each round (0, 1].
+    pub fraction: f64,
+    /// Probability a sampled device fails to report its uplink.
+    pub dropout: f64,
+}
+
+impl Default for Participation {
+    fn default() -> Self {
+        Self { fraction: 1.0, dropout: 0.0 }
+    }
+}
+
+impl Participation {
+    pub fn new(fraction: f64, dropout: f64) -> Self {
+        assert!(fraction > 0.0 && fraction <= 1.0, "fraction in (0,1]");
+        assert!((0.0..1.0).contains(&dropout), "dropout in [0,1)");
+        Self { fraction, dropout }
+    }
+
+    /// Is this the paper's full-participation setting?
+    pub fn is_full(&self) -> bool {
+        self.fraction >= 1.0 && self.dropout == 0.0
+    }
+
+    /// Sample the participating client ids for `round`.
+    ///
+    /// At least one client always participates (a federation round with
+    /// zero uplinks cannot aggregate); sampling is deterministic in
+    /// (seed, round).
+    pub fn sample_round(&self, n_clients: usize, seed: u64, round: usize) -> Vec<usize> {
+        let mut rng = Xoshiro256::new(seed ^ 0x9A47 ^ ((round as u64) << 16));
+        let k = ((n_clients as f64 * self.fraction).round() as usize).clamp(1, n_clients);
+        let mut ids: Vec<usize> = (0..n_clients).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(k);
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Does this sampled client drop out before its uplink lands?
+    /// Guarantees at least one survivor among `participants` by never
+    /// dropping the first one.
+    pub fn drops(&self, position_in_round: usize, seed: u64, round: usize, client: usize) -> bool {
+        if self.dropout == 0.0 || position_in_round == 0 {
+            return false;
+        }
+        let mut rng =
+            Xoshiro256::new(seed ^ 0xD209 ^ ((round as u64) << 20) ^ (client as u64));
+        rng.next_f64() < self.dropout
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_participation_selects_everyone() {
+        let p = Participation::default();
+        assert!(p.is_full());
+        assert_eq!(p.sample_round(7, 1, 0), vec![0, 1, 2, 3, 4, 5, 6]);
+        assert!(!p.drops(3, 1, 0, 3));
+    }
+
+    #[test]
+    fn fraction_selects_expected_count() {
+        let p = Participation::new(0.3, 0.0);
+        for round in 0..20 {
+            let ids = p.sample_round(30, 5, round);
+            assert_eq!(ids.len(), 9);
+            assert!(ids.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+            assert!(ids.iter().all(|&i| i < 30));
+        }
+    }
+
+    #[test]
+    fn sampling_varies_by_round_but_is_deterministic() {
+        let p = Participation::new(0.5, 0.0);
+        let a = p.sample_round(20, 9, 1);
+        let b = p.sample_round(20, 9, 1);
+        let c = p.sample_round(20, 9, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn at_least_one_client_even_at_tiny_fraction() {
+        let p = Participation::new(0.01, 0.0);
+        assert_eq!(p.sample_round(5, 3, 0).len(), 1);
+    }
+
+    #[test]
+    fn dropout_rate_roughly_matches() {
+        let p = Participation::new(1.0, 0.3);
+        let mut dropped = 0;
+        let total = 3000;
+        for round in 0..total {
+            if p.drops(1, 7, round, 1) {
+                dropped += 1;
+            }
+        }
+        let rate = dropped as f64 / total as f64;
+        assert!((rate - 0.3).abs() < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn first_participant_never_drops() {
+        let p = Participation::new(1.0, 0.99);
+        assert!(!p.drops(0, 1, 5, 17));
+    }
+
+    #[test]
+    #[should_panic(expected = "fraction")]
+    fn zero_fraction_rejected() {
+        Participation::new(0.0, 0.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Parameter server: global probability-mask state + round bookkeeping.
+//!
+//! Owns theta(t), performs eq. 8 aggregation of the decoded uplink
+//! masks, and produces the evaluation masks. The server never sees raw
+//! client data — only coded masks — mirroring the paper's privacy
+//! setting.
+
+use anyhow::{ensure, Result};
+
+use crate::compress::{self, Encoded};
+use crate::mask::{sample_mask, BetaAggregator, MaskAggregator, ProbMask};
+use crate::util::BitVec;
+
+use super::comm::RoundComm;
+
+/// How uplink masks combine into the next global mask.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AggMode {
+    /// eq. 8: dataset-size-weighted mean of the masks.
+    Mean,
+    /// Beta-posterior mean with symmetric prior strength `prior`
+    /// (FedPM's Bayesian aggregation; -> Mean as prior -> 0).
+    Bayes { prior: f64 },
+}
+
+enum Agg {
+    Mean(MaskAggregator),
+    Bayes(BetaAggregator),
+}
+
+/// The FedPM-family parameter server.
+pub struct Server {
+    theta: ProbMask,
+    agg: Agg,
+    n_params: usize,
+    /// Root seed for server-side sampling (eval masks etc.).
+    seed: u64,
+}
+
+impl Server {
+    /// Fresh server with theta ~ U[0,1) (paper footnote 2), eq. 8 mean.
+    pub fn new(n_params: usize, seed: u64) -> Self {
+        Self::with_agg(n_params, seed, AggMode::Mean)
+    }
+
+    /// Server with an explicit aggregation mode.
+    pub fn with_agg(n_params: usize, seed: u64, mode: AggMode) -> Self {
+        let agg = match mode {
+            AggMode::Mean => Agg::Mean(MaskAggregator::new(n_params)),
+            AggMode::Bayes { prior } => Agg::Bayes(BetaAggregator::new(n_params, prior)),
+        };
+        Self {
+            theta: ProbMask::uniform_random(n_params, seed ^ 0x7E7A),
+            agg,
+            n_params,
+            seed,
+        }
+    }
+
+    pub fn theta(&self) -> &ProbMask {
+        &self.theta
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// Downlink payload: scores s = logit(theta) for the clients.
+    pub fn broadcast_scores(&self, comm: &mut RoundComm, n_clients: usize) -> Vec<f32> {
+        for _ in 0..n_clients {
+            comm.add_float_downlink();
+        }
+        self.theta.to_scores()
+    }
+
+    /// Ingest one client's uplink: decode, verify, accumulate (eq. 8).
+    pub fn receive_mask(
+        &mut self,
+        enc: &Encoded,
+        weight: f64,
+        comm: &mut RoundComm,
+    ) -> Result<()> {
+        let mask = compress::decode(enc, self.n_params);
+        ensure!(mask.len() == self.n_params, "decoded mask length mismatch");
+        ensure!(mask.count_ones() == enc.ones as usize, "one-count corrupted in transit");
+        comm.add_mask_uplink(&mask, enc);
+        match &mut self.agg {
+            Agg::Mean(a) => a.add_mask(&mask, weight),
+            Agg::Bayes(a) => a.add_mask(&mask, weight),
+        }
+        Ok(())
+    }
+
+    /// Close the round: theta(t+1) from the configured aggregator.
+    pub fn finish_round(&mut self) -> Result<()> {
+        let n = match &self.agg {
+            Agg::Mean(a) => a.n_clients(),
+            Agg::Bayes(a) => a.n_clients(),
+        };
+        ensure!(n > 0, "no uplinks received this round");
+        self.theta = match &self.agg {
+            Agg::Mean(a) => a.finalize(),
+            Agg::Bayes(a) => a.finalize(),
+        };
+        match &mut self.agg {
+            Agg::Mean(a) => a.reset(),
+            Agg::Bayes(a) => a.reset(),
+        }
+        Ok(())
+    }
+
+    /// Evaluation mask sampled from the current global theta (FedPM
+    /// evaluates sampled sub-networks; seed varies per round).
+    pub fn eval_mask_sampled(&self, round: usize) -> BitVec {
+        sample_mask(&self.theta, self.seed ^ 0xE7A1 ^ ((round as u64) << 32))
+    }
+
+    /// Deterministic low-variance evaluation mask: 1[theta > 0.5].
+    pub fn eval_mask_threshold(&self) -> BitVec {
+        self.theta.threshold()
+    }
+
+    /// Final-model checkpoint payload: the coded thresholded mask (the
+    /// "seed + binary mask" storage story of the paper's conclusion).
+    pub fn checkpoint_mask(&self) -> Encoded {
+        compress::encode(&self.theta.threshold())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask_enc(n: usize, p: f64, seed: u64) -> (BitVec, Encoded) {
+        let pm = ProbMask::constant(n, p as f32);
+        let m = sample_mask(&pm, seed);
+        let e = compress::encode(&m);
+        (m, e)
+    }
+
+    #[test]
+    fn round_trip_aggregation() {
+        let n = 1000;
+        let mut srv = Server::new(n, 7);
+        let mut comm = RoundComm::new(n);
+        let (m1, e1) = mask_enc(n, 1.0, 1); // all ones
+        let (m2, e2) = mask_enc(n, 0.0, 2); // all zeros
+        assert_eq!(m1.count_ones(), n);
+        assert_eq!(m2.count_ones(), 0);
+        srv.receive_mask(&e1, 1.0, &mut comm).unwrap();
+        srv.receive_mask(&e2, 1.0, &mut comm).unwrap();
+        srv.finish_round().unwrap();
+        // equal weights: theta = 0.5 everywhere
+        assert!(srv.theta().theta().iter().all(|&t| (t - 0.5).abs() < 1e-6));
+        assert_eq!(comm.clients, 2);
+        assert!(comm.ul_bits > 0);
+    }
+
+    #[test]
+    fn weighted_aggregation_follows_eq8() {
+        let n = 64;
+        let mut srv = Server::new(n, 3);
+        let mut comm = RoundComm::new(n);
+        let (_, ones) = mask_enc(n, 1.0, 1);
+        let (_, zeros) = mask_enc(n, 0.0, 2);
+        srv.receive_mask(&ones, 30.0, &mut comm).unwrap();
+        srv.receive_mask(&zeros, 10.0, &mut comm).unwrap();
+        srv.finish_round().unwrap();
+        assert!(srv.theta().theta().iter().all(|&t| (t - 0.75).abs() < 1e-6));
+    }
+
+    #[test]
+    fn finish_without_uplinks_errors() {
+        let mut srv = Server::new(10, 1);
+        assert!(srv.finish_round().is_err());
+    }
+
+    #[test]
+    fn broadcast_counts_downlink() {
+        let srv = Server::new(100, 1);
+        let mut comm = RoundComm::new(100);
+        let scores = srv.broadcast_scores(&mut comm, 5);
+        assert_eq!(scores.len(), 100);
+        assert_eq!(comm.dl_bits, 5 * 100 * 32);
+    }
+
+    #[test]
+    fn eval_masks() {
+        let srv = Server::new(5000, 9);
+        let a = srv.eval_mask_sampled(1);
+        let b = srv.eval_mask_sampled(1);
+        let c = srv.eval_mask_sampled(2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // theta ~ U[0,1) -> threshold density ~0.5
+        let t = srv.eval_mask_threshold();
+        assert!((t.density() - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn corrupted_one_count_rejected() {
+        let n = 100;
+        let mut srv = Server::new(n, 1);
+        let mut comm = RoundComm::new(n);
+        let (_, mut enc) = mask_enc(n, 0.5, 3);
+        enc.ones += 1;
+        assert!(srv.receive_mask(&enc, 1.0, &mut comm).is_err());
+    }
+
+    #[test]
+    fn checkpoint_is_decodable() {
+        let srv = Server::new(2000, 11);
+        let ck = srv.checkpoint_mask();
+        let decoded = compress::decode(&ck, 2000);
+        assert_eq!(decoded, srv.eval_mask_threshold());
+    }
+}

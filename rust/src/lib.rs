@@ -1,0 +1,28 @@
+//! # fedsrn — Communication-Efficient FL via Regularized Sparse Random Networks
+//!
+//! A full-system reproduction of Mestoukirdi et al. 2023: federated
+//! training of binary masks over frozen random networks, with an
+//! entropy-proxy regularizer that drives uplink cost far below the
+//! 1 bit-per-parameter bound.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: parameter server, simulated
+//!   device fleet, mask aggregation, entropy coding, metrics.
+//! * **L2 (python/compile/model.py)** — JAX score-network programs,
+//!   AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas masked-matmul kernels
+//!   fused into the L2 programs.
+//!
+//! Python never runs at experiment time: the [`runtime`] module loads the
+//! AOT artifacts through PJRT and the whole federation runs natively.
+
+pub mod algos;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fl;
+pub mod mask;
+pub mod runtime;
+pub mod util;

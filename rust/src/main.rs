@@ -1,0 +1,301 @@
+//! fedsrn — launcher for the regularized sparse-random-network FL stack.
+//!
+//! Commands:
+//!   train              one experiment from a config file / overrides
+//!   figure fig1|fig2|summary   regenerate the paper's figures
+//!   eval               evaluate a saved checkpoint
+//!   inspect-artifacts  list AOT artifacts and their manifests
+//!   codec-bench        entropy-coder throughput/rate sweep
+//!   help
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use fedsrn::cli::Args;
+use fedsrn::compress;
+use fedsrn::config::ExperimentConfig;
+use fedsrn::coordinator::{figures, Checkpoint, Experiment};
+use fedsrn::fl::MetricsSink;
+use fedsrn::mask::ProbMask;
+use fedsrn::runtime::{available_models, Manifest, ModelRuntime};
+use fedsrn::util::{BitVec, Xoshiro256};
+
+const HELP: &str = "\
+fedsrn — Communication-Efficient FL via Regularized Sparse Random Networks
+
+USAGE:
+  fedsrn train [--config FILE] [--set key=value]... [--checkpoint FILE]
+  fedsrn figure fig1 [--dataset mnist|cifar10|cifar100] [--model M]
+                     [--rounds N] [--clients K] [--seed S] [--out DIR]
+  fedsrn figure fig2 [--dataset mnist|cifar10] [--model M] [--rounds N]
+                     [--clients K] [--classes C] [--lambdas 0.1,1]
+                     [--seed S] [--out DIR]
+  fedsrn figure summary [--rounds N] [--out DIR]   # all IID datasets
+  fedsrn eval --checkpoint FILE [--dataset D] [--samples N]
+  fedsrn analyze --run FILE.jsonl [--tail 5]
+  fedsrn inspect-artifacts [--dir artifacts]
+  fedsrn codec-bench [--n 268800]
+  fedsrn help
+
+Config keys for --set (see rust/src/config/mod.rs): model dataset
+algorithm partition clients rounds local_epochs lambda lr topk_frac
+server_lr train_samples test_samples eval_every optimizer adam
+participation dropout bayes_prior seed artifacts_dir out
+";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    if argv.is_empty() {
+        println!("{HELP}");
+        return Ok(());
+    }
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "train" => cmd_train(&args),
+        "figure" => cmd_figure(&args),
+        "eval" => cmd_eval(&args),
+        "analyze" => cmd_analyze(&args),
+        "inspect-artifacts" => cmd_inspect(&args),
+        "codec-bench" => cmd_codec_bench(&args),
+        other => bail!("unknown command '{other}' (try `fedsrn help`)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.ensure_known_flags(&["config", "checkpoint"])?;
+    let mut cfg = match args.flag("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    for (k, v) in &args.overrides {
+        cfg.apply(k, v)?;
+    }
+    cfg.validate()?;
+    eprintln!(
+        "training: model={} dataset={} algo={} partition={:?} K={} T={} lambda={}",
+        cfg.model, cfg.dataset, cfg.algorithm.name(), cfg.partition, cfg.clients,
+        cfg.rounds, cfg.effective_lambda()
+    );
+    let out = cfg.out.clone();
+    let mut sink = MetricsSink::new(&out, 1)?;
+    let mut exp = Experiment::build(cfg)?;
+    let summary = exp.run(&mut sink)?;
+    println!(
+        "final: acc={:.4} avg_estBpp={:.4} avg_codedBpp={:.4} UL={:.3}MB storage={}bits",
+        summary.final_accuracy,
+        summary.avg_est_bpp,
+        summary.avg_coded_bpp,
+        summary.total_ul_mb,
+        summary.storage_bits
+    );
+    if let Some(ck_path) = args.flag("checkpoint") {
+        save_checkpoint(&exp, ck_path)?;
+    }
+    Ok(())
+}
+
+fn save_checkpoint(exp: &Experiment, path: &str) -> Result<()> {
+    use fedsrn::algos::EvalModel;
+    let man = &exp.runtime().manifest;
+    let mask = match exp.strategy_eval_model() {
+        EvalModel::Masked(m) => BitVec::from_f32_threshold(&m),
+        EvalModel::Dense(_) => {
+            bail!("--checkpoint is only meaningful for mask algorithms")
+        }
+    };
+    let ck = Checkpoint::new(&man.model, man.weight_seed, man.n_params, &mask);
+    ck.save(Path::new(path))?;
+    println!(
+        "checkpoint: {} bytes vs dense {} bytes ({:.1}x smaller) -> {path}",
+        ck.size_bytes(),
+        ck.dense_size_bytes(),
+        ck.compression_factor()
+    );
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    args.ensure_known_flags(&[
+        "dataset", "model", "rounds", "clients", "classes", "lambdas", "seed", "out",
+    ])?;
+    let which = args
+        .positional
+        .first()
+        .context("figure needs a name: fig1 | fig2 | summary")?;
+    let dataset = args.flag_or("dataset", "mnist");
+    let model = args.flag_or("model", figures::default_model_for(&dataset));
+    let seed: u64 = args.flag_parse("seed", 2023u64)?;
+    let out = args.flag_or("out", "runs");
+    match which.as_str() {
+        "fig1" => {
+            let rounds = args.flag_parse("rounds", 30usize)?;
+            let clients = args.flag_parse("clients", 10usize)?;
+            figures::run_fig1(&dataset, &model, rounds, clients, seed, &out)?;
+        }
+        "fig2" => {
+            let rounds = args.flag_parse("rounds", 30usize)?;
+            let clients = args.flag_parse("clients", 30usize)?;
+            let c = args.flag_parse("classes", 2usize)?;
+            let lambdas: Vec<f32> = args
+                .flag_or("lambdas", "0.1,1")
+                .split(',')
+                .map(|s| s.trim().parse::<f32>().context("parsing --lambdas"))
+                .collect::<Result<_>>()?;
+            figures::run_fig2(&dataset, &model, rounds, clients, c, &lambdas, seed, &out)?;
+        }
+        "summary" => {
+            let rounds = args.flag_parse("rounds", 30usize)?;
+            let mut all = Vec::new();
+            for ds in ["mnist", "cifar10", "cifar100"] {
+                let model = figures::default_model_for(ds).to_string();
+                if Manifest::load(Path::new("artifacts"), &model).is_err() {
+                    eprintln!("skipping {ds}: artifacts for {model} not exported");
+                    continue;
+                }
+                let curves = figures::run_fig1(ds, &model, rounds, 10, seed, &out)?;
+                all.push((ds.to_string(), curves));
+            }
+            figures::summary_table(&all);
+        }
+        other => bail!("unknown figure '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    args.ensure_known_flags(&["checkpoint", "dataset", "samples", "artifacts"])?;
+    let ck_path = args.flag("checkpoint").context("--checkpoint FILE required")?;
+    let ck = Checkpoint::load(Path::new(ck_path))?;
+    let dir = args.flag_or("artifacts", "artifacts");
+    let rt = ModelRuntime::load(Path::new(&dir), &ck.model)?;
+    let dataset = args.flag_or("dataset", "tiny");
+    let samples: usize = args.flag_parse("samples", 512usize)?;
+    let mut spec =
+        fedsrn::data::SynthSpec::by_name(&dataset).context("unknown dataset")?;
+    spec.n_classes = rt.manifest.n_classes;
+    let data = fedsrn::data::Synthetic::new(spec, 2023 ^ 0xDA7A).generate(samples, 2);
+    let mask = ck.decode_mask().to_f32();
+    let m = rt.eval_mask(&mask, &data.x, &data.y)?;
+    println!(
+        "checkpoint {}: accuracy={:.4} loss={:.4} ({} examples, mask density {:.4})",
+        ck_path,
+        m.accuracy(),
+        m.mean_loss(),
+        m.examples,
+        ck.decode_mask().density()
+    );
+    if !rt.manifest.layers.is_empty() {
+        let stats = fedsrn::mask::layer_stats(&ck.decode_mask(), &rt.manifest.layers);
+        println!("\nper-layer sparsity (where the regularizer pruned):");
+        print!("{}", fedsrn::mask::layers::format_table(&stats));
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    args.ensure_known_flags(&["run", "tail"])?;
+    let path = args.flag("run").context("--run FILE.jsonl required")?;
+    let tail: usize = args.flag_parse("tail", 5usize)?;
+    let recs = fedsrn::util::read_jsonl(Path::new(path))?;
+    anyhow::ensure!(!recs.is_empty(), "no records in {path}");
+    let col = |k: &str| -> Vec<f64> {
+        recs.iter().filter_map(|r| r.get(k).and_then(|v| v.as_f64())).collect()
+    };
+    let acc = col("accuracy");
+    let est = col("est_bpp");
+    let coded = col("coded_bpp");
+    let secs = col("secs");
+    let last = |v: &[f64], k: usize| -> f64 {
+        if v.is_empty() { return 0.0; }
+        let take = k.min(v.len());
+        v[v.len() - take..].iter().sum::<f64>() / take as f64
+    };
+    println!("run: {path} ({} rounds)", recs.len());
+    println!("  final accuracy (tail {tail} mean): {:.4}", last(&acc, tail));
+    println!("  est Bpp: first {:.4} -> last {:.4} (avg {:.4})",
+        est.first().copied().unwrap_or(0.0), est.last().copied().unwrap_or(0.0),
+        fedsrn::util::mean(&est));
+    println!("  coded Bpp avg: {:.4}", fedsrn::util::mean(&coded));
+    println!("  round time: mean {:.3}s (total {:.1}s)",
+        fedsrn::util::mean(&secs), secs.iter().sum::<f64>());
+    // Bpp savings vs the 1-bit bound over the whole run
+    let n_rounds = recs.len() as f64;
+    println!("  uplink saved vs 1 Bpp bound: {:.1}%",
+        (1.0 - fedsrn::util::mean(&coded)).max(0.0) * 100.0 / 1.0f64.max(1e-9));
+    let _ = n_rounds;
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    args.ensure_known_flags(&["dir"])?;
+    let dir = args.flag_or("dir", "artifacts");
+    let models = available_models(Path::new(&dir));
+    if models.is_empty() {
+        bail!("no artifacts in '{dir}' — run `make artifacts`");
+    }
+    println!(
+        "{:<16} {:>10} {:>8} {:>8} {:>6} {:>6} {:>10}",
+        "model", "n_params", "in_dim", "classes", "B", "S", "eval_chunk"
+    );
+    for m in models {
+        let man = Manifest::load(Path::new(&dir), &m)?;
+        println!(
+            "{:<16} {:>10} {:>8} {:>8} {:>6} {:>6} {:>10}",
+            man.model,
+            man.n_params,
+            man.input_dim,
+            man.n_classes,
+            man.batch,
+            man.steps,
+            man.eval_chunk
+        );
+    }
+    Ok(())
+}
+
+fn cmd_codec_bench(args: &Args) -> Result<()> {
+    args.ensure_known_flags(&["n"])?;
+    let n: usize = args.flag_parse("n", 268_800usize)?;
+    println!("mask codec sweep over n={n} parameters:");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>10} {:>12}",
+        "density", "H(p) bits", "arith Bpp", "golomb Bpp", "winner", "enc MB/s"
+    );
+    let mut rng = Xoshiro256::new(7);
+    for &p in &[0.005, 0.01, 0.05, 0.1, 0.25, 0.5] {
+        let theta = ProbMask::constant(n, p as f32);
+        let mask = fedsrn::mask::sample_mask(&theta, rng.next_u64());
+        let h = fedsrn::mask::entropy_bits(p);
+        let t0 = std::time::Instant::now();
+        let arith = compress::encode_with(&mask, compress::Method::Arithmetic);
+        let dt = t0.elapsed().as_secs_f64();
+        let gol = compress::encode_with(&mask, compress::Method::Golomb);
+        let best = compress::encode(&mask);
+        println!(
+            "{:>8.3} {:>12.4} {:>12.4} {:>12.4} {:>10} {:>12.1}",
+            p,
+            h,
+            arith.bpp(n),
+            gol.bpp(n),
+            format!("{:?}", best.method),
+            n as f64 / 8.0 / 1e6 / dt
+        );
+    }
+    Ok(())
+}

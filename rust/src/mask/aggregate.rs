@@ -1,0 +1,292 @@
+//! Server-side aggregation (paper eq. 8) and the SignSGD majority vote.
+//!
+//! Eq. 8: theta(t+1) = (1 / sum_k |D_k|) * sum_i |D_i| * m_i(t) — a
+//! dataset-size-weighted average of the received binary masks, which is
+//! an unbiased estimate of the average of the clients' local probability
+//! masks (FedPM, thm. 1). Implemented as a streaming accumulator so the
+//! server never holds all masks in memory at once.
+
+use crate::util::BitVec;
+
+use super::ProbMask;
+
+/// Streaming weighted-average aggregator for uplink masks.
+#[derive(Debug, Clone)]
+pub struct MaskAggregator {
+    acc: Vec<f64>,
+    weight_sum: f64,
+    n_clients: usize,
+}
+
+impl MaskAggregator {
+    pub fn new(n_params: usize) -> Self {
+        Self { acc: vec![0.0; n_params], weight_sum: 0.0, n_clients: 0 }
+    }
+
+    /// Add one client's mask with weight |D_i|.
+    ///
+    /// Word-scans the set bits (O(words + ones)); the regularized masks
+    /// this server exists for are sparse, so this is the hot-loop form.
+    pub fn add_mask(&mut self, mask: &BitVec, weight: f64) {
+        assert_eq!(mask.len(), self.acc.len(), "mask length mismatch");
+        assert!(weight > 0.0, "client weight must be positive");
+        for i in mask.iter_ones() {
+            self.acc[i] += weight;
+        }
+        self.weight_sum += weight;
+        self.n_clients += 1;
+    }
+
+    /// Bit-by-bit reference path, kept for the §Perf A/B benchmark.
+    pub fn add_mask_scalar(&mut self, mask: &BitVec, weight: f64) {
+        assert_eq!(mask.len(), self.acc.len(), "mask length mismatch");
+        assert!(weight > 0.0, "client weight must be positive");
+        for (i, bit) in mask.iter().enumerate() {
+            if bit {
+                self.acc[i] += weight;
+            }
+        }
+        self.weight_sum += weight;
+        self.n_clients += 1;
+    }
+
+    /// Add a client update that is already a probability vector (used by
+    /// algorithms that upload thetas rather than sampled masks, e.g. a
+    /// FedPM variant ablation).
+    pub fn add_probs(&mut self, probs: &[f32], weight: f64) {
+        assert_eq!(probs.len(), self.acc.len());
+        assert!(weight > 0.0);
+        for (a, &p) in self.acc.iter_mut().zip(probs) {
+            *a += weight * p as f64;
+        }
+        self.weight_sum += weight;
+        self.n_clients += 1;
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    /// Finalize into the next global probability mask (eq. 8).
+    pub fn finalize(&self) -> ProbMask {
+        assert!(self.weight_sum > 0.0, "no clients aggregated");
+        ProbMask::from_theta(
+            self.acc.iter().map(|&a| (a / self.weight_sum) as f32).collect(),
+        )
+    }
+
+    pub fn reset(&mut self) {
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        self.weight_sum = 0.0;
+        self.n_clients = 0;
+    }
+}
+
+/// Bayesian (Beta-posterior) aggregation — the FedPM-family alternative
+/// to the plain mean of eq. 8 (Isik et al. use a Beta(alpha, beta)
+/// prior updated by the received mask bits; the posterior mean becomes
+/// the next theta). With prior Beta(l0, l0) and K received bits b_k
+/// (weight w_k):
+///     theta_j = (l0 + sum_k w_k b_kj) / (2*l0 + sum_k w_k)
+/// As l0 -> 0 this recovers eq. 8; larger l0 damps sampling noise in
+/// early rounds — the `agg=bayes` ablation quantifies the effect.
+#[derive(Debug, Clone)]
+pub struct BetaAggregator {
+    ones: Vec<f64>,
+    weight_sum: f64,
+    prior: f64,
+    n_clients: usize,
+}
+
+impl BetaAggregator {
+    pub fn new(n_params: usize, prior: f64) -> Self {
+        assert!(prior > 0.0, "Beta prior must be positive");
+        Self { ones: vec![0.0; n_params], weight_sum: 0.0, prior, n_clients: 0 }
+    }
+
+    pub fn add_mask(&mut self, mask: &BitVec, weight: f64) {
+        assert_eq!(mask.len(), self.ones.len());
+        assert!(weight > 0.0);
+        for i in mask.iter_ones() {
+            self.ones[i] += weight;
+        }
+        self.weight_sum += weight;
+        self.n_clients += 1;
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    pub fn finalize(&self) -> ProbMask {
+        assert!(self.n_clients > 0, "no clients aggregated");
+        let denom = 2.0 * self.prior + self.weight_sum;
+        ProbMask::from_theta(
+            self.ones.iter().map(|&o| ((self.prior + o) / denom) as f32).collect(),
+        )
+    }
+
+    pub fn reset(&mut self) {
+        self.ones.iter_mut().for_each(|o| *o = 0.0);
+        self.weight_sum = 0.0;
+        self.n_clients = 0;
+    }
+}
+
+/// Majority-vote aggregation for MV-SignSGD: the server keeps the sign
+/// of the weighted sum of client sign vectors (Bernstein et al. '18).
+/// Client signs travel as BitVec (1 = positive).
+pub fn majority_vote_signs(signs: &[BitVec], weights: &[f64]) -> BitVec {
+    assert!(!signs.is_empty());
+    assert_eq!(signs.len(), weights.len());
+    let n = signs[0].len();
+    let mut tally = vec![0.0f64; n];
+    for (mask, &w) in signs.iter().zip(weights) {
+        assert_eq!(mask.len(), n);
+        for (i, bit) in mask.iter().enumerate() {
+            tally[i] += if bit { w } else { -w };
+        }
+    }
+    BitVec::from_iter_len(tally.iter().map(|&t| t > 0.0), n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask_of(bits: &[u8]) -> BitVec {
+        BitVec::from_iter_len(bits.iter().map(|&b| b == 1), bits.len())
+    }
+
+    #[test]
+    fn equal_weights_is_mean() {
+        let mut agg = MaskAggregator::new(4);
+        agg.add_mask(&mask_of(&[1, 1, 0, 0]), 1.0);
+        agg.add_mask(&mask_of(&[1, 0, 0, 0]), 1.0);
+        agg.add_mask(&mask_of(&[1, 0, 1, 0]), 1.0);
+        let theta = agg.finalize();
+        let want = [1.0, 1.0 / 3.0, 1.0 / 3.0, 0.0];
+        for (t, w) in theta.theta().iter().zip(want) {
+            assert!((t - w as f32).abs() < 1e-6);
+        }
+        assert_eq!(agg.n_clients(), 3);
+    }
+
+    #[test]
+    fn dataset_size_weighting() {
+        // eq. 8 with |D_1|=10, |D_2|=30: theta = (10*m1 + 30*m2)/40
+        let mut agg = MaskAggregator::new(2);
+        agg.add_mask(&mask_of(&[1, 0]), 10.0);
+        agg.add_mask(&mask_of(&[0, 1]), 30.0);
+        let theta = agg.finalize();
+        assert!((theta.theta()[0] - 0.25).abs() < 1e-6);
+        assert!((theta.theta()[1] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn output_always_valid_probability() {
+        let mut agg = MaskAggregator::new(100);
+        for i in 0..7 {
+            let m = BitVec::from_iter_len((0..100).map(|j| (i + j) % 3 == 0), 100);
+            agg.add_mask(&m, (i + 1) as f64);
+        }
+        let theta = agg.finalize();
+        assert!(theta.theta().iter().all(|&t| (0.0..=1.0).contains(&t)));
+    }
+
+    #[test]
+    fn probs_path_matches_mask_path_in_expectation() {
+        let mut a = MaskAggregator::new(3);
+        a.add_probs(&[0.5, 0.25, 1.0], 2.0);
+        a.add_probs(&[0.5, 0.75, 0.0], 2.0);
+        let theta = a.finalize();
+        assert!((theta.theta()[0] - 0.5).abs() < 1e-6);
+        assert!((theta.theta()[1] - 0.5).abs() < 1e-6);
+        assert!((theta.theta()[2] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut agg = MaskAggregator::new(2);
+        agg.add_mask(&mask_of(&[1, 1]), 1.0);
+        agg.reset();
+        assert_eq!(agg.n_clients(), 0);
+        agg.add_mask(&mask_of(&[0, 1]), 1.0);
+        let theta = agg.finalize();
+        assert_eq!(theta.theta()[0], 0.0);
+        assert_eq!(theta.theta()[1], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no clients")]
+    fn finalize_without_clients_panics() {
+        MaskAggregator::new(3).finalize();
+    }
+
+    #[test]
+    fn word_scan_matches_scalar_path() {
+        use crate::util::Xoshiro256;
+        let mut rng = Xoshiro256::new(3);
+        let n = 1000;
+        let masks: Vec<BitVec> = (0..5)
+            .map(|_| {
+                let p = rng.next_f64();
+                BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < p), n)
+            })
+            .collect();
+        let mut a = MaskAggregator::new(n);
+        let mut b = MaskAggregator::new(n);
+        for (i, m) in masks.iter().enumerate() {
+            a.add_mask(m, (i + 1) as f64);
+            b.add_mask_scalar(m, (i + 1) as f64);
+        }
+        assert_eq!(a.finalize().theta(), b.finalize().theta());
+    }
+
+    #[test]
+    fn beta_aggregator_recovers_mean_at_small_prior() {
+        let mut plain = MaskAggregator::new(4);
+        let mut bayes = BetaAggregator::new(4, 1e-9);
+        for (m, w) in [(mask_of(&[1, 1, 0, 0]), 2.0), (mask_of(&[1, 0, 1, 0]), 1.0)] {
+            plain.add_mask(&m, w);
+            bayes.add_mask(&m, w);
+        }
+        for (a, b) in plain.finalize().theta().iter().zip(bayes.finalize().theta()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn beta_prior_shrinks_toward_half() {
+        let mut bayes = BetaAggregator::new(2, 10.0);
+        bayes.add_mask(&mask_of(&[1, 0]), 1.0);
+        let theta = bayes.finalize();
+        // posterior mean (10+1)/21 and 10/21: pulled toward 0.5
+        assert!((theta.theta()[0] - 11.0 / 21.0).abs() < 1e-6);
+        assert!((theta.theta()[1] - 10.0 / 21.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn beta_output_valid_probability() {
+        let mut bayes = BetaAggregator::new(50, 0.5);
+        for i in 0..5u64 {
+            let m = BitVec::from_iter_len((0..50).map(|j| (i as usize + j) % 2 == 0), 50);
+            bayes.add_mask(&m, (i + 1) as f64);
+        }
+        assert!(bayes.finalize().theta().iter().all(|&t| (0.0..=1.0).contains(&t)));
+    }
+
+    #[test]
+    fn majority_vote() {
+        let signs = vec![
+            mask_of(&[1, 0, 1]),
+            mask_of(&[1, 1, 0]),
+            mask_of(&[0, 0, 1]),
+        ];
+        let mv = majority_vote_signs(&signs, &[1.0, 1.0, 1.0]);
+        assert_eq!(mv.iter().collect::<Vec<_>>(), vec![true, false, true]);
+        // weights flip the result
+        let mv_w = majority_vote_signs(&signs, &[1.0, 5.0, 1.0]);
+        assert_eq!(mv_w.iter().collect::<Vec<_>>(), vec![true, true, false]);
+    }
+}

@@ -1,0 +1,73 @@
+//! Mask entropy accounting (paper eq. 11 / eq. 13).
+//!
+//! The figures' lower rows plot the *average estimated entropy of the
+//! binary source producing the uplink masks*: for each device k, the
+//! normalized frequencies p̂_{k,0/1} of zeros/ones in its transmitted
+//! mask give Ĥ_k = H(p̂_{k,1}); the reported Bpp is the mean over
+//! devices. We log this estimate alongside the *achieved* coded bits
+//! from [`crate::compress`].
+
+use crate::util::BitVec;
+
+/// Binary entropy H(p) in bits; 0 at p ∈ {0, 1}.
+pub fn entropy_bits(p: f64) -> f64 {
+    if p <= 0.0 || p >= 1.0 {
+        return 0.0;
+    }
+    -(p * p.log2() + (1.0 - p) * (1.0 - p).log2())
+}
+
+/// Empirical Bpp of one transmitted mask (eq. 13 for a single device).
+pub fn empirical_bpp(mask: &BitVec) -> f64 {
+    entropy_bits(mask.density())
+}
+
+/// Eq. 13: mean empirical entropy across the devices' uplink masks.
+pub fn mean_client_bpp(masks: &[BitVec]) -> f64 {
+    if masks.is_empty() {
+        return 0.0;
+    }
+    masks.iter().map(empirical_bpp).sum::<f64>() / masks.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn entropy_known_values() {
+        assert_eq!(entropy_bits(0.0), 0.0);
+        assert_eq!(entropy_bits(1.0), 0.0);
+        assert!((entropy_bits(0.5) - 1.0).abs() < 1e-12);
+        assert!((entropy_bits(0.11) - 0.4999).abs() < 1e-3); // H(0.11)≈0.5
+    }
+
+    #[test]
+    fn entropy_symmetry() {
+        for &p in &[0.01, 0.2, 0.35] {
+            assert!((entropy_bits(p) - entropy_bits(1.0 - p)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empirical_matches_density() {
+        let mut rng = Xoshiro256::new(4);
+        let n = 100_000;
+        let m = BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < 0.1), n);
+        assert!((empirical_bpp(&m) - entropy_bits(0.1)).abs() < 0.01);
+    }
+
+    #[test]
+    fn mean_over_clients() {
+        let a = BitVec::from_bools(&[true; 100]);            // H = 0
+        let b = BitVec::from_bools(&[false; 100]);           // H = 0
+        let mut half = BitVec::zeros(100);
+        for i in 0..50 {
+            half.set(i, true);                               // H = 1
+        }
+        let bpp = mean_client_bpp(&[a, b, half]);
+        assert!((bpp - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(mean_client_bpp(&[]), 0.0);
+    }
+}

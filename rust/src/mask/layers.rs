@@ -1,0 +1,157 @@
+//! Layer-resolved sparsity telemetry.
+//!
+//! The flat mask layout is opaque to the coordinator except for the
+//! `layers` line in the AOT manifest ("KxN@offset" per parameterized
+//! layer). This module decodes that line and reports per-layer density
+//! / entropy — the unstructured-sparsity telemetry that shows WHERE the
+//! regularizer prunes (the paper's sec. III intuition: redundant
+//! sub-network features get eliminated, which concentrates in the
+//! over-provisioned layers).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::BitVec;
+
+use super::entropy_bits;
+
+/// One parameterized layer's slice of the flat vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerSlice {
+    pub index: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub offset: usize,
+}
+
+impl LayerSlice {
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Parse the manifest `layers=` line: comma-separated "KxN@offset".
+pub fn parse_layout(s: &str) -> Result<Vec<LayerSlice>> {
+    let mut out = Vec::new();
+    if s.trim().is_empty() {
+        return Ok(out);
+    }
+    for (index, item) in s.split(',').enumerate() {
+        let (shape, off) = item
+            .split_once('@')
+            .with_context(|| format!("layer entry '{item}' missing @offset"))?;
+        let (k, n) = shape
+            .split_once('x')
+            .with_context(|| format!("layer shape '{shape}' missing KxN"))?;
+        let slice = LayerSlice {
+            index,
+            rows: k.trim().parse().context("layer rows")?,
+            cols: n.trim().parse().context("layer cols")?,
+            offset: off.trim().parse().context("layer offset")?,
+        };
+        if let Some(prev) = out.last() {
+            let prev: &LayerSlice = prev;
+            if slice.offset != prev.offset + prev.len() {
+                bail!("layer layout not contiguous at entry {index}");
+            }
+        } else if slice.offset != 0 {
+            bail!("first layer must start at offset 0");
+        }
+        out.push(slice);
+    }
+    Ok(out)
+}
+
+/// Per-layer sparsity report for one mask.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    pub layer: LayerSlice,
+    pub ones: usize,
+    pub density: f64,
+    pub entropy: f64,
+}
+
+/// Compute per-layer density/entropy of `mask` under `layout`.
+pub fn layer_stats(mask: &BitVec, layout: &[LayerSlice]) -> Vec<LayerStats> {
+    layout
+        .iter()
+        .map(|l| {
+            let ones = (l.offset..l.offset + l.len())
+                .filter(|&i| mask.get(i))
+                .count();
+            let density = if l.len() == 0 { 0.0 } else { ones as f64 / l.len() as f64 };
+            LayerStats {
+                layer: l.clone(),
+                ones,
+                density,
+                entropy: entropy_bits(density),
+            }
+        })
+        .collect()
+}
+
+/// Render a compact per-layer table (used by `fedsrn eval` / analyze).
+pub fn format_table(stats: &[LayerStats]) -> String {
+    let mut out = String::from("layer      shape          params    density   H(bits)\n");
+    for s in stats {
+        out.push_str(&format!(
+            "{:<10} {:>6}x{:<7} {:>8}   {:>7.4}   {:>7.4}\n",
+            s.layer.index,
+            s.layer.rows,
+            s.layer.cols,
+            s.layer.len(),
+            s.density,
+            s.entropy
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        let layout = parse_layout("64x64@0,64x10@4096").unwrap();
+        assert_eq!(layout.len(), 2);
+        assert_eq!(layout[0].len(), 4096);
+        assert_eq!(layout[1].offset, 4096);
+        assert_eq!(layout[1].len(), 640);
+    }
+
+    #[test]
+    fn empty_layout_ok() {
+        assert!(parse_layout("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn non_contiguous_rejected() {
+        assert!(parse_layout("4x4@0,4x4@99").is_err());
+        assert!(parse_layout("4x4@7").is_err());
+        assert!(parse_layout("4y4@0").is_err());
+    }
+
+    #[test]
+    fn stats_per_layer() {
+        let layout = parse_layout("2x4@0,4x2@8").unwrap();
+        // layer 0: 8 params, set 2; layer 1: 8 params, set all
+        let mut m = BitVec::zeros(16);
+        m.set(0, true);
+        m.set(5, true);
+        for i in 8..16 {
+            m.set(i, true);
+        }
+        let stats = layer_stats(&m, &layout);
+        assert_eq!(stats[0].ones, 2);
+        assert!((stats[0].density - 0.25).abs() < 1e-12);
+        assert_eq!(stats[1].ones, 8);
+        assert_eq!(stats[1].density, 1.0);
+        assert_eq!(stats[1].entropy, 0.0);
+        let table = format_table(&stats);
+        assert!(table.contains("0.2500"));
+    }
+}

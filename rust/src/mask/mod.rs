@@ -1,0 +1,184 @@
+//! Probability masks, binary masks, entropy accounting, aggregation.
+//!
+//! The server-side math of the paper lives here:
+//!   * sampling `m ~ Bernoulli(theta)` (eq. 5) — [`sample_mask`]
+//!   * empirical Bpp of a transmitted mask (eq. 13) — [`entropy`]
+//!   * weighted mask averaging into the next global probability mask
+//!     (eq. 8) — [`aggregate::MaskAggregator`]
+
+pub mod aggregate;
+pub mod entropy;
+pub mod layers;
+
+pub use aggregate::{BetaAggregator, MaskAggregator};
+pub use entropy::{empirical_bpp, entropy_bits, mean_client_bpp};
+pub use layers::{layer_stats, parse_layout, LayerSlice, LayerStats};
+
+use crate::util::{logit, sigmoid, BitVec, Philox4x32};
+
+/// A global probability mask theta in [0,1]^n (the server state).
+#[derive(Debug, Clone)]
+pub struct ProbMask {
+    theta: Vec<f32>,
+}
+
+impl ProbMask {
+    /// Initial global mask: theta_j ~ U[0,1) (paper footnote 2).
+    pub fn uniform_random(n: usize, seed: u64) -> Self {
+        let philox = Philox4x32::new(seed);
+        let mut theta = vec![0.0f32; n];
+        philox.fill_uniform(0, &mut theta);
+        Self { theta }
+    }
+
+    /// Constant-probability mask (useful for tests and FedMask's 0.5 init).
+    pub fn constant(n: usize, p: f32) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        Self { theta: vec![p; n] }
+    }
+
+    pub fn from_theta(theta: Vec<f32>) -> Self {
+        debug_assert!(theta.iter().all(|&t| (0.0..=1.0).contains(&t)));
+        Self { theta }
+    }
+
+    pub fn len(&self) -> usize {
+        self.theta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.theta.is_empty()
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Scores s = sigma^{-1}(theta) (eq. 4) — what the DL ships to
+    /// clients, and what local_train optimizes.
+    pub fn to_scores(&self) -> Vec<f32> {
+        self.theta.iter().map(|&t| logit(t)).collect()
+    }
+
+    /// Rebuild theta from a score vector (theta = sigma(s)).
+    pub fn from_scores(scores: &[f32]) -> Self {
+        Self { theta: scores.iter().map(|&s| sigmoid(s)).collect() }
+    }
+
+    /// Mean keep-probability (sparsity telemetry).
+    pub fn mean_theta(&self) -> f64 {
+        if self.theta.is_empty() {
+            return 0.0;
+        }
+        self.theta.iter().map(|&t| t as f64).sum::<f64>() / self.theta.len() as f64
+    }
+
+    /// Deterministic mask: 1[theta > 0.5] (FedMask-style thresholding,
+    /// also the low-variance evaluation mask).
+    pub fn threshold(&self) -> BitVec {
+        BitVec::from_iter_len(self.theta.iter().map(|&t| t > 0.5), self.len())
+    }
+}
+
+/// Sample `m ~ Bernoulli(theta)` with a counter-based stream so the same
+/// (seed, round) always yields the same mask regardless of call order.
+pub fn sample_mask(theta: &ProbMask, seed: u64) -> BitVec {
+    let philox = Philox4x32::new(seed);
+    let mut u = vec![0.0f32; theta.len()];
+    philox.fill_uniform(0, &mut u);
+    BitVec::from_iter_len(
+        theta.theta().iter().zip(&u).map(|(&t, &ui)| ui < t),
+        theta.len(),
+    )
+}
+
+/// Top-k mask: keep the k largest entries of `scores` (the Top-k baseline
+/// of Fig. 2; k = round(frac * n)).
+pub fn topk_mask(scores: &[f32], frac: f64) -> BitVec {
+    let n = scores.len();
+    let k = ((n as f64 * frac).round() as usize).min(n);
+    if k == 0 {
+        return BitVec::zeros(n);
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    // Partial selection: O(n) average via select_nth_unstable.
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut m = BitVec::zeros(n);
+    for &i in &idx[..k] {
+        m.set(i as usize, true);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_random_theta_in_range_and_mean_half() {
+        let pm = ProbMask::uniform_random(100_000, 3);
+        assert!(pm.theta().iter().all(|&t| (0.0..1.0).contains(&t)));
+        assert!((pm.mean_theta() - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn scores_roundtrip() {
+        let pm = ProbMask::uniform_random(1000, 9);
+        let s = pm.to_scores();
+        let back = ProbMask::from_scores(&s);
+        for (a, b) in pm.theta().iter().zip(back.theta()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sample_mask_matches_theta_statistically() {
+        let pm = ProbMask::constant(200_000, 0.2);
+        let m = sample_mask(&pm, 5);
+        assert!((m.density() - 0.2).abs() < 0.01, "{}", m.density());
+    }
+
+    #[test]
+    fn sample_mask_deterministic_in_seed() {
+        let pm = ProbMask::uniform_random(10_000, 1);
+        assert_eq!(sample_mask(&pm, 7), sample_mask(&pm, 7));
+        assert_ne!(sample_mask(&pm, 7), sample_mask(&pm, 8));
+    }
+
+    #[test]
+    fn sample_extremes() {
+        let ones = sample_mask(&ProbMask::constant(1000, 1.0), 2);
+        assert_eq!(ones.count_ones(), 1000);
+        let zeros = sample_mask(&ProbMask::constant(1000, 0.0), 2);
+        assert_eq!(zeros.count_ones(), 0);
+    }
+
+    #[test]
+    fn threshold_mask() {
+        let pm = ProbMask::from_theta(vec![0.1, 0.6, 0.5, 0.9]);
+        let m = pm.threshold();
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn topk_selects_largest() {
+        let scores = vec![0.1, 5.0, -2.0, 3.0, 0.0];
+        let m = topk_mask(&scores, 0.4); // k = 2
+        assert_eq!(m.count_ones(), 2);
+        assert!(m.get(1) && m.get(3));
+    }
+
+    #[test]
+    fn topk_extremes() {
+        let scores: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        assert_eq!(topk_mask(&scores, 0.0).count_ones(), 0);
+        assert_eq!(topk_mask(&scores, 1.0).count_ones(), 100);
+        let half = topk_mask(&scores, 0.5);
+        assert_eq!(half.count_ones(), 50);
+        assert!((50..100).all(|i| half.get(i)));
+    }
+}

@@ -1,0 +1,170 @@
+//! AOT artifact manifest: parse `<model>.meta` + load weight blobs.
+//!
+//! The Python exporter (`python/compile/aot.py`) writes one manifest per
+//! model; this is the Rust half of that contract. Everything the
+//! coordinator needs to know about a model's exported programs (shapes,
+//! file names, parameter count) comes from here — layer structure never
+//! crosses the language boundary.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::mask::layers::{parse_layout, LayerSlice};
+
+/// Parsed `<model>.meta` manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub n_params: usize,
+    pub input_dim: usize,
+    pub n_classes: usize,
+    /// Minibatch rows per local_train step.
+    pub batch: usize,
+    /// Scan steps per local_train call.
+    pub steps: usize,
+    /// Rows per eval call.
+    pub eval_chunk: usize,
+    pub weight_seed: u64,
+    pub has_dense_grad: bool,
+    /// Per-layer flat layout (empty for manifests without `layers=`).
+    pub layers: Vec<LayerSlice>,
+    pub weights_file: PathBuf,
+    pub local_train_file: PathBuf,
+    pub eval_file: PathBuf,
+    pub dense_grad_file: Option<PathBuf>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/<model>.meta`.
+    pub fn load(dir: &Path, model: &str) -> Result<Self> {
+        let path = dir.join(format!("{model}.meta"));
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`?)"))?;
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("malformed manifest line '{line}' in {path:?}");
+            };
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            kv.get(k).ok_or_else(|| anyhow::anyhow!("manifest {path:?} missing key '{k}'"))
+        };
+        let parse_usize =
+            |k: &str| -> Result<usize> { Ok(get(k)?.parse().with_context(|| format!("key {k}"))?) };
+        let has_dense = parse_usize("has_dense_grad")? != 0;
+        let layers = match kv.get("layers") {
+            Some(l) => parse_layout(l)?,
+            None => Vec::new(),
+        };
+        let man = Self {
+            model: get("model")?.clone(),
+            layers,
+            n_params: parse_usize("n_params")?,
+            input_dim: parse_usize("input_dim")?,
+            n_classes: parse_usize("n_classes")?,
+            batch: parse_usize("batch")?,
+            steps: parse_usize("steps")?,
+            eval_chunk: parse_usize("eval_chunk")?,
+            weight_seed: get("weight_seed")?.parse()?,
+            has_dense_grad: has_dense,
+            weights_file: dir.join(get("weights_file")?),
+            local_train_file: dir.join(get("local_train_file")?),
+            eval_file: dir.join(get("eval_file")?),
+            dense_grad_file: if has_dense {
+                Some(dir.join(get("dense_grad_file")?))
+            } else {
+                None
+            },
+        };
+        ensure!(man.model == model, "manifest model name mismatch");
+        ensure!(man.n_params > 0 && man.input_dim > 0, "degenerate manifest");
+        Ok(man)
+    }
+
+    /// Load the frozen weight vector (flat f32 little-endian).
+    pub fn load_weights(&self) -> Result<Vec<f32>> {
+        let bytes = fs::read(&self.weights_file)
+            .with_context(|| format!("reading weights {:?}", self.weights_file))?;
+        ensure!(
+            bytes.len() == self.n_params * 4,
+            "weight blob is {} bytes, expected {} (n_params={})",
+            bytes.len(),
+            self.n_params * 4,
+            self.n_params
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Rows consumed by one local_train call.
+    pub fn rows_per_call(&self) -> usize {
+        self.batch * self.steps
+    }
+}
+
+/// List models with manifests present in an artifacts directory.
+pub fn available_models(dir: &Path) -> Vec<String> {
+    let Ok(rd) = fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    let mut out: Vec<String> = rd
+        .filter_map(|e| {
+            let name = e.ok()?.file_name().into_string().ok()?;
+            name.strip_suffix(".meta").map(str::to_string)
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root; `make artifacts` must have run.
+        PathBuf::from("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let man = Manifest::load(&artifacts_dir(), "mlp_tiny").unwrap();
+        assert_eq!(man.n_params, 4736);
+        assert_eq!(man.input_dim, 64);
+        assert_eq!(man.n_classes, 10);
+        assert!(man.local_train_file.exists());
+        assert!(man.eval_file.exists());
+        assert!(man.has_dense_grad);
+        assert_eq!(man.rows_per_call(), man.batch * man.steps);
+    }
+
+    #[test]
+    fn weights_match_manifest_count() {
+        let man = Manifest::load(&artifacts_dir(), "mlp_tiny").unwrap();
+        let w = man.load_weights().unwrap();
+        assert_eq!(w.len(), man.n_params);
+        // signed Kaiming constant: |w| is one of a few discrete levels
+        assert!(w.iter().all(|v| v.abs() > 0.0 && v.abs() < 1.0));
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        assert!(Manifest::load(&artifacts_dir(), "no_such_model").is_err());
+    }
+
+    #[test]
+    fn lists_available_models() {
+        let models = available_models(&artifacts_dir());
+        assert!(models.contains(&"mlp_tiny".to_string()));
+    }
+}

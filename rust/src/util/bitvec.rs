@@ -1,0 +1,205 @@
+//! Packed bit vector — the wire representation of a binary mask.
+//!
+//! The paper's headline claim is "at most 1 bit per parameter": a mask
+//! over `n` parameters occupies `ceil(n/64)` words here, and the entropy
+//! coder in [`crate::compress`] pushes the *actual* uplink below that
+//! whenever the mask is sparse.
+
+/// A fixed-length packed bit vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitVec {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    /// All-zeros vector of length `len`.
+    pub fn zeros(len: usize) -> Self {
+        Self { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    /// Build from a boolean slice.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut v = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Build from any iterator of bools with a known length.
+    pub fn from_iter_len(iter: impl Iterator<Item = bool>, len: usize) -> Self {
+        let mut v = Self::zeros(len);
+        let mut n = 0usize;
+        for (i, b) in iter.enumerate() {
+            assert!(i < len, "iterator longer than declared len {len}");
+            if b {
+                v.set(i, true);
+            }
+            n = i + 1;
+        }
+        assert_eq!(n, len, "iterator shorter than declared len");
+        v
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, b: bool) {
+        debug_assert!(i < self.len);
+        let (w, s) = (i / 64, i % 64);
+        if b {
+            self.words[w] |= 1 << s;
+        } else {
+            self.words[w] &= !(1 << s);
+        }
+    }
+
+    /// Number of ones (hardware popcount per word).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Fraction of ones, in [0, 1]. Empty vectors report 0.
+    pub fn density(&self) -> f64 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.count_ones() as f64 / self.len as f64
+        }
+    }
+
+    /// Iterate bits in order.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// Iterate the indices of set bits via word scanning — O(words +
+    /// popcount) instead of O(n), the hot-loop form for sparse masks.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(move |(wi, &word)| {
+            let mut w = word;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    return None;
+                }
+                let b = w.trailing_zeros() as usize;
+                w &= w - 1;
+                Some(wi * 64 + b)
+            })
+        })
+    }
+
+    /// Expand to f32 {0.0, 1.0} — the layout the PJRT eval program takes.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.iter().map(|b| if b { 1.0 } else { 0.0 }).collect()
+    }
+
+    /// Build from an f32 vector by `v > 0.5` (inverse of `to_f32`).
+    pub fn from_f32_threshold(v: &[f32]) -> Self {
+        Self::from_iter_len(v.iter().map(|&x| x > 0.5), v.len())
+    }
+
+    /// Raw words (little-endian bit order within each word).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Uncompressed wire size in bytes (the 1 Bpp upper bound).
+    pub fn raw_bytes(&self) -> usize {
+        self.len.div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        for i in (0..130).step_by(3) {
+            v.set(i, true);
+        }
+        for i in 0..130 {
+            assert_eq!(v.get(i), i % 3 == 0, "bit {i}");
+        }
+    }
+
+    #[test]
+    fn count_density() {
+        let mut v = BitVec::zeros(1000);
+        for i in 0..250 {
+            v.set(i * 4, true);
+        }
+        assert_eq!(v.count_ones(), 250);
+        assert!((v.density() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_bools_and_iter() {
+        let bits: Vec<bool> = (0..77).map(|i| i % 5 == 0).collect();
+        let v = BitVec::from_bools(&bits);
+        assert_eq!(v.iter().collect::<Vec<_>>(), bits);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let bits: Vec<bool> = (0..64).map(|i| i % 2 == 0).collect();
+        let v = BitVec::from_bools(&bits);
+        let f = v.to_f32();
+        assert_eq!(BitVec::from_f32_threshold(&f), v);
+    }
+
+    #[test]
+    fn empty() {
+        let v = BitVec::zeros(0);
+        assert!(v.is_empty());
+        assert_eq!(v.count_ones(), 0);
+        assert_eq!(v.density(), 0.0);
+        assert_eq!(v.raw_bytes(), 0);
+    }
+
+    #[test]
+    fn raw_bytes_bound() {
+        assert_eq!(BitVec::zeros(8).raw_bytes(), 1);
+        assert_eq!(BitVec::zeros(9).raw_bytes(), 2);
+        assert_eq!(BitVec::zeros(268_800).raw_bytes(), 33_600);
+    }
+
+    #[test]
+    fn iter_ones_matches_iter() {
+        let bits: Vec<bool> = (0..300).map(|i| (i * 13) % 7 == 0).collect();
+        let v = BitVec::from_bools(&bits);
+        let ones: Vec<usize> = v.iter_ones().collect();
+        let want: Vec<usize> =
+            (0..300).filter(|&i| bits[i]).collect();
+        assert_eq!(ones, want);
+        assert_eq!(ones.len(), v.count_ones());
+    }
+
+    #[test]
+    fn clear_bit() {
+        let mut v = BitVec::zeros(10);
+        v.set(5, true);
+        assert!(v.get(5));
+        v.set(5, false);
+        assert!(!v.get(5));
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal flat-JSON parsing for our own JSONL metric records.
+//!
+//! The metrics sink only ever emits `{"key":number|null,...}` objects,
+//! so this parser handles exactly that grammar (plus string values for
+//! forward compatibility) and rejects nesting loudly. Not a general
+//! JSON parser by design.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A flat record: key -> number (null becomes NaN) or string.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Num(f64),
+    Str(String),
+}
+
+impl JsonValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(v) => Some(*v),
+            JsonValue::Str(_) => None,
+        }
+    }
+}
+
+/// Parse one flat JSON object line.
+pub fn parse_flat_json(line: &str) -> Result<BTreeMap<String, JsonValue>> {
+    let s = line.trim();
+    let Some(inner) = s.strip_prefix('{').and_then(|t| t.strip_suffix('}')) else {
+        bail!("expected a flat JSON object, got '{s}'");
+    };
+    let mut out = BTreeMap::new();
+    let mut rest = inner.trim();
+    while !rest.is_empty() {
+        // key
+        let Some(r) = rest.strip_prefix('"') else {
+            bail!("expected quoted key at '{rest}'");
+        };
+        let Some(endq) = r.find('"') else { bail!("unterminated key") };
+        let key = &r[..endq];
+        let r = r[endq + 1..].trim_start();
+        let Some(r) = r.strip_prefix(':') else { bail!("missing ':' after key {key}") };
+        let r = r.trim_start();
+        // value: string | number | null
+        let (value, after) = if let Some(v) = r.strip_prefix('"') {
+            let Some(endq) = v.find('"') else { bail!("unterminated string value") };
+            (JsonValue::Str(v[..endq].to_string()), &v[endq + 1..])
+        } else if let Some(after) = r.strip_prefix("null") {
+            (JsonValue::Num(f64::NAN), after)
+        } else {
+            let end = r
+                .find(|c: char| c == ',' || c == '}' || c.is_whitespace())
+                .unwrap_or(r.len());
+            let tok = &r[..end];
+            if tok.starts_with('{') || tok.starts_with('[') {
+                bail!("nested JSON not supported by this parser");
+            }
+            let num: f64 = tok.parse().map_err(|e| anyhow::anyhow!("bad number '{tok}': {e}"))?;
+            (JsonValue::Num(num), &r[end..])
+        };
+        out.insert(key.to_string(), value);
+        rest = after.trim_start();
+        if let Some(r) = rest.strip_prefix(',') {
+            rest = r.trim_start();
+        } else if !rest.is_empty() {
+            bail!("trailing garbage '{rest}'");
+        }
+    }
+    Ok(out)
+}
+
+/// Read a JSONL file of flat records.
+pub fn read_jsonl(path: &std::path::Path) -> Result<Vec<BTreeMap<String, JsonValue>>> {
+    let text = std::fs::read_to_string(path)?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(parse_flat_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_metric_record() {
+        let rec = parse_flat_json(
+            r#"{"round":3,"accuracy":0.925000,"loss":null,"tag":"x"}"#,
+        )
+        .unwrap();
+        assert_eq!(rec["round"].as_f64(), Some(3.0));
+        assert_eq!(rec["accuracy"].as_f64(), Some(0.925));
+        assert!(rec["loss"].as_f64().unwrap().is_nan());
+        assert_eq!(rec["tag"], JsonValue::Str("x".into()));
+    }
+
+    #[test]
+    fn round_trips_sink_output() {
+        use crate::fl::RoundRecord;
+        let r = RoundRecord { round: 7, accuracy: 0.5, est_bpp: 0.25, ..Default::default() };
+        let rec = parse_flat_json(&r.to_json()).unwrap();
+        assert_eq!(rec["round"].as_f64(), Some(7.0));
+        assert_eq!(rec["est_bpp"].as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn rejects_nesting_and_garbage() {
+        assert!(parse_flat_json(r#"{"a":{"b":1}}"#).is_err());
+        assert!(parse_flat_json("not json").is_err());
+        assert!(parse_flat_json(r#"{"a":1 "b":2}"#).is_err());
+    }
+
+    #[test]
+    fn empty_object_ok() {
+        assert!(parse_flat_json("{}").unwrap().is_empty());
+    }
+}

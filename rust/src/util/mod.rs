@@ -1,0 +1,50 @@
+//! Shared substrate: PRNGs, bit vectors, statistics, timers.
+
+pub mod bitvec;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use bitvec::BitVec;
+pub use json::{parse_flat_json, read_jsonl, JsonValue};
+pub use rng::{Philox4x32, SplitMix64, Xoshiro256};
+pub use stats::{ci95, mean, std_dev, Ema, Running};
+pub use timer::Timers;
+
+/// Numerically-stable logistic function, mirroring `jax.nn.sigmoid`.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Logit (inverse sigmoid); clamps away from {0, 1} for stability.
+#[inline]
+pub fn logit(p: f32) -> f32 {
+    let p = p.clamp(1e-7, 1.0 - 1e-7);
+    (p / (1.0 - p)).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_logit_inverse() {
+        for &p in &[0.01f32, 0.2, 0.5, 0.9, 0.999] {
+            assert!((sigmoid(logit(p)) - p).abs() < 1e-5, "p={p}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_extremes() {
+        assert!(sigmoid(100.0) > 0.999_999);
+        assert!(sigmoid(-100.0) < 1e-6);
+        assert_eq!(sigmoid(0.0), 0.5);
+    }
+}

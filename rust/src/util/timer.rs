@@ -1,0 +1,76 @@
+//! Lightweight scoped timers used by the metrics sink and the perf pass.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A named stopwatch accumulating durations per label; cheap enough to
+/// leave in the round loop permanently (one `Instant::now` per section).
+#[derive(Debug, Default)]
+pub struct Timers {
+    acc: BTreeMap<String, (Duration, u64)>,
+}
+
+impl Timers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `label`.
+    pub fn time<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(label, t0.elapsed());
+        out
+    }
+
+    /// Record an externally-measured duration.
+    pub fn add(&mut self, label: &str, d: Duration) {
+        let e = self.acc.entry(label.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// (total seconds, call count) per label.
+    pub fn summary(&self) -> Vec<(String, f64, u64)> {
+        self.acc
+            .iter()
+            .map(|(k, (d, n))| (k.clone(), d.as_secs_f64(), *n))
+            .collect()
+    }
+
+    /// Total seconds across all labels.
+    pub fn total_secs(&self) -> f64 {
+        self.acc.values().map(|(d, _)| d.as_secs_f64()).sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.acc.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_labels() {
+        let mut t = Timers::new();
+        let x = t.time("a", || 21 * 2);
+        assert_eq!(x, 42);
+        t.time("a", || ());
+        t.time("b", || ());
+        let s = t.summary();
+        assert_eq!(s.len(), 2);
+        let a = s.iter().find(|(k, _, _)| k == "a").unwrap();
+        assert_eq!(a.2, 2);
+        assert!(t.total_secs() >= 0.0);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut t = Timers::new();
+        t.time("x", || ());
+        t.clear();
+        assert!(t.summary().is_empty());
+    }
+}

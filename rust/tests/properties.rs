@@ -1,0 +1,321 @@
+//! Property-based tests over the coordinator substrates.
+//!
+//! proptest is not available in this offline environment, so this file
+//! carries a small in-tree property harness: each property runs against
+//! hundreds of randomized cases drawn from seeded generators, and
+//! failures report the offending case seed for replay.
+
+use fedsrn::compress::{self, Method};
+use fedsrn::config::ExperimentConfig;
+use fedsrn::coordinator::Checkpoint;
+use fedsrn::data::{partition_iid, partition_noniid, Dataset, SynthSpec, Synthetic};
+use fedsrn::mask::{
+    empirical_bpp, entropy_bits, mean_client_bpp, sample_mask, topk_mask, MaskAggregator,
+    ProbMask,
+};
+use fedsrn::util::{logit, sigmoid, BitVec, Philox4x32, Xoshiro256};
+
+/// Run `prop` for `cases` seeded random cases.
+fn forall(cases: u64, prop: impl Fn(&mut Xoshiro256, u64)) {
+    for case in 0..cases {
+        let mut rng = Xoshiro256::new(0xF00D + case * 7919);
+        prop(&mut rng, case);
+    }
+}
+
+fn arb_mask(rng: &mut Xoshiro256) -> BitVec {
+    let n = 1 + rng.below(30_000) as usize;
+    let p = rng.next_f64();
+    BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < p), n)
+}
+
+// ---------------------------------------------------------------------------
+// codec properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_codec_roundtrip_identity() {
+    forall(120, |rng, case| {
+        let m = arb_mask(rng);
+        let enc = compress::encode(&m);
+        let dec = compress::decode(&enc, m.len());
+        assert_eq!(dec, m, "case {case}: len={} ones={}", m.len(), m.count_ones());
+    });
+}
+
+#[test]
+fn prop_all_methods_roundtrip() {
+    forall(40, |rng, case| {
+        let m = arb_mask(rng);
+        for method in [Method::Raw, Method::Arithmetic, Method::Golomb] {
+            let enc = compress::encode_with(&m, method);
+            assert_eq!(compress::decode(&enc, m.len()), m, "case {case} {method:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_coded_size_close_to_entropy() {
+    // The winning codec should never exceed raw+header, and for large
+    // sparse masks should be within ~15% + 48 bits of n*H(p).
+    forall(60, |rng, case| {
+        let m = arb_mask(rng);
+        let enc = compress::encode(&m);
+        assert!(
+            enc.payload.len() <= m.raw_bytes(),
+            "case {case}: codec worse than raw"
+        );
+        if m.len() > 5_000 {
+            let h = empirical_bpp(&m);
+            let rate = enc.payload.len() as f64 * 8.0 / m.len() as f64;
+            assert!(
+                rate <= h * 1.15 + 48.0 / m.len() as f64 + 0.02,
+                "case {case}: rate {rate} vs entropy {h}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_wire_format_roundtrip() {
+    forall(60, |rng, case| {
+        let m = arb_mask(rng);
+        let enc = compress::encode(&m);
+        let parsed = compress::Encoded::from_bytes(&enc.to_bytes()).unwrap();
+        assert_eq!(compress::decode(&parsed, m.len()), m, "case {case}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// aggregation properties (eq. 8)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_aggregation_output_in_unit_interval_and_convex() {
+    forall(60, |rng, _case| {
+        let n = 1 + rng.below(2_000) as usize;
+        let k = 1 + rng.below(12) as usize;
+        let mut agg = MaskAggregator::new(n);
+        let mut masks = Vec::new();
+        for _ in 0..k {
+            let p = rng.next_f64();
+            let m = BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < p), n);
+            agg.add_mask(&m, 1.0 + rng.below(100) as f64);
+            masks.push(m);
+        }
+        let theta = agg.finalize();
+        for (j, &t) in theta.theta().iter().enumerate() {
+            assert!((0.0..=1.0).contains(&t));
+            // convexity: theta_j is between min and max of the bit values
+            let bits: Vec<f64> =
+                masks.iter().map(|m| if m.get(j) { 1.0 } else { 0.0 }).collect();
+            let lo = bits.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = bits.iter().cloned().fold(0.0f64, f64::max);
+            assert!(t as f64 >= lo - 1e-9 && t as f64 <= hi + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_aggregation_unbiased_under_resampling() {
+    // E[aggregate of sampled masks] == mean theta (FedPM thm 1, checked
+    // statistically).
+    let n = 4_000;
+    let theta = ProbMask::uniform_random(n, 31);
+    let mut agg = MaskAggregator::new(n);
+    for round in 0..200u64 {
+        agg.add_mask(&sample_mask(&theta, round), 1.0);
+    }
+    let est = agg.finalize();
+    let mean_err: f64 = theta
+        .theta()
+        .iter()
+        .zip(est.theta())
+        .map(|(&a, &b)| (a as f64 - b as f64).abs())
+        .sum::<f64>()
+        / n as f64;
+    assert!(mean_err < 0.05, "mean abs err {mean_err}");
+}
+
+// ---------------------------------------------------------------------------
+// entropy properties (eq. 13)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_entropy_bounds() {
+    forall(200, |rng, _| {
+        let p = rng.next_f64();
+        let h = entropy_bits(p);
+        assert!((0.0..=1.0 + 1e-12).contains(&h));
+        assert!((h - entropy_bits(1.0 - p)).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_mean_client_bpp_is_mean() {
+    forall(40, |rng, _| {
+        let k = 1 + rng.below(8) as usize;
+        let masks: Vec<BitVec> = (0..k)
+            .map(|_| {
+                let n = 100 + rng.below(900) as usize;
+                let p = rng.next_f64();
+                BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < p), n)
+            })
+            .collect();
+        let mean = mean_client_bpp(&masks);
+        let manual: f64 = masks.iter().map(empirical_bpp).sum::<f64>() / k as f64;
+        assert!((mean - manual).abs() < 1e-12);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// sampling / mask-construction properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sampled_density_tracks_theta() {
+    forall(30, |rng, case| {
+        let n = 20_000;
+        let p = rng.next_f32();
+        let theta = ProbMask::constant(n, p);
+        let m = sample_mask(&theta, rng.next_u64());
+        assert!(
+            (m.density() - p as f64).abs() < 0.02,
+            "case {case}: density {} vs p {p}",
+            m.density()
+        );
+    });
+}
+
+#[test]
+fn prop_topk_exact_count_and_maximality() {
+    forall(60, |rng, case| {
+        let n = 1 + rng.below(3_000) as usize;
+        let scores: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32).collect();
+        let frac = rng.next_f64();
+        let k = ((n as f64 * frac).round() as usize).min(n);
+        let m = topk_mask(&scores, frac);
+        assert_eq!(m.count_ones(), k, "case {case}");
+        // maximality: every selected score >= every unselected score
+        let min_sel = (0..n)
+            .filter(|&i| m.get(i))
+            .map(|i| scores[i])
+            .fold(f32::INFINITY, f32::min);
+        let max_unsel = (0..n)
+            .filter(|&i| !m.get(i))
+            .map(|i| scores[i])
+            .fold(f32::NEG_INFINITY, f32::max);
+        if k > 0 && k < n {
+            assert!(min_sel >= max_unsel, "case {case}: {min_sel} < {max_unsel}");
+        }
+    });
+}
+
+#[test]
+fn prop_sigmoid_logit_inverse_pair() {
+    forall(500, |rng, _| {
+        let p = rng.next_f32().clamp(1e-6, 1.0 - 1e-6);
+        assert!((sigmoid(logit(p)) - p).abs() < 1e-4);
+        let s = (rng.next_f32() - 0.5) * 30.0;
+        assert!((logit(sigmoid(s)) - s).abs() < 0.05 * s.abs().max(1.0));
+    });
+}
+
+#[test]
+fn prop_philox_streams_are_reproducible_and_index_stable() {
+    forall(20, |rng, _| {
+        let key = rng.next_u64();
+        let p = Philox4x32::new(key);
+        let start = rng.below(1 << 40);
+        let mut a = vec![0.0f32; 257];
+        p.fill_uniform(start, &mut a);
+        // random access anywhere inside the range matches
+        for _ in 0..16 {
+            let off = rng.below(257) as usize;
+            assert_eq!(a[off], p.uniform_at(start + off as u64));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// partition properties
+// ---------------------------------------------------------------------------
+
+fn arb_dataset(rng: &mut Xoshiro256) -> Dataset {
+    let n = 200 + rng.below(800) as usize;
+    Synthetic::new(SynthSpec::tiny(), rng.next_u64()).generate(n, 1)
+}
+
+#[test]
+fn prop_iid_partition_exact_cover() {
+    forall(30, |rng, case| {
+        let d = arb_dataset(rng);
+        let k = 1 + rng.below(20) as usize;
+        let shards = partition_iid(&d, k, rng.next_u64());
+        let mut seen = vec![false; d.len()];
+        for s in &shards {
+            for &i in &s.indices {
+                assert!(!seen[i], "case {case}: duplicate sample {i}");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "case {case}: dropped samples");
+    });
+}
+
+#[test]
+fn prop_noniid_class_budget_and_cover() {
+    forall(30, |rng, case| {
+        let d = arb_dataset(rng);
+        let k = 5 + rng.below(26) as usize;
+        let c = 1 + rng.below(4) as usize;
+        let shards = partition_noniid(&d, k, c, rng.next_u64());
+        let mut count = 0;
+        for s in &shards {
+            assert!(s.classes.len() <= c, "case {case}");
+            for &i in &s.indices {
+                assert!(s.classes.contains(&(d.y[i] as usize)), "case {case}");
+            }
+            count += s.indices.len();
+        }
+        // exact cover whenever every class has a holder
+        if k * c >= d.n_classes {
+            assert_eq!(count, d.len(), "case {case}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// config / checkpoint properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_config_apply_parse_total() {
+    // any value accepted by apply() must round-trip through validate
+    // or produce an error — never panic.
+    forall(100, |rng, _| {
+        let keys = [
+            "clients", "rounds", "local_epochs", "lambda", "lr", "topk_frac",
+            "train_samples", "test_samples", "eval_every", "seed",
+        ];
+        let mut cfg = ExperimentConfig::default();
+        let key = keys[rng.below(keys.len() as u64) as usize];
+        let val = format!("{}", rng.below(1000));
+        let _ = cfg.apply(key, &val); // must not panic
+        let _ = cfg.validate();
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip() {
+    forall(25, |rng, case| {
+        let m = arb_mask(rng);
+        let ck = Checkpoint::new("mlp_tiny", rng.next_u64(), m.len(), &m);
+        let path =
+            std::env::temp_dir().join(format!("fedsrn_prop_{}_{case}.bin", std::process::id()));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.decode_mask(), m, "case {case}");
+        std::fs::remove_file(&path).ok();
+    });
+}

@@ -1,0 +1,169 @@
+//! Integration tests over the REAL PJRT path: load the AOT artifacts,
+//! compile, execute, and check the numerics against host-side math.
+//!
+//! Requires `make artifacts` (the mlp_tiny model). These tests are the
+//! Rust half of the AOT contract with python/compile/aot.py.
+
+use std::path::Path;
+
+use fedsrn::runtime::ModelRuntime;
+use fedsrn::util::{sigmoid, Xoshiro256};
+
+fn load_tiny() -> ModelRuntime {
+    ModelRuntime::load(Path::new("artifacts"), "mlp_tiny")
+        .expect("run `make artifacts` before cargo test")
+}
+
+fn rand_vec(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| (rng.next_normal() as f32) * scale).collect()
+}
+
+fn training_inputs(rt: &ModelRuntime, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let m = &rt.manifest;
+    let mut rng = Xoshiro256::new(seed);
+    let xs = rand_vec(m.steps * m.batch * m.input_dim, 1.0, seed ^ 1);
+    let ys: Vec<i32> =
+        (0..m.steps * m.batch).map(|_| rng.below(m.n_classes as u64) as i32).collect();
+    (xs, ys)
+}
+
+#[test]
+fn local_train_executes_and_is_deterministic() {
+    let rt = load_tiny();
+    let n = rt.manifest.n_params;
+    let scores = rand_vec(n, 0.1, 3);
+    let (xs, ys) = training_inputs(&rt, 7);
+    let (s1, m1) = rt.local_train(&scores, &xs, &ys, 42, 0.0, 0.1, false, true).unwrap();
+    let (s2, m2) = rt.local_train(&scores, &xs, &ys, 42, 0.0, 0.1, false, true).unwrap();
+    assert_eq!(s1, s2, "same seed must replay identically");
+    assert_eq!(m1.mean_loss, m2.mean_loss);
+    assert!(s1.iter().all(|v| v.is_finite()));
+    assert_ne!(s1, scores, "training must move the scores");
+    // loss should be near ln(10) for random data/weights
+    assert!(m1.mean_loss > 1.0 && m1.mean_loss < 5.0, "{}", m1.mean_loss);
+    // sparsity stats are consistent: sum_sigma in (0, n), active <= n
+    assert!(m1.sum_sigma > 0.0 && m1.sum_sigma < n as f32);
+    assert!(m1.active >= 0.0 && m1.active <= n as f32);
+}
+
+#[test]
+fn local_train_seed_matters_stochastic_only() {
+    let rt = load_tiny();
+    let scores = rand_vec(rt.manifest.n_params, 0.1, 5);
+    let (xs, ys) = training_inputs(&rt, 9);
+    let (a, _) = rt.local_train(&scores, &xs, &ys, 1, 0.0, 0.1, false, true).unwrap();
+    let (b, _) = rt.local_train(&scores, &xs, &ys, 2, 0.0, 0.1, false, true).unwrap();
+    assert_ne!(a, b, "different Bernoulli streams must differ");
+    // deterministic mode ignores the seed entirely
+    let (c, _) = rt.local_train(&scores, &xs, &ys, 1, 0.0, 0.1, true, true).unwrap();
+    let (d, _) = rt.local_train(&scores, &xs, &ys, 2, 0.0, 0.1, true, true).unwrap();
+    assert_eq!(c, d, "FedMask mode must be seed-independent");
+}
+
+#[test]
+fn regularizer_reduces_sum_sigma() {
+    let rt = load_tiny();
+    let n = rt.manifest.n_params;
+    let scores = vec![0.0f32; n]; // theta = 0.5 everywhere
+    let (xs, ys) = training_inputs(&rt, 11);
+    let (_, m_reg) = rt.local_train(&scores, &xs, &ys, 3, 5.0, 0.1, false, true).unwrap();
+    let (_, m_noreg) = rt.local_train(&scores, &xs, &ys, 3, 0.0, 0.1, false, true).unwrap();
+    assert!(
+        m_reg.sum_sigma < m_noreg.sum_sigma - 0.01 * n as f32,
+        "reg={} noreg={}",
+        m_reg.sum_sigma,
+        m_noreg.sum_sigma
+    );
+}
+
+#[test]
+fn eval_mask_counts_match_expectations() {
+    let rt = load_tiny();
+    let n = rt.manifest.n_params;
+    let dim = rt.manifest.input_dim;
+    // all-zero mask -> logits all zero -> argmax = class 0
+    let t = 100;
+    let x = rand_vec(t * dim, 1.0, 13);
+    let mut rng = Xoshiro256::new(14);
+    let y: Vec<i32> = (0..t).map(|_| rng.below(10) as i32).collect();
+    let zeros = vec![0.0f32; n];
+    let m = rt.eval_mask(&zeros, &x, &y).unwrap();
+    let class0 = y.iter().filter(|&&v| v == 0).count() as f64;
+    assert_eq!(m.examples, t);
+    assert_eq!(m.correct, class0, "empty subnetwork predicts argmax=0");
+    // full mask: finite loss, correct count within [0, t]
+    let ones = vec![1.0f32; n];
+    let m = rt.eval_mask(&ones, &x, &y).unwrap();
+    assert!(m.correct <= t as f64);
+    assert!(m.mean_loss().is_finite() && m.mean_loss() > 0.0);
+}
+
+#[test]
+fn eval_chunking_is_exact_across_boundary() {
+    // sizes straddling the exported eval_chunk must give identical
+    // totals to a manual split
+    let rt = load_tiny();
+    let n = rt.manifest.n_params;
+    let dim = rt.manifest.input_dim;
+    let chunk = rt.manifest.eval_chunk;
+    let total = chunk + chunk / 2 + 3;
+    let x = rand_vec(total * dim, 1.0, 17);
+    let mut rng = Xoshiro256::new(18);
+    let y: Vec<i32> = (0..total).map(|_| rng.below(10) as i32).collect();
+    let mask: Vec<f32> =
+        (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+    let whole = rt.eval_mask(&mask, &x, &y).unwrap();
+    // manual split at an arbitrary boundary
+    let cut = 77;
+    let a = rt.eval_mask(&mask, &x[..cut * dim], &y[..cut]).unwrap();
+    let b = rt.eval_mask(&mask, &x[cut * dim..], &y[cut..]).unwrap();
+    assert_eq!(whole.correct, a.correct + b.correct);
+    assert!((whole.loss_sum - (a.loss_sum + b.loss_sum)).abs() < 1e-2);
+}
+
+#[test]
+fn dense_grad_finite_and_descends() {
+    let rt = load_tiny();
+    let m = &rt.manifest;
+    let mut w = rt.weights().to_vec();
+    let rows = m.batch;
+    let x = rand_vec(rows * m.input_dim, 1.0, 19);
+    let mut rng = Xoshiro256::new(20);
+    let y: Vec<i32> = (0..rows).map(|_| rng.below(10) as i32).collect();
+    let (_, loss0, _) = rt.dense_grad(&w, &x, &y).unwrap();
+    for _ in 0..8 {
+        let (g, _, _) = rt.dense_grad(&w, &x, &y).unwrap();
+        assert!(g.iter().all(|v| v.is_finite()));
+        for (wi, gi) in w.iter_mut().zip(&g) {
+            *wi -= 0.2 * gi;
+        }
+    }
+    let (_, loss1, _) = rt.dense_grad(&w, &x, &y).unwrap();
+    assert!(loss1 < loss0, "descent failed: {loss0} -> {loss1}");
+}
+
+#[test]
+fn dense_grad_padding_rows_are_ignored() {
+    let rt = load_tiny();
+    let m = &rt.manifest;
+    let w = rt.weights().to_vec();
+    let rows = m.batch / 2; // ragged: runtime pads with y=-1
+    let x = rand_vec(rows * m.input_dim, 1.0, 21);
+    let mut rng = Xoshiro256::new(22);
+    let y: Vec<i32> = (0..rows).map(|_| rng.below(10) as i32).collect();
+    let (g_half, loss_half, correct_half) = rt.dense_grad(&w, &x, &y).unwrap();
+    assert!(correct_half <= rows as f32);
+    assert!(loss_half.is_finite());
+    assert!(g_half.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn weights_match_manifest_and_stay_frozen() {
+    let rt = load_tiny();
+    let w0 = rt.weights().to_vec();
+    let (xs, ys) = training_inputs(&rt, 23);
+    let scores = vec![0.0f32; rt.manifest.n_params];
+    let _ = rt.local_train(&scores, &xs, &ys, 1, 1.0, 0.5, false, true).unwrap();
+    assert_eq!(rt.weights(), &w0[..], "frozen weights must never change");
+}
