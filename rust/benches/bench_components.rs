@@ -114,8 +114,9 @@ fn main() {
         r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.mean_s / 1e6));
     }
 
-    // --- PJRT call path (tiny model: overhead-dominated) -------------------
+    // --- model-program call path (tiny model: overhead-dominated) ----------
     if let Ok(rt) = ModelRuntime::load(std::path::Path::new("artifacts"), "mlp_tiny") {
+        let be = rt.backend_name();
         let (n, dim, batch, steps) = (
             rt.manifest.n_params,
             rt.manifest.input_dim,
@@ -127,24 +128,69 @@ fn main() {
         let xs: Vec<f32> =
             (0..steps * batch * dim).map(|_| rng.next_normal() as f32).collect();
         let ys: Vec<i32> = (0..steps * batch).map(|_| rng.below(10) as i32).collect();
-        if should_run(&filter, "pjrt/local_train") {
-            let r = bench("pjrt/local_train/mlp_tiny(6 steps)", 3.0, 100, || {
+        if should_run(&filter, "runtime/local_train") {
+            let name = format!("runtime/local_train/{be}/mlp_tiny({steps} steps)");
+            let r = bench(&name, 3.0, 100, || {
                 std::hint::black_box(
                     rt.local_train(&scores, &xs, &ys, 1, 1.0, 0.1, false, true).unwrap(),
                 );
             });
-            r.print(&format!("{:>7.1} steps/s", 6.0 / r.mean_s));
+            r.print(&format!("{:>7.1} steps/s", steps as f64 / r.mean_s));
         }
         let mask = vec![1.0f32; n];
         let tx: Vec<f32> = (0..256 * dim).map(|_| rng.next_normal() as f32).collect();
         let ty: Vec<i32> = (0..256).map(|_| rng.below(10) as i32).collect();
-        if should_run(&filter, "pjrt/eval") {
-            let r = bench("pjrt/eval/mlp_tiny(256 rows)", 3.0, 100, || {
+        if should_run(&filter, "runtime/eval") {
+            let name = format!("runtime/eval/{be}/mlp_tiny(256 rows)");
+            let r = bench(&name, 3.0, 100, || {
                 std::hint::black_box(rt.eval_mask(&mask, &tx, &ty).unwrap());
             });
             r.print(&format!("{:>7.1} rows/s", 256.0 / r.mean_s));
         }
+
+        // --- round engine: one cohort's local phases, 1 vs N workers -------
+        use fedsrn::coordinator::RoundEngine;
+        use fedsrn::data::{partition_iid, SynthSpec, Synthetic};
+        use fedsrn::fl::Client;
+        let n_clients = 16;
+        let data = Synthetic::new(SynthSpec::tiny(), 3).generate(100 * n_clients, 1);
+        let cohort: Vec<usize> = (0..n_clients).collect();
+        for threads in [1usize, 2, 8] {
+            let name = format!("engine/local_phase/{n_clients}c/threads={threads}");
+            if !should_run(&filter, &name) {
+                continue;
+            }
+            let engine = RoundEngine::new(threads);
+            let mut clients: Vec<Client> = partition_iid(&data, n_clients, 7)
+                .into_iter()
+                .map(|s| {
+                    let seed = 100 + s.client_id as u64;
+                    Client::new(s, seed)
+                })
+                .collect();
+            let scores_ref = &scores;
+            let r = bench(&name, 2.0, 50, || {
+                let out = engine
+                    .run_cohort(&mut clients, &cohort, |_pos, c| {
+                        c.local_phase(
+                            &rt,
+                            &data,
+                            scores_ref.clone(),
+                            1,
+                            1.0,
+                            0.1,
+                            1,
+                            false,
+                            true,
+                        )
+                        .map(|(s, _)| s.len())
+                    })
+                    .unwrap();
+                std::hint::black_box(out);
+            });
+            r.print(&format!("{:>7.2} cohorts/s", 1.0 / r.mean_s));
+        }
     } else {
-        eprintln!("(skipping PJRT benches: run `make artifacts` first)");
+        eprintln!("(skipping runtime benches: no artifacts and no built-in model?)");
     }
 }

@@ -6,6 +6,7 @@
 //!
 //!   fig1/<dataset>  — IID: reg saves Bpp at matched accuracy (Fig. 1)
 //!   fig2/<dataset>  — non-IID: lambda trades accuracy for Bpp (Fig. 2)
+//!   engine/fig1-iid — sequential vs parallel round engine throughput
 //!   storage         — seed+mask vs dense float storage (conclusion)
 //!
 //! Run: `cargo bench --bench bench_figures [-- filter]`
@@ -71,7 +72,9 @@ fn main() {
         if !should_run(&filter, &name) {
             continue;
         }
-        if fedsrn::runtime::Manifest::load(std::path::Path::new("artifacts"), model).is_err() {
+        if fedsrn::runtime::Manifest::load(std::path::Path::new("artifacts"), model).is_err()
+            && fedsrn::runtime::Manifest::builtin(model).is_none()
+        {
             eprintln!("skipping {name}: export {model} artifacts first");
             continue;
         }
@@ -128,6 +131,36 @@ fn main() {
             reg_hi.bpp,
             reg_lo.bpp,
             fedpm.bpp
+        );
+    }
+
+    // ---- engine: sequential vs parallel round throughput (fig. 1 IID) ----
+    if should_run(&filter, "engine/fig1-iid") {
+        println!("== engine/fig1-iid (FedPM+reg, 8 devices, mlp_tiny, 8 rounds) ==");
+        let mk = |threads: usize| {
+            let mut cfg = base("mlp_tiny", "tiny");
+            cfg.clients = 8;
+            cfg.rounds = 8;
+            cfg.algorithm = Algorithm::FedPMReg;
+            cfg.lambda = 1.0;
+            cfg.eval_every = 1_000; // isolate the round loop from eval
+            cfg.threads = threads;
+            cfg
+        };
+        let seq = run("threads=1 (sequential)", mk(1));
+        let par2 = run("threads=2", mk(2));
+        let par8 = run("threads=8", mk(8));
+        for r in [&seq, &par2, &par8] {
+            print_run(r);
+        }
+        let identical =
+            seq.acc.to_bits() == par8.acc.to_bits() && seq.bpp.to_bits() == par8.bpp.to_bits();
+        println!(
+            "  round throughput: {:.2}x at 2 threads, {:.2}x at 8 threads (target >= 2x); \
+             bit-identical metrics: {}\n",
+            seq.secs_per_round / par2.secs_per_round,
+            seq.secs_per_round / par8.secs_per_round,
+            if identical { "yes" } else { "NO — DETERMINISM VIOLATED" }
         );
     }
 

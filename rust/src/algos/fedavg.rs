@@ -33,32 +33,53 @@ impl Strategy for FedAvg {
     fn run_round(&mut self, ctx: &mut RoundCtx) -> Result<RoundStats> {
         let n = self.weights.len();
         let batch = ctx.rt.manifest.batch;
+        let lr = ctx.server_lr;
+        let local_epochs = ctx.local_epochs;
+        let cohort: Vec<usize> = (0..ctx.clients.len()).collect();
+        let (rt, data) = (ctx.rt, ctx.data);
+
         let mut acc = vec![0.0f64; n];
         let mut weight_sum = 0.0f64;
         let mut train_loss = 0.0f64;
-        let lr = ctx.server_lr;
+        let mut done = 0usize;
 
-        for (i, client) in ctx.clients.iter_mut().enumerate() {
-            ctx.comm.add_float_downlink();
-            let mut w_local = self.weights.clone();
-            let steps = client.steps_per_round(batch, ctx.local_epochs).max(1);
-            let mut last_loss = 0.0f32;
-            for _ in 0..steps {
-                let (xs, ys) = client.gather_call_batches(ctx.data, 1, batch);
-                let (grads, loss, _c) = ctx.rt.dense_grad(&w_local, &xs, &ys)?;
-                for (w, g) in w_local.iter_mut().zip(&grads) {
-                    *w -= lr * g;
+        // The fleet is processed in waves so at most one wave of dense
+        // local weight vectors is resident at a time (O(wave * n), not
+        // O(clients * n)). The fold still walks cohort order — waves are
+        // consumed sequentially and folded in order — so results stay
+        // bit-identical at any thread count and any wave size.
+        let wave = ctx.engine.threads().max(4) * 2;
+        for ids in cohort.chunks(wave) {
+            let global = &self.weights;
+            // Parallel phase: each device trains a local copy of the
+            // dense weights for `local_epochs` of minibatch SGD.
+            let reports = ctx.engine.run_cohort(ctx.clients, ids, |_pos, client| {
+                let mut w_local = global.clone();
+                let steps = client.steps_per_round(batch, local_epochs).max(1);
+                let mut last_loss = 0.0f32;
+                for _ in 0..steps {
+                    let (xs, ys) = client.gather_call_batches(data, 1, batch);
+                    let (grads, loss, _c) = rt.dense_grad(&w_local, &xs, &ys)?;
+                    for (w, g) in w_local.iter_mut().zip(&grads) {
+                        *w -= lr * g;
+                    }
+                    last_loss = loss;
                 }
-                last_loss = loss;
+                Ok((w_local, client.weight(), last_loss))
+            })?;
+
+            // Ordered reduction: |D_i|-weighted average in cohort order.
+            for (w_local, cw, last_loss) in reports {
+                ctx.comm.add_float_downlink();
+                // UL: full dense floats.
+                ctx.comm.add_dense_uplink();
+                done += 1;
+                train_loss += (last_loss as f64 - train_loss) / done as f64;
+                for (a, &w) in acc.iter_mut().zip(&w_local) {
+                    *a += cw * w as f64;
+                }
+                weight_sum += cw;
             }
-            train_loss += (last_loss as f64 - train_loss) / (i + 1) as f64;
-            // UL: full dense floats.
-            ctx.comm.add_dense_uplink();
-            let cw = client.weight();
-            for (a, &w) in acc.iter_mut().zip(&w_local) {
-                *a += cw * w as f64;
-            }
-            weight_sum += cw;
         }
         for (w, &a) in self.weights.iter_mut().zip(&acc) {
             *w = (a / weight_sum) as f32;

@@ -18,10 +18,10 @@
 
 use anyhow::Result;
 
-use crate::compress;
+use crate::compress::{self, Encoded};
 use crate::fl::Server;
 use crate::mask::{sample_mask, topk_mask, ProbMask};
-use crate::util::BitVec;
+use crate::util::{BitVec, SeedSequence};
 
 use super::{EvalModel, RoundCtx, RoundStats, Strategy};
 
@@ -64,19 +64,43 @@ impl MaskStrategy {
 
     /// Build this client's uplink mask from its updated scores.
     fn uplink_mask(&self, scores: &[f32], client: usize, round: usize) -> BitVec {
-        match self.mode {
-            MaskMode::Stochastic => {
-                let theta = ProbMask::from_scores(scores);
-                let seed = self
-                    .seed
-                    .wrapping_mul(0xA24B_AED4_963E_E407)
-                    .wrapping_add(((round as u64) << 24) | client as u64);
-                sample_mask(&theta, seed)
-            }
-            MaskMode::Deterministic => ProbMask::from_scores(scores).threshold(),
-            MaskMode::TopK { frac } => topk_mask(scores, frac),
-        }
+        build_uplink(self.mode, mask_stream(self.seed), scores, client, round)
     }
+}
+
+/// Root of the uplink mask-sampling seed tree for one experiment.
+fn mask_stream(seed: u64) -> SeedSequence {
+    SeedSequence::new(seed).child(0xA24B)
+}
+
+/// Uplink mask construction as a pure function, so the round engine's
+/// worker threads can build masks without borrowing the strategy: the
+/// sampled mask depends only on (mode, seed tree, scores, client, round).
+fn build_uplink(
+    mode: MaskMode,
+    stream: SeedSequence,
+    scores: &[f32],
+    client: usize,
+    round: usize,
+) -> BitVec {
+    match mode {
+        MaskMode::Stochastic => {
+            let theta = ProbMask::from_scores(scores);
+            sample_mask(&theta, stream.child(round as u64).child(client as u64).seed())
+        }
+        MaskMode::Deterministic => ProbMask::from_scores(scores).threshold(),
+        MaskMode::TopK { frac } => topk_mask(scores, frac),
+    }
+}
+
+/// One client's contribution, produced on a worker thread and merged in
+/// cohort order by the calling thread.
+struct Uplink {
+    /// |D_i| aggregation weight.
+    weight: f64,
+    /// Coded mask, or `None` when the failure model dropped the uplink.
+    payload: Option<Encoded>,
+    mean_loss: f32,
 }
 
 impl Strategy for MaskStrategy {
@@ -96,31 +120,48 @@ impl Strategy for MaskStrategy {
         let cohort = ctx.participation.sample_round(ctx.clients.len(), ctx.seed, round);
         let scores = self.server.broadcast_scores(ctx.comm, cohort.len());
 
+        // Parallel phase: local training + uplink construction + entropy
+        // coding per client, sharded by the round engine. Only copies of
+        // the strategy's configuration cross into the workers; all shared
+        // state stays on this thread.
+        let (mode, stream) = (self.mode, mask_stream(self.seed));
+        let (rt, data) = (ctx.rt, ctx.data);
+        let (lambda, lr, local_epochs, adam) = (ctx.lambda, ctx.lr, ctx.local_epochs, ctx.adam);
+        let (participation, seed) = (ctx.participation, ctx.seed);
+        let scores_ref = &scores;
+        let uplinks: Vec<Uplink> =
+            ctx.engine.run_cohort(ctx.clients, &cohort, |pos, client| {
+                let (s_i, met) = client.local_phase(
+                    rt,
+                    data,
+                    scores_ref.clone(),
+                    round,
+                    lambda,
+                    lr,
+                    local_epochs,
+                    deterministic,
+                    adam,
+                )?;
+                // Failure injection: the device trained but its uplink
+                // never arrives; the server must tolerate the gap.
+                let payload = if participation.drops(pos, seed, round, client.id) {
+                    None
+                } else {
+                    let mask = build_uplink(mode, stream, &s_i, client.id, round);
+                    Some(compress::encode(&mask))
+                };
+                Ok(Uplink { weight: client.weight(), payload, mean_loss: met.mean_loss })
+            })?;
+
+        // Ordered reduction: aggregate + account in cohort order, so the
+        // result is independent of worker scheduling.
         let mut train_loss = 0.0f64;
         let mut reporters = 0usize;
-        for (pos, &ci) in cohort.iter().enumerate() {
-            let client = &mut ctx.clients[ci];
-            let (s_i, met) = client.local_phase(
-                ctx.rt,
-                ctx.data,
-                scores.clone(),
-                round,
-                ctx.lambda,
-                ctx.lr,
-                ctx.local_epochs,
-                deterministic,
-                ctx.adam,
-            )?;
-            // Failure injection: the device trained but its uplink never
-            // arrives; the server must tolerate the gap.
-            if ctx.participation.drops(pos, ctx.seed, round, client.id) {
-                continue;
-            }
+        for up in &uplinks {
+            let Some(enc) = &up.payload else { continue };
             reporters += 1;
-            train_loss += (met.mean_loss as f64 - train_loss) / reporters as f64;
-            let mask = self.uplink_mask(&s_i, client.id, round);
-            let enc = compress::encode(&mask);
-            self.server.receive_mask(&enc, client.weight(), ctx.comm)?;
+            train_loss += (up.mean_loss as f64 - train_loss) / reporters as f64;
+            self.server.receive_mask(enc, up.weight, ctx.comm)?;
         }
         self.server.finish_round()?;
 

@@ -65,6 +65,10 @@ pub struct RoundCtx<'a> {
     pub clients: &'a mut [Client],
     pub round: usize,
     pub comm: &'a mut RoundComm,
+    /// Shards per-client work across worker threads; strategies MUST
+    /// route all client execution through it (DESIGN.md §Parallel round
+    /// engine) so the sequential and parallel paths share one code path.
+    pub engine: &'a crate::coordinator::RoundEngine,
     pub lambda: f32,
     pub lr: f32,
     pub local_epochs: usize,

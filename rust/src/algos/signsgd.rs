@@ -46,25 +46,33 @@ impl Strategy for SignSgd {
 
     fn run_round(&mut self, ctx: &mut RoundCtx) -> Result<RoundStats> {
         let n = self.weights.len();
-        let mut signs: Vec<BitVec> = Vec::with_capacity(ctx.clients.len());
-        let mut weights_of: Vec<f64> = Vec::with_capacity(ctx.clients.len());
-        let mut train_loss = 0.0f64;
         let batch = ctx.rt.manifest.batch;
+        let cohort: Vec<usize> = (0..ctx.clients.len()).collect();
+        let (rt, data) = (ctx.rt, ctx.data);
+        let weights = &self.weights;
 
-        for (i, client) in ctx.clients.iter_mut().enumerate() {
+        // Parallel phase: one minibatch gradient + sign coding per device
+        // (parallel SignSGD semantics).
+        let reports = ctx.engine.run_cohort(ctx.clients, &cohort, |_pos, client| {
+            let (xs, ys) = client.gather_call_batches(data, 1, batch);
+            let (grads, loss, _correct) = rt.dense_grad(weights, &xs, &ys)?;
+            // UL: sign bits (1 = positive gradient step direction).
+            let sign_bits = BitVec::from_iter_len(grads.iter().map(|&g| g > 0.0), n);
+            let enc = compress::encode(&sign_bits);
+            Ok((sign_bits, enc, client.weight(), loss))
+        })?;
+
+        // Ordered reduction: account + vote in cohort order.
+        let mut signs: Vec<BitVec> = Vec::with_capacity(reports.len());
+        let mut weights_of: Vec<f64> = Vec::with_capacity(reports.len());
+        let mut train_loss = 0.0f64;
+        for (i, (sign_bits, enc, weight, loss)) in reports.into_iter().enumerate() {
             // DL: dense weight broadcast (32 Bpp — counted).
             ctx.comm.add_float_downlink();
-            // One minibatch gradient (parallel SignSGD semantics).
-            let (xs, ys) = client.gather_call_batches(ctx.data, 1, batch);
-            let (grads, loss, _correct) = ctx.rt.dense_grad(&self.weights, &xs, &ys)?;
-            train_loss += (loss as f64 - train_loss) / (i + 1) as f64;
-            // UL: sign bits (1 = positive gradient step direction).
-            let sign_bits =
-                BitVec::from_iter_len(grads.iter().map(|&g| g > 0.0), n);
-            let enc = compress::encode(&sign_bits);
             ctx.comm.add_mask_uplink(&sign_bits, &enc);
+            train_loss += (loss as f64 - train_loss) / (i + 1) as f64;
             signs.push(sign_bits);
-            weights_of.push(client.weight());
+            weights_of.push(weight);
         }
 
         let vote = majority_vote_signs(&signs, &weights_of);

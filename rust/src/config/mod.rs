@@ -109,6 +109,10 @@ pub struct ExperimentConfig {
     pub dropout: f64,
     /// Server aggregation: eq. 8 mean, or Beta-posterior damping.
     pub bayes_prior: f64,
+    /// Worker threads for the parallel round engine (0 = all cores,
+    /// 1 = sequential reference path). Results are bit-identical at any
+    /// value — this is a throughput knob, not a semantics knob.
+    pub threads: usize,
     /// Root seed for everything.
     pub seed: u64,
     /// Directory with AOT artifacts.
@@ -138,6 +142,7 @@ impl Default for ExperimentConfig {
             participation: 1.0,
             dropout: 0.0,
             bayes_prior: 0.0,
+            threads: 0,
             seed: 2023,
             artifacts_dir: "artifacts".into(),
             out: String::new(),
@@ -209,6 +214,7 @@ impl ExperimentConfig {
                     other => bail!("optimizer must be adam|sgd, got '{other}'"),
                 }
             }
+            "threads" => self.threads = val.parse()?,
             "seed" => self.seed = val.parse()?,
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             "out" => self.out = val.to_string(),

@@ -1,0 +1,236 @@
+//! Parallel federated round engine (DESIGN.md §Parallel round engine).
+//!
+//! Every strategy funnels its per-client work — local training, uplink
+//! mask construction, entropy coding — through [`RoundEngine::run_cohort`],
+//! which shards the sampled cohort across worker threads and returns the
+//! per-client results **in cohort order**, whatever the execution
+//! interleaving was.
+//!
+//! ## Determinism contract
+//!
+//! Parallel runs are bit-identical to the sequential path at any thread
+//! count because the engine never lets scheduling reach the math:
+//!
+//! 1. **Seed-derived streams.** All client randomness is a pure function
+//!    of a [`crate::util::SeedSequence`] path `(root, round, client, ...)`
+//!    or of per-client state (`BatchSampler`) only ever touched by that
+//!    client's own work item. No RNG is shared across work items.
+//! 2. **Ordered reduction.** Worker threads only *produce* results; the
+//!    engine stitches them back into cohort order, and all mutation of
+//!    shared round state (aggregators, [`crate::fl::RoundComm`], running
+//!    means) happens in that order on the calling thread. Mask
+//!    aggregation itself is additionally order-independent for the
+//!    integer dataset-size weights the federation uses (exact f64 sums —
+//!    see the property tests), so even a future out-of-order merge
+//!    cannot change theta.
+//!
+//! The engine intentionally uses `std::thread::scope` rather than an
+//! external thread pool: cohorts are O(10-1000) coarse work items per
+//! round, far past the point where work-stealing would matter, and it
+//! keeps the dependency surface of the offline build at zero.
+
+use anyhow::{ensure, Result};
+
+use crate::fl::Client;
+
+/// Shards a round's cohort across worker threads.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundEngine {
+    threads: usize,
+}
+
+impl Default for RoundEngine {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+impl RoundEngine {
+    /// `threads = 0` resolves to the machine's available parallelism;
+    /// `threads = 1` is the sequential reference path (same code, same
+    /// order, no spawns).
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        Self { threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `work(pos, client)` once per cohort member, in parallel, and
+    /// return the results in cohort order (`pos` = position within the
+    /// cohort). `cohort` holds sorted, unique indices into `clients`.
+    ///
+    /// `work` must be a pure function of its arguments (plus shared
+    /// `Sync` captures) for the determinism contract to hold.
+    pub fn run_cohort<T, F>(
+        &self,
+        clients: &mut [Client],
+        cohort: &[usize],
+        work: F,
+    ) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize, &mut Client) -> Result<T> + Sync,
+    {
+        debug_assert!(cohort.windows(2).all(|w| w[0] < w[1]), "cohort sorted+unique");
+        // Select disjoint `&mut Client` references in cohort order.
+        let mut selected: Vec<(usize, &mut Client)> = Vec::with_capacity(cohort.len());
+        {
+            let mut next = 0usize;
+            for (i, c) in clients.iter_mut().enumerate() {
+                if next == cohort.len() {
+                    break;
+                }
+                if cohort[next] == i {
+                    selected.push((next, c));
+                    next += 1;
+                }
+            }
+            ensure!(next == cohort.len(), "cohort index out of range");
+        }
+
+        let workers = self.threads.min(selected.len()).max(1);
+        if workers == 1 {
+            // Sequential reference path: identical code path minus spawns.
+            return selected.into_iter().map(|(pos, c)| work(pos, c)).collect();
+        }
+
+        // Stripe the cohort across workers; each worker returns
+        // (pos, result) pairs that are stitched back into cohort order.
+        let mut stripes: Vec<Vec<(usize, &mut Client)>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (i, item) in selected.into_iter().enumerate() {
+            stripes[i % workers].push(item);
+        }
+        let work = &work;
+        let mut slots: Vec<Option<Result<T>>> =
+            cohort.iter().map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = stripes
+                .into_iter()
+                .map(|stripe| {
+                    scope.spawn(move || {
+                        stripe
+                            .into_iter()
+                            .map(|(pos, c)| (pos, work(pos, c)))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (pos, r) in h.join().expect("round-engine worker panicked") {
+                    slots[pos] = Some(r);
+                }
+            }
+        });
+        // First error (in cohort order, not completion order) wins, so
+        // failures are as reproducible as successes.
+        slots
+            .into_iter()
+            .map(|s| s.expect("every cohort position must produce a result"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{partition_iid, Dataset, SynthSpec, Synthetic};
+
+    fn task(n_clients: usize) -> Dataset {
+        Synthetic::new(SynthSpec::tiny(), 3).generate(40 * n_clients, 1)
+    }
+
+    fn fleet(data: &Dataset, n: usize) -> Vec<Client> {
+        partition_iid(data, n, 7)
+            .into_iter()
+            .map(|s| {
+                let seed = 100 + s.client_id as u64;
+                Client::new(s, seed)
+            })
+            .collect()
+    }
+
+    /// A deterministic per-client computation exercising the client's
+    /// own mutable state (the batch sampler) — exact-comparable output.
+    fn probe(data: &Dataset, pos: usize, c: &mut Client) -> (usize, usize, Vec<i32>, u64) {
+        let (xs, ys) = c.gather_call_batches(data, 2, 4);
+        let sum: f64 = xs.iter().map(|&v| v as f64).sum();
+        (pos, c.id, ys, sum.to_bits())
+    }
+
+    #[test]
+    fn results_arrive_in_cohort_order_at_any_thread_count() {
+        let data = task(8);
+        let cohort: Vec<usize> = vec![0, 2, 3, 5, 6, 7];
+        let reference = {
+            let mut clients = fleet(&data, 8);
+            RoundEngine::new(1)
+                .run_cohort(&mut clients, &cohort, |pos, c| Ok(probe(&data, pos, c)))
+                .unwrap()
+        };
+        for threads in [2, 3, 8, 16] {
+            let mut clients = fleet(&data, 8);
+            let got = RoundEngine::new(threads)
+                .run_cohort(&mut clients, &cohort, |pos, c| Ok(probe(&data, pos, c)))
+                .unwrap();
+            assert_eq!(got, reference, "threads={threads}");
+        }
+        // positions are 0..cohort.len(), ids are the cohort's client ids
+        for (pos, r) in reference.iter().enumerate() {
+            assert_eq!(r.0, pos);
+            assert_eq!(r.1, cohort[pos]);
+        }
+    }
+
+    #[test]
+    fn error_reporting_is_deterministic() {
+        let data = task(6);
+        let mut clients = fleet(&data, 6);
+        let cohort: Vec<usize> = (0..6).collect();
+        let failing = |pos: usize, _c: &mut Client| -> Result<usize> {
+            if pos % 2 == 1 {
+                anyhow::bail!("client at position {pos} failed");
+            }
+            Ok(pos)
+        };
+        for threads in [1, 4] {
+            let err = RoundEngine::new(threads)
+                .run_cohort(&mut clients, &cohort, failing)
+                .unwrap_err();
+            assert!(err.to_string().contains("position 1"), "threads={threads}: {err}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_cohort_rejected() {
+        let data = task(3);
+        let mut clients = fleet(&data, 3);
+        let err = RoundEngine::new(2)
+            .run_cohort(&mut clients, &[0, 9], |pos, _c| Ok(pos))
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"));
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_hardware() {
+        assert!(RoundEngine::new(0).threads() >= 1);
+        assert_eq!(RoundEngine::new(5).threads(), 5);
+    }
+
+    #[test]
+    fn empty_cohort_is_fine() {
+        let data = task(2);
+        let mut clients = fleet(&data, 2);
+        let out = RoundEngine::new(4)
+            .run_cohort(&mut clients, &[], |pos, _c| Ok(pos))
+            .unwrap();
+        assert!(out.is_empty());
+    }
+}

@@ -11,9 +11,11 @@ use anyhow::{ensure, Context, Result};
 
 use crate::algos::{build_strategy, EvalModel, RoundCtx, Strategy};
 use crate::config::{ExperimentConfig, Partition};
+use crate::coordinator::RoundEngine;
 use crate::data::{loader, partition_iid, partition_noniid, Dataset, SynthSpec, Synthetic};
 use crate::fl::{Client, CommTotals, MetricsSink, RoundComm, RoundRecord};
 use crate::runtime::ModelRuntime;
+use crate::util::SeedSequence;
 
 /// Per-device evaluation view: which test rows match the device's
 /// target distribution (all rows for IID; own-classes rows non-IID).
@@ -30,6 +32,7 @@ pub struct Experiment {
     clients: Vec<Client>,
     eval_shards: Vec<EvalShard>,
     strategy: Box<dyn Strategy>,
+    engine: RoundEngine,
     pub totals: CommTotals,
 }
 
@@ -68,10 +71,15 @@ impl Experiment {
             Partition::Iid => partition_iid(&train, cfg.clients, cfg.seed ^ 0x5A),
             Partition::NonIid { c } => partition_noniid(&train, cfg.clients, c, cfg.seed ^ 0x5A),
         };
+        // Per-client seeds come from a splittable seed tree, never from
+        // a shared sequential stream: a client's randomness is a pure
+        // function of (root seed, client id), which is what lets the
+        // parallel round engine replay the sequential path bit-for-bit.
+        let client_streams = SeedSequence::new(cfg.seed).child(0xC11E);
         let clients: Vec<Client> = shards
             .into_iter()
             .map(|s| {
-                let seed = cfg.seed ^ ((s.client_id as u64 + 1) << 8);
+                let seed = client_streams.child(s.client_id as u64).seed();
                 Client::new(s, seed)
             })
             .collect();
@@ -89,7 +97,17 @@ impl Experiment {
             .collect();
 
         let strategy = build_strategy(&cfg, rt.manifest.n_params, rt.weights());
-        Ok(Self { cfg, rt, train, clients, eval_shards, strategy, totals: CommTotals::default() })
+        let engine = RoundEngine::new(cfg.threads);
+        Ok(Self {
+            cfg,
+            rt,
+            train,
+            clients,
+            eval_shards,
+            strategy,
+            engine,
+            totals: CommTotals::default(),
+        })
     }
 
     fn load_data(cfg: &ExperimentConfig, dim: usize, n_classes: usize) -> Result<(Dataset, Dataset)> {
@@ -158,6 +176,7 @@ impl Experiment {
                     clients: &mut self.clients,
                     round,
                     comm: &mut comm,
+                    engine: &self.engine,
                     lambda: self.cfg.effective_lambda(),
                     lr: self.cfg.lr,
                     local_epochs: self.cfg.local_epochs,
@@ -173,7 +192,7 @@ impl Experiment {
                 self.strategy.run_round(&mut ctx)?
             };
             self.totals.add_round(&comm);
-            est_bpp_sum += comm.est_bpp;
+            est_bpp_sum += comm.est_bpp();
             coded_bpp_sum += comm.measured_bpp();
 
             if round % self.cfg.eval_every == 0 || round == self.cfg.rounds {
@@ -186,7 +205,7 @@ impl Experiment {
                 accuracy: last_acc,
                 loss: last_loss,
                 train_loss: stats.train_loss,
-                est_bpp: comm.est_bpp,
+                est_bpp: comm.est_bpp(),
                 coded_bpp: comm.measured_bpp(),
                 mean_theta: stats.mean_theta,
                 mask_density: stats.mask_density,
@@ -197,7 +216,7 @@ impl Experiment {
         // Perf telemetry: per-program wall-clock breakdown (FEDSRN_TIMERS=1).
         if std::env::var("FEDSRN_TIMERS").is_ok() {
             eprintln!("--- runtime timer breakdown ---");
-            for (label, secs, calls) in self.rt.timers.borrow().summary() {
+            for (label, secs, calls) in self.rt.timers.lock().unwrap().summary() {
                 eprintln!(
                     "{label:<24} {secs:>9.3}s over {calls:>6} calls ({:.2}ms/call)",
                     secs / calls.max(1) as f64 * 1e3

@@ -99,12 +99,13 @@ fn print_summaries(title: &str, curves: &[Curve]) {
 
 /// Base config shared by the figure harnesses.
 fn base_cfg(model: &str, dataset: &str, rounds: usize, seed: u64) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.model = model.to_string();
-    cfg.dataset = dataset.to_string();
-    cfg.rounds = rounds;
-    cfg.seed = seed;
-    cfg
+    ExperimentConfig {
+        model: model.to_string(),
+        dataset: dataset.to_string(),
+        rounds,
+        seed,
+        ..ExperimentConfig::default()
+    }
 }
 
 /// Model paired with each dataset in the scaled-down default harness

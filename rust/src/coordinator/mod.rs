@@ -1,8 +1,11 @@
-//! Coordinator: experiment lifecycle, figure harnesses, checkpoints.
+//! Coordinator: experiment lifecycle, round engine, figure harnesses,
+//! checkpoints.
 
 pub mod checkpoint;
+pub mod engine;
 pub mod experiment;
 pub mod figures;
 
 pub use checkpoint::Checkpoint;
+pub use engine::RoundEngine;
 pub use experiment::{Experiment, RunSummary};

@@ -5,6 +5,12 @@
 //! size of every uplink payload (masks through [`crate::compress`],
 //! dense floats at 32 Bpp) and the estimated source entropy (eq. 13);
 //! the server records downlink broadcast sizes.
+//!
+//! Accounting is *merge-based* (DESIGN.md §Parallel round engine): all
+//! counters are plain sums, so per-client contributions can be recorded
+//! into independent `RoundComm` values on worker threads and folded into
+//! the round total with [`RoundComm::merge`] — no `&mut` interleaving
+//! per client, and the merged result is independent of merge order.
 
 use crate::compress::Encoded;
 use crate::mask::empirical_bpp;
@@ -15,14 +21,14 @@ use crate::util::BitVec;
 pub struct RoundComm {
     /// Measured uplink bits (entropy-coded payloads, incl. headers).
     pub ul_bits: u64,
-    /// Estimated uplink Bpp via eq. 13 (mean over clients).
-    pub est_bpp: f64,
     /// Downlink bits (global state broadcast).
     pub dl_bits: u64,
     /// Number of client uplinks this round.
     pub clients: usize,
     /// Model parameter count (denominator for Bpp).
     pub n_params: usize,
+    /// Sum over clients of the per-client estimated Bpp (eq. 13).
+    est_bpp_sum: f64,
 }
 
 impl RoundComm {
@@ -33,16 +39,14 @@ impl RoundComm {
     /// Record one client's coded binary-mask uplink.
     pub fn add_mask_uplink(&mut self, mask: &BitVec, enc: &Encoded) {
         self.ul_bits += enc.wire_bytes() as u64 * 8;
-        // incremental mean of the per-client empirical entropy
-        let h = empirical_bpp(mask);
-        self.est_bpp += (h - self.est_bpp) / (self.clients + 1) as f64;
+        self.est_bpp_sum += empirical_bpp(mask);
         self.clients += 1;
     }
 
     /// Record a dense float uplink (FedAvg): 32 bits per parameter.
     pub fn add_dense_uplink(&mut self) {
         self.ul_bits += self.n_params as u64 * 32;
-        self.est_bpp += (32.0 - self.est_bpp) / (self.clients + 1) as f64;
+        self.est_bpp_sum += 32.0;
         self.clients += 1;
     }
 
@@ -51,6 +55,29 @@ impl RoundComm {
     /// its contribution is about the UL); dense ships weights as f32.
     pub fn add_float_downlink(&mut self) {
         self.dl_bits += self.n_params as u64 * 32;
+    }
+
+    /// Fold another accumulator (e.g. a per-client or per-worker record)
+    /// into this one. All fields are sums, so merging is associative and
+    /// commutative up to f64 rounding of `est_bpp`.
+    pub fn merge(&mut self, other: &RoundComm) {
+        debug_assert!(
+            self.n_params == other.n_params || other.clients == 0,
+            "merging accounting for different models"
+        );
+        self.ul_bits += other.ul_bits;
+        self.dl_bits += other.dl_bits;
+        self.clients += other.clients;
+        self.est_bpp_sum += other.est_bpp_sum;
+    }
+
+    /// Mean estimated uplink Bpp via eq. 13 (mean over clients).
+    pub fn est_bpp(&self) -> f64 {
+        if self.clients == 0 {
+            0.0
+        } else {
+            self.est_bpp_sum / self.clients as f64
+        }
     }
 
     /// Measured mean uplink bits per parameter per client.
@@ -109,7 +136,7 @@ mod tests {
         }
         assert_eq!(rc.clients, 5);
         // p=0.5 masks: measured ~1 Bpp, est ~1.0
-        assert!((rc.est_bpp - 1.0).abs() < 0.01, "est={}", rc.est_bpp);
+        assert!((rc.est_bpp() - 1.0).abs() < 0.01, "est={}", rc.est_bpp());
         assert!((rc.measured_bpp() - 1.0).abs() < 0.05, "meas={}", rc.measured_bpp());
     }
 
@@ -120,7 +147,7 @@ mod tests {
         let m = mask(n, 0.02, 1);
         rc.add_mask_uplink(&m, &compress::encode(&m));
         assert!(rc.measured_bpp() < 0.25);
-        assert!(rc.est_bpp < 0.25);
+        assert!(rc.est_bpp() < 0.25);
     }
 
     #[test]
@@ -129,7 +156,38 @@ mod tests {
         rc.add_dense_uplink();
         assert_eq!(rc.ul_bits, 32_000);
         assert_eq!(rc.measured_bpp(), 32.0);
-        assert_eq!(rc.est_bpp, 32.0);
+        assert_eq!(rc.est_bpp(), 32.0);
+    }
+
+    #[test]
+    fn merge_matches_interleaved_accounting() {
+        let n = 8_000;
+        let masks: Vec<BitVec> = (0..6).map(|i| mask(n, 0.3, i)).collect();
+        // one accumulator, clients recorded in order
+        let mut whole = RoundComm::new(n);
+        for m in &masks {
+            whole.add_float_downlink();
+            whole.add_mask_uplink(m, &compress::encode(m));
+        }
+        // per-client accumulators merged in a scrambled order
+        let mut parts: Vec<RoundComm> = masks
+            .iter()
+            .map(|m| {
+                let mut rc = RoundComm::new(n);
+                rc.add_float_downlink();
+                rc.add_mask_uplink(m, &compress::encode(m));
+                rc
+            })
+            .collect();
+        parts.reverse();
+        let mut merged = RoundComm::new(n);
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.ul_bits, whole.ul_bits);
+        assert_eq!(merged.dl_bits, whole.dl_bits);
+        assert_eq!(merged.clients, whole.clients);
+        assert!((merged.est_bpp() - whole.est_bpp()).abs() < 1e-12);
     }
 
     #[test]
@@ -150,6 +208,6 @@ mod tests {
     fn empty_round_is_zero() {
         let rc = RoundComm::new(100);
         assert_eq!(rc.measured_bpp(), 0.0);
-        assert_eq!(rc.est_bpp, 0.0);
+        assert_eq!(rc.est_bpp(), 0.0);
     }
 }

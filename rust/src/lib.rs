@@ -7,14 +7,21 @@
 //!
 //! Three-layer architecture (see DESIGN.md):
 //! * **L3 (this crate)** — the coordinator: parameter server, simulated
-//!   device fleet, mask aggregation, entropy coding, metrics.
+//!   device fleet, parallel round engine, mask aggregation, entropy
+//!   coding, metrics.
 //! * **L2 (python/compile/model.py)** — JAX score-network programs,
 //!   AOT-lowered to HLO text at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas masked-matmul kernels
 //!   fused into the L2 programs.
 //!
-//! Python never runs at experiment time: the [`runtime`] module loads the
-//! AOT artifacts through PJRT and the whole federation runs natively.
+//! Python never runs at experiment time: the [`runtime`] module either
+//! executes the AOT artifacts through PJRT (`--features pjrt`) or runs
+//! the built-in pure-Rust re-implementation of the same programs
+//! (DESIGN.md §Substitutions), and the whole federation runs natively.
+//! The round loop is executed by the parallel round engine
+//! ([`coordinator::RoundEngine`]): client work is sharded across worker
+//! threads with results bit-identical to the sequential path at any
+//! thread count (DESIGN.md §Parallel round engine).
 
 pub mod algos;
 pub mod cli;

@@ -42,7 +42,10 @@ USAGE:
 Config keys for --set (see rust/src/config/mod.rs): model dataset
 algorithm partition clients rounds local_epochs lambda lr topk_frac
 server_lr train_samples test_samples eval_every optimizer adam
-participation dropout bayes_prior seed artifacts_dir out
+participation dropout bayes_prior threads seed artifacts_dir out
+
+threads controls the parallel round engine (0 = all cores, 1 =
+sequential); results are bit-identical at any thread count.
 ";
 
 fn main() -> ExitCode {

@@ -13,6 +13,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::mask::layers::{parse_layout, LayerSlice};
+use crate::util::SeedSequence;
 
 /// Parsed `<model>.meta` manifest.
 #[derive(Debug, Clone)]
@@ -35,6 +36,9 @@ pub struct Manifest {
     pub local_train_file: PathBuf,
     pub eval_file: PathBuf,
     pub dense_grad_file: Option<PathBuf>,
+    /// True for manifests synthesized from the built-in registry (no
+    /// on-disk artifacts; weights are generated from `weight_seed`).
+    pub builtin: bool,
 }
 
 impl Manifest {
@@ -83,14 +87,69 @@ impl Manifest {
             } else {
                 None
             },
+            builtin: false,
         };
         ensure!(man.model == model, "manifest model name mismatch");
         ensure!(man.n_params > 0 && man.input_dim > 0, "degenerate manifest");
         Ok(man)
     }
 
-    /// Load the frozen weight vector (flat f32 little-endian).
+    /// Synthesize a manifest for one of the built-in MLP models — the
+    /// same registry as `python/compile/model.py`'s MLP family, so a
+    /// checkout with no exported artifacts still runs every experiment
+    /// natively (DESIGN.md §Substitutions).
+    pub fn builtin(model: &str) -> Option<Self> {
+        let dims: &[usize] = match model {
+            "mlp_tiny" => &[64, 64, 10],
+            "mlp_mnist" => &[784, 256, 256, 10],
+            "mlp_cifar10" => &[3072, 256, 256, 10],
+            "mlp_cifar100" => &[3072, 512, 256, 100],
+            _ => return None,
+        };
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        let mut offset = 0usize;
+        for (index, pair) in dims.windows(2).enumerate() {
+            let (rows, cols) = (pair[0], pair[1]);
+            layers.push(LayerSlice { index, rows, cols, offset });
+            offset += rows * cols;
+        }
+        Some(Self {
+            model: model.to_string(),
+            n_params: offset,
+            input_dim: dims[0],
+            n_classes: *dims.last().unwrap(),
+            batch: 32,
+            steps: 6,
+            eval_chunk: 512,
+            weight_seed: 2023,
+            has_dense_grad: true,
+            layers,
+            weights_file: PathBuf::new(),
+            local_train_file: PathBuf::new(),
+            eval_file: PathBuf::new(),
+            dense_grad_file: None,
+            builtin: true,
+        })
+    }
+
+    /// Load the frozen weight vector. Built-in manifests synthesize the
+    /// signed-constant distribution U{-sc, +sc} with sc = sqrt(2/fan_in)
+    /// (paper sec. IV) deterministically from `weight_seed`; artifact
+    /// manifests read the exporter's flat f32 little-endian blob.
     pub fn load_weights(&self) -> Result<Vec<f32>> {
+        if self.builtin {
+            let root = SeedSequence::new(self.weight_seed);
+            let mut w = vec![0.0f32; self.n_params];
+            for l in &self.layers {
+                let sc = (2.0 / l.rows as f64).sqrt() as f32;
+                let mut u = vec![0.0f32; l.len()];
+                root.child(l.index as u64).philox().fill_uniform(0, &mut u);
+                for (j, &uv) in u.iter().enumerate() {
+                    w[l.offset + j] = if uv < 0.5 { -sc } else { sc };
+                }
+            }
+            return Ok(w);
+        }
         let bytes = fs::read(&self.weights_file)
             .with_context(|| format!("reading weights {:?}", self.weights_file))?;
         ensure!(
@@ -132,12 +191,21 @@ mod tests {
     use super::*;
 
     fn artifacts_dir() -> PathBuf {
-        // Tests run from the crate root; `make artifacts` must have run.
+        // Tests run from the crate root; exported artifacts are optional
+        // (the built-in native registry covers the no-artifacts case).
         PathBuf::from("artifacts")
+    }
+
+    fn artifacts_present() -> bool {
+        artifacts_dir().join("mlp_tiny.meta").exists()
     }
 
     #[test]
     fn loads_real_manifest() {
+        if !artifacts_present() {
+            eprintln!("skipping: artifacts not exported (run `make artifacts`)");
+            return;
+        }
         let man = Manifest::load(&artifacts_dir(), "mlp_tiny").unwrap();
         assert_eq!(man.n_params, 4736);
         assert_eq!(man.input_dim, 64);
@@ -145,11 +213,16 @@ mod tests {
         assert!(man.local_train_file.exists());
         assert!(man.eval_file.exists());
         assert!(man.has_dense_grad);
+        assert!(!man.builtin);
         assert_eq!(man.rows_per_call(), man.batch * man.steps);
     }
 
     #[test]
     fn weights_match_manifest_count() {
+        if !artifacts_present() {
+            eprintln!("skipping: artifacts not exported (run `make artifacts`)");
+            return;
+        }
         let man = Manifest::load(&artifacts_dir(), "mlp_tiny").unwrap();
         let w = man.load_weights().unwrap();
         assert_eq!(w.len(), man.n_params);
@@ -160,11 +233,42 @@ mod tests {
     #[test]
     fn missing_model_errors() {
         assert!(Manifest::load(&artifacts_dir(), "no_such_model").is_err());
+        assert!(Manifest::builtin("no_such_model").is_none());
     }
 
     #[test]
     fn lists_available_models() {
+        if !artifacts_present() {
+            eprintln!("skipping: artifacts not exported (run `make artifacts`)");
+            return;
+        }
         let models = available_models(&artifacts_dir());
         assert!(models.contains(&"mlp_tiny".to_string()));
+    }
+
+    #[test]
+    fn builtin_manifest_matches_exported_geometry() {
+        let man = Manifest::builtin("mlp_tiny").unwrap();
+        assert!(man.builtin);
+        assert_eq!(man.n_params, 4736); // 64*64 + 64*10
+        assert_eq!(man.input_dim, 64);
+        assert_eq!(man.n_classes, 10);
+        assert_eq!(man.layers.len(), 2);
+        assert_eq!(man.layers[1].offset, 64 * 64);
+        let mnist = Manifest::builtin("mlp_mnist").unwrap();
+        assert_eq!(mnist.n_params, 784 * 256 + 256 * 256 + 256 * 10);
+    }
+
+    #[test]
+    fn builtin_weights_are_signed_constant_and_deterministic() {
+        let man = Manifest::builtin("mlp_tiny").unwrap();
+        let w = man.load_weights().unwrap();
+        assert_eq!(w.len(), man.n_params);
+        let sc0 = (2.0f64 / 64.0).sqrt() as f32;
+        assert!(w[..64 * 64].iter().all(|&v| v == sc0 || v == -sc0));
+        // both signs occur, roughly balanced
+        let pos = w.iter().filter(|&&v| v > 0.0).count();
+        assert!(pos > man.n_params / 3 && pos < 2 * man.n_params / 3);
+        assert_eq!(w, man.load_weights().unwrap(), "weights must replay");
     }
 }

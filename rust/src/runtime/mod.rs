@@ -1,29 +1,39 @@
-//! PJRT runtime: load AOT artifacts, compile once, execute many.
+//! Model runtime: one facade, two execution backends.
 //!
-//! Wraps the `xla` crate (PJRT C API) exactly the way the production hot
-//! path needs it:
-//!   HLO text --parse--> HloModuleProto --compile--> PjRtLoadedExecutable
-//! with the frozen weight vector staged on-device once per model and
-//! reused across every client call of every round (weights never change
-//! in the strong-LTH setting — re-uploading them per call would dominate
-//! the round loop).
+//! The coordinator always talks to [`ModelRuntime`]; which engine
+//! actually runs the three L2 programs (local_train / eval / dense_grad)
+//! is an implementation detail resolved at load time:
 //!
-//! HLO *text* is the interchange format: jax >= 0.5 emits protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! * **native** (default) — the pure-Rust re-implementation in
+//!   [`native`]: no Python, no XLA, no artifacts required. MLP models
+//!   are built in; exported artifact manifests with a `layers=` layout
+//!   also run natively. See DESIGN.md §Substitutions.
+//! * **pjrt** (`--features pjrt`) — the AOT path: HLO text emitted by
+//!   `python/compile/aot.py`, compiled through the PJRT C API, with the
+//!   frozen weight vector staged on-device once per model. Python never
+//!   runs at experiment time.
+//!
+//! All methods take `&self` and the facade is `Sync`: the parallel round
+//! engine (DESIGN.md §Parallel round engine) shares one runtime across
+//! its worker threads. Wall-clock per program is accumulated into
+//! `timers` for the perf pass (`FEDSRN_TIMERS=1`).
 
 pub mod artifacts;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifacts::{available_models, Manifest};
 
-use std::cell::RefCell;
 use std::path::Path;
+use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{anyhow, ensure, Result};
-use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use anyhow::{ensure, Result};
 
 use crate::util::Timers;
+
+use native::NativeBackend;
 
 /// Metrics returned by one local_train call (see model.make_local_train).
 #[derive(Debug, Clone, Copy)]
@@ -64,63 +74,74 @@ impl EvalMetrics {
     }
 }
 
-/// A loaded model: compiled executables + device-resident weights.
-pub struct ModelRuntime {
-    pub manifest: Manifest,
-    client: PjRtClient,
-    local_train: PjRtLoadedExecutable,
-    eval: PjRtLoadedExecutable,
-    dense_grad: Option<PjRtLoadedExecutable>,
-    /// Host copy (used by baselines that mutate weights, e.g. SignSGD).
-    weights_host: Vec<f32>,
-    /// Device copy reused across all masked-path calls.
-    weights_dev: PjRtBuffer,
-    /// Per-program wall-clock accounting for the perf pass.
-    pub timers: RefCell<Timers>,
+enum Backend {
+    Native(NativeBackend),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
 }
 
-fn compile_hlo(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
-    let proto = HloModuleProto::from_text_file(path)
-        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
-    let comp = XlaComputation::from_proto(&proto);
-    client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e}"))
+/// A loaded model: manifest + executing backend + host weights.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    backend: Backend,
+    /// Host copy (used by baselines that mutate weights, e.g. SignSGD).
+    weights_host: Vec<f32>,
+    /// Per-program wall-clock accounting for the perf pass. Behind a
+    /// mutex so the runtime stays `Sync` for the parallel round engine.
+    pub timers: Mutex<Timers>,
 }
 
 impl ModelRuntime {
-    /// Load `<model>` from `<dir>` on a fresh CPU PJRT client.
+    /// Load `<model>` from `<dir>`; falls back to the built-in native
+    /// model registry when no artifact manifest exists on disk. A
+    /// manifest that exists but fails to parse is a hard error — never
+    /// silently substituted, since the built-in model has different
+    /// weights and hyperparameters than whatever the user exported.
     pub fn load(dir: &Path, model: &str) -> Result<Self> {
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
-        Self::load_with_client(client, dir, model)
-    }
-
-    /// Load on an existing client (sharing one client across models keeps
-    /// a single thread pool).
-    pub fn load_with_client(client: PjRtClient, dir: &Path, model: &str) -> Result<Self> {
-        let manifest = Manifest::load(dir, model)?;
-        let local_train = compile_hlo(&client, &manifest.local_train_file)?;
-        let eval = compile_hlo(&client, &manifest.eval_file)?;
-        let dense_grad = match &manifest.dense_grad_file {
-            Some(p) => Some(compile_hlo(&client, p)?),
-            None => None,
+        let meta_present = dir.join(format!("{model}.meta")).exists();
+        let manifest = if meta_present {
+            Manifest::load(dir, model)?
+        } else if let Some(m) = Manifest::builtin(model) {
+            eprintln!(
+                "artifacts for '{model}' not found in {dir:?}; \
+                 using the built-in native model"
+            );
+            m
+        } else {
+            // produce the standard "missing manifest" error
+            Manifest::load(dir, model)?
         };
-        let weights_host = manifest.load_weights()?;
-        let weights_dev = client
-            .buffer_from_host_buffer(&weights_host, &[weights_host.len()], None)
-            .map_err(|e| anyhow!("staging weights: {e}"))?;
-        Ok(Self {
-            manifest,
-            client,
-            local_train,
-            eval,
-            dense_grad,
-            weights_host,
-            weights_dev,
-            timers: RefCell::new(Timers::new()),
-        })
+        Self::from_manifest(manifest)
     }
 
-    pub fn client(&self) -> &PjRtClient {
-        &self.client
+    /// Build a runtime from an already-resolved manifest.
+    pub fn from_manifest(manifest: Manifest) -> Result<Self> {
+        let weights_host = manifest.load_weights()?;
+        let backend = Self::build_backend(&manifest, &weights_host)?;
+        Ok(Self { manifest, backend, weights_host, timers: Mutex::new(Timers::new()) })
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn build_backend(man: &Manifest, weights: &[f32]) -> Result<Backend> {
+        if man.builtin {
+            Ok(Backend::Native(NativeBackend::from_manifest(man)?))
+        } else {
+            Ok(Backend::Pjrt(pjrt::PjrtBackend::load(man, weights)?))
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn build_backend(man: &Manifest, _weights: &[f32]) -> Result<Backend> {
+        Ok(Backend::Native(NativeBackend::from_manifest(man)?))
+    }
+
+    /// Which backend executes this model (telemetry / logging).
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Native(_) => "native",
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => "pjrt",
+        }
     }
 
     pub fn weights(&self) -> &[f32] {
@@ -128,33 +149,22 @@ impl ModelRuntime {
     }
 
     pub fn has_dense_grad(&self) -> bool {
-        self.dense_grad.is_some()
+        match &self.backend {
+            Backend::Native(_) => true,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.has_dense_grad(),
+        }
     }
 
-    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("host->device f32 transfer: {e}"))
-    }
-
-    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("host->device i32 transfer: {e}"))
-    }
-
-    fn scalar_f32(&self, v: f32) -> Result<PjRtBuffer> {
-        self.buf_f32(&[v], &[])
-    }
-
-    fn scalar_i32(&self, v: i32) -> Result<PjRtBuffer> {
-        self.buf_i32(&[v], &[])
+    fn time(&self, label: &str, t0: Instant) {
+        self.timers.lock().unwrap().add(label, t0.elapsed());
     }
 
     /// One client local phase: `steps` minibatches of STE-SGD.
     ///
     /// `xs` is (steps*batch*input_dim) row-major, `ys` (steps*batch).
     /// Returns the updated score vector and the call metrics.
+    #[allow(clippy::too_many_arguments)]
     pub fn local_train(
         &self,
         scores: &[f32],
@@ -176,93 +186,42 @@ impl ModelRuntime {
         ensure!(ys.len() == m.steps * m.batch, "ys must be steps*batch");
 
         let t0 = Instant::now();
-        let scores_b = self.buf_f32(scores, &[m.n_params])?;
-        let xs_b = self.buf_f32(xs, &[m.steps, m.batch, m.input_dim])?;
-        let ys_b = self.buf_i32(ys, &[m.steps, m.batch])?;
-        let seed_b = self.scalar_i32(seed)?;
-        let lam_b = self.scalar_f32(lambda)?;
-        let lr_b = self.scalar_f32(lr)?;
-        let det_b = self.scalar_f32(if deterministic { 1.0 } else { 0.0 })?;
-        let opt_b = self.scalar_f32(if adam { 1.0 } else { 0.0 })?;
-        // weights stay device-resident for the whole run: pass by ref.
-        let args: [&PjRtBuffer; 9] = [
-            &scores_b,
-            &self.weights_dev,
-            &xs_b,
-            &ys_b,
-            &seed_b,
-            &lam_b,
-            &lr_b,
-            &det_b,
-            &opt_b,
-        ];
-        self.timers.borrow_mut().add("local_train.h2d", t0.elapsed());
-
-        let t1 = Instant::now();
-        let result = self
-            .local_train
-            .execute_b(&args)
-            .map_err(|e| anyhow!("local_train execute: {e}"))?;
-        self.timers.borrow_mut().add("local_train.execute", t1.elapsed());
-
-        let t2 = Instant::now();
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("local_train d2h: {e}"))?;
-        let (s_out, metrics) =
-            tuple.to_tuple2().map_err(|e| anyhow!("local_train tuple: {e}"))?;
-        let new_scores = s_out.to_vec::<f32>().map_err(|e| anyhow!("scores d2h: {e}"))?;
-        let met = metrics.to_vec::<f32>().map_err(|e| anyhow!("metrics d2h: {e}"))?;
-        self.timers.borrow_mut().add("local_train.d2h", t2.elapsed());
-        ensure!(met.len() == 4, "expected 4 metrics");
-        Ok((
-            new_scores,
-            TrainMetrics {
-                mean_loss: met[0],
-                correct: met[1],
-                sum_sigma: met[2],
-                active: met[3],
-            },
-        ))
+        let out = match &self.backend {
+            Backend::Native(b) => b.local_train(
+                m,
+                &self.weights_host,
+                scores,
+                xs,
+                ys,
+                seed,
+                lambda,
+                lr,
+                deterministic,
+                adam,
+            ),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => {
+                b.local_train(m, scores, xs, ys, seed, lambda, lr, deterministic, adam)
+            }
+        };
+        self.time("local_train", t0);
+        out
     }
 
     /// Evaluate a binary mask (as f32 0/1) over an arbitrary-size test
-    /// set, chunking to the exported eval_chunk and padding the tail with
-    /// y = -1 rows (ignored by the program).
+    /// set against the frozen weights.
     pub fn eval_mask(&self, mask_f32: &[f32], x: &[f32], y: &[i32]) -> Result<EvalMetrics> {
         let m = &self.manifest;
         ensure!(mask_f32.len() == m.n_params, "mask length mismatch");
         ensure!(x.len() == y.len() * m.input_dim, "x/y size mismatch");
-        let t = m.eval_chunk;
-        let mut out = EvalMetrics { examples: y.len(), ..Default::default() };
-
-        let mut xc = vec![0.0f32; t * m.input_dim];
-        let mut yc = vec![-1i32; t];
-        let mut start = 0;
-        while start < y.len() {
-            let take = (y.len() - start).min(t);
-            xc[..take * m.input_dim]
-                .copy_from_slice(&x[start * m.input_dim..(start + take) * m.input_dim]);
-            xc[take * m.input_dim..].iter_mut().for_each(|v| *v = 0.0);
-            yc[..take].copy_from_slice(&y[start..start + take]);
-            yc[take..].iter_mut().for_each(|v| *v = -1);
-
-            let t1 = Instant::now();
-            let mask_b = self.buf_f32(mask_f32, &[m.n_params])?;
-            let x_b = self.buf_f32(&xc, &[t, m.input_dim])?;
-            let y_b = self.buf_i32(&yc, &[t])?;
-            let args: [&PjRtBuffer; 4] = [&mask_b, &self.weights_dev, &x_b, &y_b];
-            let result = self.eval.execute_b(&args).map_err(|e| anyhow!("eval execute: {e}"))?;
-            let lit =
-                result[0][0].to_literal_sync().map_err(|e| anyhow!("eval d2h: {e}"))?;
-            let inner = lit.to_tuple1().map_err(|e| anyhow!("eval tuple: {e}"))?;
-            let v = inner.to_vec::<f32>().map_err(|e| anyhow!("eval vec: {e}"))?;
-            self.timers.borrow_mut().add("eval.chunk", t1.elapsed());
-            out.correct += v[0] as f64;
-            out.loss_sum += v[1] as f64;
-            start += take;
-        }
-        Ok(out)
+        let t0 = Instant::now();
+        let out = match &self.backend {
+            Backend::Native(b) => b.eval_mask(mask_f32, &self.weights_host, x, y),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.eval_padded(m, mask_f32, None, x, y),
+        };
+        self.time("eval", t0);
+        out
     }
 
     /// Evaluate with explicit weights (dense baselines: pass the trained
@@ -278,39 +237,19 @@ impl ModelRuntime {
         ensure!(weights.len() == m.n_params, "weights length mismatch");
         ensure!(mask_f32.len() == m.n_params, "mask length mismatch");
         ensure!(x.len() == y.len() * m.input_dim, "x/y size mismatch");
-        let t = m.eval_chunk;
-        let mut out = EvalMetrics { examples: y.len(), ..Default::default() };
-        let mut xc = vec![0.0f32; t * m.input_dim];
-        let mut yc = vec![-1i32; t];
-        let mut start = 0;
-        while start < y.len() {
-            let take = (y.len() - start).min(t);
-            xc[..take * m.input_dim]
-                .copy_from_slice(&x[start * m.input_dim..(start + take) * m.input_dim]);
-            xc[take * m.input_dim..].iter_mut().for_each(|v| *v = 0.0);
-            yc[..take].copy_from_slice(&y[start..start + take]);
-            yc[take..].iter_mut().for_each(|v| *v = -1);
-            let args = [
-                self.buf_f32(mask_f32, &[m.n_params])?,
-                self.buf_f32(weights, &[m.n_params])?,
-                self.buf_f32(&xc, &[t, m.input_dim])?,
-                self.buf_i32(&yc, &[t])?,
-            ];
-            let result = self.eval.execute_b(&args).map_err(|e| anyhow!("eval execute: {e}"))?;
-            let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("eval d2h: {e}"))?;
-            let inner = lit.to_tuple1().map_err(|e| anyhow!("eval tuple: {e}"))?;
-            let v = inner.to_vec::<f32>().map_err(|e| anyhow!("eval vec: {e}"))?;
-            out.correct += v[0] as f64;
-            out.loss_sum += v[1] as f64;
-            start += take;
-        }
-        Ok(out)
+        let t0 = Instant::now();
+        let out = match &self.backend {
+            Backend::Native(b) => b.eval_mask(mask_f32, weights, x, y),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.eval_padded(m, mask_f32, Some(weights), x, y),
+        };
+        self.time("eval", t0);
+        out
     }
 
     /// Dense forward/backward for the SignSGD / FedAvg baselines.
     ///
-    /// `x` is (rows*input_dim) with rows <= exported batch; the tail is
-    /// padded internally with ignored y = -1 rows. Returns
+    /// `x` is (rows*input_dim) with rows <= exported batch. Returns
     /// (grads, mean_loss, correct).
     pub fn dense_grad(
         &self,
@@ -319,33 +258,23 @@ impl ModelRuntime {
         y: &[i32],
     ) -> Result<(Vec<f32>, f32, f32)> {
         let m = &self.manifest;
-        let exe = self
-            .dense_grad
-            .as_ref()
-            .ok_or_else(|| anyhow!("model {} exported without dense_grad", m.model))?;
         ensure!(weights.len() == m.n_params, "weights length mismatch");
         ensure!(y.len() <= m.batch, "at most {} rows per dense_grad call", m.batch);
         ensure!(x.len() == y.len() * m.input_dim, "x/y size mismatch");
-
-        let mut xb = vec![0.0f32; m.batch * m.input_dim];
-        xb[..x.len()].copy_from_slice(x);
-        let mut yb = vec![-1i32; m.batch];
-        yb[..y.len()].copy_from_slice(y);
-
-        let t1 = Instant::now();
-        let args = [
-            self.buf_f32(weights, &[m.n_params])?,
-            self.buf_f32(&xb, &[m.batch, m.input_dim])?,
-            self.buf_i32(&yb, &[m.batch])?,
-        ];
-        let result = exe.execute_b(&args).map_err(|e| anyhow!("dense_grad execute: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("dense_grad d2h: {e}"))?;
-        let (g, met) = lit.to_tuple2().map_err(|e| anyhow!("dense_grad tuple: {e}"))?;
-        let grads = g.to_vec::<f32>().map_err(|e| anyhow!("grads d2h: {e}"))?;
-        let metv = met.to_vec::<f32>().map_err(|e| anyhow!("met d2h: {e}"))?;
-        self.timers.borrow_mut().add("dense_grad", t1.elapsed());
-        Ok((grads, metv[0], metv[1]))
+        let t0 = Instant::now();
+        let out = match &self.backend {
+            Backend::Native(b) => b.dense_grad(weights, x, y),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => {
+                // the exported program takes a fixed batch: pad with y=-1
+                let mut xb = vec![0.0f32; m.batch * m.input_dim];
+                xb[..x.len()].copy_from_slice(x);
+                let mut yb = vec![-1i32; m.batch];
+                yb[..y.len()].copy_from_slice(y);
+                b.dense_grad(m, weights, &xb, &yb)
+            }
+        };
+        self.time("dense_grad", t0);
+        out
     }
 }

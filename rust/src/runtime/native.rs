@@ -1,0 +1,368 @@
+//! Native backend: the L2 programs re-implemented in pure Rust.
+//!
+//! Mirrors `python/compile/model.py` for the MLP model family — masked
+//! STE local training (paper eq. 5-7 + eq. 12), masked evaluation and
+//! the dense forward/backward used by the baselines — with no Python,
+//! XLA or artifact dependency. This is the default execution backend
+//! (DESIGN.md §Substitutions): the AOT/PJRT path compiles the exact same
+//! math from the JAX source when the `pjrt` feature is enabled, and the
+//! conv models only exist there.
+//!
+//! Semantics held in common with the Pallas kernels (see
+//! `python/compile/kernels/ref.py`):
+//!     theta = sigmoid(s)            per-parameter keep probability
+//!     m     = 1[u < theta]          sampled mask, u ~ U[0,1)
+//!     y     = x @ (m * w)           masked affine transform
+//!     ds    = (x^T g) * w * sigmoid'(s)      (straight-through)
+//!
+//! Everything is `&self`: the backend is freely shared across the worker
+//! threads of the parallel round engine (DESIGN.md §Parallel round
+//! engine). Per-step Bernoulli draws come from counter-based Philox
+//! streams keyed by a [`SeedSequence`] path, so results depend only on
+//! the call's seed — never on thread count or call order.
+
+use anyhow::{ensure, Result};
+
+use crate::mask::layers::LayerSlice;
+use crate::util::{sigmoid, SeedSequence};
+
+use super::artifacts::Manifest;
+use super::{EvalMetrics, TrainMetrics};
+
+/// One dense layer's slice of the flat parameter vector.
+#[derive(Debug, Clone, Copy)]
+struct Layer {
+    /// Input width K.
+    k: usize,
+    /// Output width N.
+    n: usize,
+    /// Offset into the flat vector (row-major K x N).
+    offset: usize,
+}
+
+/// Pure-Rust MLP executor over the manifest's flat parameter layout.
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    layers: Vec<Layer>,
+    n_params: usize,
+    input_dim: usize,
+    n_classes: usize,
+}
+
+impl NativeBackend {
+    /// Build from a manifest's `layers=` layout (artifact or built-in).
+    pub fn from_manifest(man: &Manifest) -> Result<Self> {
+        ensure!(
+            !man.layers.is_empty(),
+            "model '{}' has no layer layout in its manifest; the native \
+             backend needs one (re-export artifacts, or build with \
+             --features pjrt to run the compiled HLO instead)",
+            man.model
+        );
+        let layers: Vec<Layer> = man
+            .layers
+            .iter()
+            .map(|l: &LayerSlice| Layer { k: l.rows, n: l.cols, offset: l.offset })
+            .collect();
+        ensure!(layers[0].k == man.input_dim, "first layer width != input_dim");
+        for w in layers.windows(2) {
+            ensure!(w[0].n == w[1].k, "layer widths must chain (MLP layout)");
+        }
+        let last = layers.last().unwrap();
+        ensure!(last.n == man.n_classes, "last layer width != n_classes");
+        let total: usize = layers.iter().map(|l| l.k * l.n).sum();
+        ensure!(total == man.n_params, "layer layout does not cover n_params");
+        Ok(Self {
+            layers,
+            n_params: man.n_params,
+            input_dim: man.input_dim,
+            n_classes: man.n_classes,
+        })
+    }
+
+    /// Forward through effective weights `w_eff` for `rows` inputs.
+    /// Returns one output per layer (`outs[L-1]` is the logits); hidden
+    /// outputs carry ReLU already applied. The input is read in place —
+    /// never copied — so eval over large test sets costs no extra
+    /// input-sized allocation.
+    fn forward(&self, w_eff: &[f32], x: &[f32], rows: usize) -> Vec<Vec<f32>> {
+        let n_layers = self.layers.len();
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let a: &[f32] = if li == 0 { x } else { &outs[li - 1] };
+            let mut z = vec![0.0f32; rows * layer.n];
+            for b in 0..rows {
+                let arow = &a[b * layer.k..(b + 1) * layer.k];
+                let zrow = &mut z[b * layer.n..(b + 1) * layer.n];
+                for (k, &av) in arow.iter().enumerate() {
+                    if av != 0.0 {
+                        let wrow = &w_eff[layer.offset + k * layer.n..][..layer.n];
+                        for (zv, &wv) in zrow.iter_mut().zip(wrow) {
+                            *zv += av * wv;
+                        }
+                    }
+                }
+            }
+            if li + 1 < n_layers {
+                z.iter_mut().for_each(|v| *v = v.max(0.0));
+            }
+            outs.push(z);
+        }
+        outs
+    }
+
+    /// Per-row stable log-softmax CE + correctness on `logits`.
+    /// Rows with y < 0 are padding and contribute nothing.
+    /// Returns (loss_sum, correct, valid_rows).
+    fn ce_stats(&self, logits: &[f32], y: &[i32]) -> (f64, f64, usize) {
+        let c = self.n_classes;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut valid = 0usize;
+        for (b, &yb) in y.iter().enumerate() {
+            if yb < 0 {
+                continue;
+            }
+            valid += 1;
+            let row = &logits[b * c..(b + 1) * c];
+            let (mut amax, mut imax) = (f32::NEG_INFINITY, 0);
+            for (i, &v) in row.iter().enumerate() {
+                if v > amax {
+                    amax = v;
+                    imax = i;
+                }
+            }
+            let lse =
+                amax + row.iter().map(|&v| (v - amax).exp()).sum::<f32>().ln();
+            loss_sum += (lse - row[yb as usize]) as f64;
+            if imax == yb as usize {
+                correct += 1.0;
+            }
+        }
+        (loss_sum, correct, valid)
+    }
+
+    /// dL/dlogits for mean-CE over the valid rows: (softmax - onehot) / denom.
+    fn logit_grad(&self, logits: &[f32], y: &[i32], denom: f32) -> Vec<f32> {
+        let c = self.n_classes;
+        let mut g = vec![0.0f32; logits.len()];
+        for (b, &yb) in y.iter().enumerate() {
+            if yb < 0 {
+                continue;
+            }
+            let row = &logits[b * c..(b + 1) * c];
+            let grow = &mut g[b * c..(b + 1) * c];
+            let amax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for (gv, &v) in grow.iter_mut().zip(row) {
+                *gv = (v - amax).exp();
+                sum += *gv;
+            }
+            let inv = 1.0 / (sum * denom);
+            for gv in grow.iter_mut() {
+                *gv *= inv;
+            }
+            grow[yb as usize] -= 1.0 / denom;
+        }
+        g
+    }
+
+    /// Backprop `g_logits` through a forward pass's layer outputs,
+    /// producing the gradient w.r.t. the (effective) flat weight vector.
+    /// `x` is the original input (layer 0's activations).
+    fn backward_weights(
+        &self,
+        x: &[f32],
+        outs: &[Vec<f32>],
+        w_eff: &[f32],
+        g_logits: Vec<f32>,
+        rows: usize,
+    ) -> Vec<f32> {
+        let mut dw = vec![0.0f32; self.n_params];
+        let mut g = g_logits;
+        for li in (0..self.layers.len()).rev() {
+            let layer = self.layers[li];
+            let a: &[f32] = if li == 0 { x } else { &outs[li - 1] };
+            // dW = a^T g
+            for b in 0..rows {
+                let arow = &a[b * layer.k..(b + 1) * layer.k];
+                let grow = &g[b * layer.n..(b + 1) * layer.n];
+                for (k, &av) in arow.iter().enumerate() {
+                    if av != 0.0 {
+                        let drow = &mut dw[layer.offset + k * layer.n..][..layer.n];
+                        for (dv, &gv) in drow.iter_mut().zip(grow) {
+                            *dv += av * gv;
+                        }
+                    }
+                }
+            }
+            if li == 0 {
+                break;
+            }
+            // g_prev = (g @ W^T) ⊙ relu'(z_{l-1});  relu' == (a > 0)
+            let mut gprev = vec![0.0f32; rows * layer.k];
+            for b in 0..rows {
+                let arow = &a[b * layer.k..(b + 1) * layer.k];
+                let grow = &g[b * layer.n..(b + 1) * layer.n];
+                let prow = &mut gprev[b * layer.k..(b + 1) * layer.k];
+                for (k, pv) in prow.iter_mut().enumerate() {
+                    if arow[k] > 0.0 {
+                        let wrow = &w_eff[layer.offset + k * layer.n..][..layer.n];
+                        let mut s = 0.0f32;
+                        for (&gv, &wv) in grow.iter().zip(wrow) {
+                            s += gv * wv;
+                        }
+                        *pv = s;
+                    }
+                }
+            }
+            g = gprev;
+        }
+        dw
+    }
+
+    /// One client local phase: `steps` minibatches of STE training on
+    /// the score vector (mirrors `model.make_local_train`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_train(
+        &self,
+        man: &Manifest,
+        weights: &[f32],
+        scores: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        seed: i32,
+        lambda: f32,
+        lr: f32,
+        deterministic: bool,
+        adam: bool,
+    ) -> Result<(Vec<f32>, TrainMetrics)> {
+        let n = self.n_params;
+        let (batch, steps) = (man.batch, man.steps);
+        let root = SeedSequence::new(seed as u32 as u64);
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+
+        let mut s = scores.to_vec();
+        let mut m1 = vec![0.0f32; n];
+        let mut v2 = vec![0.0f32; n];
+        let mut u = vec![0.5f32; n];
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f32;
+
+        for h in 0..steps {
+            if !deterministic {
+                root.child(h as u64).philox().fill_uniform(0, &mut u);
+            }
+            // m = 1[u < sigmoid(s)], w_eff = m * w
+            let mut w_eff = vec![0.0f32; n];
+            let mut sum_sigma_step = 0.0f64;
+            for j in 0..n {
+                let th = sigmoid(s[j]);
+                sum_sigma_step += th as f64;
+                if u[j] < th {
+                    w_eff[j] = weights[j];
+                }
+            }
+            let x = &xs[h * batch * self.input_dim..(h + 1) * batch * self.input_dim];
+            let y = &ys[h * batch..(h + 1) * batch];
+            let acts = self.forward(&w_eff, x, batch);
+            let logits = acts.last().unwrap();
+            let (ce_sum, corr, valid) = self.ce_stats(logits, y);
+            let denom = valid.max(1) as f32;
+            loss_sum += ce_sum / denom as f64
+                + (lambda as f64) * sum_sigma_step / n as f64;
+            correct += corr as f32;
+            let g_logits = self.logit_grad(logits, y, denom);
+            let dw = self.backward_weights(x, &acts, &w_eff, g_logits, batch);
+            // STE to scores + regularizer gradient, then Adam/SGD step.
+            let t = (h + 1) as f32;
+            let bc1 = 1.0 - b1.powf(t);
+            let bc2 = 1.0 - b2.powf(t);
+            for j in 0..n {
+                let th = sigmoid(s[j]);
+                let dsig = th * (1.0 - th);
+                let g = dw[j] * weights[j] * dsig + (lambda / n as f32) * dsig;
+                let step = if adam {
+                    m1[j] = b1 * m1[j] + (1.0 - b1) * g;
+                    v2[j] = b2 * v2[j] + (1.0 - b2) * g * g;
+                    (m1[j] / bc1) / ((v2[j] / bc2).sqrt() + eps)
+                } else {
+                    g
+                };
+                s[j] -= lr * step;
+            }
+        }
+
+        // Final sparsity stats on the updated scores.
+        let mut u_fin = vec![0.5f32; n];
+        if !deterministic {
+            root.child(0x5EED).philox().fill_uniform(0, &mut u_fin);
+        }
+        let mut sum_sigma = 0.0f32;
+        let mut active = 0.0f32;
+        for j in 0..n {
+            let th = sigmoid(s[j]);
+            sum_sigma += th;
+            if u_fin[j] < th {
+                active += 1.0;
+            }
+        }
+        Ok((
+            s,
+            TrainMetrics {
+                mean_loss: (loss_sum / steps.max(1) as f64) as f32,
+                correct,
+                sum_sigma,
+                active,
+            },
+        ))
+    }
+
+    /// Masked evaluation over arbitrary-size inputs (y < 0 rows are
+    /// padding and ignored, as in the exported eval program). Processed
+    /// in row chunks so peak activation memory is bounded regardless of
+    /// test-set size.
+    pub fn eval_mask(
+        &self,
+        mask_f32: &[f32],
+        weights: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<EvalMetrics> {
+        const CHUNK_ROWS: usize = 1024;
+        let rows = y.len();
+        let w_eff: Vec<f32> =
+            mask_f32.iter().zip(weights).map(|(&m, &w)| m * w).collect();
+        let mut out = EvalMetrics { examples: rows, ..Default::default() };
+        let mut start = 0;
+        while start < rows {
+            let take = (rows - start).min(CHUNK_ROWS);
+            let xc = &x[start * self.input_dim..(start + take) * self.input_dim];
+            let outs = self.forward(&w_eff, xc, take);
+            let (loss_sum, correct, _valid) =
+                self.ce_stats(outs.last().unwrap(), &y[start..start + take]);
+            out.loss_sum += loss_sum;
+            out.correct += correct;
+            start += take;
+        }
+        Ok(out)
+    }
+
+    /// Dense forward/backward (SignSGD / FedAvg). `y.len()` rows, no
+    /// padding needed natively. Returns (grads, mean loss, correct).
+    pub fn dense_grad(
+        &self,
+        weights: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(Vec<f32>, f32, f32)> {
+        let rows = y.len();
+        let acts = self.forward(weights, x, rows);
+        let logits = acts.last().unwrap();
+        let (loss_sum, correct, valid) = self.ce_stats(logits, y);
+        let denom = valid.max(1) as f32;
+        let g_logits = self.logit_grad(logits, y, denom);
+        let grads = self.backward_weights(x, &acts, weights, g_logits, rows);
+        Ok((grads, (loss_sum / denom as f64) as f32, correct as f32))
+    }
+}

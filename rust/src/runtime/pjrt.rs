@@ -1,0 +1,235 @@
+//! PJRT backend: load AOT artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API) exactly the way the production hot
+//! path needs it:
+//!   HLO text --parse--> HloModuleProto --compile--> PjRtLoadedExecutable
+//! with the frozen weight vector staged on-device once per model and
+//! reused across every client call of every round (weights never change
+//! in the strong-LTH setting — re-uploading them per call would dominate
+//! the round loop).
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Only compiled with `--features pjrt` (DESIGN.md §Substitutions): the
+//! default build runs the pure-Rust [`super::native`] backend instead,
+//! so the coordinator is testable on machines without an XLA toolchain.
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::Manifest;
+use super::{EvalMetrics, TrainMetrics};
+
+/// Compiled executables + device-resident weights for one model.
+pub struct PjrtBackend {
+    client: PjRtClient,
+    local_train: PjRtLoadedExecutable,
+    eval: PjRtLoadedExecutable,
+    dense_grad: Option<PjRtLoadedExecutable>,
+    /// Device copy reused across all masked-path calls.
+    weights_dev: PjRtBuffer,
+}
+
+// SAFETY: the PJRT C API contract makes clients, loaded executables and
+// buffers safe to use from multiple threads (executions are internally
+// synchronized; buffers are immutable once created). The parallel round
+// engine only ever calls `&self` methods concurrently.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+fn compile_hlo(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e}"))
+}
+
+impl PjrtBackend {
+    /// Compile the manifest's programs on a fresh CPU PJRT client and
+    /// stage `weights` on the device.
+    pub fn load(manifest: &Manifest, weights: &[f32]) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
+        let local_train = compile_hlo(&client, &manifest.local_train_file)?;
+        let eval = compile_hlo(&client, &manifest.eval_file)?;
+        let dense_grad = match &manifest.dense_grad_file {
+            Some(p) => Some(compile_hlo(&client, p)?),
+            None => None,
+        };
+        let weights_dev = client
+            .buffer_from_host_buffer(weights, &[weights.len()], None)
+            .map_err(|e| anyhow!("staging weights: {e}"))?;
+        Ok(Self { client, local_train, eval, dense_grad, weights_dev })
+    }
+
+    pub fn has_dense_grad(&self) -> bool {
+        self.dense_grad.is_some()
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("host->device f32 transfer: {e}"))
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("host->device i32 transfer: {e}"))
+    }
+
+    fn scalar_f32(&self, v: f32) -> Result<PjRtBuffer> {
+        self.buf_f32(&[v], &[])
+    }
+
+    fn scalar_i32(&self, v: i32) -> Result<PjRtBuffer> {
+        self.buf_i32(&[v], &[])
+    }
+
+    /// One client local phase: `steps` minibatches of STE-SGD.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_train(
+        &self,
+        man: &Manifest,
+        scores: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        seed: i32,
+        lambda: f32,
+        lr: f32,
+        deterministic: bool,
+        adam: bool,
+    ) -> Result<(Vec<f32>, TrainMetrics)> {
+        let scores_b = self.buf_f32(scores, &[man.n_params])?;
+        let xs_b = self.buf_f32(xs, &[man.steps, man.batch, man.input_dim])?;
+        let ys_b = self.buf_i32(ys, &[man.steps, man.batch])?;
+        let seed_b = self.scalar_i32(seed)?;
+        let lam_b = self.scalar_f32(lambda)?;
+        let lr_b = self.scalar_f32(lr)?;
+        let det_b = self.scalar_f32(if deterministic { 1.0 } else { 0.0 })?;
+        let opt_b = self.scalar_f32(if adam { 1.0 } else { 0.0 })?;
+        // weights stay device-resident for the whole run: pass by ref.
+        let args: [&PjRtBuffer; 9] = [
+            &scores_b,
+            &self.weights_dev,
+            &xs_b,
+            &ys_b,
+            &seed_b,
+            &lam_b,
+            &lr_b,
+            &det_b,
+            &opt_b,
+        ];
+        let result = self
+            .local_train
+            .execute_b(&args)
+            .map_err(|e| anyhow!("local_train execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("local_train d2h: {e}"))?;
+        let (s_out, metrics) =
+            tuple.to_tuple2().map_err(|e| anyhow!("local_train tuple: {e}"))?;
+        let new_scores = s_out.to_vec::<f32>().map_err(|e| anyhow!("scores d2h: {e}"))?;
+        let met = metrics.to_vec::<f32>().map_err(|e| anyhow!("metrics d2h: {e}"))?;
+        ensure!(met.len() == 4, "expected 4 metrics");
+        Ok((
+            new_scores,
+            TrainMetrics {
+                mean_loss: met[0],
+                correct: met[1],
+                sum_sigma: met[2],
+                active: met[3],
+            },
+        ))
+    }
+
+    /// One padded eval chunk: exactly `eval_chunk` rows (y = -1 padding).
+    /// Returns (correct, loss_sum) over the valid rows.
+    pub fn eval_chunk(
+        &self,
+        man: &Manifest,
+        mask_f32: &[f32],
+        weights: Option<&[f32]>,
+        xc: &[f32],
+        yc: &[i32],
+    ) -> Result<(f64, f64)> {
+        let t = man.eval_chunk;
+        let mask_b = self.buf_f32(mask_f32, &[man.n_params])?;
+        let x_b = self.buf_f32(xc, &[t, man.input_dim])?;
+        let y_b = self.buf_i32(yc, &[t])?;
+        let w_b;
+        let weights_ref = match weights {
+            Some(w) => {
+                w_b = self.buf_f32(w, &[man.n_params])?;
+                &w_b
+            }
+            None => &self.weights_dev,
+        };
+        let args: [&PjRtBuffer; 4] = [&mask_b, weights_ref, &x_b, &y_b];
+        let result = self.eval.execute_b(&args).map_err(|e| anyhow!("eval execute: {e}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("eval d2h: {e}"))?;
+        let inner = lit.to_tuple1().map_err(|e| anyhow!("eval tuple: {e}"))?;
+        let v = inner.to_vec::<f32>().map_err(|e| anyhow!("eval vec: {e}"))?;
+        Ok((v[0] as f64, v[1] as f64))
+    }
+
+    /// Dense forward/backward for the SignSGD / FedAvg baselines.
+    /// Inputs are pre-padded to the exported batch (y = -1 padding).
+    pub fn dense_grad(
+        &self,
+        man: &Manifest,
+        weights: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+    ) -> Result<(Vec<f32>, f32, f32)> {
+        let exe = self
+            .dense_grad
+            .as_ref()
+            .ok_or_else(|| anyhow!("model {} exported without dense_grad", man.model))?;
+        let args = [
+            self.buf_f32(weights, &[man.n_params])?,
+            self.buf_f32(xb, &[man.batch, man.input_dim])?,
+            self.buf_i32(yb, &[man.batch])?,
+        ];
+        let result = exe.execute_b(&args).map_err(|e| anyhow!("dense_grad execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("dense_grad d2h: {e}"))?;
+        let (g, met) = lit.to_tuple2().map_err(|e| anyhow!("dense_grad tuple: {e}"))?;
+        let grads = g.to_vec::<f32>().map_err(|e| anyhow!("grads d2h: {e}"))?;
+        let metv = met.to_vec::<f32>().map_err(|e| anyhow!("met d2h: {e}"))?;
+        Ok((grads, metv[0], metv[1]))
+    }
+
+    /// Evaluate metrics over already-padded rows — helper for the facade.
+    pub fn eval_padded(
+        &self,
+        man: &Manifest,
+        mask_f32: &[f32],
+        weights: Option<&[f32]>,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<EvalMetrics> {
+        let t = man.eval_chunk;
+        let mut out = EvalMetrics { examples: y.len(), ..Default::default() };
+        let mut xc = vec![0.0f32; t * man.input_dim];
+        let mut yc = vec![-1i32; t];
+        let mut start = 0;
+        while start < y.len() {
+            let take = (y.len() - start).min(t);
+            xc[..take * man.input_dim]
+                .copy_from_slice(&x[start * man.input_dim..(start + take) * man.input_dim]);
+            xc[take * man.input_dim..].iter_mut().for_each(|v| *v = 0.0);
+            yc[..take].copy_from_slice(&y[start..start + take]);
+            yc[take..].iter_mut().for_each(|v| *v = -1);
+            let (correct, loss_sum) = self.eval_chunk(man, mask_f32, weights, &xc, &yc)?;
+            out.correct += correct;
+            out.loss_sum += loss_sum;
+            start += take;
+        }
+        Ok(out)
+    }
+}

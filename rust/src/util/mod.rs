@@ -8,7 +8,7 @@ pub mod timer;
 
 pub use bitvec::BitVec;
 pub use json::{parse_flat_json, read_jsonl, JsonValue};
-pub use rng::{Philox4x32, SplitMix64, Xoshiro256};
+pub use rng::{Philox4x32, SeedSequence, SplitMix64, Xoshiro256};
 pub use stats::{ci95, mean, std_dev, Ema, Running};
 pub use timer::Timers;
 

@@ -1,0 +1,124 @@
+//! Determinism contract of the parallel round engine: a full experiment
+//! must produce bit-identical round metrics and bit-identical final
+//! models at ANY worker-thread count — the sequential path (threads = 1)
+//! is the reference. See DESIGN.md §Parallel round engine.
+
+use fedsrn::algos::EvalModel;
+use fedsrn::config::{Algorithm, ExperimentConfig, Partition};
+use fedsrn::coordinator::Experiment;
+use fedsrn::fl::{MetricsSink, RoundRecord};
+
+fn base_cfg(threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        model: "mlp_tiny".into(),
+        dataset: "tiny".into(),
+        algorithm: Algorithm::FedPMReg,
+        lambda: 2.0,
+        clients: 8,
+        rounds: 5,
+        train_samples: 640,
+        test_samples: 160,
+        lr: 0.1,
+        seed: 77,
+        threads,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Run one experiment, returning its per-round records and the final
+/// model as exact bit patterns.
+fn run(cfg: ExperimentConfig) -> (Vec<RoundRecord>, Vec<u32>) {
+    let mut sink = MetricsSink::new("", 10_000).unwrap();
+    let mut exp = Experiment::build(cfg).unwrap();
+    exp.run(&mut sink).unwrap();
+    let model_bits: Vec<u32> = match exp.strategy_eval_model() {
+        EvalModel::Masked(m) => m.iter().map(|v| v.to_bits()).collect(),
+        EvalModel::Dense(w) => w.iter().map(|v| v.to_bits()).collect(),
+    };
+    (sink.records().to_vec(), model_bits)
+}
+
+/// Exact equality on every deterministic metric (wall-clock excluded).
+fn assert_records_identical(a: &[RoundRecord], b: &[RoundRecord], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: round count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.round, y.round, "{what}");
+        let r = x.round;
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "{what} r{r} accuracy");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what} r{r} loss");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{what} r{r} train_loss");
+        assert_eq!(x.est_bpp.to_bits(), y.est_bpp.to_bits(), "{what} r{r} est_bpp");
+        assert_eq!(x.coded_bpp.to_bits(), y.coded_bpp.to_bits(), "{what} r{r} coded_bpp");
+        assert_eq!(x.mean_theta.to_bits(), y.mean_theta.to_bits(), "{what} r{r} mean_theta");
+        assert_eq!(
+            x.mask_density.to_bits(),
+            y.mask_density.to_bits(),
+            "{what} r{r} mask_density"
+        );
+    }
+}
+
+#[test]
+fn fedpm_reg_bit_identical_at_1_2_8_threads() {
+    let (ref_records, ref_model) = run(base_cfg(1));
+    for threads in [2, 8] {
+        let (records, model) = run(base_cfg(threads));
+        assert_records_identical(&ref_records, &records, &format!("threads={threads}"));
+        assert_eq!(ref_model, model, "threads={threads}: final mask must be bit-identical");
+    }
+}
+
+#[test]
+fn every_strategy_is_thread_count_invariant() {
+    for algo in [
+        Algorithm::FedPM,
+        Algorithm::FedMask,
+        Algorithm::TopK,
+        Algorithm::SignSGD,
+        Algorithm::FedAvg,
+    ] {
+        let mk = |threads| {
+            let mut cfg = base_cfg(threads);
+            cfg.algorithm = algo;
+            cfg.rounds = 3;
+            cfg
+        };
+        let (ref_records, ref_model) = run(mk(1));
+        let (records, model) = run(mk(4));
+        assert_records_identical(&ref_records, &records, &format!("{algo:?}"));
+        assert_eq!(ref_model, model, "{algo:?}: final model must be bit-identical");
+    }
+}
+
+#[test]
+fn partial_participation_and_dropout_are_thread_count_invariant() {
+    let mk = |threads| {
+        let mut cfg = base_cfg(threads);
+        cfg.clients = 10;
+        cfg.participation = 0.5;
+        cfg.dropout = 0.3;
+        cfg.rounds = 6;
+        cfg
+    };
+    let (ref_records, ref_model) = run(mk(1));
+    for threads in [2, 8] {
+        let (records, model) = run(mk(threads));
+        assert_records_identical(&ref_records, &records, &format!("threads={threads}"));
+        assert_eq!(ref_model, model, "threads={threads}");
+    }
+}
+
+#[test]
+fn noniid_partition_is_thread_count_invariant() {
+    let mk = |threads| {
+        let mut cfg = base_cfg(threads);
+        cfg.clients = 10;
+        cfg.partition = Partition::NonIid { c: 2 };
+        cfg.rounds = 4;
+        cfg
+    };
+    let (ref_records, ref_model) = run(mk(1));
+    let (records, model) = run(mk(8));
+    assert_records_identical(&ref_records, &records, "noniid");
+    assert_eq!(ref_model, model);
+}

@@ -10,8 +10,8 @@ use fedsrn::config::ExperimentConfig;
 use fedsrn::coordinator::Checkpoint;
 use fedsrn::data::{partition_iid, partition_noniid, Dataset, SynthSpec, Synthetic};
 use fedsrn::mask::{
-    empirical_bpp, entropy_bits, mean_client_bpp, sample_mask, topk_mask, MaskAggregator,
-    ProbMask,
+    empirical_bpp, entropy_bits, mean_client_bpp, sample_mask, topk_mask, BetaAggregator,
+    MaskAggregator, ProbMask,
 };
 use fedsrn::util::{logit, sigmoid, BitVec, Philox4x32, Xoshiro256};
 
@@ -112,6 +112,48 @@ fn prop_aggregation_output_in_unit_interval_and_convex() {
             let lo = bits.iter().cloned().fold(f64::INFINITY, f64::min);
             let hi = bits.iter().cloned().fold(0.0f64, f64::max);
             assert!(t as f64 >= lo - 1e-9 && t as f64 <= hi + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_weighted_aggregation_is_order_independent() {
+    // The federation weights masks by dataset size |D_i| — an integer.
+    // Integer-weighted sums of {0,1} bits stay exact in f64 far past any
+    // realistic fleet size, so aggregating the same multiset of uplinks
+    // in ANY order must produce a bit-identical theta. This is half of
+    // the parallel round engine's determinism contract (the other half,
+    // ordered reduction, is tested end-to-end in engine_determinism.rs).
+    forall(40, |rng, case| {
+        let n = 1 + rng.below(3_000) as usize;
+        let k = 2 + rng.below(10) as usize;
+        let entries: Vec<(BitVec, f64)> = (0..k)
+            .map(|_| {
+                let p = rng.next_f64();
+                let m = BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < p), n);
+                (m, (1 + rng.below(500)) as f64)
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..k).collect();
+        rng.shuffle(&mut order);
+
+        let mut fwd = MaskAggregator::new(n);
+        let mut shuf = MaskAggregator::new(n);
+        let mut beta_fwd = BetaAggregator::new(n, 1.5);
+        let mut beta_shuf = BetaAggregator::new(n, 1.5);
+        for (m, w) in &entries {
+            fwd.add_mask(m, *w);
+            beta_fwd.add_mask(m, *w);
+        }
+        for &i in &order {
+            shuf.add_mask(&entries[i].0, entries[i].1);
+            beta_shuf.add_mask(&entries[i].0, entries[i].1);
+        }
+        for (x, y) in fwd.finalize().theta().iter().zip(shuf.finalize().theta()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: mean agg order-dependent");
+        }
+        for (x, y) in beta_fwd.finalize().theta().iter().zip(beta_shuf.finalize().theta()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: beta agg order-dependent");
         }
     });
 }
