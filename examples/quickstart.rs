@@ -62,7 +62,7 @@ fn main() -> Result<()> {
         let test = fedsrn::data::Synthetic::new(spec, 2023 ^ 0xDA7A).generate(300, 2);
         let m = exp
             .runtime()
-            .eval_mask(&back.decode_mask().to_f32(), &test.x, &test.y)?;
+            .eval_mask(&back.decode_mask()?.to_f32(), &test.x, &test.y)?;
         println!("reloaded checkpoint accuracy: {:.3}", m.accuracy());
     }
     Ok(())

@@ -47,9 +47,57 @@ fn main() {
             if should_run(&filter, &name) {
                 let enc = compress::encode_with(&mask, method);
                 let r = bench(&name, 1.0, 200, || {
-                    std::hint::black_box(compress::decode(&enc, N));
+                    std::hint::black_box(compress::decode(&enc, N).unwrap());
                 });
                 r.print(&format!("{:>7.1} Mbit/s", N as f64 / r.mean_s / 1e6));
+            }
+        }
+    }
+
+    // --- downlink delta codec (DESIGN.md §Downlink) -----------------------
+    {
+        use fedsrn::compress::{DownlinkEncoder, DownlinkFrame, DownlinkMode};
+        let mut rng = Xoshiro256::new(13);
+        let prev: Vec<f32> = (0..N).map(|_| rng.next_f32()).collect();
+        for &p in &[1.0f64, 0.25, 0.02] {
+            let state: Vec<f32> = prev
+                .iter()
+                .map(|&v| {
+                    if rng.next_f64() < p {
+                        v + 0.1 * (rng.next_f32() - 0.5)
+                    } else {
+                        v
+                    }
+                })
+                .collect();
+            let name = format!("comm/downlink/encode/qdelta8/p={p}");
+            if should_run(&filter, &name) {
+                let mut probe = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
+                probe.encode_frame(&prev);
+                let sample = probe.clone().encode_frame(&state);
+                // Alternate targets so every half-iteration encodes a
+                // fresh delta at this change density — no O(n) encoder
+                // clone inside the timed region.
+                let r = bench(&name, 1.0, 200, || {
+                    std::hint::black_box(probe.encode_frame(&state));
+                    std::hint::black_box(probe.encode_frame(&prev));
+                });
+                r.print(&format!(
+                    "{:>7.1} Mparam/s  {:.4} DL Bpp",
+                    2.0 * N as f64 / r.mean_s / 1e6,
+                    sample.wire_bits() as f64 / N as f64
+                ));
+            }
+            let name = format!("comm/downlink/decode/qdelta8/p={p}");
+            if should_run(&filter, &name) {
+                let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
+                enc.encode_frame(&prev);
+                let bytes = enc.encode_frame(&state).to_bytes();
+                let r = bench(&name, 1.0, 200, || {
+                    let frame = DownlinkFrame::from_bytes(&bytes).unwrap();
+                    std::hint::black_box(frame.decode(Some(&prev)).unwrap());
+                });
+                r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.mean_s / 1e6));
             }
         }
     }

@@ -7,17 +7,21 @@
 
 use anyhow::Result;
 
+use crate::compress::{DownlinkEncoder, DownlinkMode};
+
 use super::{EvalModel, RoundCtx, RoundStats, Strategy};
 
 /// FedAvg server + model state. The dense local SGD learning rate is
 /// taken from `RoundCtx.server_lr` (distinct from the score lr).
 pub struct FedAvg {
     weights: Vec<f32>,
+    /// Downlink codec state: the weight reconstruction the fleet holds.
+    dl: DownlinkEncoder,
 }
 
 impl FedAvg {
-    pub fn new(init_weights: Vec<f32>) -> Self {
-        Self { weights: init_weights }
+    pub fn new(init_weights: Vec<f32>, downlink: DownlinkMode) -> Self {
+        Self { weights: init_weights, dl: DownlinkEncoder::new(downlink) }
     }
 
     pub fn weights(&self) -> &[f32] {
@@ -43,6 +47,11 @@ impl Strategy for FedAvg {
         let mut train_loss = 0.0f64;
         let mut done = 0usize;
 
+        // DL: broadcast the weights through the downlink codec; devices
+        // start local SGD from the reconstruction they received.
+        let wire_bits = self.dl.broadcast(&self.weights);
+        let bweights = self.dl.recon().to_vec();
+
         // The fleet is processed in waves so at most one wave of dense
         // local weight vectors is resident at a time (O(wave * n), not
         // O(clients * n)). The fold still walks cohort order — waves are
@@ -50,7 +59,7 @@ impl Strategy for FedAvg {
         // bit-identical at any thread count and any wave size.
         let wave = ctx.engine.threads().max(4) * 2;
         for ids in cohort.chunks(wave) {
-            let global = &self.weights;
+            let global = &bweights;
             // Parallel phase: each device trains a local copy of the
             // dense weights for `local_epochs` of minibatch SGD.
             let reports = ctx.engine.run_cohort(ctx.clients, ids, |_pos, client| {
@@ -70,7 +79,8 @@ impl Strategy for FedAvg {
 
             // Ordered reduction: |D_i|-weighted average in cohort order.
             for (w_local, cw, last_loss) in reports {
-                ctx.comm.add_float_downlink();
+                // DL: one broadcast per device (measured wire bits).
+                ctx.comm.add_downlink_bits(wire_bits);
                 // UL: full dense floats.
                 ctx.comm.add_dense_uplink();
                 done += 1;
@@ -88,7 +98,9 @@ impl Strategy for FedAvg {
     }
 
     fn eval_model(&self, _round: usize) -> EvalModel {
-        EvalModel::Dense(self.weights.clone())
+        // Evaluate the weights a device would reconstruct from the wire
+        // (identical to the server's under float32).
+        EvalModel::Dense(self.dl.preview(&self.weights))
     }
 
     fn storage_bits(&self) -> u64 {
@@ -102,7 +114,7 @@ mod tests {
 
     #[test]
     fn storage_and_eval_shape() {
-        let f = FedAvg::new(vec![0.5; 100]);
+        let f = FedAvg::new(vec![0.5; 100], DownlinkMode::Float32);
         assert_eq!(f.storage_bits(), 3200);
         match f.eval_model(0) {
             EvalModel::Dense(w) => assert_eq!(w.len(), 100),

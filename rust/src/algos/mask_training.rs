@@ -2,7 +2,10 @@
 //! over a frozen random network (paper sec. II-III).
 //!
 //! One round:
-//!   1. DL: server broadcasts theta(t) as scores s = logit(theta).
+//!   1. DL: server broadcasts theta(t) through the downlink codec
+//!      (raw f32, or quantized sparse deltas under `downlink=qdelta` —
+//!      DESIGN.md §Downlink); devices derive scores s = logit(theta)
+//!      from the reconstruction they actually received.
 //!   2. Each device runs local STE-SGD on its score vector with loss
 //!      eq. 12 (cross-entropy + (lambda/n) * sum sigmoid(s)).
 //!   3. UL: the device ships ONE binary mask derived from its local
@@ -18,10 +21,10 @@
 
 use anyhow::Result;
 
-use crate::compress::{self, Encoded};
+use crate::compress::{self, DownlinkEncoder, DownlinkMode, Encoded};
 use crate::fl::Server;
 use crate::mask::{sample_mask, topk_mask, ProbMask};
-use crate::util::{BitVec, SeedSequence};
+use crate::util::{logit, BitVec, SeedSequence};
 
 use super::{EvalModel, RoundCtx, RoundStats, Strategy};
 
@@ -42,11 +45,19 @@ pub struct MaskStrategy {
     server: Server,
     mode: MaskMode,
     seed: u64,
+    /// Downlink codec state: the theta reconstruction the fleet holds.
+    dl: DownlinkEncoder,
 }
 
 impl MaskStrategy {
     pub fn new(n_params: usize, seed: u64, mode: MaskMode) -> Self {
-        Self::with_agg(n_params, seed, mode, crate::fl::server::AggMode::Mean)
+        Self::with_agg(
+            n_params,
+            seed,
+            mode,
+            crate::fl::server::AggMode::Mean,
+            DownlinkMode::Float32,
+        )
     }
 
     pub fn with_agg(
@@ -54,8 +65,14 @@ impl MaskStrategy {
         seed: u64,
         mode: MaskMode,
         agg: crate::fl::server::AggMode,
+        downlink: DownlinkMode,
     ) -> Self {
-        Self { server: Server::with_agg(n_params, seed, agg), mode, seed }
+        Self {
+            server: Server::with_agg(n_params, seed, agg),
+            mode,
+            seed,
+            dl: DownlinkEncoder::new(downlink),
+        }
     }
 
     pub fn server(&self) -> &Server {
@@ -65,6 +82,15 @@ impl MaskStrategy {
     /// Build this client's uplink mask from its updated scores.
     fn uplink_mask(&self, scores: &[f32], client: usize, round: usize) -> BitVec {
         build_uplink(self.mode, mask_stream(self.seed), scores, client, round)
+    }
+
+    /// Theta as the fleet would see it after a broadcast of the current
+    /// server state: exact under float32, quantized under qdelta. Used
+    /// for evaluation so reported accuracy reflects the wire, not the
+    /// server's private precision.
+    fn broadcast_theta_view(&self) -> ProbMask {
+        let view = self.dl.preview(self.server.theta().theta());
+        ProbMask::from_theta(view.iter().map(|&t| t.clamp(0.0, 1.0)).collect())
     }
 }
 
@@ -118,7 +144,23 @@ impl Strategy for MaskStrategy {
         // Partial participation: sample this round's cohort (the paper's
         // setting is fraction=1 / dropout=0 -> everyone, no drops).
         let cohort = ctx.participation.sample_round(ctx.clients.len(), ctx.seed, round);
-        let scores = self.server.broadcast_scores(ctx.comm, cohort.len());
+        // DL: broadcast theta through the downlink codec. Devices derive
+        // their working scores from the reconstruction they actually
+        // received — under qdelta that is the quantized theta, never the
+        // server's exact vector (DESIGN.md §Downlink).
+        let wire_bits = self.dl.broadcast(self.server.theta().theta());
+        // float32 frames are stateless, so only the sampled cohort needs
+        // one; a qdelta frame is a link in a stateful delta chain and
+        // must reach EVERY device (a device that missed a frame could
+        // not decode the next one), so the whole fleet is accounted.
+        let receivers = match self.dl.mode() {
+            DownlinkMode::Float32 => cohort.len(),
+            DownlinkMode::QDelta { .. } => ctx.clients.len(),
+        };
+        for _ in 0..receivers {
+            ctx.comm.add_downlink_bits(wire_bits);
+        }
+        let scores: Vec<f32> = self.dl.recon().iter().map(|&t| logit(t)).collect();
 
         // Parallel phase: local training + uplink construction + entropy
         // coding per client, sharded by the round engine. Only copies of
@@ -174,7 +216,10 @@ impl Strategy for MaskStrategy {
     }
 
     fn eval_model(&self, round: usize) -> EvalModel {
-        EvalModel::Masked(self.server.eval_mask_sampled(round).to_f32())
+        // Evaluate the theta a device would reconstruct from the wire
+        // (identical to the server's theta under float32).
+        let view = self.broadcast_theta_view();
+        EvalModel::Masked(self.server.eval_mask_sampled_from(&view, round).to_f32())
     }
 
     fn storage_bits(&self) -> u64 {

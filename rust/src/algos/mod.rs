@@ -110,20 +110,23 @@ pub fn build_strategy(
             cfg.seed,
             MaskMode::Stochastic,
             agg_mode(cfg),
+            cfg.downlink,
         )),
         Algorithm::FedMask => Box::new(MaskStrategy::with_agg(
             n_params,
             cfg.seed,
             MaskMode::Deterministic,
             agg_mode(cfg),
+            cfg.downlink,
         )),
         Algorithm::TopK => Box::new(MaskStrategy::with_agg(
             n_params,
             cfg.seed,
             MaskMode::TopK { frac: cfg.topk_frac },
             agg_mode(cfg),
+            cfg.downlink,
         )),
-        Algorithm::SignSGD => Box::new(SignSgd::new(init_weights.to_vec())),
-        Algorithm::FedAvg => Box::new(FedAvg::new(init_weights.to_vec())),
+        Algorithm::SignSGD => Box::new(SignSgd::new(init_weights.to_vec(), cfg.downlink)),
+        Algorithm::FedAvg => Box::new(FedAvg::new(init_weights.to_vec(), cfg.downlink)),
     }
 }

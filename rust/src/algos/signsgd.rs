@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 
-use crate::compress;
+use crate::compress::{self, DownlinkEncoder, DownlinkMode};
 use crate::mask::aggregate::majority_vote_signs;
 use crate::util::BitVec;
 
@@ -21,11 +21,13 @@ use super::{EvalModel, RoundCtx, RoundStats, Strategy};
 /// MV-SignSGD server + model state.
 pub struct SignSgd {
     weights: Vec<f32>,
+    /// Downlink codec state: the weight reconstruction the fleet holds.
+    dl: DownlinkEncoder,
 }
 
 impl SignSgd {
-    pub fn new(init_weights: Vec<f32>) -> Self {
-        Self { weights: init_weights }
+    pub fn new(init_weights: Vec<f32>, downlink: DownlinkMode) -> Self {
+        Self { weights: init_weights, dl: DownlinkEncoder::new(downlink) }
     }
 
     pub fn weights(&self) -> &[f32] {
@@ -49,7 +51,11 @@ impl Strategy for SignSgd {
         let batch = ctx.rt.manifest.batch;
         let cohort: Vec<usize> = (0..ctx.clients.len()).collect();
         let (rt, data) = (ctx.rt, ctx.data);
-        let weights = &self.weights;
+        // DL: broadcast the weights through the downlink codec; devices
+        // compute their gradients at the reconstruction they received.
+        let wire_bits = self.dl.broadcast(&self.weights);
+        let bweights = self.dl.recon().to_vec();
+        let weights = &bweights;
 
         // Parallel phase: one minibatch gradient + sign coding per device
         // (parallel SignSGD semantics).
@@ -67,8 +73,8 @@ impl Strategy for SignSgd {
         let mut weights_of: Vec<f64> = Vec::with_capacity(reports.len());
         let mut train_loss = 0.0f64;
         for (i, (sign_bits, enc, weight, loss)) in reports.into_iter().enumerate() {
-            // DL: dense weight broadcast (32 Bpp — counted).
-            ctx.comm.add_float_downlink();
+            // DL: one broadcast per device (measured wire bits).
+            ctx.comm.add_downlink_bits(wire_bits);
             ctx.comm.add_mask_uplink(&sign_bits, &enc);
             train_loss += (loss as f64 - train_loss) / (i + 1) as f64;
             signs.push(sign_bits);
@@ -83,7 +89,9 @@ impl Strategy for SignSgd {
     }
 
     fn eval_model(&self, _round: usize) -> EvalModel {
-        EvalModel::Dense(self.weights.clone())
+        // Evaluate the weights a device would reconstruct from the wire
+        // (identical to the server's under float32).
+        EvalModel::Dense(self.dl.preview(&self.weights))
     }
 
     fn storage_bits(&self) -> u64 {
@@ -98,7 +106,7 @@ mod tests {
 
     #[test]
     fn vote_moves_weights_opposite_to_majority_gradient_sign() {
-        let mut s = SignSgd::new(vec![0.0; 4]);
+        let mut s = SignSgd::new(vec![0.0; 4], DownlinkMode::Float32);
         let vote = BitVec::from_bools(&[true, false, true, false]);
         s.apply_vote(&vote, 0.5);
         assert_eq!(s.weights(), &[-0.5, 0.5, -0.5, 0.5]);
@@ -106,13 +114,13 @@ mod tests {
 
     #[test]
     fn storage_is_dense() {
-        let s = SignSgd::new(vec![0.0; 1000]);
+        let s = SignSgd::new(vec![0.0; 1000], DownlinkMode::Float32);
         assert_eq!(s.storage_bits(), 32_000);
     }
 
     #[test]
     fn eval_model_is_dense() {
-        let s = SignSgd::new(vec![1.0; 8]);
+        let s = SignSgd::new(vec![1.0; 8], DownlinkMode::Float32);
         match s.eval_model(0) {
             EvalModel::Dense(w) => assert_eq!(w, vec![1.0; 8]),
             _ => panic!("signsgd evaluates dense weights"),

@@ -1,12 +1,18 @@
 //! Mask codec: the uplink wire format.
 //!
 //! Races the adaptive arithmetic coder against Golomb-Rice and the raw
-//! 1-bit-per-parameter packing, and ships whichever is smallest. A 1-byte
-//! header + u32 one-count keeps the format self-describing (the decoder
-//! needs `len` from the session context, like any FL round does).
+//! 1-bit-per-parameter packing, and ships whichever is smallest. The
+//! header (method byte + u32 one-count + u32 payload bit-length) keeps
+//! the format self-describing (the decoder needs `len` from the session
+//! context, like any FL round does), and decoding *validates* it: the
+//! recorded bit-length must match the bytes actually present and the
+//! decoded mask must reproduce the recorded one-count — a truncated or
+//! corrupt payload is an error, never silent garbage.
 //!
 //! This is what turns the paper's "≤ 1 Bpp" bound into actually-measured
 //! uplink bytes in the experiment logs.
+
+use anyhow::{bail, ensure, Result};
 
 use super::{arithmetic, golomb};
 use crate::util::BitVec;
@@ -35,13 +41,23 @@ impl Method {
 pub struct Encoded {
     pub method: Method,
     pub ones: u32,
+    /// Recorded payload length in bits (byte-aligned by every coder
+    /// here); `decode` checks it against the bytes actually present so
+    /// truncation in transit is detected instead of decoded as garbage.
+    pub bit_len: u32,
     pub payload: Vec<u8>,
 }
 
 impl Encoded {
-    /// Total wire bytes: header (1) + one-count (4) + payload.
+    fn new(method: Method, ones: u32, payload: Vec<u8>) -> Self {
+        let bit_len = payload.len() as u32 * 8;
+        Self { method, ones, bit_len, payload }
+    }
+
+    /// Total wire bytes: header (1 method + 4 ones + 4 bit-length) +
+    /// payload.
     pub fn wire_bytes(&self) -> usize {
-        1 + 4 + self.payload.len()
+        1 + 4 + 4 + self.payload.len()
     }
 
     /// Wire bits per mask parameter.
@@ -58,18 +74,27 @@ impl Encoded {
         let mut out = Vec::with_capacity(self.wire_bytes());
         out.push(self.method as u8);
         out.extend_from_slice(&self.ones.to_le_bytes());
+        out.extend_from_slice(&self.bit_len.to_le_bytes());
         out.extend_from_slice(&self.payload);
         out
     }
 
-    /// Parse from a flat byte vector.
-    pub fn from_bytes(bytes: &[u8]) -> Option<Self> {
-        if bytes.len() < 5 {
-            return None;
-        }
-        let method = Method::from_u8(bytes[0])?;
-        let ones = u32::from_le_bytes(bytes[1..5].try_into().ok()?);
-        Some(Self { method, ones, payload: bytes[5..].to_vec() })
+    /// Parse from a flat byte vector, validating the recorded payload
+    /// bit-length against the bytes actually present.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        ensure!(bytes.len() >= 9, "uplink header truncated ({} bytes)", bytes.len());
+        let Some(method) = Method::from_u8(bytes[0]) else {
+            bail!("unknown codec id {}", bytes[0]);
+        };
+        let ones = u32::from_le_bytes(bytes[1..5].try_into()?);
+        let bit_len = u32::from_le_bytes(bytes[5..9].try_into()?);
+        let payload = bytes[9..].to_vec();
+        ensure!(
+            (bit_len as usize).div_ceil(8) == payload.len(),
+            "recorded bit-length {bit_len} does not match {} payload bytes",
+            payload.len()
+        );
+        Ok(Self { method, ones, bit_len, payload })
     }
 }
 
@@ -104,7 +129,7 @@ pub fn encode(mask: &BitVec) -> Encoded {
         } else {
             (Method::Raw, raw)
         };
-    Encoded { method, ones, payload }
+    Encoded::new(method, ones, payload)
 }
 
 /// Encode with a forced method (for benchmarking individual coders).
@@ -115,16 +140,48 @@ pub fn encode_with(mask: &BitVec, method: Method) -> Encoded {
         Method::Arithmetic => arithmetic::encode(mask),
         Method::Golomb => golomb::encode(mask),
     };
-    Encoded { method, ones, payload }
+    Encoded::new(method, ones, payload)
 }
 
 /// Decode an uplink mask of `len` parameters.
-pub fn decode(enc: &Encoded, len: usize) -> BitVec {
-    match enc.method {
-        Method::Raw => unpack_raw(&enc.payload, len),
+///
+/// Validates everything the wire header records before trusting the
+/// payload: the one-count must fit in `len`, the recorded bit-length
+/// must match the payload bytes present, raw/Rice payloads must have
+/// exactly the size the mask demands, and the decoded mask must
+/// reproduce the recorded one-count.
+pub fn decode(enc: &Encoded, len: usize) -> Result<BitVec> {
+    ensure!(
+        enc.ones as usize <= len,
+        "one-count {} exceeds mask length {len}",
+        enc.ones
+    );
+    ensure!(
+        (enc.bit_len as usize).div_ceil(8) == enc.payload.len(),
+        "recorded bit-length {} does not match {} payload bytes",
+        enc.bit_len,
+        enc.payload.len()
+    );
+    let mask = match enc.method {
+        Method::Raw => {
+            ensure!(
+                enc.payload.len() == len.div_ceil(8),
+                "raw payload is {} bytes, a {len}-bit mask needs {}",
+                enc.payload.len(),
+                len.div_ceil(8)
+            );
+            unpack_raw(&enc.payload, len)
+        }
         Method::Arithmetic => arithmetic::decode(&enc.payload, len),
-        Method::Golomb => golomb::decode(&enc.payload, len, enc.ones as usize),
-    }
+        Method::Golomb => golomb::decode(&enc.payload, len, enc.ones as usize)?,
+    };
+    ensure!(
+        mask.count_ones() == enc.ones as usize,
+        "decoded one-count {} does not match recorded {} (corrupt payload)",
+        mask.count_ones(),
+        enc.ones
+    );
+    Ok(mask)
 }
 
 #[cfg(test)]
@@ -142,7 +199,7 @@ mod tests {
         for &p in &[0.0, 0.005, 0.05, 0.3, 0.5, 0.8, 1.0] {
             let m = random_mask(30_000, p, 21);
             let enc = encode(&m);
-            assert_eq!(decode(&enc, m.len()), m, "p={p} method={:?}", enc.method);
+            assert_eq!(decode(&enc, m.len()).unwrap(), m, "p={p} method={:?}", enc.method);
         }
     }
 
@@ -170,7 +227,8 @@ mod tests {
         let parsed = Encoded::from_bytes(&enc.to_bytes()).unwrap();
         assert_eq!(parsed.method, enc.method);
         assert_eq!(parsed.ones, enc.ones);
-        assert_eq!(decode(&parsed, m.len()), m);
+        assert_eq!(parsed.bit_len, enc.bit_len);
+        assert_eq!(decode(&parsed, m.len()).unwrap(), m);
     }
 
     #[test]
@@ -178,13 +236,53 @@ mod tests {
         let m = random_mask(8_000, 0.07, 10);
         for method in [Method::Raw, Method::Arithmetic, Method::Golomb] {
             let enc = encode_with(&m, method);
-            assert_eq!(decode(&enc, m.len()), m, "{method:?}");
+            assert_eq!(decode(&enc, m.len()).unwrap(), m, "{method:?}");
         }
     }
 
     #[test]
     fn from_bytes_rejects_garbage() {
-        assert!(Encoded::from_bytes(&[]).is_none());
-        assert!(Encoded::from_bytes(&[9, 0, 0, 0, 0, 1]).is_none());
+        assert!(Encoded::from_bytes(&[]).is_err());
+        assert!(Encoded::from_bytes(&[9, 0, 0, 0, 0, 0, 0, 0, 0, 1]).is_err());
+        // valid header shape but recorded bit-length disagrees with bytes
+        let m = random_mask(1000, 0.2, 11);
+        let mut bytes = encode(&m).to_bytes();
+        bytes.push(0); // payload longer than the header records
+        assert!(Encoded::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        for method in [Method::Raw, Method::Arithmetic, Method::Golomb] {
+            let m = random_mask(4_000, 0.1, 13);
+            let enc = encode_with(&m, method);
+            let bytes = enc.to_bytes();
+            // chop wire bytes: either the header parse or the decode must fail
+            let chopped = &bytes[..bytes.len() - 2];
+            let outcome = Encoded::from_bytes(chopped).and_then(|e| decode(&e, m.len()));
+            assert!(outcome.is_err(), "{method:?}: truncated payload must not decode");
+        }
+    }
+
+    #[test]
+    fn length_mismatched_header_rejected() {
+        let m = random_mask(4_000, 0.1, 14);
+        let mut enc = encode(&m);
+        enc.bit_len += 8; // header claims one more payload byte than present
+        assert!(decode(&enc, m.len()).is_err());
+        let mut enc = encode(&m);
+        enc.ones = enc.ones.wrapping_add(1); // one-count corrupted in transit
+        assert!(decode(&enc, m.len()).is_err());
+        // raw payloads also validate against the session's mask length
+        let enc = encode_with(&m, Method::Raw);
+        assert!(decode(&enc, m.len() + 64).is_err(), "wrong session length must not decode");
+    }
+
+    #[test]
+    fn oversized_one_count_rejected() {
+        let m = random_mask(100, 0.5, 15);
+        let mut enc = encode(&m);
+        enc.ones = 101;
+        assert!(decode(&enc, 100).is_err());
     }
 }

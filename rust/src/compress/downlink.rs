@@ -1,0 +1,543 @@
+//! Compressed downlink: the server->client direction of the wire.
+//!
+//! The paper's evaluation axis is *uplink* bits per parameter, and its
+//! own accounting (like ours before this module existed) shipped the
+//! global state downlink as raw f32 — 32 Bpp every round, dominating
+//! total traffic in the direction nobody was compressing. This module
+//! closes that gap (DESIGN.md §Downlink):
+//!
+//! * The server broadcasts the global state (theta for the mask family,
+//!   dense weights for the baselines) as **quantized sparse deltas**
+//!   against the previous round's broadcast: a uniform b-bit quantizer
+//!   over the changed coordinates, a changed-coordinate bitmap entropy-
+//!   coded by the existing mask codec (adaptive arithmetic / Golomb),
+//!   and a dense-f32 fallback whenever delta coding would not pay.
+//! * **Residual feedback** is structural: deltas are always computed
+//!   against the *reconstruction the clients hold* (`recon`), so every
+//!   quantization error and every coordinate withheld by the per-round
+//!   change cap stays in the next round's delta until it is sent. The
+//!   reconstruction converges to the server state geometrically when
+//!   the state stops moving (property-tested in `tests/properties.rs`).
+//! * Clients must train against the reconstruction — the quantized
+//!   state they actually received — never the server's exact vector;
+//!   otherwise the simulation under-reports the scheme's accuracy cost.
+//!   Strategies read `recon()` after `broadcast()` for exactly this.
+//!
+//! Framing is versionless but self-describing; [`DownlinkFrame`] is the
+//! unit that would travel on the wire and `from_bytes`/`decode` validate
+//! every recorded length against the bytes actually present.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::bitstream::{BitReader, BitWriter};
+use super::codec::{self, Encoded};
+use crate::util::BitVec;
+
+/// Downlink compression mode (config key `downlink`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DownlinkMode {
+    /// Raw f32 broadcast, 32 Bpp — the paper's (implicit) setting and
+    /// the backward-compatible default.
+    Float32,
+    /// Quantized sparse deltas against the previous broadcast with a
+    /// uniform `bits`-bit quantizer (sign + magnitude per changed
+    /// coordinate) and server-side residual feedback.
+    QDelta { bits: u8 },
+}
+
+impl DownlinkMode {
+    /// Parse a config value: `float32` | `qdelta` (8 bits) | `qdelta<b>`
+    /// with b in 2..=16.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "float32" | "f32" | "dense" => Ok(DownlinkMode::Float32),
+            "qdelta" => Ok(DownlinkMode::QDelta { bits: 8 }),
+            other => {
+                let Some(b) = other.strip_prefix("qdelta") else {
+                    bail!("downlink must be float32 | qdelta<bits>, got '{other}'");
+                };
+                let bits: u8 = b.parse().with_context(|| format!("qdelta bits in '{other}'"))?;
+                ensure!(
+                    (2..=16).contains(&bits),
+                    "qdelta bits must be in 2..=16, got {bits}"
+                );
+                Ok(DownlinkMode::QDelta { bits })
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            DownlinkMode::Float32 => "float32".to_string(),
+            DownlinkMode::QDelta { bits } => format!("qdelta{bits}"),
+        }
+    }
+}
+
+/// At most this fraction of coordinates is shipped per delta frame; the
+/// rest stays in the residual and rides a later round. This caps the
+/// worst-case delta rate at roughly `frac*bits + H(frac)` Bpp (≈ 2.8 for
+/// qdelta8) — without it, early rounds where every theta coordinate
+/// moves would cost the full `bits` per parameter.
+const MAX_CHANGED_FRAC_INV: usize = 4;
+
+/// Frame kinds on the wire.
+const KIND_DENSE: u8 = 0;
+const KIND_DELTA: u8 = 1;
+
+#[derive(Debug, Clone)]
+enum Body {
+    /// Raw f32 payload (first broadcast, or fallback when deltas are
+    /// dense enough that delta framing would cost more than floats).
+    Dense { values: Vec<f32> },
+    /// Changed-coordinate bitmap (entropy-coded) + packed sign/magnitude
+    /// quantizer indices, `bits` per changed coordinate.
+    Delta { bits: u8, n: u32, step: f32, bitmap: Encoded, packed: Vec<u8> },
+}
+
+/// One downlink broadcast as it would travel on the wire.
+#[derive(Debug, Clone)]
+pub struct DownlinkFrame {
+    body: Body,
+}
+
+impl DownlinkFrame {
+    /// Parameter count this frame covers.
+    pub fn n(&self) -> usize {
+        match &self.body {
+            Body::Dense { values } => values.len(),
+            Body::Delta { n, .. } => *n as usize,
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self.body, Body::Dense { .. })
+    }
+
+    /// Total serialized size in bytes (what the accounting records).
+    pub fn wire_bytes(&self) -> usize {
+        match &self.body {
+            Body::Dense { values } => 1 + 4 + 4 * values.len(),
+            Body::Delta { bitmap, packed, .. } => {
+                1 + 1 + 4 + 4 + 4 + bitmap.wire_bytes() + 4 + packed.len()
+            }
+        }
+    }
+
+    pub fn wire_bits(&self) -> u64 {
+        self.wire_bytes() as u64 * 8
+    }
+
+    /// Serialize to a flat byte vector (little-endian).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        match &self.body {
+            Body::Dense { values } => {
+                out.push(KIND_DENSE);
+                out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+                for v in values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Body::Delta { bits, n, step, bitmap, packed } => {
+                out.push(KIND_DELTA);
+                out.push(*bits);
+                out.extend_from_slice(&n.to_le_bytes());
+                out.extend_from_slice(&step.to_le_bytes());
+                let bm = bitmap.to_bytes();
+                out.extend_from_slice(&(bm.len() as u32).to_le_bytes());
+                out.extend_from_slice(&bm);
+                out.extend_from_slice(&(packed.len() as u32).to_le_bytes());
+                out.extend_from_slice(packed);
+            }
+        }
+        out
+    }
+
+    /// Parse and validate a frame. Every recorded length is checked
+    /// against the bytes actually present — a truncated or padded
+    /// payload is an error, never silent garbage.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, k: usize| -> Result<&[u8]> {
+            ensure!(*pos + k <= bytes.len(), "downlink frame truncated");
+            let s = &bytes[*pos..*pos + k];
+            *pos += k;
+            Ok(s)
+        };
+        let kind = *take(&mut pos, 1)?.first().unwrap();
+        match kind {
+            KIND_DENSE => {
+                let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+                ensure!(
+                    bytes.len() == 5 + 4 * n,
+                    "dense frame records {n} params but carries {} payload bytes",
+                    bytes.len().saturating_sub(5)
+                );
+                let mut values = Vec::with_capacity(n);
+                for _ in 0..n {
+                    values.push(f32::from_le_bytes(take(&mut pos, 4)?.try_into()?));
+                }
+                Ok(Self { body: Body::Dense { values } })
+            }
+            KIND_DELTA => {
+                let bits = *take(&mut pos, 1)?.first().unwrap();
+                ensure!((2..=16).contains(&bits), "delta frame bits {bits} out of range");
+                let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+                let step = f32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+                ensure!(step.is_finite() && step >= 0.0, "delta frame step {step} invalid");
+                let bm_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+                let bitmap = Encoded::from_bytes(take(&mut pos, bm_len)?)
+                    .context("delta frame bitmap")?;
+                ensure!(bitmap.ones <= n, "bitmap one-count {} exceeds n {n}", bitmap.ones);
+                let packed_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+                let need = ((bitmap.ones as usize) * bits as usize).div_ceil(8);
+                ensure!(
+                    packed_len == need,
+                    "delta frame carries {packed_len} value bytes, {} changed coords at \
+                     {bits} bits need {need}",
+                    bitmap.ones
+                );
+                let packed = take(&mut pos, packed_len)?.to_vec();
+                ensure!(pos == bytes.len(), "trailing bytes after downlink frame");
+                Ok(Self { body: Body::Delta { bits, n, step, bitmap, packed } })
+            }
+            other => bail!("unknown downlink frame kind {other}"),
+        }
+    }
+
+    /// Reconstruct the broadcast state. Delta frames need `prev` — the
+    /// reconstruction this client held after the previous round. The
+    /// result is bit-identical to the server's own `recon` (both sides
+    /// compute `prev + q*step` in the same f32 order).
+    pub fn decode(&self, prev: Option<&[f32]>) -> Result<Vec<f32>> {
+        match &self.body {
+            Body::Dense { values } => {
+                if let Some(p) = prev {
+                    ensure!(
+                        p.len() == values.len(),
+                        "dense frame for {} params, client holds {}",
+                        values.len(),
+                        p.len()
+                    );
+                }
+                Ok(values.clone())
+            }
+            Body::Delta { bits, n, step, bitmap, packed } => {
+                let n = *n as usize;
+                let prev = prev.context("delta frame needs the previous broadcast state")?;
+                ensure!(
+                    prev.len() == n,
+                    "delta frame for {n} params, client holds {}",
+                    prev.len()
+                );
+                let changed = codec::decode(bitmap, n).context("delta frame bitmap")?;
+                let mut out = prev.to_vec();
+                let mut r = BitReader::new(packed);
+                for idx in changed.iter_ones() {
+                    let neg = r.get_bit();
+                    let mag = r.get_bits(*bits - 1);
+                    ensure!(mag >= 1, "zero quantizer magnitude (corrupt delta payload)");
+                    let q = if neg { -(mag as i64) } else { mag as i64 };
+                    out[idx] = prev[idx] + q as f32 * step;
+                }
+                // Truncation is impossible here: `from_bytes` already
+                // enforced packed_len == ceil(ones*bits/8), and the loop
+                // consumes exactly ones*bits bits.
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// Server-side downlink state: the mode plus the reconstruction every
+/// client currently holds. Residual feedback is implicit — deltas are
+/// computed against `recon`, so what a frame fails to deliver this round
+/// (quantization error, capped coordinates) is still pending next round.
+#[derive(Debug, Clone)]
+pub struct DownlinkEncoder {
+    mode: DownlinkMode,
+    recon: Vec<f32>,
+}
+
+impl DownlinkEncoder {
+    pub fn new(mode: DownlinkMode) -> Self {
+        Self { mode, recon: Vec::new() }
+    }
+
+    pub fn mode(&self) -> DownlinkMode {
+        self.mode
+    }
+
+    /// The state the clients hold after the last `broadcast` (equal to
+    /// the broadcast state exactly under `Float32`, quantized under
+    /// `QDelta`). Empty before the first broadcast.
+    pub fn recon(&self) -> &[f32] {
+        &self.recon
+    }
+
+    /// Broadcast `state` to the fleet: updates `recon` and returns the
+    /// per-client wire bits the accounting should record.
+    ///
+    /// `Float32` is counted as raw floats (n * 32 bits, no framing) so
+    /// the baseline matches the paper's accounting bit-for-bit.
+    pub fn broadcast(&mut self, state: &[f32]) -> u64 {
+        match self.mode {
+            DownlinkMode::Float32 => {
+                self.recon = state.to_vec();
+                state.len() as u64 * 32
+            }
+            DownlinkMode::QDelta { .. } => self.encode_frame(state).wire_bits(),
+        }
+    }
+
+    /// What the fleet would hold if `state` were broadcast right now,
+    /// without committing anything to the stream — used to evaluate the
+    /// model the way a device would actually see it.
+    pub fn preview(&self, state: &[f32]) -> Vec<f32> {
+        match self.mode {
+            DownlinkMode::Float32 => state.to_vec(),
+            DownlinkMode::QDelta { .. } => {
+                let mut probe = self.clone();
+                probe.broadcast(state);
+                probe.recon
+            }
+        }
+    }
+
+    /// Encode the next broadcast of `state` as an explicit wire frame,
+    /// advancing `recon` to what the clients will reconstruct from it.
+    pub fn encode_frame(&mut self, state: &[f32]) -> DownlinkFrame {
+        let bits = match self.mode {
+            DownlinkMode::Float32 => {
+                return self.dense_frame(state);
+            }
+            DownlinkMode::QDelta { bits } => bits,
+        };
+        if self.recon.len() != state.len() {
+            // First broadcast (or a model swap): nothing to delta against.
+            return self.dense_frame(state);
+        }
+
+        let n = state.len();
+        let qmax = (1i64 << (bits - 1)) - 1;
+        let deltas: Vec<f32> = state.iter().zip(&self.recon).map(|(&s, &r)| s - r).collect();
+        let max_abs = deltas.iter().fold(0.0f32, |m, &d| m.max(d.abs()));
+        if max_abs == 0.0 {
+            // Nothing changed: an empty bitmap is the cheapest truth.
+            let bitmap = codec::encode(&BitVec::zeros(n));
+            return DownlinkFrame {
+                body: Body::Delta { bits, n: n as u32, step: 0.0, bitmap, packed: Vec::new() },
+            };
+        }
+        let step = max_abs / qmax as f32;
+        let mut q: Vec<i64> = deltas
+            .iter()
+            .map(|&d| ((d / step).round() as i64).clamp(-qmax, qmax))
+            .collect();
+
+        // Per-round change cap: ship only the largest |delta| coordinates
+        // when too many moved; the rest stays in the residual.
+        let cap = (n / MAX_CHANGED_FRAC_INV).max(1);
+        let mut changed: Vec<usize> = (0..n).filter(|&i| q[i] != 0).collect();
+        if changed.len() > cap {
+            changed.sort_unstable_by(|&a, &b| {
+                deltas[b].abs().total_cmp(&deltas[a].abs()).then(a.cmp(&b))
+            });
+            for &i in &changed[cap..] {
+                q[i] = 0;
+            }
+            changed.truncate(cap);
+            changed.sort_unstable();
+        }
+
+        let bitmap_bits = BitVec::from_iter_len((0..n).map(|i| q[i] != 0), n);
+        let bitmap = codec::encode(&bitmap_bits);
+        let mut w = BitWriter::new();
+        for &i in &changed {
+            w.put_bit(q[i] < 0);
+            w.put_bits(q[i].unsigned_abs(), bits - 1);
+        }
+        let packed = w.into_bytes();
+
+        let frame = DownlinkFrame {
+            body: Body::Delta { bits, n: n as u32, step, bitmap, packed },
+        };
+        if frame.wire_bytes() >= 1 + 4 + 4 * n {
+            // Deltas so dense that raw floats are cheaper — fall back.
+            return self.dense_frame(state);
+        }
+        for &i in &changed {
+            self.recon[i] += q[i] as f32 * step;
+        }
+        frame
+    }
+
+    fn dense_frame(&mut self, state: &[f32]) -> DownlinkFrame {
+        self.recon = state.to_vec();
+        DownlinkFrame { body: Body::Dense { values: state.to_vec() } }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn uniform(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n).map(|_| rng.next_f32()).collect()
+    }
+
+    #[test]
+    fn parse_modes() {
+        assert_eq!(DownlinkMode::parse("float32").unwrap(), DownlinkMode::Float32);
+        assert_eq!(DownlinkMode::parse("qdelta").unwrap(), DownlinkMode::QDelta { bits: 8 });
+        assert_eq!(DownlinkMode::parse("qdelta4").unwrap(), DownlinkMode::QDelta { bits: 4 });
+        assert_eq!(DownlinkMode::parse("QDelta8").unwrap(), DownlinkMode::QDelta { bits: 8 });
+        assert!(DownlinkMode::parse("qdelta1").is_err());
+        assert!(DownlinkMode::parse("qdelta17").is_err());
+        assert!(DownlinkMode::parse("huffman").is_err());
+        assert_eq!(DownlinkMode::parse("qdelta8").unwrap().name(), "qdelta8");
+    }
+
+    #[test]
+    fn float32_mode_is_exact_and_32bpp() {
+        let state = uniform(1000, 1);
+        let mut enc = DownlinkEncoder::new(DownlinkMode::Float32);
+        let bits = enc.broadcast(&state);
+        assert_eq!(bits, 32_000);
+        assert_eq!(enc.recon(), &state[..]);
+        assert_eq!(enc.preview(&state), state);
+    }
+
+    #[test]
+    fn first_qdelta_broadcast_is_dense_and_exact() {
+        let state = uniform(500, 2);
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
+        let frame = enc.encode_frame(&state);
+        assert!(frame.is_dense());
+        assert_eq!(enc.recon(), &state[..]);
+        let decoded = DownlinkFrame::from_bytes(&frame.to_bytes()).unwrap();
+        assert_eq!(decoded.decode(None).unwrap(), state);
+    }
+
+    #[test]
+    fn delta_roundtrip_matches_server_recon_bit_for_bit() {
+        let n = 4000;
+        let a = uniform(n, 3);
+        let mut rng = Xoshiro256::new(4);
+        // ~30% of coordinates move
+        let b: Vec<f32> = a
+            .iter()
+            .map(|&v| if rng.next_f64() < 0.3 { v + 0.2 * (rng.next_f32() - 0.5) } else { v })
+            .collect();
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
+        let f0 = enc.encode_frame(&a);
+        let client0 = DownlinkFrame::from_bytes(&f0.to_bytes()).unwrap().decode(None).unwrap();
+        assert_eq!(client0, enc.recon());
+        let f1 = enc.encode_frame(&b);
+        assert!(!f1.is_dense());
+        let client1 = DownlinkFrame::from_bytes(&f1.to_bytes())
+            .unwrap()
+            .decode(Some(&client0))
+            .unwrap();
+        let server: Vec<u32> = enc.recon().iter().map(|v| v.to_bits()).collect();
+        let client: Vec<u32> = client1.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(server, client, "client and server reconstructions diverged");
+    }
+
+    #[test]
+    fn unchanged_state_costs_almost_nothing() {
+        let state = uniform(10_000, 5);
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
+        enc.broadcast(&state);
+        let bits = enc.broadcast(&state);
+        assert!(bits < 2_000, "empty delta should be tiny, got {bits} bits");
+        assert_eq!(enc.recon(), &state[..]);
+    }
+
+    #[test]
+    fn change_cap_bounds_the_rate() {
+        let n = 20_000;
+        let a = uniform(n, 6);
+        let b = uniform(n, 7); // every coordinate moves
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
+        enc.broadcast(&a);
+        let bits = enc.broadcast(&b);
+        let bpp = bits as f64 / n as f64;
+        assert!(bpp < 4.0, "capped delta must stay under 4 Bpp, got {bpp:.3}");
+    }
+
+    #[test]
+    fn residual_feedback_converges_to_target() {
+        let n = 512;
+        let a = uniform(n, 8);
+        let b: Vec<f32> = a.iter().map(|&v| v + 0.5).collect();
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
+        enc.broadcast(&a);
+        for _ in 0..12 {
+            enc.broadcast(&b);
+        }
+        let err = enc
+            .recon()
+            .iter()
+            .zip(&b)
+            .fold(0.0f32, |m, (&r, &t)| m.max((r - t).abs()));
+        assert!(err < 1e-4, "residual feedback must converge, err={err}");
+    }
+
+    #[test]
+    fn truncated_and_corrupt_frames_rejected() {
+        let a = uniform(300, 9);
+        let b: Vec<f32> = a.iter().map(|&v| v + 0.1).collect();
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 6 });
+        enc.encode_frame(&a);
+        let frame = enc.encode_frame(&b);
+        let bytes = frame.to_bytes();
+        // truncation at any point must be caught
+        assert!(DownlinkFrame::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(DownlinkFrame::from_bytes(&bytes[..3]).is_err());
+        assert!(DownlinkFrame::from_bytes(&[]).is_err());
+        // unknown kind
+        let mut bad = bytes.clone();
+        bad[0] = 9;
+        assert!(DownlinkFrame::from_bytes(&bad).is_err());
+        // delta frame without the previous state
+        let parsed = DownlinkFrame::from_bytes(&bytes).unwrap();
+        assert!(parsed.decode(None).is_err());
+        // wrong prev length
+        assert!(parsed.decode(Some(&a[..10])).is_err());
+    }
+
+    #[test]
+    fn dense_fallback_when_deltas_do_not_pay() {
+        // 16-bit deltas on a 4-float vector: delta framing (~30 B of
+        // headers + bitmap + values) exceeds the 21-B dense frame, so
+        // the encoder must fall back to exact floats.
+        let a = uniform(4, 10);
+        let b = uniform(4, 11);
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 16 });
+        enc.encode_frame(&a);
+        let frame = enc.encode_frame(&b);
+        assert!(frame.is_dense());
+        assert_eq!(enc.recon(), &b[..]);
+    }
+
+    #[test]
+    fn preview_matches_committed_broadcast_without_advancing_state() {
+        let n = 2000;
+        let a = uniform(n, 12);
+        let b: Vec<f32> = a.iter().map(|&v| v + 0.05).collect();
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
+        enc.broadcast(&a);
+        let before = enc.recon().to_vec();
+        let previewed = enc.preview(&b);
+        assert_eq!(enc.recon(), &before[..], "preview must not commit");
+        enc.broadcast(&b);
+        let committed: Vec<u32> = enc.recon().iter().map(|v| v.to_bits()).collect();
+        let previewed: Vec<u32> = previewed.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(committed, previewed);
+    }
+}

@@ -7,6 +7,8 @@
 //! (single-pass, branch-light) alternative the MaskCodec races against
 //! the arithmetic coder.
 
+use anyhow::{ensure, Result};
+
 use super::bitstream::{BitReader, BitWriter};
 use crate::util::BitVec;
 
@@ -41,20 +43,40 @@ pub fn encode(mask: &BitVec) -> Vec<u8> {
 }
 
 /// Decode a Rice-coded mask of `len` bits with `ones` one-bits.
-pub fn decode(bytes: &[u8], len: usize, ones: usize) -> BitVec {
+///
+/// Validates the payload as it decodes: a gap that overruns the mask
+/// length, a unary run longer than any legal gap, or a stream that
+/// reads past the available bytes (truncation) is an error — never
+/// silently-garbled positions.
+pub fn decode(bytes: &[u8], len: usize, ones: usize) -> Result<BitVec> {
+    ensure!(ones <= len, "one-count {ones} exceeds mask length {len}");
     let mut r = BitReader::new(bytes);
     let k = r.get_bits(5) as u8;
     let mut out = BitVec::zeros(len);
-    let mut pos: i64 = -1;
-    for _ in 0..ones {
+    let mut pos: u64 = 0; // next candidate position
+    for i in 0..ones {
         let q = r.get_unary();
+        ensure!(
+            q <= len as u64,
+            "corrupt Rice payload: unary run {q} exceeds mask length {len}"
+        );
         let rem = r.get_bits(k);
         let gap = (q << k) | rem;
-        pos += gap as i64 + 1;
-        debug_assert!((pos as usize) < len, "gap decode overran mask length");
-        out.set(pos as usize, true);
+        let idx = pos + gap;
+        ensure!(
+            (idx as usize) < len,
+            "Rice gap decode overran mask length (one #{i} at {idx} >= {len})"
+        );
+        out.set(idx as usize, true);
+        pos = idx + 1;
     }
-    out
+    ensure!(
+        r.bit_pos() <= bytes.len() * 8,
+        "Rice payload truncated: {} bits consumed, {} available",
+        r.bit_pos(),
+        bytes.len() * 8
+    );
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -72,16 +94,28 @@ mod tests {
         for &p in &[0.001, 0.01, 0.1, 0.5, 0.95] {
             let m = random_mask(20_000, p, 9);
             let coded = encode(&m);
-            assert_eq!(decode(&coded, m.len(), m.count_ones()), m, "p={p}");
+            assert_eq!(decode(&coded, m.len(), m.count_ones()).unwrap(), m, "p={p}");
         }
     }
 
     #[test]
     fn empty_and_full() {
         let zero = BitVec::zeros(1000);
-        assert_eq!(decode(&encode(&zero), 1000, 0), zero);
+        assert_eq!(decode(&encode(&zero), 1000, 0).unwrap(), zero);
         let full = BitVec::from_iter_len((0..1000).map(|_| true), 1000);
-        assert_eq!(decode(&encode(&full), 1000, 1000), full);
+        assert_eq!(decode(&encode(&full), 1000, 1000).unwrap(), full);
+    }
+
+    #[test]
+    fn truncated_and_overrun_payloads_error() {
+        let m = random_mask(20_000, 0.03, 17);
+        let coded = encode(&m);
+        let ones = m.count_ones();
+        // chop half the payload: the decoder must notice, not guess
+        assert!(decode(&coded[..coded.len() / 2], 20_000, ones).is_err());
+        // claim more ones than the mask can hold
+        assert!(decode(&coded, 100, ones).is_err());
+        assert!(decode(&coded, 20_000, 20_001).is_err());
     }
 
     #[test]
@@ -104,7 +138,7 @@ mod tests {
         for pos in [0usize, 1, 63, 64, 999] {
             let mut m = BitVec::zeros(1000);
             m.set(pos, true);
-            assert_eq!(decode(&encode(&m), 1000, 1), m, "pos={pos}");
+            assert_eq!(decode(&encode(&m), 1000, 1).unwrap(), m, "pos={pos}");
         }
     }
 }

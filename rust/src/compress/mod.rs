@@ -1,12 +1,17 @@
-//! Uplink compression substrate: bitstreams + entropy coders + codec.
+//! Bidirectional compression substrate: bitstreams + entropy coders +
+//! the uplink mask codec + the downlink delta codec.
 //!
-//! `codec::encode` is the production entry point (used by the FL client
-//! to produce wire bytes); `arithmetic` / `golomb` are also public for
-//! the component benchmarks and the codec ablation.
+//! `codec::encode` is the production uplink entry point (used by the FL
+//! client to produce wire bytes); `downlink` is the server->client
+//! direction (quantized sparse deltas, DESIGN.md §Downlink);
+//! `arithmetic` / `golomb` are also public for the component benchmarks
+//! and the codec ablation.
 
 pub mod arithmetic;
 pub mod bitstream;
 pub mod codec;
+pub mod downlink;
 pub mod golomb;
 
 pub use codec::{decode, encode, encode_with, Encoded, Method};
+pub use downlink::{DownlinkEncoder, DownlinkFrame, DownlinkMode};

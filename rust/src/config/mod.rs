@@ -17,6 +17,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::compress::DownlinkMode;
+
 /// Which algorithm drives the federation (paper + baselines).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algorithm {
@@ -109,6 +111,10 @@ pub struct ExperimentConfig {
     pub dropout: f64,
     /// Server aggregation: eq. 8 mean, or Beta-posterior damping.
     pub bayes_prior: f64,
+    /// Downlink wire format: raw f32 (the paper's implicit 32 Bpp) or
+    /// quantized sparse deltas with residual feedback (`qdelta<bits>`,
+    /// DESIGN.md §Downlink). Clients train on exactly what this ships.
+    pub downlink: DownlinkMode,
     /// Worker threads for the parallel round engine (0 = all cores,
     /// 1 = sequential reference path). Results are bit-identical at any
     /// value — this is a throughput knob, not a semantics knob.
@@ -142,6 +148,7 @@ impl Default for ExperimentConfig {
             participation: 1.0,
             dropout: 0.0,
             bayes_prior: 0.0,
+            downlink: DownlinkMode::Float32,
             threads: 0,
             seed: 2023,
             artifacts_dir: "artifacts".into(),
@@ -207,6 +214,7 @@ impl ExperimentConfig {
             "participation" => self.participation = val.parse()?,
             "dropout" => self.dropout = val.parse()?,
             "bayes_prior" => self.bayes_prior = val.parse()?,
+            "downlink" => self.downlink = DownlinkMode::parse(val)?,
             "optimizer" => {
                 self.adam = match val {
                     "adam" => true,
@@ -347,5 +355,20 @@ mod tests {
     fn uplink_kind() {
         assert!(Algorithm::FedPMReg.uplink_is_binary());
         assert!(!Algorithm::FedAvg.uplink_is_binary());
+    }
+
+    #[test]
+    fn downlink_key_parses_and_defaults_to_float32() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.downlink, DownlinkMode::Float32);
+        cfg.apply("downlink", "qdelta8").unwrap();
+        assert_eq!(cfg.downlink, DownlinkMode::QDelta { bits: 8 });
+        cfg.validate().unwrap();
+        assert!(cfg.apply("downlink", "qdelta99").is_err());
+        let cfg = ExperimentConfig::from_toml_str(
+            "[experiment]\ndownlink = \"qdelta4\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.downlink, DownlinkMode::QDelta { bits: 4 });
     }
 }

@@ -16,7 +16,10 @@ use crate::compress::{self, Encoded};
 use crate::util::BitVec;
 
 const MAGIC: &[u8; 4] = b"FSRN";
-const VERSION: u16 = 1;
+// v2: the embedded `Encoded` mask grew a payload bit-length header
+// field; v1 files are rejected with a clean version error instead of a
+// confusing bit-length mismatch.
+const VERSION: u16 = 2;
 
 /// A strong-LTH model checkpoint: seed + coded mask.
 #[derive(Debug, Clone)]
@@ -37,7 +40,9 @@ impl Checkpoint {
         }
     }
 
-    pub fn decode_mask(&self) -> BitVec {
+    /// Decode the stored mask, validating the coded payload (truncated
+    /// or corrupt checkpoints error instead of yielding garbage masks).
+    pub fn decode_mask(&self) -> Result<BitVec> {
         compress::decode(&self.mask, self.n_params as usize)
     }
 
@@ -117,7 +122,7 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.model, "mlp_tiny");
         assert_eq!(back.weight_seed, 2023);
-        assert_eq!(back.decode_mask(), mask);
+        assert_eq!(back.decode_mask().unwrap(), mask);
         std::fs::remove_file(&path).ok();
     }
 
@@ -134,6 +139,16 @@ mod tests {
         let n = 50_000;
         let ck = Checkpoint::new("m", 0, n, &sparse_mask(n, 0.5));
         assert!(ck.compression_factor() > 30.0, "{}", ck.compression_factor());
+    }
+
+    #[test]
+    fn truncated_mask_payload_rejected() {
+        let mask = sparse_mask(5_000, 0.1);
+        let ck = Checkpoint::new("m", 1, 5_000, &mask);
+        let mut enc = ck.mask.clone();
+        enc.payload.pop(); // recorded bit-length no longer matches
+        let bad = Checkpoint { mask: enc, ..ck };
+        assert!(bad.decode_mask().is_err());
     }
 
     #[test]

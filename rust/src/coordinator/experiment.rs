@@ -14,7 +14,7 @@ use crate::config::{ExperimentConfig, Partition};
 use crate::coordinator::RoundEngine;
 use crate::data::{loader, partition_iid, partition_noniid, Dataset, SynthSpec, Synthetic};
 use crate::fl::{Client, CommTotals, MetricsSink, RoundComm, RoundRecord};
-use crate::runtime::ModelRuntime;
+use crate::runtime::{EvalMetrics, ModelRuntime};
 use crate::util::SeedSequence;
 
 /// Per-device evaluation view: which test rows match the device's
@@ -45,7 +45,11 @@ pub struct RunSummary {
     /// "average bits per parameter required".
     pub avg_est_bpp: f64,
     pub avg_coded_bpp: f64,
+    /// Mean measured downlink Bpp over all rounds (32.0 for raw floats;
+    /// far less with `downlink=qdelta` — DESIGN.md §Downlink).
+    pub avg_dl_bpp: f64,
     pub total_ul_mb: f64,
+    pub total_dl_mb: f64,
     pub storage_bits: u64,
     pub rounds: usize,
 }
@@ -134,12 +138,11 @@ impl Experiment {
         Ok((gen.generate(cfg.train_samples, 1), gen.generate(cfg.test_samples, 2)))
     }
 
-    /// Evaluate the strategy's current model over all device targets.
+    /// Evaluate the strategy's current model over all device targets,
+    /// weighting each device by its eval-shard sample count.
     fn evaluate(&self, round: usize) -> Result<(f64, f64)> {
         let model = self.strategy.eval_model(round);
         let ones = vec![1.0f32; self.rt.manifest.n_params];
-        let mut acc = 0.0;
-        let mut loss = 0.0;
         // IID shards all have the same class set; dedupe the work by
         // evaluating once and replicating when every shard is identical.
         let identical = self
@@ -147,17 +150,24 @@ impl Experiment {
             .iter()
             .all(|c| c.shard.classes.len() == self.train.n_classes);
         let n_eval = if identical { 1 } else { self.eval_shards.len() };
+        let mut per_shard = Vec::with_capacity(n_eval);
         for shard in self.eval_shards.iter().take(n_eval) {
+            if shard.y.is_empty() {
+                // A test split can miss a device's classes entirely (small
+                // non-IID splits); an empty shard says nothing about the
+                // model and must carry zero weight, not a 0.0 "accuracy".
+                per_shard.push(EvalMetrics::default());
+                continue;
+            }
             let m = match &model {
                 EvalModel::Masked(mask) => self.rt.eval_mask(mask, &shard.x, &shard.y)?,
                 EvalModel::Dense(w) => {
                     self.rt.eval_with_weights(&ones, w, &shard.x, &shard.y)?
                 }
             };
-            acc += m.accuracy();
-            loss += m.mean_loss();
+            per_shard.push(m);
         }
-        Ok((acc / n_eval as f64, loss / n_eval as f64))
+        Ok(weighted_eval(&per_shard))
     }
 
     /// Run all rounds, logging one record per round into `sink`.
@@ -166,6 +176,7 @@ impl Experiment {
         let mut last_loss = 0.0;
         let mut est_bpp_sum = 0.0;
         let mut coded_bpp_sum = 0.0;
+        let mut dl_bpp_sum = 0.0;
         for round in 1..=self.cfg.rounds {
             let t0 = Instant::now();
             let mut comm = RoundComm::new(self.rt.manifest.n_params);
@@ -194,6 +205,7 @@ impl Experiment {
             self.totals.add_round(&comm);
             est_bpp_sum += comm.est_bpp();
             coded_bpp_sum += comm.measured_bpp();
+            dl_bpp_sum += comm.measured_dl_bpp();
 
             if round % self.cfg.eval_every == 0 || round == self.cfg.rounds {
                 let (a, l) = self.evaluate(round)?;
@@ -207,6 +219,7 @@ impl Experiment {
                 train_loss: stats.train_loss,
                 est_bpp: comm.est_bpp(),
                 coded_bpp: comm.measured_bpp(),
+                dl_bpp: comm.measured_dl_bpp(),
                 mean_theta: stats.mean_theta,
                 mask_density: stats.mask_density,
                 secs: t0.elapsed().as_secs_f64(),
@@ -228,7 +241,9 @@ impl Experiment {
             final_accuracy: sink.tail_mean(3, |r| r.accuracy),
             avg_est_bpp: est_bpp_sum / self.cfg.rounds as f64,
             avg_coded_bpp: coded_bpp_sum / self.cfg.rounds as f64,
+            avg_dl_bpp: dl_bpp_sum / self.cfg.rounds as f64,
             total_ul_mb: self.totals.ul_megabytes(),
+            total_dl_mb: self.totals.dl_megabytes(),
             storage_bits: self.strategy.storage_bits(),
             rounds: self.cfg.rounds,
         })
@@ -244,6 +259,23 @@ impl Experiment {
     }
 }
 
+/// Sample-weighted mean accuracy and loss over per-device eval shards.
+///
+/// Each device counts by its eval-shard sample count: accuracy is total
+/// correct / total examples, loss is total loss / total examples. Empty
+/// shards (examples == 0) contribute nothing — the seed's unweighted
+/// mean let an empty non-IID shard inject a 0.0 accuracy / 0.0 loss
+/// term and skew every reported number.
+fn weighted_eval(per_shard: &[EvalMetrics]) -> (f64, f64) {
+    let examples: usize = per_shard.iter().map(|m| m.examples).sum();
+    if examples == 0 {
+        return (0.0, 0.0);
+    }
+    let correct: f64 = per_shard.iter().map(|m| m.correct).sum();
+    let loss: f64 = per_shard.iter().map(|m| m.loss_sum).sum();
+    (correct / examples as f64, loss / examples as f64)
+}
+
 /// Random subsample (without replacement) to the requested size.
 fn subsample(d: Dataset, n: usize, seed: u64) -> Dataset {
     if n >= d.len() {
@@ -255,4 +287,69 @@ fn subsample(d: Dataset, n: usize, seed: u64) -> Dataset {
     idx.truncate(n);
     let (x, y) = d.gather(&idx);
     Dataset::new(x, y, d.dim, d.n_classes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(correct: f64, loss_sum: f64, examples: usize) -> EvalMetrics {
+        EvalMetrics { correct, loss_sum, examples }
+    }
+
+    #[test]
+    fn weighted_eval_weights_by_sample_count() {
+        // 90% on 100 samples + 50% on 10 samples: weighted 95/110, not
+        // the unweighted (0.9 + 0.5)/2 = 0.7.
+        let (acc, loss) =
+            weighted_eval(&[metrics(90.0, 100.0, 100), metrics(5.0, 30.0, 10)]);
+        assert!((acc - 95.0 / 110.0).abs() < 1e-12, "acc={acc}");
+        assert!((loss - 130.0 / 110.0).abs() < 1e-12, "loss={loss}");
+    }
+
+    #[test]
+    fn weighted_eval_skips_empty_shards() {
+        // an empty shard must not drag the mean toward zero
+        let full = [metrics(8.0, 4.0, 10)];
+        let with_empty = [metrics(8.0, 4.0, 10), EvalMetrics::default()];
+        assert_eq!(weighted_eval(&full), weighted_eval(&with_empty));
+        assert_eq!(weighted_eval(&full).0, 0.8);
+    }
+
+    #[test]
+    fn weighted_eval_all_empty_is_zero_not_nan() {
+        let (acc, loss) = weighted_eval(&[EvalMetrics::default(); 3]);
+        assert_eq!((acc, loss), (0.0, 0.0));
+        let (acc, _) = weighted_eval(&[]);
+        assert_eq!(acc, 0.0);
+    }
+
+    #[test]
+    fn noniid_run_with_sparse_test_split_stays_finite() {
+        // A single test sample covers one of 10 classes, so most of the
+        // 10 two-class devices are guaranteed an empty eval shard; the
+        // run must not skew or NaN (the seed averaged-in 0.0 accuracy
+        // and 0.0 loss for every empty shard).
+        let cfg = ExperimentConfig {
+            model: "mlp_tiny".into(),
+            dataset: "tiny".into(),
+            clients: 10,
+            rounds: 2,
+            partition: Partition::NonIid { c: 2 },
+            train_samples: 400,
+            test_samples: 1,
+            seed: 5,
+            ..ExperimentConfig::default()
+        };
+        let mut sink = MetricsSink::new("", 1000).unwrap();
+        let mut exp = Experiment::build(cfg).unwrap();
+        let empty_shards =
+            exp.eval_shards.iter().filter(|s| s.y.is_empty()).count();
+        assert!(empty_shards > 0, "test split should leave some shards empty");
+        let summary = exp.run(&mut sink).unwrap();
+        assert!(summary.final_accuracy.is_finite());
+        for r in sink.records() {
+            assert!(r.accuracy.is_finite() && r.loss.is_finite());
+        }
+    }
 }

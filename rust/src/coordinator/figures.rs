@@ -66,17 +66,20 @@ fn print_series(curves: &[Curve]) {
 fn print_summaries(title: &str, curves: &[Curve]) {
     println!("\n## {title}");
     println!(
-        "{:<24} {:>9} {:>10} {:>11} {:>10} {:>12}",
-        "curve", "final_acc", "avg_estBpp", "avg_codedBpp", "UL_MB", "storage_bits"
+        "{:<24} {:>9} {:>10} {:>11} {:>9} {:>9} {:>9} {:>12}",
+        "curve", "final_acc", "avg_estBpp", "avg_codedBpp", "avg_DLBpp", "UL_MB", "DL_MB",
+        "storage_bits"
     );
     for c in curves {
         println!(
-            "{:<24} {:>9.4} {:>10.4} {:>11.4} {:>10.3} {:>12}",
+            "{:<24} {:>9.4} {:>10.4} {:>11.4} {:>9.4} {:>9.3} {:>9.3} {:>12}",
             c.label,
             c.summary.final_accuracy,
             c.summary.avg_est_bpp,
             c.summary.avg_coded_bpp,
+            c.summary.avg_dl_bpp,
             c.summary.total_ul_mb,
+            c.summary.total_dl_mb,
             c.summary.storage_bits
         );
     }

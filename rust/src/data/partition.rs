@@ -59,8 +59,12 @@ pub fn partition_iid(data: &Dataset, k: usize, seed: u64) -> Vec<Shard> {
 /// Label-heterogeneous split: each device gets `c` random classes.
 ///
 /// Every class is guaranteed at least one holder (otherwise some samples
-/// would vanish from the federation): classes are dealt round-robin
-/// first, then devices fill up to `c` with random extra classes.
+/// would silently vanish from the federation): classes are dealt
+/// round-robin first, then devices fill up to `c` with random extra
+/// classes. When `k*c < n_classes` the per-device budget is impossible
+/// to honor without dropping whole classes, so the round-robin surplus
+/// is kept instead — devices then hold up to `ceil(n_classes/k)` classes
+/// and the federation still covers the dataset exactly.
 pub fn partition_noniid(data: &Dataset, k: usize, c: usize, seed: u64) -> Vec<Shard> {
     assert!(k > 0, "need at least one client");
     assert!(c >= 1 && c <= data.n_classes, "c must be in 1..=n_classes");
@@ -70,7 +74,9 @@ pub fn partition_noniid(data: &Dataset, k: usize, c: usize, seed: u64) -> Vec<Sh
     // --- assign classes to devices ------------------------------------
     let mut device_classes: Vec<Vec<usize>> = vec![Vec::new(); k];
     // Round-robin over a shuffled class list so every class has >= 1
-    // holder whenever k*c >= n_classes (the paper's regimes satisfy it).
+    // holder. Dealt classes are never dropped: truncating to `c` here
+    // (as the seed did) silently erased every sample of a class with no
+    // other holder whenever k*c < n_classes.
     let mut classes: Vec<usize> = (0..n_classes).collect();
     rng.shuffle(&mut classes);
     let mut di = 0;
@@ -78,7 +84,7 @@ pub fn partition_noniid(data: &Dataset, k: usize, c: usize, seed: u64) -> Vec<Sh
         device_classes[di % k].push(cl);
         di += 1;
     }
-    // Fill remaining slots with distinct random classes.
+    // Fill remaining slots (if any) with distinct random classes.
     for slots in device_classes.iter_mut() {
         while slots.len() < c {
             let cl = rng.below(n_classes as u64) as usize;
@@ -86,7 +92,6 @@ pub fn partition_noniid(data: &Dataset, k: usize, c: usize, seed: u64) -> Vec<Sh
                 slots.push(cl);
             }
         }
-        slots.truncate(c); // if n_classes > k*c, some devices got extras
         slots.sort_unstable();
     }
 
@@ -110,8 +115,9 @@ pub fn partition_noniid(data: &Dataset, k: usize, c: usize, seed: u64) -> Vec<Sh
         .collect();
     for cl in 0..n_classes {
         let hs = &holders[cl];
+        debug_assert!(!hs.is_empty(), "round-robin deal leaves no class unheld");
         if hs.is_empty() {
-            continue; // class unassigned (only when k*c < n_classes)
+            continue; // unreachable: kept as a belt against future edits
         }
         for (j, &sample) in per_class[cl].iter().enumerate() {
             shards[hs[j % hs.len()]].indices.push(sample);
@@ -206,5 +212,50 @@ mod tests {
         let shards = partition_noniid(&d, 30, 4, 29);
         let total: f64 = shards.iter().map(Shard::weight).sum();
         assert_eq!(total as usize, d.len());
+    }
+
+    #[test]
+    fn small_federation_regime_covers_dataset_exactly() {
+        // k*c < n_classes (3*2 = 6 < 10): the seed silently dropped
+        // every sample of the 4 unheld classes. The round-robin surplus
+        // must keep full coverage instead.
+        let d = dataset();
+        for seed in [31u64, 32, 33] {
+            let shards = partition_noniid(&d, 3, 2, seed);
+            let mut all: Vec<usize> =
+                shards.iter().flat_map(|s| s.indices.clone()).collect();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), d.len(), "seed {seed}: samples dropped");
+            let total: f64 = shards.iter().map(Shard::weight).sum();
+            assert_eq!(total as usize, d.len(), "seed {seed}");
+            // every class held, budget relaxed only to the dealt surplus
+            let mut held = vec![false; d.n_classes];
+            for s in &shards {
+                assert!(
+                    s.classes.len() <= d.n_classes.div_ceil(3),
+                    "seed {seed}: device {} holds {:?}",
+                    s.client_id,
+                    s.classes
+                );
+                for &cl in &s.classes {
+                    held[cl] = true;
+                }
+                for &i in &s.indices {
+                    assert!(s.classes.contains(&(d.y[i] as usize)), "seed {seed}");
+                }
+            }
+            assert!(held.iter().all(|&h| h), "seed {seed}: {held:?}");
+        }
+    }
+
+    #[test]
+    fn single_client_noniid_gets_everything() {
+        // extreme k*c < n_classes corner: one device, c=1, ten classes
+        let d = dataset();
+        let shards = partition_noniid(&d, 1, 1, 41);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].len(), d.len());
+        assert_eq!(shards[0].classes.len(), d.n_classes);
     }
 }

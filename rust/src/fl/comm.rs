@@ -21,10 +21,15 @@ use crate::util::BitVec;
 pub struct RoundComm {
     /// Measured uplink bits (entropy-coded payloads, incl. headers).
     pub ul_bits: u64,
-    /// Downlink bits (global state broadcast).
+    /// Measured downlink bits (global state broadcast; raw floats or
+    /// coded delta frames, whatever the `downlink` config actually ships).
     pub dl_bits: u64,
     /// Number of client uplinks this round.
     pub clients: usize,
+    /// Number of per-client downlink broadcasts this round (the DL Bpp
+    /// denominator; differs from `clients` under dropout, where a device
+    /// receives the broadcast but its uplink never lands).
+    pub broadcasts: usize,
     /// Model parameter count (denominator for Bpp).
     pub n_params: usize,
     /// Sum over clients of the per-client estimated Bpp (eq. 13).
@@ -50,11 +55,17 @@ impl RoundComm {
         self.clients += 1;
     }
 
-    /// Record the downlink broadcast of the global state to one client.
-    /// Mask algorithms ship theta as f32 (the paper's DL is also float,
-    /// its contribution is about the UL); dense ships weights as f32.
+    /// Record a downlink broadcast of `bits` wire bits to one client
+    /// (coded delta frames under `downlink=qdelta`, raw floats otherwise).
+    pub fn add_downlink_bits(&mut self, bits: u64) {
+        self.dl_bits += bits;
+        self.broadcasts += 1;
+    }
+
+    /// Record the raw-f32 downlink broadcast of the global state to one
+    /// client: 32 bits per parameter (the `downlink=float32` baseline).
     pub fn add_float_downlink(&mut self) {
-        self.dl_bits += self.n_params as u64 * 32;
+        self.add_downlink_bits(self.n_params as u64 * 32);
     }
 
     /// Fold another accumulator (e.g. a per-client or per-worker record)
@@ -68,6 +79,7 @@ impl RoundComm {
         self.ul_bits += other.ul_bits;
         self.dl_bits += other.dl_bits;
         self.clients += other.clients;
+        self.broadcasts += other.broadcasts;
         self.est_bpp_sum += other.est_bpp_sum;
     }
 
@@ -86,6 +98,16 @@ impl RoundComm {
             0.0
         } else {
             self.ul_bits as f64 / (self.clients as f64 * self.n_params as f64)
+        }
+    }
+
+    /// Measured mean downlink bits per parameter per broadcast (32.0 for
+    /// raw floats; well below with `downlink=qdelta`).
+    pub fn measured_dl_bpp(&self) -> f64 {
+        if self.broadcasts == 0 || self.n_params == 0 {
+            0.0
+        } else {
+            self.dl_bits as f64 / (self.broadcasts as f64 * self.n_params as f64)
         }
     }
 }
@@ -187,7 +209,32 @@ mod tests {
         assert_eq!(merged.ul_bits, whole.ul_bits);
         assert_eq!(merged.dl_bits, whole.dl_bits);
         assert_eq!(merged.clients, whole.clients);
+        assert_eq!(merged.broadcasts, whole.broadcasts);
         assert!((merged.est_bpp() - whole.est_bpp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn downlink_bpp_uses_broadcast_count() {
+        let mut rc = RoundComm::new(1000);
+        // 4 devices receive the broadcast, only 3 uplinks land
+        for _ in 0..4 {
+            rc.add_downlink_bits(2_000);
+        }
+        for i in 0..3 {
+            let m = mask(1000, 0.5, i);
+            rc.add_mask_uplink(&m, &compress::encode(&m));
+        }
+        assert_eq!(rc.broadcasts, 4);
+        assert_eq!(rc.clients, 3);
+        assert!((rc.measured_dl_bpp() - 2.0).abs() < 1e-12, "{}", rc.measured_dl_bpp());
+    }
+
+    #[test]
+    fn float_downlink_is_32bpp() {
+        let mut rc = RoundComm::new(1000);
+        rc.add_float_downlink();
+        assert_eq!(rc.dl_bits, 32_000);
+        assert_eq!(rc.measured_dl_bpp(), 32.0);
     }
 
     #[test]

@@ -25,6 +25,9 @@ pub struct RoundRecord {
     pub est_bpp: f64,
     /// Measured (entropy-coded) uplink Bpp.
     pub coded_bpp: f64,
+    /// Measured downlink Bpp (32.0 raw floats; coded delta frames under
+    /// `downlink=qdelta`).
+    pub dl_bpp: f64,
     /// Mean global keep-probability (sparsity telemetry).
     pub mean_theta: f64,
     /// Density of a mask sampled from the current global state.
@@ -52,6 +55,7 @@ impl RoundRecord {
         kv(&mut s, "train_loss", fmt_f64(self.train_loss));
         kv(&mut s, "est_bpp", fmt_f64(self.est_bpp));
         kv(&mut s, "coded_bpp", fmt_f64(self.coded_bpp));
+        kv(&mut s, "dl_bpp", fmt_f64(self.dl_bpp));
         kv(&mut s, "mean_theta", fmt_f64(self.mean_theta));
         kv(&mut s, "mask_density", fmt_f64(self.mask_density));
         kv(&mut s, "secs", fmt_f64(self.secs));
@@ -60,17 +64,18 @@ impl RoundRecord {
     }
 
     pub const CSV_HEADER: &'static str =
-        "round,accuracy,loss,train_loss,est_bpp,coded_bpp,mean_theta,mask_density,secs";
+        "round,accuracy,loss,train_loss,est_bpp,coded_bpp,dl_bpp,mean_theta,mask_density,secs";
 
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{}",
             self.round,
             fmt_f64(self.accuracy),
             fmt_f64(self.loss),
             fmt_f64(self.train_loss),
             fmt_f64(self.est_bpp),
             fmt_f64(self.coded_bpp),
+            fmt_f64(self.dl_bpp),
             fmt_f64(self.mean_theta),
             fmt_f64(self.mask_density),
             fmt_f64(self.secs),

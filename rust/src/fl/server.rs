@@ -65,24 +65,16 @@ impl Server {
         self.n_params
     }
 
-    /// Downlink payload: scores s = logit(theta) for the clients.
-    pub fn broadcast_scores(&self, comm: &mut RoundComm, n_clients: usize) -> Vec<f32> {
-        for _ in 0..n_clients {
-            comm.add_float_downlink();
-        }
-        self.theta.to_scores()
-    }
-
     /// Ingest one client's uplink: decode, verify, accumulate (eq. 8).
+    /// The codec validates the wire header (recorded bit-length and
+    /// one-count) and rejects truncated or corrupt payloads.
     pub fn receive_mask(
         &mut self,
         enc: &Encoded,
         weight: f64,
         comm: &mut RoundComm,
     ) -> Result<()> {
-        let mask = compress::decode(enc, self.n_params);
-        ensure!(mask.len() == self.n_params, "decoded mask length mismatch");
-        ensure!(mask.count_ones() == enc.ones as usize, "one-count corrupted in transit");
+        let mask = compress::decode(enc, self.n_params)?;
         comm.add_mask_uplink(&mask, enc);
         match &mut self.agg {
             Agg::Mean(a) => a.add_mask(&mask, weight),
@@ -112,7 +104,15 @@ impl Server {
     /// Evaluation mask sampled from the current global theta (FedPM
     /// evaluates sampled sub-networks; seed varies per round).
     pub fn eval_mask_sampled(&self, round: usize) -> BitVec {
-        sample_mask(&self.theta, self.seed ^ 0xE7A1 ^ ((round as u64) << 32))
+        self.eval_mask_sampled_from(&self.theta, round)
+    }
+
+    /// Sample an evaluation mask from an arbitrary theta with this
+    /// server's per-round eval seed stream — used to evaluate the theta
+    /// the clients actually received when the downlink is lossy
+    /// (DESIGN.md §Downlink), with the same draws as [`Self::eval_mask_sampled`].
+    pub fn eval_mask_sampled_from(&self, theta: &ProbMask, round: usize) -> BitVec {
+        sample_mask(theta, self.seed ^ 0xE7A1 ^ ((round as u64) << 32))
     }
 
     /// Deterministic low-variance evaluation mask: 1[theta > 0.5].
@@ -176,15 +176,6 @@ mod tests {
     }
 
     #[test]
-    fn broadcast_counts_downlink() {
-        let srv = Server::new(100, 1);
-        let mut comm = RoundComm::new(100);
-        let scores = srv.broadcast_scores(&mut comm, 5);
-        assert_eq!(scores.len(), 100);
-        assert_eq!(comm.dl_bits, 5 * 100 * 32);
-    }
-
-    #[test]
     fn eval_masks() {
         let srv = Server::new(5000, 9);
         let a = srv.eval_mask_sampled(1);
@@ -211,7 +202,7 @@ mod tests {
     fn checkpoint_is_decodable() {
         let srv = Server::new(2000, 11);
         let ck = srv.checkpoint_mask();
-        let decoded = compress::decode(&ck, 2000);
+        let decoded = compress::decode(&ck, 2000).unwrap();
         assert_eq!(decoded, srv.eval_mask_threshold());
     }
 }

@@ -42,7 +42,12 @@ USAGE:
 Config keys for --set (see rust/src/config/mod.rs): model dataset
 algorithm partition clients rounds local_epochs lambda lr topk_frac
 server_lr train_samples test_samples eval_every optimizer adam
-participation dropout bayes_prior threads seed artifacts_dir out
+participation dropout bayes_prior downlink threads seed artifacts_dir
+out
+
+downlink selects the broadcast wire format: float32 (raw, 32 Bpp) or
+qdelta<bits> (quantized sparse deltas with residual feedback, e.g.
+qdelta8); clients train on exactly what the wire delivered.
 
 threads controls the parallel round engine (0 = all cores, 1 =
 sequential); results are bit-identical at any thread count.
@@ -100,11 +105,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut exp = Experiment::build(cfg)?;
     let summary = exp.run(&mut sink)?;
     println!(
-        "final: acc={:.4} avg_estBpp={:.4} avg_codedBpp={:.4} UL={:.3}MB storage={}bits",
+        "final: acc={:.4} avg_estBpp={:.4} avg_codedBpp={:.4} avg_DLBpp={:.4} \
+         UL={:.3}MB DL={:.3}MB storage={}bits",
         summary.final_accuracy,
         summary.avg_est_bpp,
         summary.avg_coded_bpp,
+        summary.avg_dl_bpp,
         summary.total_ul_mb,
+        summary.total_dl_mb,
         summary.storage_bits
     );
     if let Some(ck_path) = args.flag("checkpoint") {
@@ -193,18 +201,18 @@ fn cmd_eval(args: &Args) -> Result<()> {
         fedsrn::data::SynthSpec::by_name(&dataset).context("unknown dataset")?;
     spec.n_classes = rt.manifest.n_classes;
     let data = fedsrn::data::Synthetic::new(spec, 2023 ^ 0xDA7A).generate(samples, 2);
-    let mask = ck.decode_mask().to_f32();
-    let m = rt.eval_mask(&mask, &data.x, &data.y)?;
+    let mask_bits = ck.decode_mask().context("decoding checkpoint mask")?;
+    let m = rt.eval_mask(&mask_bits.to_f32(), &data.x, &data.y)?;
     println!(
         "checkpoint {}: accuracy={:.4} loss={:.4} ({} examples, mask density {:.4})",
         ck_path,
         m.accuracy(),
         m.mean_loss(),
         m.examples,
-        ck.decode_mask().density()
+        mask_bits.density()
     );
     if !rt.manifest.layers.is_empty() {
-        let stats = fedsrn::mask::layer_stats(&ck.decode_mask(), &rt.manifest.layers);
+        let stats = fedsrn::mask::layer_stats(&mask_bits, &rt.manifest.layers);
         println!("\nper-layer sparsity (where the regularizer pruned):");
         print!("{}", fedsrn::mask::layers::format_table(&stats));
     }
@@ -223,6 +231,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let acc = col("accuracy");
     let est = col("est_bpp");
     let coded = col("coded_bpp");
+    let dl = col("dl_bpp");
     let secs = col("secs");
     let last = |v: &[f64], k: usize| -> f64 {
         if v.is_empty() { return 0.0; }
@@ -235,6 +244,9 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         est.first().copied().unwrap_or(0.0), est.last().copied().unwrap_or(0.0),
         fedsrn::util::mean(&est));
     println!("  coded Bpp avg: {:.4}", fedsrn::util::mean(&coded));
+    if !dl.is_empty() {
+        println!("  DL Bpp avg: {:.4}", fedsrn::util::mean(&dl));
+    }
     println!("  round time: mean {:.3}s (total {:.1}s)",
         fedsrn::util::mean(&secs), secs.iter().sum::<f64>());
     // Bpp savings vs the 1-bit bound over the whole run

@@ -22,6 +22,8 @@ pub mod artifacts;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(feature = "pjrt")]
+pub mod xla_stub;
 
 pub use artifacts::{available_models, Manifest};
 

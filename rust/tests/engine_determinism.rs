@@ -4,6 +4,7 @@
 //! is the reference. See DESIGN.md §Parallel round engine.
 
 use fedsrn::algos::EvalModel;
+use fedsrn::compress::DownlinkMode;
 use fedsrn::config::{Algorithm, ExperimentConfig, Partition};
 use fedsrn::coordinator::Experiment;
 use fedsrn::fl::{MetricsSink, RoundRecord};
@@ -49,6 +50,7 @@ fn assert_records_identical(a: &[RoundRecord], b: &[RoundRecord], what: &str) {
         assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{what} r{r} train_loss");
         assert_eq!(x.est_bpp.to_bits(), y.est_bpp.to_bits(), "{what} r{r} est_bpp");
         assert_eq!(x.coded_bpp.to_bits(), y.coded_bpp.to_bits(), "{what} r{r} coded_bpp");
+        assert_eq!(x.dl_bpp.to_bits(), y.dl_bpp.to_bits(), "{what} r{r} dl_bpp");
         assert_eq!(x.mean_theta.to_bits(), y.mean_theta.to_bits(), "{what} r{r} mean_theta");
         assert_eq!(
             x.mask_density.to_bits(),
@@ -105,6 +107,52 @@ fn partial_participation_and_dropout_are_thread_count_invariant() {
         let (records, model) = run(mk(threads));
         assert_records_identical(&ref_records, &records, &format!("threads={threads}"));
         assert_eq!(ref_model, model, "threads={threads}");
+    }
+}
+
+#[test]
+fn qdelta_downlink_bit_identical_at_1_2_8_threads() {
+    // The compressed downlink must not weaken the determinism contract:
+    // encoding happens once per round on the coordinator thread, so the
+    // quantized broadcast — and everything trained on it — is identical
+    // at any worker count.
+    let mk = |threads| {
+        let mut cfg = base_cfg(threads);
+        cfg.downlink = DownlinkMode::QDelta { bits: 8 };
+        cfg
+    };
+    let (ref_records, ref_model) = run(mk(1));
+    // qdelta actually engaged: downlink cheaper than raw floats
+    let avg_dl: f64 =
+        ref_records.iter().map(|r| r.dl_bpp).sum::<f64>() / ref_records.len() as f64;
+    assert!(avg_dl < 32.0, "qdelta should undercut raw floats, got {avg_dl}");
+    for threads in [2, 8] {
+        let (records, model) = run(mk(threads));
+        assert_records_identical(&ref_records, &records, &format!("qdelta threads={threads}"));
+        assert_eq!(ref_model, model, "qdelta threads={threads}: final mask differs");
+    }
+}
+
+#[test]
+fn qdelta_every_strategy_is_thread_count_invariant() {
+    for algo in [
+        Algorithm::FedPM,
+        Algorithm::FedMask,
+        Algorithm::TopK,
+        Algorithm::SignSGD,
+        Algorithm::FedAvg,
+    ] {
+        let mk = |threads| {
+            let mut cfg = base_cfg(threads);
+            cfg.algorithm = algo;
+            cfg.downlink = DownlinkMode::QDelta { bits: 4 };
+            cfg.rounds = 3;
+            cfg
+        };
+        let (ref_records, ref_model) = run(mk(1));
+        let (records, model) = run(mk(4));
+        assert_records_identical(&ref_records, &records, &format!("qdelta {algo:?}"));
+        assert_eq!(ref_model, model, "qdelta {algo:?}: final model must be bit-identical");
     }
 }
 

@@ -5,7 +5,7 @@
 //! hundreds of randomized cases drawn from seeded generators, and
 //! failures report the offending case seed for replay.
 
-use fedsrn::compress::{self, Method};
+use fedsrn::compress::{self, DownlinkEncoder, DownlinkFrame, DownlinkMode, Method};
 use fedsrn::config::ExperimentConfig;
 use fedsrn::coordinator::Checkpoint;
 use fedsrn::data::{partition_iid, partition_noniid, Dataset, SynthSpec, Synthetic};
@@ -38,7 +38,7 @@ fn prop_codec_roundtrip_identity() {
     forall(120, |rng, case| {
         let m = arb_mask(rng);
         let enc = compress::encode(&m);
-        let dec = compress::decode(&enc, m.len());
+        let dec = compress::decode(&enc, m.len()).unwrap();
         assert_eq!(dec, m, "case {case}: len={} ones={}", m.len(), m.count_ones());
     });
 }
@@ -49,8 +49,32 @@ fn prop_all_methods_roundtrip() {
         let m = arb_mask(rng);
         for method in [Method::Raw, Method::Arithmetic, Method::Golomb] {
             let enc = compress::encode_with(&m, method);
-            assert_eq!(compress::decode(&enc, m.len()), m, "case {case} {method:?}");
+            assert_eq!(
+                compress::decode(&enc, m.len()).unwrap(),
+                m,
+                "case {case} {method:?}"
+            );
         }
+    });
+}
+
+#[test]
+fn prop_truncated_uplink_payloads_never_decode_silently() {
+    // Chop coded bytes anywhere: the wire parse or the decode must
+    // error — a truncated uplink must never yield a quietly-wrong mask.
+    forall(40, |rng, case| {
+        let m = arb_mask(rng);
+        let enc = compress::encode(&m);
+        let bytes = enc.to_bytes();
+        let cut = rng.below(bytes.len() as u64) as usize;
+        let outcome = compress::Encoded::from_bytes(&bytes[..cut])
+            .and_then(|e| compress::decode(&e, m.len()));
+        assert!(
+            outcome.is_err(),
+            "case {case}: {}B of {}B decoded without error",
+            cut,
+            bytes.len()
+        );
     });
 }
 
@@ -82,8 +106,118 @@ fn prop_wire_format_roundtrip() {
         let m = arb_mask(rng);
         let enc = compress::encode(&m);
         let parsed = compress::Encoded::from_bytes(&enc.to_bytes()).unwrap();
-        assert_eq!(compress::decode(&parsed, m.len()), m, "case {case}");
+        assert_eq!(compress::decode(&parsed, m.len()).unwrap(), m, "case {case}");
     });
+}
+
+// ---------------------------------------------------------------------------
+// downlink quantizer properties (DESIGN.md §Downlink)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_downlink_quantize_dequantize_error_bound() {
+    // One committed broadcast then a delta frame with the changed
+    // fraction under the per-round cap: EVERY coordinate's
+    // reconstruction error is bounded by step/2 = max|delta| / (2*qmax)
+    // — sent coordinates by rounding, unsent ones because they only
+    // stay unsent when their delta rounds to zero.
+    forall(40, |rng, case| {
+        let n = 64 + rng.below(4_000) as usize;
+        let bits = 2 + rng.below(7) as u8; // 2..=8
+        let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+        let a: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        // perturb exactly every 5th coordinate: 20% < the 25% change
+        // cap, so no coordinate is ever withheld by rate control here
+        let b: Vec<f32> = a
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                if i % 5 == 0 {
+                    v + 0.2 * (rng.next_f32() - 0.5)
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits });
+        enc.broadcast(&a);
+        assert_eq!(enc.recon(), &a[..], "case {case}: first broadcast must be exact");
+        enc.broadcast(&b);
+        let max_delta = a.iter().zip(&b).fold(0.0f32, |m, (&x, &y)| m.max((y - x).abs()));
+        let bound = max_delta / (2.0 * qmax) * (1.0 + 1e-3) + 1e-6;
+        for (i, (&r, &t)) in enc.recon().iter().zip(&b).enumerate() {
+            assert!(
+                (r - t).abs() <= bound,
+                "case {case}: coord {i} err {} > bound {bound} (bits={bits})",
+                (r - t).abs()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_downlink_residual_feedback_converges() {
+    // Broadcasting the same target repeatedly must drive the fleet's
+    // reconstruction to the target even though each frame quantizes and
+    // ships at most a quarter of the coordinates: what a frame doesn't
+    // deliver stays in the residual until it does.
+    forall(25, |rng, case| {
+        let n = 32 + rng.below(2_000) as usize;
+        let bits = 4 + rng.below(5) as u8; // 4..=8
+        let a: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let b: Vec<f32> = a.iter().map(|&v| v + rng.next_f32() - 0.5).collect();
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits });
+        enc.broadcast(&a);
+        let initial = enc.recon().iter().zip(&b).fold(0.0f32, |m, (&r, &t)| m.max((r - t).abs()));
+        for _ in 0..16 {
+            enc.broadcast(&b);
+        }
+        let err = enc.recon().iter().zip(&b).fold(0.0f32, |m, (&r, &t)| m.max((r - t).abs()));
+        assert!(
+            err <= initial * 1e-2 + 1e-6,
+            "case {case}: residual feedback stalled at {err} (initial {initial}, bits={bits})"
+        );
+    });
+}
+
+#[test]
+fn prop_downlink_delta_bitmap_roundtrip() {
+    // Wire roundtrip at fixed change densities incl. the degenerate
+    // ends: the client's reconstruction from (bytes, previous state)
+    // must be bit-identical to the server's, whatever frame kind the
+    // encoder picked (empty delta, sparse delta, dense fallback).
+    for &p in &[0.0, 0.01, 0.5, 1.0] {
+        forall(12, |rng, case| {
+            let n = 16 + rng.below(3_000) as usize;
+            let bits = 2 + rng.below(7) as u8;
+            let a: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let b: Vec<f32> = a
+                .iter()
+                .map(|&v| {
+                    if rng.next_f64() < p {
+                        v + 0.3 * (rng.next_f32() - 0.5)
+                    } else {
+                        v
+                    }
+                })
+                .collect();
+            let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits });
+            let f0 = enc.encode_frame(&a);
+            let client0 = DownlinkFrame::from_bytes(&f0.to_bytes())
+                .unwrap()
+                .decode(None)
+                .unwrap();
+            assert_eq!(client0, enc.recon(), "p={p} case {case}: first frame");
+            let f1 = enc.encode_frame(&b);
+            let client1 = DownlinkFrame::from_bytes(&f1.to_bytes())
+                .unwrap()
+                .decode(Some(&client0))
+                .unwrap();
+            let server: Vec<u32> = enc.recon().iter().map(|v| v.to_bits()).collect();
+            let client: Vec<u32> = client1.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(server, client, "p={p} case {case} bits={bits}");
+        });
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -312,18 +446,25 @@ fn prop_noniid_class_budget_and_cover() {
         let k = 5 + rng.below(26) as usize;
         let c = 1 + rng.below(4) as usize;
         let shards = partition_noniid(&d, k, c, rng.next_u64());
+        // When k*c < n_classes the budget is impossible without dropping
+        // data; devices then keep their round-robin surplus (at most
+        // ceil(n_classes/k) classes) so the federation covers everything.
+        let budget = c.max(d.n_classes.div_ceil(k));
         let mut count = 0;
         for s in &shards {
-            assert!(s.classes.len() <= c, "case {case}");
+            assert!(
+                s.classes.len() <= budget,
+                "case {case}: {} classes > budget {budget}",
+                s.classes.len()
+            );
             for &i in &s.indices {
                 assert!(s.classes.contains(&(d.y[i] as usize)), "case {case}");
             }
             count += s.indices.len();
         }
-        // exact cover whenever every class has a holder
-        if k * c >= d.n_classes {
-            assert_eq!(count, d.len(), "case {case}");
-        }
+        // exact cover in EVERY regime — the k*c < n_classes case used to
+        // silently drop whole classes.
+        assert_eq!(count, d.len(), "case {case}: samples dropped (k={k} c={c})");
     });
 }
 
@@ -357,7 +498,7 @@ fn prop_checkpoint_roundtrip() {
             std::env::temp_dir().join(format!("fedsrn_prop_{}_{case}.bin", std::process::id()));
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
-        assert_eq!(back.decode_mask(), m, "case {case}");
+        assert_eq!(back.decode_mask().unwrap(), m, "case {case}");
         std::fs::remove_file(&path).ok();
     });
 }
