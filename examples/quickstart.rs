@@ -40,7 +40,7 @@ fn main() -> Result<()> {
 
     // 3. The whole trained model is a seed + a coded binary mask.
     let man = &exp.runtime().manifest;
-    if let fedsrn::algos::EvalModel::Masked(mask_f32) = exp.strategy_eval_model() {
+    if let fedsrn::algos::EvalModel::Masked(mask_f32) = exp.global_model() {
         let mask = fedsrn::util::BitVec::from_f32_threshold(&mask_f32);
         let ck = Checkpoint::new(&man.model, man.weight_seed, man.n_params, &mask);
         let path = Path::new("runs/quickstart.ck");

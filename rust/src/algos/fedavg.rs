@@ -3,25 +3,46 @@
 //!
 //! Each device runs `local_epochs` of minibatch SGD on a local copy of
 //! the dense weights (through the AOT `dense_grad` program) and uploads
-//! the full float vector; the server takes the |D_i|-weighted average.
+//! the full float vector in an [`UplinkPayload::DenseDelta`] envelope;
+//! the server folds each into its |D_i|-weighted running sum the moment
+//! it lands. Combined with the engine's wave scheduling this keeps the
+//! coordinator at O(wave × n_params) resident uplinks and the server at
+//! O(n_params) fold state — never O(cohort × n_params).
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 use crate::compress::{DownlinkEncoder, DownlinkMode};
+use crate::data::Dataset;
+use crate::fl::protocol::{DownlinkMsg, RoundPlan, UplinkMsg, UplinkPayload};
+use crate::fl::{Client, RoundComm};
+use crate::runtime::ModelRuntime;
 
-use super::{EvalModel, RoundCtx, RoundStats, Strategy};
+use super::{ClientTask, EvalModel, RoundStats, ServerLogic};
 
-/// FedAvg server + model state. The dense local SGD learning rate is
-/// taken from `RoundCtx.server_lr` (distinct from the score lr).
+/// FedAvg server logic. The dense local SGD learning rate is taken from
+/// `RoundPlan.server_lr` (distinct from the score lr).
 pub struct FedAvg {
     weights: Vec<f32>,
     /// Downlink codec state: the weight reconstruction the fleet holds.
     dl: DownlinkEncoder,
+    /// Streaming |D_i|-weighted sum of landed uplinks (eq. 8 shape).
+    acc: Vec<f64>,
+    weight_sum: f64,
+    train_loss: f64,
+    reporters: usize,
 }
 
 impl FedAvg {
     pub fn new(init_weights: Vec<f32>, downlink: DownlinkMode) -> Self {
-        Self { weights: init_weights, dl: DownlinkEncoder::new(downlink) }
+        let n = init_weights.len();
+        Self {
+            weights: init_weights,
+            dl: DownlinkEncoder::new(downlink),
+            acc: vec![0.0; n],
+            weight_sum: 0.0,
+            train_loss: 0.0,
+            reporters: 0,
+        }
     }
 
     pub fn weights(&self) -> &[f32] {
@@ -29,72 +50,94 @@ impl FedAvg {
     }
 }
 
-impl Strategy for FedAvg {
+/// Device half: `local_epochs` of dense minibatch SGD from the decoded
+/// broadcast, full float vector back up.
+pub struct FedAvgClientTask;
+
+impl ClientTask for FedAvgClientTask {
+    fn run(
+        &self,
+        rt: &ModelRuntime,
+        data: &Dataset,
+        client: &mut Client,
+        msg: &DownlinkMsg,
+        prev_state: Option<&[f32]>,
+        plan: &RoundPlan,
+    ) -> Result<UplinkMsg> {
+        if let DownlinkMsg::Theta(_) = msg {
+            bail!("fedavg client expects a weight broadcast, got {}", msg.kind_name());
+        }
+        // Local SGD starts from the weights the device actually decoded
+        // off the wire (quantized under qdelta, exact under float32).
+        let mut w_local = msg.decode_state(prev_state)?;
+        let batch = rt.manifest.batch;
+        let lr = plan.server_lr;
+        let steps = client.steps_per_round(batch, plan.local_epochs).max(1);
+        let mut last_loss = 0.0f32;
+        for _ in 0..steps {
+            let (xs, ys) = client.gather_call_batches(data, 1, batch);
+            let (grads, loss, _c) = rt.dense_grad(&w_local, &xs, &ys)?;
+            for (w, g) in w_local.iter_mut().zip(&grads) {
+                *w -= lr * g;
+            }
+            last_loss = loss;
+        }
+        Ok(UplinkMsg {
+            weight: client.weight(),
+            train_loss: last_loss,
+            payload: UplinkPayload::DenseDelta(w_local),
+        })
+    }
+}
+
+impl ServerLogic for FedAvg {
     fn name(&self) -> &'static str {
         "fedavg"
     }
 
-    fn run_round(&mut self, ctx: &mut RoundCtx) -> Result<RoundStats> {
-        let n = self.weights.len();
-        let batch = ctx.rt.manifest.batch;
-        let lr = ctx.server_lr;
-        let local_epochs = ctx.local_epochs;
-        let cohort: Vec<usize> = (0..ctx.clients.len()).collect();
-        let (rt, data) = (ctx.rt, ctx.data);
+    fn begin_round(&mut self, _plan: &RoundPlan) -> Result<DownlinkMsg> {
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        self.weight_sum = 0.0;
+        self.train_loss = 0.0;
+        self.reporters = 0;
+        Ok(DownlinkMsg::broadcast(&mut self.dl, &self.weights, false))
+    }
 
-        let mut acc = vec![0.0f64; n];
-        let mut weight_sum = 0.0f64;
-        let mut train_loss = 0.0f64;
-        let mut done = 0usize;
-
-        // DL: broadcast the weights through the downlink codec; devices
-        // start local SGD from the reconstruction they received.
-        let wire_bits = self.dl.broadcast(&self.weights);
-        let bweights = self.dl.recon().to_vec();
-
-        // The fleet is processed in waves so at most one wave of dense
-        // local weight vectors is resident at a time (O(wave * n), not
-        // O(clients * n)). The fold still walks cohort order — waves are
-        // consumed sequentially and folded in order — so results stay
-        // bit-identical at any thread count and any wave size.
-        let wave = ctx.engine.threads().max(4) * 2;
-        for ids in cohort.chunks(wave) {
-            let global = &bweights;
-            // Parallel phase: each device trains a local copy of the
-            // dense weights for `local_epochs` of minibatch SGD.
-            let reports = ctx.engine.run_cohort(ctx.clients, ids, |_pos, client| {
-                let mut w_local = global.clone();
-                let steps = client.steps_per_round(batch, local_epochs).max(1);
-                let mut last_loss = 0.0f32;
-                for _ in 0..steps {
-                    let (xs, ys) = client.gather_call_batches(data, 1, batch);
-                    let (grads, loss, _c) = rt.dense_grad(&w_local, &xs, &ys)?;
-                    for (w, g) in w_local.iter_mut().zip(&grads) {
-                        *w -= lr * g;
-                    }
-                    last_loss = loss;
-                }
-                Ok((w_local, client.weight(), last_loss))
-            })?;
-
-            // Ordered reduction: |D_i|-weighted average in cohort order.
-            for (w_local, cw, last_loss) in reports {
-                // DL: one broadcast per device (measured wire bits).
-                ctx.comm.add_downlink_bits(wire_bits);
-                // UL: full dense floats.
-                ctx.comm.add_dense_uplink();
-                done += 1;
-                train_loss += (last_loss as f64 - train_loss) / done as f64;
-                for (a, &w) in acc.iter_mut().zip(&w_local) {
-                    *a += cw * w as f64;
-                }
-                weight_sum += cw;
-            }
+    fn fold_uplink(&mut self, msg: &UplinkMsg, comm: &mut RoundComm) -> Result<()> {
+        let UplinkPayload::DenseDelta(w_local) = &msg.payload else {
+            bail!(
+                "fedavg server expects a dense uplink, got {}",
+                msg.payload.kind_name()
+            );
+        };
+        ensure!(
+            w_local.len() == self.weights.len(),
+            "dense uplink for {} params, model has {}",
+            w_local.len(),
+            self.weights.len()
+        );
+        // UL: full dense floats (est = the source's 32 Bpp; measured =
+        // the serialized envelope).
+        comm.add_uplink(msg.wire_bits(), 32.0);
+        self.reporters += 1;
+        self.train_loss += (msg.train_loss as f64 - self.train_loss) / self.reporters as f64;
+        for (a, &w) in self.acc.iter_mut().zip(w_local) {
+            *a += msg.weight * w as f64;
         }
-        for (w, &a) in self.weights.iter_mut().zip(&acc) {
-            *w = (a / weight_sum) as f32;
+        self.weight_sum += msg.weight;
+        Ok(())
+    }
+
+    fn end_round(&mut self, _plan: &RoundPlan) -> Result<RoundStats> {
+        ensure!(self.weight_sum > 0.0, "no uplinks received this round");
+        for (w, &a) in self.weights.iter_mut().zip(&self.acc) {
+            *w = (a / self.weight_sum) as f32;
         }
-        Ok(RoundStats { train_loss, mean_theta: 0.0, mask_density: 1.0 })
+        Ok(RoundStats { train_loss: self.train_loss, mean_theta: 0.0, mask_density: 1.0 })
+    }
+
+    fn client_task(&self) -> Box<dyn ClientTask> {
+        Box::new(FedAvgClientTask)
     }
 
     fn eval_model(&self, _round: usize) -> EvalModel {
@@ -112,6 +155,19 @@ impl Strategy for FedAvg {
 mod tests {
     use super::*;
 
+    fn plan() -> RoundPlan {
+        RoundPlan {
+            round: 1,
+            seed: 1,
+            lambda: 0.0,
+            lr: 0.1,
+            local_epochs: 1,
+            topk_frac: 0.3,
+            server_lr: 0.1,
+            adam: false,
+        }
+    }
+
     #[test]
     fn storage_and_eval_shape() {
         let f = FedAvg::new(vec![0.5; 100], DownlinkMode::Float32);
@@ -120,5 +176,39 @@ mod tests {
             EvalModel::Dense(w) => assert_eq!(w.len(), 100),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn streaming_fold_is_weighted_average() {
+        let mut srv = FedAvg::new(vec![0.0; 3], DownlinkMode::Float32);
+        let mut comm = RoundComm::new(3);
+        srv.begin_round(&plan()).unwrap();
+        for (w, values) in [(1.0, vec![1.0f32; 3]), (3.0, vec![5.0f32; 3])] {
+            let msg = UplinkMsg {
+                weight: w,
+                train_loss: 0.5,
+                payload: UplinkPayload::DenseDelta(values),
+            };
+            srv.fold_uplink(&msg, &mut comm).unwrap();
+        }
+        srv.end_round(&plan()).unwrap();
+        // (1*1 + 3*5) / 4 = 4.0
+        assert!(srv.weights().iter().all(|&w| (w - 4.0).abs() < 1e-6));
+        assert_eq!(comm.clients, 2);
+        assert_eq!(comm.est_bpp(), 32.0);
+    }
+
+    #[test]
+    fn fold_rejects_wrong_payload_and_length() {
+        let mut srv = FedAvg::new(vec![0.0; 4], DownlinkMode::Float32);
+        let mut comm = RoundComm::new(4);
+        srv.begin_round(&plan()).unwrap();
+        let wrong_len = UplinkMsg {
+            weight: 1.0,
+            train_loss: 0.0,
+            payload: UplinkPayload::DenseDelta(vec![0.0; 5]),
+        };
+        assert!(srv.fold_uplink(&wrong_len, &mut comm).is_err());
+        assert!(srv.end_round(&plan()).is_err(), "zero uplinks cannot average");
     }
 }

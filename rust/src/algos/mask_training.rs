@@ -1,32 +1,37 @@
 //! The FedPM family: stochastic / deterministic / top-k mask training
 //! over a frozen random network (paper sec. II-III).
 //!
-//! One round:
-//!   1. DL: server broadcasts theta(t) through the downlink codec
-//!      (raw f32, or quantized sparse deltas under `downlink=qdelta` —
-//!      DESIGN.md §Downlink); devices derive scores s = logit(theta)
-//!      from the reconstruction they actually received.
-//!   2. Each device runs local STE-SGD on its score vector with loss
-//!      eq. 12 (cross-entropy + (lambda/n) * sum sigmoid(s)).
+//! One round, in protocol messages (DESIGN.md §Protocol):
+//!   1. DL: `begin_round` broadcasts theta(t) — a [`DownlinkMsg::Theta`]
+//!      under `downlink=float32`, a coded [`DownlinkMsg::Frame`] under
+//!      `downlink=qdelta` (DESIGN.md §Downlink); devices derive scores
+//!      s = logit(theta) from the reconstruction they actually decoded.
+//!   2. Each device ([`MaskClientTask`]) runs local STE-SGD on its score
+//!      vector with loss eq. 12 (cross-entropy + (lambda/n) sum sigmoid(s)).
 //!   3. UL: the device ships ONE binary mask derived from its local
 //!      theta-hat:  m ~ Bern(theta-hat)        (Stochastic — FedPM/ours)
 //!                  m  = 1[theta-hat > 1/2]    (Deterministic — FedMask)
 //!                  m  = top-k(s)              (TopK baseline)
-//!      entropy-coded through the MaskCodec.
-//!   4. Server decodes, weighted-averages into theta(t+1) (eq. 8).
+//!      entropy-coded in an [`UplinkPayload::CodedMask`] envelope.
+//!   4. Server: `fold_uplink` decodes and weighted-averages each envelope
+//!      into the eq. 8 accumulator the moment it lands (O(n_params)
+//!      state); `end_round` finalizes theta(t+1).
 //!
 //! The paper's algorithm is Stochastic with lambda > 0; lambda comes
-//! from the round context so the same strategy object runs FedPM (0)
+//! from the round plan so the same strategy object runs FedPM (0)
 //! and FedPM+reg (>0).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::compress::{self, DownlinkEncoder, DownlinkMode, Encoded};
-use crate::fl::Server;
+use crate::compress::{self, DownlinkEncoder, DownlinkMode};
+use crate::data::Dataset;
+use crate::fl::protocol::{DownlinkMsg, RoundPlan, UplinkMsg, UplinkPayload};
+use crate::fl::{Client, RoundComm, Server};
 use crate::mask::{sample_mask, topk_mask, ProbMask};
+use crate::runtime::ModelRuntime;
 use crate::util::{logit, BitVec, SeedSequence};
 
-use super::{EvalModel, RoundCtx, RoundStats, Strategy};
+use super::{ClientTask, EvalModel, RoundStats, ServerLogic};
 
 /// Uplink mask construction mode.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,13 +45,17 @@ pub enum MaskMode {
     TopK { frac: f64 },
 }
 
-/// FedPM-family strategy state.
+/// FedPM-family server logic.
 pub struct MaskStrategy {
     server: Server,
     mode: MaskMode,
     seed: u64,
     /// Downlink codec state: the theta reconstruction the fleet holds.
     dl: DownlinkEncoder,
+    /// Round-in-progress fold state: running mean train loss over the
+    /// uplinks that actually landed.
+    train_loss: f64,
+    reporters: usize,
 }
 
 impl MaskStrategy {
@@ -72,6 +81,8 @@ impl MaskStrategy {
             mode,
             seed,
             dl: DownlinkEncoder::new(downlink),
+            train_loss: 0.0,
+            reporters: 0,
         }
     }
 
@@ -100,7 +111,7 @@ fn mask_stream(seed: u64) -> SeedSequence {
 }
 
 /// Uplink mask construction as a pure function, so the round engine's
-/// worker threads can build masks without borrowing the strategy: the
+/// worker threads can build masks without borrowing the server: the
 /// sampled mask depends only on (mode, seed tree, scores, client, round).
 fn build_uplink(
     mode: MaskMode,
@@ -119,17 +130,60 @@ fn build_uplink(
     }
 }
 
-/// One client's contribution, produced on a worker thread and merged in
-/// cohort order by the calling thread.
-struct Uplink {
-    /// |D_i| aggregation weight.
-    weight: f64,
-    /// Coded mask, or `None` when the failure model dropped the uplink.
-    payload: Option<Encoded>,
-    mean_loss: f32,
+/// The device half: local STE-SGD + mask construction + entropy coding.
+/// Owns only copies of the strategy configuration — nothing borrowed
+/// from the server — so the engine can run it on worker threads.
+pub struct MaskClientTask {
+    mode: MaskMode,
+    stream: SeedSequence,
 }
 
-impl Strategy for MaskStrategy {
+impl ClientTask for MaskClientTask {
+    fn run(
+        &self,
+        rt: &ModelRuntime,
+        data: &Dataset,
+        client: &mut Client,
+        msg: &DownlinkMsg,
+        prev_state: Option<&[f32]>,
+        plan: &RoundPlan,
+    ) -> Result<UplinkMsg> {
+        if let DownlinkMsg::RawF32(_) = msg {
+            bail!("mask client expects a theta broadcast, got {}", msg.kind_name());
+        }
+        // The device works from the theta it actually decoded off the
+        // wire — under qdelta that is the quantized reconstruction,
+        // never the server's exact vector (DESIGN.md §Downlink).
+        let theta = msg.decode_state(prev_state)?;
+        let scores: Vec<f32> = theta.iter().map(|&t| logit(t)).collect();
+        let deterministic = self.mode == MaskMode::Deterministic;
+        let (s_i, met) = client.local_phase(
+            rt,
+            data,
+            scores,
+            plan.round,
+            plan.lambda,
+            plan.lr,
+            plan.local_epochs,
+            deterministic,
+            plan.adam,
+        )?;
+        // The round plan owns the per-round knobs: a TopK device keeps
+        // the fraction the server shipped, not a baked-in copy.
+        let mode = match self.mode {
+            MaskMode::TopK { .. } => MaskMode::TopK { frac: plan.topk_frac },
+            m => m,
+        };
+        let mask = build_uplink(mode, self.stream, &s_i, client.id, plan.round);
+        Ok(UplinkMsg {
+            weight: client.weight(),
+            train_loss: met.mean_loss,
+            payload: UplinkPayload::CodedMask(compress::encode(&mask)),
+        })
+    }
+}
+
+impl ServerLogic for MaskStrategy {
     fn name(&self) -> &'static str {
         match self.mode {
             MaskMode::Stochastic => "fedpm_family",
@@ -138,81 +192,31 @@ impl Strategy for MaskStrategy {
         }
     }
 
-    fn run_round(&mut self, ctx: &mut RoundCtx) -> Result<RoundStats> {
-        let deterministic = self.mode == MaskMode::Deterministic;
-        let round = ctx.round;
-        // Partial participation: sample this round's cohort (the paper's
-        // setting is fraction=1 / dropout=0 -> everyone, no drops).
-        let cohort = ctx.participation.sample_round(ctx.clients.len(), ctx.seed, round);
-        // DL: broadcast theta through the downlink codec. Devices derive
-        // their working scores from the reconstruction they actually
-        // received — under qdelta that is the quantized theta, never the
-        // server's exact vector (DESIGN.md §Downlink).
-        let wire_bits = self.dl.broadcast(self.server.theta().theta());
-        // float32 frames are stateless, so only the sampled cohort needs
-        // one; a qdelta frame is a link in a stateful delta chain and
-        // must reach EVERY device (a device that missed a frame could
-        // not decode the next one), so the whole fleet is accounted.
-        let receivers = match self.dl.mode() {
-            DownlinkMode::Float32 => cohort.len(),
-            DownlinkMode::QDelta { .. } => ctx.clients.len(),
-        };
-        for _ in 0..receivers {
-            ctx.comm.add_downlink_bits(wire_bits);
-        }
-        let scores: Vec<f32> = self.dl.recon().iter().map(|&t| logit(t)).collect();
+    fn begin_round(&mut self, _plan: &RoundPlan) -> Result<DownlinkMsg> {
+        self.train_loss = 0.0;
+        self.reporters = 0;
+        Ok(DownlinkMsg::broadcast(&mut self.dl, self.server.theta().theta(), true))
+    }
 
-        // Parallel phase: local training + uplink construction + entropy
-        // coding per client, sharded by the round engine. Only copies of
-        // the strategy's configuration cross into the workers; all shared
-        // state stays on this thread.
-        let (mode, stream) = (self.mode, mask_stream(self.seed));
-        let (rt, data) = (ctx.rt, ctx.data);
-        let (lambda, lr, local_epochs, adam) = (ctx.lambda, ctx.lr, ctx.local_epochs, ctx.adam);
-        let (participation, seed) = (ctx.participation, ctx.seed);
-        let scores_ref = &scores;
-        let uplinks: Vec<Uplink> =
-            ctx.engine.run_cohort(ctx.clients, &cohort, |pos, client| {
-                let (s_i, met) = client.local_phase(
-                    rt,
-                    data,
-                    scores_ref.clone(),
-                    round,
-                    lambda,
-                    lr,
-                    local_epochs,
-                    deterministic,
-                    adam,
-                )?;
-                // Failure injection: the device trained but its uplink
-                // never arrives; the server must tolerate the gap.
-                let payload = if participation.drops(pos, seed, round, client.id) {
-                    None
-                } else {
-                    let mask = build_uplink(mode, stream, &s_i, client.id, round);
-                    Some(compress::encode(&mask))
-                };
-                Ok(Uplink { weight: client.weight(), payload, mean_loss: met.mean_loss })
-            })?;
+    fn fold_uplink(&mut self, msg: &UplinkMsg, comm: &mut RoundComm) -> Result<()> {
+        self.server.receive_uplink(msg, comm)?;
+        self.reporters += 1;
+        self.train_loss += (msg.train_loss as f64 - self.train_loss) / self.reporters as f64;
+        Ok(())
+    }
 
-        // Ordered reduction: aggregate + account in cohort order, so the
-        // result is independent of worker scheduling.
-        let mut train_loss = 0.0f64;
-        let mut reporters = 0usize;
-        for up in &uplinks {
-            let Some(enc) = &up.payload else { continue };
-            reporters += 1;
-            train_loss += (up.mean_loss as f64 - train_loss) / reporters as f64;
-            self.server.receive_mask(enc, up.weight, ctx.comm)?;
-        }
+    fn end_round(&mut self, plan: &RoundPlan) -> Result<RoundStats> {
         self.server.finish_round()?;
-
         let theta = self.server.theta();
         Ok(RoundStats {
-            train_loss,
+            train_loss: self.train_loss,
             mean_theta: theta.mean_theta(),
-            mask_density: self.server.eval_mask_sampled(round).density(),
+            mask_density: self.server.eval_mask_sampled(plan.round).density(),
         })
+    }
+
+    fn client_task(&self) -> Box<dyn ClientTask> {
+        Box::new(MaskClientTask { mode: self.mode, stream: mask_stream(self.seed) })
     }
 
     fn eval_model(&self, round: usize) -> EvalModel {
@@ -278,5 +282,57 @@ mod tests {
         };
         assert_eq!(m.len(), 500);
         assert!(m.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn begin_round_broadcasts_theta_by_wire_mode() {
+        let plan = RoundPlan {
+            round: 1,
+            seed: 3,
+            lambda: 0.0,
+            lr: 0.1,
+            local_epochs: 1,
+            topk_frac: 0.3,
+            server_lr: 0.001,
+            adam: true,
+        };
+        let mut f32_strat = MaskStrategy::new(200, 3, MaskMode::Stochastic);
+        match f32_strat.begin_round(&plan).unwrap() {
+            DownlinkMsg::Theta(t) => {
+                assert_eq!(t, f32_strat.server().theta().theta());
+            }
+            other => panic!("float32 must broadcast theta, got {}", other.kind_name()),
+        }
+        let mut q_strat = MaskStrategy::with_agg(
+            200,
+            3,
+            MaskMode::Stochastic,
+            crate::fl::server::AggMode::Mean,
+            DownlinkMode::QDelta { bits: 8 },
+        );
+        assert!(matches!(q_strat.begin_round(&plan).unwrap(), DownlinkMsg::Frame(_)));
+    }
+
+    #[test]
+    fn mask_task_rejects_raw_weight_broadcasts() {
+        let strat = MaskStrategy::new(16, 1, MaskMode::Stochastic);
+        let task = strat.client_task();
+        let data = crate::data::Synthetic::new(crate::data::SynthSpec::tiny(), 1)
+            .generate(40, 1);
+        let shards = crate::data::partition_iid(&data, 1, 1);
+        let mut client = Client::new(shards[0].clone(), 5);
+        let rt = ModelRuntime::load(std::path::Path::new("artifacts"), "mlp_tiny").unwrap();
+        let plan = RoundPlan {
+            round: 1,
+            seed: 1,
+            lambda: 0.0,
+            lr: 0.1,
+            local_epochs: 1,
+            topk_frac: 0.3,
+            server_lr: 0.001,
+            adam: true,
+        };
+        let msg = DownlinkMsg::RawF32(vec![0.0; rt.manifest.n_params]);
+        assert!(task.run(&rt, &data, &mut client, &msg, None, &plan).is_err());
     }
 }

@@ -10,8 +10,22 @@
 //!   weights, 1-bit sign uplink, majority-vote server step.
 //! * [`FedAvg`] — dense float FedAvg as the 32 Bpp reference point.
 //!
-//! Each strategy owns its round semantics behind the [`Strategy`] trait;
-//! the coordinator drives rounds and evaluation uniformly.
+//! Since the protocol redesign (DESIGN.md §Protocol) a strategy no
+//! longer "runs a round" — it **speaks the wire protocol** of
+//! [`crate::fl::protocol`], split into two halves:
+//!
+//! * [`ServerLogic`] — owns the global model. `begin_round` emits one
+//!   [`DownlinkMsg`]; `fold_uplink` consumes [`UplinkMsg`] envelopes one
+//!   at a time **as they land** (streaming aggregation: server memory is
+//!   O(n_params), never O(cohort × n_params)); `end_round` closes the
+//!   round and reports [`RoundStats`].
+//! * [`ClientTask`] — the pure device-side computation
+//!   `(DownlinkMsg, shard, plan) -> UplinkMsg`, free of server state so
+//!   the round engine ([`crate::coordinator::RoundEngine`]) can shard it
+//!   across worker threads.
+//!
+//! The round driver lives in `coordinator::engine`; nothing but typed,
+//! serializable messages crosses between the two halves.
 
 pub mod fedavg;
 pub mod mask_training;
@@ -25,8 +39,9 @@ use anyhow::Result;
 
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::data::Dataset;
-use crate::fl::{Client, RoundComm};
+use crate::fl::protocol::{DownlinkMsg, RoundPlan, UplinkMsg};
 use crate::fl::server::AggMode;
+use crate::fl::{Client, RoundComm};
 use crate::runtime::ModelRuntime;
 
 /// Aggregation mode from config: bayes_prior > 0 turns on the
@@ -58,37 +73,32 @@ pub struct RoundStats {
     pub mask_density: f64,
 }
 
-/// Everything a strategy needs to run one communication round.
-pub struct RoundCtx<'a> {
-    pub rt: &'a ModelRuntime,
-    pub data: &'a Dataset,
-    pub clients: &'a mut [Client],
-    pub round: usize,
-    pub comm: &'a mut RoundComm,
-    /// Shards per-client work across worker threads; strategies MUST
-    /// route all client execution through it (DESIGN.md §Parallel round
-    /// engine) so the sequential and parallel paths share one code path.
-    pub engine: &'a crate::coordinator::RoundEngine,
-    pub lambda: f32,
-    pub lr: f32,
-    pub local_epochs: usize,
-    pub topk_frac: f64,
-    pub server_lr: f32,
-    /// Optimize scores with Adam (FedPM practice) vs plain SGD.
-    pub adam: bool,
-    /// Participation/failure model (fraction=1, dropout=0 = the paper).
-    pub participation: crate::fl::Participation,
-    /// Root experiment seed (participation sampling etc.).
-    pub seed: u64,
-}
-
-/// A federated training algorithm.
-pub trait Strategy {
+/// The server half of a federation strategy: owns the global model and
+/// speaks the wire protocol. One round is
+/// `begin_round -> (fold_uplink)* -> end_round`; the driver may call
+/// `fold_uplink` in any cohort order it can reproduce (the engine uses
+/// cohort order — DESIGN.md §Parallel round engine).
+pub trait ServerLogic {
     fn name(&self) -> &'static str;
 
-    /// Execute one communication round (DL broadcast, local training,
-    /// UL aggregation, server update).
-    fn run_round(&mut self, ctx: &mut RoundCtx) -> Result<RoundStats>;
+    /// Open round `plan.round`: reset per-round fold state and emit the
+    /// broadcast every participating device will receive.
+    fn begin_round(&mut self, plan: &RoundPlan) -> Result<DownlinkMsg>;
+
+    /// Ingest one uplink envelope as it lands. Implementations fold the
+    /// payload into O(n_params) accumulators immediately — they never
+    /// retain the message — and record its actual serialized size into
+    /// `comm` (the streaming-fold memory contract, DESIGN.md §Protocol).
+    fn fold_uplink(&mut self, msg: &UplinkMsg, comm: &mut RoundComm) -> Result<()>;
+
+    /// Close the round: advance the global model from the folded state.
+    fn end_round(&mut self, plan: &RoundPlan) -> Result<RoundStats>;
+
+    /// The device-side half of this strategy. The returned task owns
+    /// copies of whatever configuration it needs (never references into
+    /// the server), so the engine can run it on worker threads while the
+    /// server folds on the coordinator thread.
+    fn client_task(&self) -> Box<dyn ClientTask>;
 
     /// The current global model for evaluation.
     fn eval_model(&self, round: usize) -> EvalModel;
@@ -98,12 +108,29 @@ pub trait Strategy {
     fn storage_bits(&self) -> u64;
 }
 
-/// Instantiate the strategy an experiment config asks for.
-pub fn build_strategy(
+/// The device half of a federation strategy: a pure function from the
+/// broadcast (plus the device's own shard state and the round plan) to
+/// one uplink envelope. `prev_state` is the state this device
+/// reconstructed from the previous broadcast — required to decode a
+/// `downlink=qdelta` frame chain, shape-checked otherwise.
+pub trait ClientTask: Send + Sync {
+    fn run(
+        &self,
+        rt: &ModelRuntime,
+        data: &Dataset,
+        client: &mut Client,
+        msg: &DownlinkMsg,
+        prev_state: Option<&[f32]>,
+        plan: &RoundPlan,
+    ) -> Result<UplinkMsg>;
+}
+
+/// Instantiate the server logic an experiment config asks for.
+pub fn build_server(
     cfg: &ExperimentConfig,
     n_params: usize,
     init_weights: &[f32],
-) -> Box<dyn Strategy> {
+) -> Box<dyn ServerLogic> {
     match cfg.algorithm {
         Algorithm::FedPMReg | Algorithm::FedPM => Box::new(MaskStrategy::with_agg(
             n_params,

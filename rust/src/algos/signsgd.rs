@@ -2,32 +2,51 @@
 //!
 //! Dense weights; per round each device computes a minibatch gradient
 //! through the AOT `dense_grad` program and uploads only the SIGN of
-//! each coordinate (1 bit/param). The server takes the dataset-weighted
-//! majority vote and steps `w -= server_lr * sign(vote)`.
+//! each coordinate (1 bit/param) in an [`UplinkPayload::SignVector`]
+//! envelope. The server folds each vote into a weighted tally the moment
+//! it lands (streaming, O(n_params) state — never a cohort of sign
+//! vectors) and steps `w -= server_lr * sign(tally)` at `end_round`.
 //!
 //! Communication: uplink is a ~50% dense bit vector (entropy ~1 Bpp,
 //! basically incompressible — this is exactly the contrast with the
 //! regularized masks). Note the final model still needs float storage,
 //! unlike the strong-LTH seed+mask representation (paper's remark).
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 use crate::compress::{self, DownlinkEncoder, DownlinkMode};
-use crate::mask::aggregate::majority_vote_signs;
+use crate::data::Dataset;
+use crate::fl::protocol::{DownlinkMsg, RoundPlan, UplinkMsg, UplinkPayload};
+use crate::fl::{Client, RoundComm};
+use crate::mask::empirical_bpp;
+use crate::runtime::ModelRuntime;
 use crate::util::BitVec;
 
-use super::{EvalModel, RoundCtx, RoundStats, Strategy};
+use super::{ClientTask, EvalModel, RoundStats, ServerLogic};
 
-/// MV-SignSGD server + model state.
+/// MV-SignSGD server logic: model state + streaming vote tally.
 pub struct SignSgd {
     weights: Vec<f32>,
     /// Downlink codec state: the weight reconstruction the fleet holds.
     dl: DownlinkEncoder,
+    /// Weighted sign tally, folded one uplink at a time in cohort order
+    /// (`+w` for a 1-bit, `-w` for a 0-bit — identical f64 sums to the
+    /// batch `majority_vote_signs` it replaces).
+    tally: Vec<f64>,
+    train_loss: f64,
+    reporters: usize,
 }
 
 impl SignSgd {
     pub fn new(init_weights: Vec<f32>, downlink: DownlinkMode) -> Self {
-        Self { weights: init_weights, dl: DownlinkEncoder::new(downlink) }
+        let n = init_weights.len();
+        Self {
+            weights: init_weights,
+            dl: DownlinkEncoder::new(downlink),
+            tally: vec![0.0; n],
+            train_loss: 0.0,
+            reporters: 0,
+        }
     }
 
     pub fn weights(&self) -> &[f32] {
@@ -41,51 +60,81 @@ impl SignSgd {
     }
 }
 
-impl Strategy for SignSgd {
+/// Device half: one minibatch gradient, sign-coded.
+pub struct SignSgdClientTask;
+
+impl ClientTask for SignSgdClientTask {
+    fn run(
+        &self,
+        rt: &ModelRuntime,
+        data: &Dataset,
+        client: &mut Client,
+        msg: &DownlinkMsg,
+        prev_state: Option<&[f32]>,
+        _plan: &RoundPlan,
+    ) -> Result<UplinkMsg> {
+        if let DownlinkMsg::Theta(_) = msg {
+            bail!("signsgd client expects a weight broadcast, got {}", msg.kind_name());
+        }
+        // Gradient at the weights the device actually decoded off the
+        // wire (quantized under qdelta, exact under float32).
+        let weights = msg.decode_state(prev_state)?;
+        let batch = rt.manifest.batch;
+        let (xs, ys) = client.gather_call_batches(data, 1, batch);
+        let (grads, loss, _correct) = rt.dense_grad(&weights, &xs, &ys)?;
+        // UL: sign bits (1 = positive gradient step direction).
+        let sign_bits =
+            BitVec::from_iter_len(grads.iter().map(|&g| g > 0.0), weights.len());
+        Ok(UplinkMsg {
+            weight: client.weight(),
+            train_loss: loss,
+            payload: UplinkPayload::SignVector(compress::encode(&sign_bits)),
+        })
+    }
+}
+
+impl ServerLogic for SignSgd {
     fn name(&self) -> &'static str {
         "mv_signsgd"
     }
 
-    fn run_round(&mut self, ctx: &mut RoundCtx) -> Result<RoundStats> {
-        let n = self.weights.len();
-        let batch = ctx.rt.manifest.batch;
-        let cohort: Vec<usize> = (0..ctx.clients.len()).collect();
-        let (rt, data) = (ctx.rt, ctx.data);
-        // DL: broadcast the weights through the downlink codec; devices
-        // compute their gradients at the reconstruction they received.
-        let wire_bits = self.dl.broadcast(&self.weights);
-        let bweights = self.dl.recon().to_vec();
-        let weights = &bweights;
+    fn begin_round(&mut self, _plan: &RoundPlan) -> Result<DownlinkMsg> {
+        self.tally.iter_mut().for_each(|t| *t = 0.0);
+        self.train_loss = 0.0;
+        self.reporters = 0;
+        Ok(DownlinkMsg::broadcast(&mut self.dl, &self.weights, false))
+    }
 
-        // Parallel phase: one minibatch gradient + sign coding per device
-        // (parallel SignSGD semantics).
-        let reports = ctx.engine.run_cohort(ctx.clients, &cohort, |_pos, client| {
-            let (xs, ys) = client.gather_call_batches(data, 1, batch);
-            let (grads, loss, _correct) = rt.dense_grad(weights, &xs, &ys)?;
-            // UL: sign bits (1 = positive gradient step direction).
-            let sign_bits = BitVec::from_iter_len(grads.iter().map(|&g| g > 0.0), n);
-            let enc = compress::encode(&sign_bits);
-            Ok((sign_bits, enc, client.weight(), loss))
-        })?;
-
-        // Ordered reduction: account + vote in cohort order.
-        let mut signs: Vec<BitVec> = Vec::with_capacity(reports.len());
-        let mut weights_of: Vec<f64> = Vec::with_capacity(reports.len());
-        let mut train_loss = 0.0f64;
-        for (i, (sign_bits, enc, weight, loss)) in reports.into_iter().enumerate() {
-            // DL: one broadcast per device (measured wire bits).
-            ctx.comm.add_downlink_bits(wire_bits);
-            ctx.comm.add_mask_uplink(&sign_bits, &enc);
-            train_loss += (loss as f64 - train_loss) / (i + 1) as f64;
-            signs.push(sign_bits);
-            weights_of.push(weight);
+    fn fold_uplink(&mut self, msg: &UplinkMsg, comm: &mut RoundComm) -> Result<()> {
+        let UplinkPayload::SignVector(enc) = &msg.payload else {
+            bail!(
+                "signsgd server expects a sign-vector uplink, got {}",
+                msg.payload.kind_name()
+            );
+        };
+        let signs = compress::decode(enc, self.weights.len())?;
+        comm.add_uplink(msg.wire_bits(), empirical_bpp(&signs));
+        for (i, bit) in signs.iter().enumerate() {
+            self.tally[i] += if bit { msg.weight } else { -msg.weight };
         }
+        self.reporters += 1;
+        self.train_loss += (msg.train_loss as f64 - self.train_loss) / self.reporters as f64;
+        Ok(())
+    }
 
-        let vote = majority_vote_signs(&signs, &weights_of);
+    fn end_round(&mut self, plan: &RoundPlan) -> Result<RoundStats> {
+        ensure!(self.reporters > 0, "no uplinks received this round");
+        let vote = BitVec::from_iter_len(
+            self.tally.iter().map(|&t| t > 0.0),
+            self.tally.len(),
+        );
         let density = vote.density();
-        self.apply_vote(&vote, ctx.server_lr);
+        self.apply_vote(&vote, plan.server_lr);
+        Ok(RoundStats { train_loss: self.train_loss, mean_theta: 0.0, mask_density: density })
+    }
 
-        Ok(RoundStats { train_loss, mean_theta: 0.0, mask_density: density })
+    fn client_task(&self) -> Box<dyn ClientTask> {
+        Box::new(SignSgdClientTask)
     }
 
     fn eval_model(&self, _round: usize) -> EvalModel {
@@ -125,5 +174,73 @@ mod tests {
             EvalModel::Dense(w) => assert_eq!(w, vec![1.0; 8]),
             _ => panic!("signsgd evaluates dense weights"),
         }
+    }
+
+    #[test]
+    fn streaming_fold_matches_batch_majority_vote() {
+        use crate::mask::aggregate::majority_vote_signs;
+        use crate::util::Xoshiro256;
+        let n = 257;
+        let plan = RoundPlan {
+            round: 1,
+            seed: 1,
+            lambda: 0.0,
+            lr: 0.1,
+            local_epochs: 1,
+            topk_frac: 0.3,
+            server_lr: 0.5,
+            adam: false,
+        };
+        let mut rng = Xoshiro256::new(17);
+        let signs: Vec<BitVec> = (0..5)
+            .map(|_| BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < 0.5), n))
+            .collect();
+        let weights: Vec<f64> = (0..5).map(|i| (i + 1) as f64 * 3.0).collect();
+
+        let mut srv = SignSgd::new(vec![0.0; n], DownlinkMode::Float32);
+        let mut comm = RoundComm::new(n);
+        srv.begin_round(&plan).unwrap();
+        for (s, &w) in signs.iter().zip(&weights) {
+            let msg = UplinkMsg {
+                weight: w,
+                train_loss: 0.25,
+                payload: UplinkPayload::SignVector(compress::encode(s)),
+            };
+            srv.fold_uplink(&msg, &mut comm).unwrap();
+        }
+        srv.end_round(&plan).unwrap();
+
+        // reference: batch vote, then the same step
+        let vote = majority_vote_signs(&signs, &weights);
+        let mut reference = SignSgd::new(vec![0.0; n], DownlinkMode::Float32);
+        reference.apply_vote(&vote, 0.5);
+        let got: Vec<u32> = srv.weights().iter().map(|w| w.to_bits()).collect();
+        let want: Vec<u32> = reference.weights().iter().map(|w| w.to_bits()).collect();
+        assert_eq!(got, want, "streaming fold must reproduce the batch vote exactly");
+        assert_eq!(comm.clients, 5);
+    }
+
+    #[test]
+    fn fold_rejects_wrong_payload_and_empty_round() {
+        let plan = RoundPlan {
+            round: 1,
+            seed: 1,
+            lambda: 0.0,
+            lr: 0.1,
+            local_epochs: 1,
+            topk_frac: 0.3,
+            server_lr: 0.1,
+            adam: false,
+        };
+        let mut srv = SignSgd::new(vec![0.0; 8], DownlinkMode::Float32);
+        let mut comm = RoundComm::new(8);
+        srv.begin_round(&plan).unwrap();
+        let msg = UplinkMsg {
+            weight: 1.0,
+            train_loss: 0.0,
+            payload: UplinkPayload::DenseDelta(vec![0.0; 8]),
+        };
+        assert!(srv.fold_uplink(&msg, &mut comm).is_err());
+        assert!(srv.end_round(&plan).is_err(), "a round with zero uplinks cannot vote");
     }
 }

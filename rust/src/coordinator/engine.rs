@@ -31,7 +31,11 @@
 
 use anyhow::{ensure, Result};
 
-use crate::fl::Client;
+use crate::algos::{ClientTask as _, RoundStats, ServerLogic};
+use crate::data::Dataset;
+use crate::fl::protocol::{DownlinkMsg, RoundPlan};
+use crate::fl::{Client, Participation, RoundComm};
+use crate::runtime::ModelRuntime;
 
 /// Shards a round's cohort across worker threads.
 #[derive(Debug, Clone, Copy)]
@@ -135,6 +139,75 @@ impl RoundEngine {
             .into_iter()
             .map(|s| s.expect("every cohort position must produce a result"))
             .collect()
+    }
+
+    /// Drive one full protocol round (DESIGN.md §Protocol):
+    ///
+    /// 1. Sample the cohort from the participation model.
+    /// 2. `server.begin_round` -> one [`DownlinkMsg`]; a frame chain link
+    ///    is accounted to **every** device (a device that missed one
+    ///    could not decode the next), a stateless broadcast only to the
+    ///    sampled cohort.
+    /// 3. Run the strategy's [`crate::algos::ClientTask`] across the
+    ///    cohort in **waves** of ~2x the worker count, so at most one
+    ///    wave of uplink envelopes is resident at a time and the server
+    ///    folds each wave the moment it completes — coordinator memory
+    ///    is O(wave × n_params), server fold state O(n_params), at any
+    ///    cohort size.
+    /// 4. Apply the dropout failure model (the device trained, its
+    ///    uplink never lands), fold surviving envelopes in cohort order,
+    ///    and `server.end_round`.
+    ///
+    /// `fleet_state` is the state the fleet reconstructed from the
+    /// previous broadcast (`None` before the first round); the engine
+    /// advances it exactly like a device would, by decoding the message.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_round(
+        &self,
+        server: &mut dyn ServerLogic,
+        rt: &ModelRuntime,
+        data: &Dataset,
+        clients: &mut [Client],
+        fleet_state: &mut Option<Vec<f32>>,
+        participation: Participation,
+        plan: &RoundPlan,
+        comm: &mut RoundComm,
+    ) -> Result<RoundStats> {
+        let cohort = participation.sample_round(clients.len(), plan.seed, plan.round);
+        let msg = server.begin_round(plan)?;
+        let receivers = match msg {
+            DownlinkMsg::Frame(_) => clients.len(),
+            DownlinkMsg::RawF32(_) | DownlinkMsg::Theta(_) => cohort.len(),
+        };
+        for _ in 0..receivers {
+            comm.add_downlink_msg(&msg);
+        }
+
+        let task = server.client_task();
+        let prev = fleet_state.take();
+        let prev_ref = prev.as_deref();
+        let task_ref = task.as_ref();
+        let wave = self.threads().max(4) * 2;
+        let mut offset = 0usize;
+        for ids in cohort.chunks(wave) {
+            let uplinks = self.run_cohort(clients, ids, |pos, client| {
+                let up = task_ref.run(rt, data, client, &msg, prev_ref, plan)?;
+                // Failure injection: the device trained but its uplink
+                // never arrives; the server must tolerate the gap.
+                let dropped =
+                    participation.drops(offset + pos, plan.seed, plan.round, client.id);
+                Ok(if dropped { None } else { Some(up) })
+            })?;
+            // Ordered streaming fold: envelopes land in cohort order, so
+            // the result is independent of worker scheduling.
+            for up in uplinks.into_iter().flatten() {
+                server.fold_uplink(&up, comm)?;
+            }
+            offset += ids.len();
+        }
+
+        *fleet_state = Some(msg.decode_state(prev_ref)?);
+        server.end_round(plan)
     }
 }
 

@@ -9,11 +9,14 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::algos::{build_strategy, EvalModel, RoundCtx, Strategy};
+use crate::algos::{build_server, EvalModel, ServerLogic};
 use crate::config::{ExperimentConfig, Partition};
 use crate::coordinator::RoundEngine;
-use crate::data::{loader, partition_iid, partition_noniid, Dataset, SynthSpec, Synthetic};
-use crate::fl::{Client, CommTotals, MetricsSink, RoundComm, RoundRecord};
+use crate::data::{
+    loader, partition_iid, partition_noniid, subsample, Dataset, SynthSpec, Synthetic,
+};
+use crate::fl::protocol::RoundPlan;
+use crate::fl::{Client, CommTotals, MetricsSink, Participation, RoundComm, RoundRecord};
 use crate::runtime::{EvalMetrics, ModelRuntime};
 use crate::util::SeedSequence;
 
@@ -31,8 +34,11 @@ pub struct Experiment {
     train: Dataset,
     clients: Vec<Client>,
     eval_shards: Vec<EvalShard>,
-    strategy: Box<dyn Strategy>,
+    server: Box<dyn ServerLogic>,
     engine: RoundEngine,
+    /// The state the fleet reconstructed from the previous broadcast
+    /// (what a device needs to decode the next `qdelta` frame).
+    fleet_state: Option<Vec<f32>>,
     pub totals: CommTotals,
 }
 
@@ -100,7 +106,7 @@ impl Experiment {
             })
             .collect();
 
-        let strategy = build_strategy(&cfg, rt.manifest.n_params, rt.weights());
+        let server = build_server(&cfg, rt.manifest.n_params, rt.weights());
         let engine = RoundEngine::new(cfg.threads);
         Ok(Self {
             cfg,
@@ -108,10 +114,26 @@ impl Experiment {
             train,
             clients,
             eval_shards,
-            strategy,
+            server,
             engine,
+            fleet_state: None,
             totals: CommTotals::default(),
         })
+    }
+
+    /// The typed per-round hyperparameter plan the server side owns
+    /// (protocol replacement for the old `RoundCtx` grab-bag).
+    fn round_plan(&self, round: usize) -> RoundPlan {
+        RoundPlan {
+            round,
+            seed: self.cfg.seed,
+            lambda: self.cfg.effective_lambda(),
+            lr: self.cfg.lr,
+            local_epochs: self.cfg.local_epochs,
+            topk_frac: self.cfg.topk_frac,
+            server_lr: self.cfg.server_lr,
+            adam: self.cfg.adam,
+        }
     }
 
     fn load_data(cfg: &ExperimentConfig, dim: usize, n_classes: usize) -> Result<(Dataset, Dataset)> {
@@ -138,10 +160,10 @@ impl Experiment {
         Ok((gen.generate(cfg.train_samples, 1), gen.generate(cfg.test_samples, 2)))
     }
 
-    /// Evaluate the strategy's current model over all device targets,
-    /// weighting each device by its eval-shard sample count.
+    /// Evaluate the server's current global model over all device
+    /// targets, weighting each device by its eval-shard sample count.
     fn evaluate(&self, round: usize) -> Result<(f64, f64)> {
-        let model = self.strategy.eval_model(round);
+        let model = self.server.eval_model(round);
         let ones = vec![1.0f32; self.rt.manifest.n_params];
         // IID shards all have the same class set; dedupe the work by
         // evaluating once and replicating when every shard is identical.
@@ -177,31 +199,22 @@ impl Experiment {
         let mut est_bpp_sum = 0.0;
         let mut coded_bpp_sum = 0.0;
         let mut dl_bpp_sum = 0.0;
+        let participation = Participation::new(self.cfg.participation, self.cfg.dropout);
+        let engine = self.engine;
         for round in 1..=self.cfg.rounds {
             let t0 = Instant::now();
             let mut comm = RoundComm::new(self.rt.manifest.n_params);
-            let stats = {
-                let mut ctx = RoundCtx {
-                    rt: &self.rt,
-                    data: &self.train,
-                    clients: &mut self.clients,
-                    round,
-                    comm: &mut comm,
-                    engine: &self.engine,
-                    lambda: self.cfg.effective_lambda(),
-                    lr: self.cfg.lr,
-                    local_epochs: self.cfg.local_epochs,
-                    topk_frac: self.cfg.topk_frac,
-                    server_lr: self.cfg.server_lr,
-                    adam: self.cfg.adam,
-                    participation: crate::fl::Participation::new(
-                        self.cfg.participation,
-                        self.cfg.dropout,
-                    ),
-                    seed: self.cfg.seed,
-                };
-                self.strategy.run_round(&mut ctx)?
-            };
+            let plan = self.round_plan(round);
+            let stats = engine.run_round(
+                self.server.as_mut(),
+                &self.rt,
+                &self.train,
+                &mut self.clients,
+                &mut self.fleet_state,
+                participation,
+                &plan,
+                &mut comm,
+            )?;
             self.totals.add_round(&comm);
             est_bpp_sum += comm.est_bpp();
             coded_bpp_sum += comm.measured_bpp();
@@ -244,7 +257,7 @@ impl Experiment {
             avg_dl_bpp: dl_bpp_sum / self.cfg.rounds as f64,
             total_ul_mb: self.totals.ul_megabytes(),
             total_dl_mb: self.totals.dl_megabytes(),
-            storage_bits: self.strategy.storage_bits(),
+            storage_bits: self.server.storage_bits(),
             rounds: self.cfg.rounds,
         })
     }
@@ -253,9 +266,9 @@ impl Experiment {
         &self.rt
     }
 
-    /// The strategy's current global model (for checkpointing).
-    pub fn strategy_eval_model(&self) -> EvalModel {
-        self.strategy.eval_model(self.cfg.rounds)
+    /// The server's current global model (for checkpointing).
+    pub fn global_model(&self) -> EvalModel {
+        self.server.eval_model(self.cfg.rounds)
     }
 }
 
@@ -274,19 +287,6 @@ fn weighted_eval(per_shard: &[EvalMetrics]) -> (f64, f64) {
     let correct: f64 = per_shard.iter().map(|m| m.correct).sum();
     let loss: f64 = per_shard.iter().map(|m| m.loss_sum).sum();
     (correct / examples as f64, loss / examples as f64)
-}
-
-/// Random subsample (without replacement) to the requested size.
-fn subsample(d: Dataset, n: usize, seed: u64) -> Dataset {
-    if n >= d.len() {
-        return d;
-    }
-    let mut rng = crate::util::Xoshiro256::new(seed);
-    let mut idx: Vec<usize> = (0..d.len()).collect();
-    rng.shuffle(&mut idx);
-    idx.truncate(n);
-    let (x, y) = d.gather(&idx);
-    Dataset::new(x, y, d.dim, d.n_classes)
 }
 
 #[cfg(test)]

@@ -68,6 +68,21 @@ impl Dataset {
     }
 }
 
+/// Random subsample (without replacement) to the requested size —
+/// shared by the experiment builder and the checkpoint evaluator so
+/// that, given the same seed, a `--samples` cap means the same draw.
+pub fn subsample(d: Dataset, n: usize, seed: u64) -> Dataset {
+    if n >= d.len() {
+        return d;
+    }
+    let mut rng = Xoshiro256::new(seed);
+    let mut idx: Vec<usize> = (0..d.len()).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(n);
+    let (x, y) = d.gather(&idx);
+    Dataset::new(x, y, d.dim, d.n_classes)
+}
+
 /// Cyclic minibatch sampler over a shard's indices: reshuffles each epoch
 /// with its own RNG stream, yielding exactly `batch` indices per call
 /// (wrapping across epochs like the usual FL local loader).
@@ -173,5 +188,17 @@ mod tests {
     #[should_panic(expected = "size mismatch")]
     fn bad_sizes_panic() {
         Dataset::new(vec![0.0; 5], vec![0, 1], 3, 2);
+    }
+
+    #[test]
+    fn subsample_caps_size_and_is_deterministic() {
+        let d = toy();
+        let a = subsample(d.clone(), 4, 7);
+        let b = subsample(d.clone(), 4, 7);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        // asking for more than available is a no-op
+        assert_eq!(subsample(d.clone(), 100, 7).len(), d.len());
     }
 }

@@ -1,10 +1,12 @@
 //! Communication accounting: every bit that would cross the network.
 //!
 //! The paper's evaluation axis is uplink bits per parameter, so this is
-//! first-class state, not an afterthought: the client records the coded
-//! size of every uplink payload (masks through [`crate::compress`],
-//! dense floats at 32 Bpp) and the estimated source entropy (eq. 13);
-//! the server records downlink broadcast sizes.
+//! first-class state, not an afterthought. Since the protocol redesign
+//! (DESIGN.md §Protocol) the counters record the **actual serialized
+//! envelope bytes** of the wire messages — [`crate::fl::UplinkMsg`] per
+//! received uplink, [`crate::fl::DownlinkMsg`] per receiving device —
+//! plus the estimated source entropy of each uplink (eq. 13: H(p) for a
+//! binary payload, 32 for dense floats).
 //!
 //! Accounting is *merge-based* (DESIGN.md §Parallel round engine): all
 //! counters are plain sums, so per-client contributions can be recorded
@@ -12,9 +14,7 @@
 //! the round total with [`RoundComm::merge`] — no `&mut` interleaving
 //! per client, and the merged result is independent of merge order.
 
-use crate::compress::Encoded;
-use crate::mask::empirical_bpp;
-use crate::util::BitVec;
+use super::protocol::DownlinkMsg;
 
 /// One round's communication totals across all clients.
 #[derive(Debug, Clone, Default)]
@@ -41,31 +41,26 @@ impl RoundComm {
         Self { n_params, ..Default::default() }
     }
 
-    /// Record one client's coded binary-mask uplink.
-    pub fn add_mask_uplink(&mut self, mask: &BitVec, enc: &Encoded) {
-        self.ul_bits += enc.wire_bytes() as u64 * 8;
-        self.est_bpp_sum += empirical_bpp(mask);
+    /// Record one received uplink envelope: its actual serialized size
+    /// (`UplinkMsg::wire_bits`) plus the estimated source Bpp of its
+    /// payload (eq. 13 for binary payloads, 32.0 for dense floats).
+    pub fn add_uplink(&mut self, wire_bits: u64, est_bpp: f64) {
+        self.ul_bits += wire_bits;
+        self.est_bpp_sum += est_bpp;
         self.clients += 1;
     }
 
-    /// Record a dense float uplink (FedAvg): 32 bits per parameter.
-    pub fn add_dense_uplink(&mut self) {
-        self.ul_bits += self.n_params as u64 * 32;
-        self.est_bpp_sum += 32.0;
-        self.clients += 1;
-    }
-
-    /// Record a downlink broadcast of `bits` wire bits to one client
-    /// (coded delta frames under `downlink=qdelta`, raw floats otherwise).
+    /// Record a downlink broadcast of `bits` wire bits to one client.
     pub fn add_downlink_bits(&mut self, bits: u64) {
         self.dl_bits += bits;
         self.broadcasts += 1;
     }
 
-    /// Record the raw-f32 downlink broadcast of the global state to one
-    /// client: 32 bits per parameter (the `downlink=float32` baseline).
-    pub fn add_float_downlink(&mut self) {
-        self.add_downlink_bits(self.n_params as u64 * 32);
+    /// Record the delivery of one serialized downlink envelope to one
+    /// receiving device (called once per receiver — a frame chain link
+    /// reaches the whole fleet, a stateless broadcast only the cohort).
+    pub fn add_downlink_msg(&mut self, msg: &DownlinkMsg) {
+        self.add_downlink_bits(msg.wire_bits());
     }
 
     /// Fold another accumulator (e.g. a per-client or per-worker record)
@@ -140,11 +135,22 @@ impl CommTotals {
 mod tests {
     use super::*;
     use crate::compress;
-    use crate::util::Xoshiro256;
+    use crate::fl::protocol::{UplinkMsg, UplinkPayload};
+    use crate::mask::empirical_bpp;
+    use crate::util::{BitVec, Xoshiro256};
 
     fn mask(n: usize, p: f64, seed: u64) -> BitVec {
         let mut rng = Xoshiro256::new(seed);
         BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < p), n)
+    }
+
+    /// A coded-mask uplink envelope the way the strategies build one.
+    fn mask_msg(m: &BitVec) -> UplinkMsg {
+        UplinkMsg {
+            weight: 1.0,
+            train_loss: 0.0,
+            payload: UplinkPayload::CodedMask(compress::encode(m)),
+        }
     }
 
     #[test]
@@ -153,11 +159,10 @@ mod tests {
         let mut rc = RoundComm::new(n);
         for i in 0..5 {
             let m = mask(n, 0.5, i);
-            let enc = compress::encode(&m);
-            rc.add_mask_uplink(&m, &enc);
+            rc.add_uplink(mask_msg(&m).wire_bits(), empirical_bpp(&m));
         }
         assert_eq!(rc.clients, 5);
-        // p=0.5 masks: measured ~1 Bpp, est ~1.0
+        // p=0.5 masks: measured ~1 Bpp (+ envelope headers), est ~1.0
         assert!((rc.est_bpp() - 1.0).abs() < 0.01, "est={}", rc.est_bpp());
         assert!((rc.measured_bpp() - 1.0).abs() < 0.05, "meas={}", rc.measured_bpp());
     }
@@ -167,17 +172,24 @@ mod tests {
         let n = 50_000;
         let mut rc = RoundComm::new(n);
         let m = mask(n, 0.02, 1);
-        rc.add_mask_uplink(&m, &compress::encode(&m));
+        rc.add_uplink(mask_msg(&m).wire_bits(), empirical_bpp(&m));
         assert!(rc.measured_bpp() < 0.25);
         assert!(rc.est_bpp() < 0.25);
     }
 
     #[test]
-    fn dense_uplink_is_32bpp() {
-        let mut rc = RoundComm::new(1000);
-        rc.add_dense_uplink();
-        assert_eq!(rc.ul_bits, 32_000);
-        assert_eq!(rc.measured_bpp(), 32.0);
+    fn dense_uplink_envelope_measures_serialized_bytes() {
+        let n = 1000;
+        let mut rc = RoundComm::new(n);
+        let msg = UplinkMsg {
+            weight: 10.0,
+            train_loss: 0.1,
+            payload: UplinkPayload::DenseDelta(vec![0.0; n]),
+        };
+        rc.add_uplink(msg.wire_bits(), 32.0);
+        // envelope = serialized bytes exactly; est stays the source's 32
+        assert_eq!(rc.ul_bits, msg.to_bytes().len() as u64 * 8);
+        assert!(rc.measured_bpp() > 32.0 && rc.measured_bpp() < 32.2);
         assert_eq!(rc.est_bpp(), 32.0);
     }
 
@@ -188,16 +200,16 @@ mod tests {
         // one accumulator, clients recorded in order
         let mut whole = RoundComm::new(n);
         for m in &masks {
-            whole.add_float_downlink();
-            whole.add_mask_uplink(m, &compress::encode(m));
+            whole.add_downlink_bits(n as u64 * 32);
+            whole.add_uplink(mask_msg(m).wire_bits(), empirical_bpp(m));
         }
         // per-client accumulators merged in a scrambled order
         let mut parts: Vec<RoundComm> = masks
             .iter()
             .map(|m| {
                 let mut rc = RoundComm::new(n);
-                rc.add_float_downlink();
-                rc.add_mask_uplink(m, &compress::encode(m));
+                rc.add_downlink_bits(n as u64 * 32);
+                rc.add_uplink(mask_msg(m).wire_bits(), empirical_bpp(m));
                 rc
             })
             .collect();
@@ -222,7 +234,7 @@ mod tests {
         }
         for i in 0..3 {
             let m = mask(1000, 0.5, i);
-            rc.add_mask_uplink(&m, &compress::encode(&m));
+            rc.add_uplink(mask_msg(&m).wire_bits(), empirical_bpp(&m));
         }
         assert_eq!(rc.broadcasts, 4);
         assert_eq!(rc.clients, 3);
@@ -230,19 +242,21 @@ mod tests {
     }
 
     #[test]
-    fn float_downlink_is_32bpp() {
+    fn downlink_envelope_measures_serialized_bytes() {
         let mut rc = RoundComm::new(1000);
-        rc.add_float_downlink();
-        assert_eq!(rc.dl_bits, 32_000);
-        assert_eq!(rc.measured_dl_bpp(), 32.0);
+        let msg = DownlinkMsg::Theta(vec![0.5; 1000]);
+        rc.add_downlink_msg(&msg);
+        assert_eq!(rc.dl_bits, msg.to_bytes().len() as u64 * 8);
+        // raw floats + the few envelope header bytes
+        assert!(rc.measured_dl_bpp() > 32.0 && rc.measured_dl_bpp() < 32.1);
     }
 
     #[test]
     fn totals_accumulate() {
         let mut t = CommTotals::default();
         let mut rc = RoundComm::new(8000);
-        rc.add_dense_uplink();
-        rc.add_float_downlink();
+        rc.add_uplink(8000 * 32, 32.0);
+        rc.add_downlink_bits(8000 * 32);
         t.add_round(&rc);
         t.add_round(&rc);
         assert_eq!(t.rounds, 2);

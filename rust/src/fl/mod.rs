@@ -1,17 +1,20 @@
-//! The federated-learning engine: server, simulated device fleet,
-//! communication accounting, metrics.
+//! The federated-learning engine: wire protocol, server, simulated
+//! device fleet, communication accounting, metrics.
 //!
-//! The round loop itself lives in [`crate::algos`] (each algorithm owns
-//! its round semantics) and is driven by [`crate::coordinator`].
+//! A round is an exchange of the typed messages in [`protocol`]
+//! (DESIGN.md §Protocol); the strategy halves that speak them live in
+//! [`crate::algos`] and the round driver in [`crate::coordinator`].
 
 pub mod client;
 pub mod participation;
 pub mod comm;
 pub mod metrics;
+pub mod protocol;
 pub mod server;
 
 pub use client::Client;
 pub use participation::Participation;
 pub use comm::{CommTotals, RoundComm};
 pub use metrics::{MetricsSink, RoundRecord};
+pub use protocol::{DownlinkMsg, RoundPlan, UplinkMsg, UplinkPayload, PROTOCOL_VERSION};
 pub use server::Server;

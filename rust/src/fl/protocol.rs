@@ -1,0 +1,619 @@
+//! The federation wire protocol: typed, versioned server/client messages.
+//!
+//! The paper's whole contribution is a wire format — ≤ 1 bit-per-parameter
+//! coded masks instead of floats — so the protocol is first-class: a round
+//! is an exchange of [`DownlinkMsg`] (server -> fleet) and [`UplinkMsg`]
+//! (device -> server) envelopes, each with a versioned, self-describing
+//! byte layout (`to_bytes` / `from_bytes`) that validates every recorded
+//! length and value range before trusting a payload — exactly like
+//! [`crate::compress::decode`] does for the mask codec. Nothing else ever
+//! needs to cross a network boundary:
+//!
+//! * **Downlink** — one broadcast per round: raw f32 weights (the dense
+//!   baselines), a coded delta frame (`downlink=qdelta`, a link in the
+//!   stateful chain of DESIGN.md §Downlink), or a theta broadcast (the
+//!   mask family's global probability mask).
+//! * **Uplink** — one envelope per device: an entropy-coded binary mask
+//!   (FedPM family), a coded sign vector (MV-SignSGD), or a dense f32
+//!   delta (FedAvg), plus the |D_i| aggregation weight and the local
+//!   train loss the server folds into its round stats.
+//! * **[`RoundPlan`]** — the typed per-round hyperparameter set the
+//!   server side owns (replaces the old `RoundCtx` grab-bag); it is
+//!   serializable too so a transport can ship it next to the broadcast.
+//!
+//! The server never materializes a cohort of uplinks: the strategies'
+//! `fold_uplink` (see [`crate::algos`]) consumes envelopes one at a time
+//! as they land, keeping server memory O(n_params) — the streaming-fold
+//! contract described in DESIGN.md §Protocol.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::compress::{DownlinkEncoder, DownlinkFrame, DownlinkMode, Encoded};
+
+/// Wire-format version stamped on every envelope; a mismatch is a hard
+/// decode error, never a silent reinterpretation.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+const DL_RAW_F32: u8 = 0;
+const DL_FRAME: u8 = 1;
+const DL_THETA: u8 = 2;
+
+const UL_CODED_MASK: u8 = 0;
+const UL_SIGN_VECTOR: u8 = 1;
+const UL_DENSE_DELTA: u8 = 2;
+
+/// Envelope header size shared by both directions: version + kind bytes.
+const ENVELOPE_HEAD: usize = 2;
+/// Uplink header: envelope head + f64 weight + f32 train loss.
+const UPLINK_HEAD: usize = ENVELOPE_HEAD + 8 + 4;
+
+fn put_f32s(out: &mut Vec<u8>, values: &[f32]) {
+    out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Read a `u32 n` + `n` f32 payload occupying the whole remainder.
+fn take_f32s(bytes: &[u8], what: &str) -> Result<Vec<f32>> {
+    ensure!(bytes.len() >= 4, "{what} length field truncated");
+    let n = u32::from_le_bytes(bytes[..4].try_into()?) as usize;
+    ensure!(
+        bytes.len() == 4 + 4 * n,
+        "{what} records {n} values but carries {} payload bytes",
+        bytes.len() - 4
+    );
+    let mut values = Vec::with_capacity(n);
+    for chunk in bytes[4..].chunks_exact(4) {
+        values.push(f32::from_le_bytes(chunk.try_into()?));
+    }
+    Ok(values)
+}
+
+fn check_header(bytes: &[u8], what: &str) -> Result<u8> {
+    ensure!(bytes.len() >= ENVELOPE_HEAD, "{what} envelope truncated ({} bytes)", bytes.len());
+    ensure!(
+        bytes[0] == PROTOCOL_VERSION,
+        "{what} protocol version {} != supported {PROTOCOL_VERSION}",
+        bytes[0]
+    );
+    Ok(bytes[1])
+}
+
+/// One server -> fleet broadcast as it travels on the wire.
+#[derive(Debug, Clone)]
+pub enum DownlinkMsg {
+    /// Raw f32 global weights (dense baselines, `downlink=float32`).
+    RawF32(Vec<f32>),
+    /// A coded downlink frame: a link in the `downlink=qdelta` chain
+    /// (or its dense bootstrap). Decoding needs the state the device
+    /// reconstructed from the previous frame.
+    Frame(DownlinkFrame),
+    /// The mask family's global probability mask theta in [0,1]^n
+    /// (`downlink=float32`).
+    Theta(Vec<f32>),
+}
+
+impl DownlinkMsg {
+    /// Encode the next broadcast of `state` through `dl`, the one place
+    /// wire mode maps to message kind: stateless raw values under
+    /// `Float32` ([`DownlinkMsg::Theta`] when `probability_mask`,
+    /// [`DownlinkMsg::RawF32`] otherwise), a coded chain link under
+    /// `QDelta` (advancing the fleet-side reconstruction `dl` tracks).
+    pub fn broadcast(dl: &mut DownlinkEncoder, state: &[f32], probability_mask: bool) -> Self {
+        match dl.mode() {
+            DownlinkMode::Float32 if probability_mask => DownlinkMsg::Theta(state.to_vec()),
+            DownlinkMode::Float32 => DownlinkMsg::RawF32(state.to_vec()),
+            DownlinkMode::QDelta { .. } => DownlinkMsg::Frame(dl.encode_frame(state)),
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            DownlinkMsg::RawF32(_) => "raw_f32",
+            DownlinkMsg::Frame(_) => "frame",
+            DownlinkMsg::Theta(_) => "theta",
+        }
+    }
+
+    /// Parameter count this broadcast covers.
+    pub fn n(&self) -> usize {
+        match self {
+            DownlinkMsg::RawF32(v) | DownlinkMsg::Theta(v) => v.len(),
+            DownlinkMsg::Frame(f) => f.n(),
+        }
+    }
+
+    /// Exact serialized envelope size in bytes — what the communication
+    /// accounting records per receiving device.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            DownlinkMsg::RawF32(v) | DownlinkMsg::Theta(v) => ENVELOPE_HEAD + 4 + 4 * v.len(),
+            DownlinkMsg::Frame(f) => ENVELOPE_HEAD + 4 + f.wire_bytes(),
+        }
+    }
+
+    pub fn wire_bits(&self) -> u64 {
+        self.wire_bytes() as u64 * 8
+    }
+
+    /// Serialize to the flat little-endian wire layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        out.push(PROTOCOL_VERSION);
+        match self {
+            DownlinkMsg::RawF32(v) => {
+                out.push(DL_RAW_F32);
+                put_f32s(&mut out, v);
+            }
+            DownlinkMsg::Frame(f) => {
+                out.push(DL_FRAME);
+                let fb = f.to_bytes();
+                out.extend_from_slice(&(fb.len() as u32).to_le_bytes());
+                out.extend_from_slice(&fb);
+            }
+            DownlinkMsg::Theta(v) => {
+                out.push(DL_THETA);
+                put_f32s(&mut out, v);
+            }
+        }
+        out
+    }
+
+    /// Parse and validate a broadcast. Every recorded length is checked
+    /// against the bytes actually present, values must be finite (theta
+    /// additionally in [0,1]), and an unknown kind or version mismatch
+    /// is an error — truncated or corrupt envelopes never decode.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let kind = check_header(bytes, "downlink")?;
+        let body = &bytes[ENVELOPE_HEAD..];
+        match kind {
+            DL_RAW_F32 => {
+                let values = take_f32s(body, "raw-f32 downlink")?;
+                ensure!(
+                    values.iter().all(|v| v.is_finite()),
+                    "raw-f32 downlink carries non-finite weights"
+                );
+                Ok(DownlinkMsg::RawF32(values))
+            }
+            DL_THETA => {
+                let theta = take_f32s(body, "theta downlink")?;
+                ensure!(
+                    theta.iter().all(|t| t.is_finite() && (0.0..=1.0).contains(t)),
+                    "theta downlink carries values outside [0,1]"
+                );
+                Ok(DownlinkMsg::Theta(theta))
+            }
+            DL_FRAME => {
+                ensure!(body.len() >= 4, "frame downlink length field truncated");
+                let flen = u32::from_le_bytes(body[..4].try_into()?) as usize;
+                ensure!(
+                    body.len() == 4 + flen,
+                    "frame downlink records {flen} frame bytes but carries {}",
+                    body.len() - 4
+                );
+                let frame =
+                    DownlinkFrame::from_bytes(&body[4..]).context("downlink frame body")?;
+                Ok(DownlinkMsg::Frame(frame))
+            }
+            other => bail!("unknown downlink message kind {other}"),
+        }
+    }
+
+    /// Decode the broadcast into the state a device now holds. Delta
+    /// frames need `prev` — the state this device reconstructed from the
+    /// previous broadcast; stateless kinds only check it for shape.
+    pub fn decode_state(&self, prev: Option<&[f32]>) -> Result<Vec<f32>> {
+        match self {
+            DownlinkMsg::RawF32(v) | DownlinkMsg::Theta(v) => {
+                if let Some(p) = prev {
+                    ensure!(
+                        p.len() == v.len(),
+                        "broadcast for {} params, device holds {}",
+                        v.len(),
+                        p.len()
+                    );
+                }
+                Ok(v.clone())
+            }
+            DownlinkMsg::Frame(f) => f.decode(prev),
+        }
+    }
+}
+
+/// What one device's uplink envelope carries.
+#[derive(Debug, Clone)]
+pub enum UplinkPayload {
+    /// Entropy-coded binary mask (the FedPM family — the paper's wire).
+    CodedMask(Encoded),
+    /// Coded gradient-sign vector (MV-SignSGD, ~1 Bpp).
+    SignVector(Encoded),
+    /// Dense f32 local model (FedAvg, the 32 Bpp reference point).
+    DenseDelta(Vec<f32>),
+}
+
+impl UplinkPayload {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            UplinkPayload::CodedMask(_) => "coded_mask",
+            UplinkPayload::SignVector(_) => "sign_vector",
+            UplinkPayload::DenseDelta(_) => "dense_delta",
+        }
+    }
+}
+
+/// One device -> server uplink as it travels on the wire.
+#[derive(Debug, Clone)]
+pub struct UplinkMsg {
+    /// |D_i| aggregation weight (eq. 8 numerator).
+    pub weight: f64,
+    /// Mean local train loss — rides the envelope so the server's round
+    /// stats need no side channel.
+    pub train_loss: f32,
+    pub payload: UplinkPayload,
+}
+
+impl UplinkMsg {
+    /// Exact serialized envelope size in bytes — what the communication
+    /// accounting records per received uplink.
+    pub fn wire_bytes(&self) -> usize {
+        UPLINK_HEAD
+            + match &self.payload {
+                UplinkPayload::CodedMask(e) | UplinkPayload::SignVector(e) => {
+                    4 + e.wire_bytes()
+                }
+                UplinkPayload::DenseDelta(v) => 4 + 4 * v.len(),
+            }
+    }
+
+    pub fn wire_bits(&self) -> u64 {
+        self.wire_bytes() as u64 * 8
+    }
+
+    /// Serialize to the flat little-endian wire layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        out.push(PROTOCOL_VERSION);
+        let kind = match &self.payload {
+            UplinkPayload::CodedMask(_) => UL_CODED_MASK,
+            UplinkPayload::SignVector(_) => UL_SIGN_VECTOR,
+            UplinkPayload::DenseDelta(_) => UL_DENSE_DELTA,
+        };
+        out.push(kind);
+        out.extend_from_slice(&self.weight.to_le_bytes());
+        out.extend_from_slice(&self.train_loss.to_le_bytes());
+        match &self.payload {
+            UplinkPayload::CodedMask(e) | UplinkPayload::SignVector(e) => {
+                let eb = e.to_bytes();
+                out.extend_from_slice(&(eb.len() as u32).to_le_bytes());
+                out.extend_from_slice(&eb);
+            }
+            UplinkPayload::DenseDelta(v) => put_f32s(&mut out, v),
+        }
+        out
+    }
+
+    /// Parse and validate an uplink envelope: version, kind, a positive
+    /// finite weight, a finite train loss, and a payload whose recorded
+    /// lengths match the bytes present (coded payloads re-validate their
+    /// own headers through [`Encoded::from_bytes`]).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let kind = check_header(bytes, "uplink")?;
+        ensure!(bytes.len() >= UPLINK_HEAD, "uplink header truncated ({} bytes)", bytes.len());
+        let weight = f64::from_le_bytes(bytes[2..10].try_into()?);
+        ensure!(
+            weight.is_finite() && weight > 0.0,
+            "uplink aggregation weight {weight} must be a positive finite |D_i|"
+        );
+        let train_loss = f32::from_le_bytes(bytes[10..14].try_into()?);
+        ensure!(train_loss.is_finite(), "uplink train loss {train_loss} not finite");
+        let body = &bytes[UPLINK_HEAD..];
+        let payload = match kind {
+            UL_CODED_MASK | UL_SIGN_VECTOR => {
+                ensure!(body.len() >= 4, "uplink payload length field truncated");
+                let elen = u32::from_le_bytes(body[..4].try_into()?) as usize;
+                ensure!(
+                    body.len() == 4 + elen,
+                    "uplink records {elen} coded bytes but carries {}",
+                    body.len() - 4
+                );
+                let enc = Encoded::from_bytes(&body[4..]).context("uplink coded payload")?;
+                if kind == UL_CODED_MASK {
+                    UplinkPayload::CodedMask(enc)
+                } else {
+                    UplinkPayload::SignVector(enc)
+                }
+            }
+            UL_DENSE_DELTA => {
+                let values = take_f32s(body, "dense uplink")?;
+                ensure!(
+                    values.iter().all(|v| v.is_finite()),
+                    "dense uplink carries non-finite values"
+                );
+                UplinkPayload::DenseDelta(values)
+            }
+            other => bail!("unknown uplink message kind {other}"),
+        };
+        Ok(Self { weight, train_loss, payload })
+    }
+}
+
+/// Typed per-round hyperparameters, owned by the server side and handed
+/// to every [`crate::algos::ClientTask`] next to the broadcast. This is
+/// the protocol's replacement for the old in-process `RoundCtx` field
+/// grab-bag: plain data, no runtime references, serializable so a real
+/// transport can ship it with the downlink.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundPlan {
+    /// 1-based communication round index.
+    pub round: usize,
+    /// Root experiment seed (participation sampling, mask streams).
+    pub seed: u64,
+    /// Regularizer strength lambda (eq. 12).
+    pub lambda: f32,
+    /// Local score-SGD learning rate.
+    pub lr: f32,
+    /// Local epochs per round.
+    pub local_epochs: usize,
+    /// Top-k keep fraction (TopK uplink mode).
+    pub topk_frac: f64,
+    /// Server / dense-baseline step size.
+    pub server_lr: f32,
+    /// Optimize local scores with Adam (vs plain SGD).
+    pub adam: bool,
+}
+
+/// Serialized [`RoundPlan`] size: version + round + seed + lambda + lr +
+/// local_epochs + topk_frac + server_lr + adam.
+const PLAN_BYTES: usize = 1 + 8 + 8 + 4 + 4 + 4 + 8 + 4 + 1;
+
+impl RoundPlan {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(PLAN_BYTES);
+        out.push(PROTOCOL_VERSION);
+        out.extend_from_slice(&(self.round as u64).to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.lambda.to_le_bytes());
+        out.extend_from_slice(&self.lr.to_le_bytes());
+        out.extend_from_slice(&(self.local_epochs as u32).to_le_bytes());
+        out.extend_from_slice(&self.topk_frac.to_le_bytes());
+        out.extend_from_slice(&self.server_lr.to_le_bytes());
+        out.push(self.adam as u8);
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        ensure!(
+            bytes.len() == PLAN_BYTES,
+            "round plan must be exactly {PLAN_BYTES} bytes, got {}",
+            bytes.len()
+        );
+        ensure!(
+            bytes[0] == PROTOCOL_VERSION,
+            "round plan protocol version {} != supported {PROTOCOL_VERSION}",
+            bytes[0]
+        );
+        let round = u64::from_le_bytes(bytes[1..9].try_into()?) as usize;
+        let seed = u64::from_le_bytes(bytes[9..17].try_into()?);
+        let lambda = f32::from_le_bytes(bytes[17..21].try_into()?);
+        let lr = f32::from_le_bytes(bytes[21..25].try_into()?);
+        let local_epochs = u32::from_le_bytes(bytes[25..29].try_into()?) as usize;
+        let topk_frac = f64::from_le_bytes(bytes[29..37].try_into()?);
+        let server_lr = f32::from_le_bytes(bytes[37..41].try_into()?);
+        let adam = match bytes[41] {
+            0 => false,
+            1 => true,
+            other => bail!("round plan adam flag must be 0|1, got {other}"),
+        };
+        ensure!(lambda.is_finite() && lambda >= 0.0, "round plan lambda {lambda} invalid");
+        ensure!(lr.is_finite(), "round plan lr {lr} not finite");
+        ensure!(local_epochs >= 1, "round plan local_epochs must be >= 1");
+        ensure!(
+            topk_frac.is_finite() && (0.0..=1.0).contains(&topk_frac),
+            "round plan topk_frac {topk_frac} outside [0,1]"
+        );
+        ensure!(server_lr.is_finite(), "round plan server_lr {server_lr} not finite");
+        Ok(Self { round, seed, lambda, lr, local_epochs, topk_frac, server_lr, adam })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{self, DownlinkEncoder, DownlinkMode};
+    use crate::util::{BitVec, Xoshiro256};
+
+    fn uniform(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n).map(|_| rng.next_f32()).collect()
+    }
+
+    fn bits_of(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn delta_frame(n: usize, seed: u64) -> (DownlinkFrame, Vec<f32>) {
+        let a = uniform(n, seed);
+        let b: Vec<f32> = a.iter().map(|&v| v + 0.03).collect();
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
+        enc.encode_frame(&a);
+        let frame = enc.encode_frame(&b);
+        assert!(!frame.is_dense());
+        (frame, a)
+    }
+
+    #[test]
+    fn downlink_kinds_roundtrip_bit_identically() {
+        let theta = uniform(777, 1);
+        let weights: Vec<f32> = uniform(500, 2).iter().map(|v| v * 4.0 - 2.0).collect();
+        let (frame, prev) = delta_frame(600, 3);
+        for msg in [
+            DownlinkMsg::Theta(theta.clone()),
+            DownlinkMsg::RawF32(weights.clone()),
+            DownlinkMsg::Frame(frame.clone()),
+        ] {
+            let bytes = msg.to_bytes();
+            assert_eq!(bytes.len(), msg.wire_bytes(), "{}", msg.kind_name());
+            let back = DownlinkMsg::from_bytes(&bytes).unwrap();
+            assert_eq!(back.kind_name(), msg.kind_name());
+            assert_eq!(back.n(), msg.n());
+            let prev_ref = match msg {
+                DownlinkMsg::Frame(_) => Some(&prev[..]),
+                _ => None,
+            };
+            assert_eq!(
+                bits_of(&back.decode_state(prev_ref).unwrap()),
+                bits_of(&msg.decode_state(prev_ref).unwrap()),
+                "{} state must survive the wire bit-for-bit",
+                msg.kind_name()
+            );
+        }
+    }
+
+    #[test]
+    fn uplink_kinds_roundtrip_bit_identically() {
+        let mask = BitVec::from_iter_len((0..900).map(|i| i % 7 == 0), 900);
+        let enc = compress::encode(&mask);
+        let dense: Vec<f32> = uniform(300, 5).iter().map(|v| v - 0.5).collect();
+        for payload in [
+            UplinkPayload::CodedMask(enc.clone()),
+            UplinkPayload::SignVector(enc.clone()),
+            UplinkPayload::DenseDelta(dense.clone()),
+        ] {
+            let msg = UplinkMsg { weight: 37.0, train_loss: 1.25, payload };
+            let bytes = msg.to_bytes();
+            assert_eq!(bytes.len(), msg.wire_bytes(), "{}", msg.payload.kind_name());
+            let back = UplinkMsg::from_bytes(&bytes).unwrap();
+            assert_eq!(back.weight.to_bits(), msg.weight.to_bits());
+            assert_eq!(back.train_loss.to_bits(), msg.train_loss.to_bits());
+            assert_eq!(back.payload.kind_name(), msg.payload.kind_name());
+            match (&back.payload, &msg.payload) {
+                (UplinkPayload::CodedMask(a), UplinkPayload::CodedMask(b))
+                | (UplinkPayload::SignVector(a), UplinkPayload::SignVector(b)) => {
+                    assert_eq!(a.to_bytes(), b.to_bytes());
+                    assert_eq!(compress::decode(a, mask.len()).unwrap(), mask);
+                }
+                (UplinkPayload::DenseDelta(a), UplinkPayload::DenseDelta(b)) => {
+                    assert_eq!(bits_of(a), bits_of(b));
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut dl = DownlinkMsg::Theta(uniform(10, 7)).to_bytes();
+        dl[0] = PROTOCOL_VERSION + 1;
+        assert!(DownlinkMsg::from_bytes(&dl).is_err());
+        let msg = UplinkMsg {
+            weight: 1.0,
+            train_loss: 0.0,
+            payload: UplinkPayload::DenseDelta(vec![0.0; 4]),
+        };
+        let mut ul = msg.to_bytes();
+        ul[0] = 0;
+        assert!(UplinkMsg::from_bytes(&ul).is_err());
+        let mut plan = plan_fixture().to_bytes();
+        plan[0] = 9;
+        assert!(RoundPlan::from_bytes(&plan).is_err());
+    }
+
+    #[test]
+    fn unknown_kinds_and_truncation_rejected() {
+        let dl = DownlinkMsg::Theta(uniform(50, 8)).to_bytes();
+        let mut bad = dl.clone();
+        bad[1] = 9;
+        assert!(DownlinkMsg::from_bytes(&bad).is_err());
+        for cut in [0, 1, 3, dl.len() - 1] {
+            assert!(DownlinkMsg::from_bytes(&dl[..cut]).is_err(), "cut={cut}");
+        }
+        let ul = UplinkMsg {
+            weight: 3.0,
+            train_loss: 0.5,
+            payload: UplinkPayload::CodedMask(compress::encode(&BitVec::zeros(64))),
+        }
+        .to_bytes();
+        let mut bad = ul.clone();
+        bad[1] = 7;
+        assert!(UplinkMsg::from_bytes(&bad).is_err());
+        for cut in [0, 5, 13, ul.len() - 1] {
+            assert!(UplinkMsg::from_bytes(&ul[..cut]).is_err(), "cut={cut}");
+        }
+        // trailing bytes are as corrupt as missing ones
+        let mut padded = ul;
+        padded.push(0);
+        assert!(UplinkMsg::from_bytes(&padded).is_err());
+    }
+
+    #[test]
+    fn value_range_validation() {
+        // theta outside [0,1]
+        let mut msg = DownlinkMsg::Theta(vec![0.5; 8]);
+        if let DownlinkMsg::Theta(t) = &mut msg {
+            t[3] = 1.5;
+        }
+        assert!(DownlinkMsg::from_bytes(&msg.to_bytes()).is_err());
+        // non-finite weights
+        let raw = DownlinkMsg::RawF32(vec![0.0, f32::NAN]);
+        assert!(DownlinkMsg::from_bytes(&raw.to_bytes()).is_err());
+        // non-positive / non-finite uplink weight
+        for weight in [0.0, -1.0, f64::INFINITY] {
+            let msg = UplinkMsg {
+                weight,
+                train_loss: 0.0,
+                payload: UplinkPayload::DenseDelta(vec![0.0; 2]),
+            };
+            assert!(UplinkMsg::from_bytes(&msg.to_bytes()).is_err(), "weight={weight}");
+        }
+    }
+
+    fn plan_fixture() -> RoundPlan {
+        RoundPlan {
+            round: 12,
+            seed: 2023,
+            lambda: 1.5,
+            lr: 0.2,
+            local_epochs: 3,
+            topk_frac: 0.3,
+            server_lr: 0.001,
+            adam: true,
+        }
+    }
+
+    #[test]
+    fn round_plan_roundtrip_and_validation() {
+        let plan = plan_fixture();
+        let bytes = plan.to_bytes();
+        assert_eq!(bytes.len(), PLAN_BYTES);
+        assert_eq!(RoundPlan::from_bytes(&bytes).unwrap(), plan);
+        assert!(RoundPlan::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad = bytes.clone();
+        bad[41] = 2; // adam flag
+        assert!(RoundPlan::from_bytes(&bad).is_err());
+        let bad_plan = RoundPlan { topk_frac: 1.5, ..plan };
+        assert!(RoundPlan::from_bytes(&bad_plan.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn frame_chain_survives_the_wire() {
+        // Two qdelta links shipped as bytes must reproduce the server's
+        // reconstruction exactly (the DESIGN.md §Downlink contract, now
+        // through the protocol envelope).
+        let n = 2000;
+        let a = uniform(n, 11);
+        let b: Vec<f32> = a.iter().map(|&v| v + 0.01).collect();
+        let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
+        let m0 = DownlinkMsg::Frame(enc.encode_frame(&a));
+        let m1 = DownlinkMsg::Frame(enc.encode_frame(&b));
+        let c0 = DownlinkMsg::from_bytes(&m0.to_bytes())
+            .unwrap()
+            .decode_state(None)
+            .unwrap();
+        let c1 = DownlinkMsg::from_bytes(&m1.to_bytes())
+            .unwrap()
+            .decode_state(Some(&c0))
+            .unwrap();
+        assert_eq!(bits_of(&c1), bits_of(enc.recon()));
+    }
+}

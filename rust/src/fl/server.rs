@@ -5,13 +5,14 @@
 //! client data — only coded masks — mirroring the paper's privacy
 //! setting.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::compress::{self, Encoded};
-use crate::mask::{sample_mask, BetaAggregator, MaskAggregator, ProbMask};
+use crate::mask::{empirical_bpp, sample_mask, BetaAggregator, MaskAggregator, ProbMask};
 use crate::util::BitVec;
 
 use super::comm::RoundComm;
+use super::protocol::{UplinkMsg, UplinkPayload};
 
 /// How uplink masks combine into the next global mask.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -65,20 +66,23 @@ impl Server {
         self.n_params
     }
 
-    /// Ingest one client's uplink: decode, verify, accumulate (eq. 8).
-    /// The codec validates the wire header (recorded bit-length and
-    /// one-count) and rejects truncated or corrupt payloads.
-    pub fn receive_mask(
-        &mut self,
-        enc: &Encoded,
-        weight: f64,
-        comm: &mut RoundComm,
-    ) -> Result<()> {
+    /// Ingest one client's uplink envelope as it lands: decode, verify,
+    /// accumulate (eq. 8) — streaming, so server memory stays O(n_params)
+    /// however large the cohort. The codec validates the wire header
+    /// (recorded bit-length and one-count) and rejects truncated or
+    /// corrupt payloads; a non-mask payload kind is a protocol error.
+    pub fn receive_uplink(&mut self, msg: &UplinkMsg, comm: &mut RoundComm) -> Result<()> {
+        let UplinkPayload::CodedMask(enc) = &msg.payload else {
+            bail!(
+                "mask server expects a coded-mask uplink, got {}",
+                msg.payload.kind_name()
+            );
+        };
         let mask = compress::decode(enc, self.n_params)?;
-        comm.add_mask_uplink(&mask, enc);
+        comm.add_uplink(msg.wire_bits(), empirical_bpp(&mask));
         match &mut self.agg {
-            Agg::Mean(a) => a.add_mask(&mask, weight),
-            Agg::Bayes(a) => a.add_mask(&mask, weight),
+            Agg::Mean(a) => a.add_mask(&mask, msg.weight),
+            Agg::Bayes(a) => a.add_mask(&mask, msg.weight),
         }
         Ok(())
     }
@@ -138,6 +142,10 @@ mod tests {
         (m, e)
     }
 
+    fn uplink(enc: Encoded, weight: f64) -> UplinkMsg {
+        UplinkMsg { weight, train_loss: 0.0, payload: UplinkPayload::CodedMask(enc) }
+    }
+
     #[test]
     fn round_trip_aggregation() {
         let n = 1000;
@@ -147,8 +155,8 @@ mod tests {
         let (m2, e2) = mask_enc(n, 0.0, 2); // all zeros
         assert_eq!(m1.count_ones(), n);
         assert_eq!(m2.count_ones(), 0);
-        srv.receive_mask(&e1, 1.0, &mut comm).unwrap();
-        srv.receive_mask(&e2, 1.0, &mut comm).unwrap();
+        srv.receive_uplink(&uplink(e1, 1.0), &mut comm).unwrap();
+        srv.receive_uplink(&uplink(e2, 1.0), &mut comm).unwrap();
         srv.finish_round().unwrap();
         // equal weights: theta = 0.5 everywhere
         assert!(srv.theta().theta().iter().all(|&t| (t - 0.5).abs() < 1e-6));
@@ -163,10 +171,23 @@ mod tests {
         let mut comm = RoundComm::new(n);
         let (_, ones) = mask_enc(n, 1.0, 1);
         let (_, zeros) = mask_enc(n, 0.0, 2);
-        srv.receive_mask(&ones, 30.0, &mut comm).unwrap();
-        srv.receive_mask(&zeros, 10.0, &mut comm).unwrap();
+        srv.receive_uplink(&uplink(ones, 30.0), &mut comm).unwrap();
+        srv.receive_uplink(&uplink(zeros, 10.0), &mut comm).unwrap();
         srv.finish_round().unwrap();
         assert!(srv.theta().theta().iter().all(|&t| (t - 0.75).abs() < 1e-6));
+    }
+
+    #[test]
+    fn non_mask_payload_rejected() {
+        let mut srv = Server::new(16, 1);
+        let mut comm = RoundComm::new(16);
+        let msg = UplinkMsg {
+            weight: 1.0,
+            train_loss: 0.0,
+            payload: UplinkPayload::DenseDelta(vec![0.0; 16]),
+        };
+        assert!(srv.receive_uplink(&msg, &mut comm).is_err());
+        assert_eq!(comm.clients, 0, "rejected uplinks must not be accounted");
     }
 
     #[test]
@@ -195,7 +216,7 @@ mod tests {
         let mut comm = RoundComm::new(n);
         let (_, mut enc) = mask_enc(n, 0.5, 3);
         enc.ones += 1;
-        assert!(srv.receive_mask(&enc, 1.0, &mut comm).is_err());
+        assert!(srv.receive_uplink(&uplink(enc, 1.0), &mut comm).is_err());
     }
 
     #[test]

@@ -18,10 +18,13 @@
 //! executes the AOT artifacts through PJRT (`--features pjrt`) or runs
 //! the built-in pure-Rust re-implementation of the same programs
 //! (DESIGN.md §Substitutions), and the whole federation runs natively.
-//! The round loop is executed by the parallel round engine
-//! ([`coordinator::RoundEngine`]): client work is sharded across worker
-//! threads with results bit-identical to the sequential path at any
-//! thread count (DESIGN.md §Parallel round engine).
+//! A round is an exchange of typed, versioned wire messages
+//! ([`fl::protocol`]): the server half of a strategy emits one
+//! [`fl::DownlinkMsg`] and stream-folds [`fl::UplinkMsg`] envelopes as
+//! they land; the pure client half is sharded across worker threads by
+//! the parallel round engine ([`coordinator::RoundEngine`]), with
+//! results bit-identical to the sequential path at any thread count
+//! (DESIGN.md §Protocol, §Parallel round engine).
 
 pub mod algos;
 pub mod cli;

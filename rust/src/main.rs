@@ -4,6 +4,7 @@
 //!   train              one experiment from a config file / overrides
 //!   figure fig1|fig2|summary   regenerate the paper's figures
 //!   eval               evaluate a saved checkpoint
+//!   analyze            summarize a run's JSONL metrics log
 //!   inspect-artifacts  list AOT artifacts and their manifests
 //!   codec-bench        entropy-coder throughput/rate sweep
 //!   help
@@ -33,7 +34,7 @@ USAGE:
                      [--clients K] [--classes C] [--lambdas 0.1,1]
                      [--seed S] [--out DIR]
   fedsrn figure summary [--rounds N] [--out DIR]   # all IID datasets
-  fedsrn eval --checkpoint FILE [--dataset D] [--samples N]
+  fedsrn eval --checkpoint FILE [--dataset D] [--samples N] [--seed S]
   fedsrn analyze --run FILE.jsonl [--tail 5]
   fedsrn inspect-artifacts [--dir artifacts]
   fedsrn codec-bench [--n 268800]
@@ -124,7 +125,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn save_checkpoint(exp: &Experiment, path: &str) -> Result<()> {
     use fedsrn::algos::EvalModel;
     let man = &exp.runtime().manifest;
-    let mask = match exp.strategy_eval_model() {
+    let mask = match exp.global_model() {
         EvalModel::Masked(m) => BitVec::from_f32_threshold(&m),
         EvalModel::Dense(_) => {
             bail!("--checkpoint is only meaningful for mask algorithms")
@@ -190,17 +191,44 @@ fn cmd_figure(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    args.ensure_known_flags(&["checkpoint", "dataset", "samples", "artifacts"])?;
+    args.ensure_known_flags(&["checkpoint", "dataset", "samples", "artifacts", "seed"])?;
     let ck_path = args.flag("checkpoint").context("--checkpoint FILE required")?;
     let ck = Checkpoint::load(Path::new(ck_path))?;
     let dir = args.flag_or("artifacts", "artifacts");
     let rt = ModelRuntime::load(Path::new(&dir), &ck.model)?;
     let dataset = args.flag_or("dataset", "tiny");
     let samples: usize = args.flag_parse("samples", 512usize)?;
-    let mut spec =
-        fedsrn::data::SynthSpec::by_name(&dataset).context("unknown dataset")?;
-    spec.n_classes = rt.manifest.n_classes;
-    let data = fedsrn::data::Synthetic::new(spec, 2023 ^ 0xDA7A).generate(samples, 2);
+    // Pass the experiment's seed to reproduce its exact test draw
+    // (Experiment::load_data subsamples with cfg.seed ^ 1).
+    let seed: u64 = args.flag_parse("seed", 2023u64)?;
+    // Same data-resolution order as Experiment::load_data: the real test
+    // split when the files are present, the synthetic generator otherwise
+    // (the seed used to always evaluate on synthetic data, silently
+    // ignoring a downloaded dataset).
+    let data = match fedsrn::data::loader::try_load(&dataset, false) {
+        Some(test) => {
+            eprintln!("using real {dataset} test data ({} samples)", test.len());
+            anyhow::ensure!(
+                test.dim == rt.manifest.input_dim,
+                "dataset '{dataset}' dim {} != model input {} (wrong --dataset pairing?)",
+                test.dim,
+                rt.manifest.input_dim
+            );
+            anyhow::ensure!(
+                test.n_classes == rt.manifest.n_classes,
+                "dataset '{dataset}' has {} classes, model expects {}",
+                test.n_classes,
+                rt.manifest.n_classes
+            );
+            fedsrn::data::subsample(test, samples, seed ^ 1)
+        }
+        None => {
+            let mut spec =
+                fedsrn::data::SynthSpec::by_name(&dataset).context("unknown dataset")?;
+            spec.n_classes = rt.manifest.n_classes;
+            fedsrn::data::Synthetic::new(spec, seed ^ 0xDA7A).generate(samples, 2)
+        }
+    };
     let mask_bits = ck.decode_mask().context("decoding checkpoint mask")?;
     let m = rt.eval_mask(&mask_bits.to_f32(), &data.x, &data.y)?;
     println!(
@@ -250,10 +278,8 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     println!("  round time: mean {:.3}s (total {:.1}s)",
         fedsrn::util::mean(&secs), secs.iter().sum::<f64>());
     // Bpp savings vs the 1-bit bound over the whole run
-    let n_rounds = recs.len() as f64;
     println!("  uplink saved vs 1 Bpp bound: {:.1}%",
-        (1.0 - fedsrn::util::mean(&coded)).max(0.0) * 100.0 / 1.0f64.max(1e-9));
-    let _ = n_rounds;
+        (1.0 - fedsrn::util::mean(&coded)).max(0.0) * 100.0);
     Ok(())
 }
 

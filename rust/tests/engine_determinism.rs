@@ -2,6 +2,13 @@
 //! must produce bit-identical round metrics and bit-identical final
 //! models at ANY worker-thread count — the sequential path (threads = 1)
 //! is the reference. See DESIGN.md §Parallel round engine.
+//!
+//! Every run here goes through the protocol API (DESIGN.md §Protocol):
+//! `RoundEngine::run_round` drives `ServerLogic::begin_round` ->
+//! `ClientTask` waves -> streaming `fold_uplink` in cohort order ->
+//! `end_round`, for all three strategy families, so these tests re-prove
+//! the bit-identity contract over typed wire messages — with the same
+//! accuracy, est/coded Bpp and DL Bpp at every thread count.
 
 use fedsrn::algos::EvalModel;
 use fedsrn::compress::DownlinkMode;
@@ -32,7 +39,7 @@ fn run(cfg: ExperimentConfig) -> (Vec<RoundRecord>, Vec<u32>) {
     let mut sink = MetricsSink::new("", 10_000).unwrap();
     let mut exp = Experiment::build(cfg).unwrap();
     exp.run(&mut sink).unwrap();
-    let model_bits: Vec<u32> = match exp.strategy_eval_model() {
+    let model_bits: Vec<u32> = match exp.global_model() {
         EvalModel::Masked(m) => m.iter().map(|v| v.to_bits()).collect(),
         EvalModel::Dense(w) => w.iter().map(|v| v.to_bits()).collect(),
     };

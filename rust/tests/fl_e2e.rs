@@ -161,9 +161,11 @@ fn qdelta8_downlink_under_4bpp_with_matched_accuracy() {
     };
     let (base, _) = run(mk(DownlinkMode::Float32));
     let (q, recs) = run(mk(DownlinkMode::QDelta { bits: 8 }));
+    // measured = actual serialized envelope: raw floats (32 Bpp) plus a
+    // few header bytes amortized over n_params
     assert!(
-        (base.avg_dl_bpp - 32.0).abs() < 1e-9,
-        "float32 DL must measure exactly 32 Bpp, got {}",
+        base.avg_dl_bpp >= 32.0 && base.avg_dl_bpp < 32.05,
+        "float32 DL must measure ~32 Bpp (raw floats + envelope header), got {}",
         base.avg_dl_bpp
     );
     assert!(q.avg_dl_bpp < 4.0, "qdelta8 measured DL Bpp {}", q.avg_dl_bpp);
@@ -198,14 +200,17 @@ fn comm_accounting_consistency() {
     let mut sink = MetricsSink::new("", 1000).unwrap();
     let mut exp = Experiment::build(cfg).unwrap();
     let _ = exp.run(&mut sink).unwrap();
-    // measured UL bytes: ~K masks of ~n bits per round
+    // measured UL bytes: ~K mask envelopes of ~n bits per round
     let expect_bits = 5u64 * 6 * 4736;
     let got = exp.totals.ul_bits;
     assert!(
         got > expect_bits / 2 && got < expect_bits * 2,
         "ul_bits {got} vs expectation ~{expect_bits}"
     );
-    assert_eq!(exp.totals.dl_bits, 5 * 6 * 4736 * 32);
+    // DL accounting = exact serialized theta-broadcast envelope per
+    // device per round
+    let broadcast_bits = fedsrn::fl::DownlinkMsg::Theta(vec![0.5; 4736]).wire_bits();
+    assert_eq!(exp.totals.dl_bits, 5 * 6 * broadcast_bits);
 }
 
 #[test]

@@ -111,6 +111,132 @@ fn prop_wire_format_roundtrip() {
 }
 
 // ---------------------------------------------------------------------------
+// protocol envelope properties (DESIGN.md §Protocol)
+// ---------------------------------------------------------------------------
+
+use fedsrn::fl::{DownlinkMsg, UplinkMsg, UplinkPayload};
+
+fn arb_f32s(rng: &mut Xoshiro256, unit: bool) -> Vec<f32> {
+    let n = 1 + rng.below(5_000) as usize;
+    (0..n)
+        .map(|_| {
+            let u = rng.next_f32();
+            if unit {
+                u
+            } else {
+                u * 8.0 - 4.0
+            }
+        })
+        .collect()
+}
+
+fn arb_downlink(rng: &mut Xoshiro256) -> (DownlinkMsg, Option<Vec<f32>>) {
+    match rng.below(3) {
+        0 => (DownlinkMsg::Theta(arb_f32s(rng, true)), None),
+        1 => (DownlinkMsg::RawF32(arb_f32s(rng, false)), None),
+        _ => {
+            let a = arb_f32s(rng, true);
+            let b: Vec<f32> = a
+                .iter()
+                .map(|&v| if rng.next_f64() < 0.3 { (v + 0.05).min(1.0) } else { v })
+                .collect();
+            let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
+            enc.encode_frame(&a);
+            (DownlinkMsg::Frame(enc.encode_frame(&b)), Some(a))
+        }
+    }
+}
+
+fn arb_uplink(rng: &mut Xoshiro256) -> UplinkMsg {
+    let payload = match rng.below(3) {
+        0 => UplinkPayload::CodedMask(compress::encode(&arb_mask(rng))),
+        1 => UplinkPayload::SignVector(compress::encode(&arb_mask(rng))),
+        _ => UplinkPayload::DenseDelta(arb_f32s(rng, false)),
+    };
+    UplinkMsg {
+        weight: 1.0 + rng.below(1000) as f64,
+        train_loss: rng.next_f32(),
+        payload,
+    }
+}
+
+/// Every downlink kind round-trips `to_bytes -> from_bytes` into a
+/// bit-identical decoded state, and the recorded wire size is the real
+/// serialized size.
+#[test]
+fn prop_downlink_envelope_roundtrip_bit_identical() {
+    forall(90, |rng, case| {
+        let (msg, prev) = arb_downlink(rng);
+        let bytes = msg.to_bytes();
+        assert_eq!(bytes.len(), msg.wire_bytes(), "case {case}");
+        let back = DownlinkMsg::from_bytes(&bytes).unwrap();
+        let p = prev.as_deref();
+        let want: Vec<u32> =
+            msg.decode_state(p).unwrap().iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> =
+            back.decode_state(p).unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "case {case}: {} state changed on the wire", msg.kind_name());
+    });
+}
+
+/// Every uplink kind round-trips bit-identically: weight, train loss,
+/// and payload bytes all survive.
+#[test]
+fn prop_uplink_envelope_roundtrip_bit_identical() {
+    forall(90, |rng, case| {
+        let msg = arb_uplink(rng);
+        let bytes = msg.to_bytes();
+        assert_eq!(bytes.len(), msg.wire_bytes(), "case {case}");
+        let back = UplinkMsg::from_bytes(&bytes).unwrap();
+        assert_eq!(back.weight.to_bits(), msg.weight.to_bits(), "case {case}");
+        assert_eq!(back.train_loss.to_bits(), msg.train_loss.to_bits(), "case {case}");
+        assert_eq!(back.to_bytes(), bytes, "case {case}: reserialization must be stable");
+    });
+}
+
+/// Truncation at any point, trailing garbage, a version bump, or an
+/// unknown kind byte must error — never decode garbage.
+#[test]
+fn prop_envelopes_reject_truncation_and_corruption() {
+    forall(60, |rng, case| {
+        let dl_bytes = arb_downlink(rng).0.to_bytes();
+        let ul_bytes = arb_uplink(rng).to_bytes();
+        // every strict prefix must fail (recorded lengths no longer
+        // match the bytes present): random cut points plus the edges
+        for _ in 0..4 {
+            let cut = rng.below(dl_bytes.len() as u64) as usize;
+            assert!(
+                DownlinkMsg::from_bytes(&dl_bytes[..cut]).is_err(),
+                "case {case}: truncated downlink decoded at {cut}/{}",
+                dl_bytes.len()
+            );
+            let cut = rng.below(ul_bytes.len() as u64) as usize;
+            assert!(
+                UplinkMsg::from_bytes(&ul_bytes[..cut]).is_err(),
+                "case {case}: truncated uplink decoded at {cut}/{}",
+                ul_bytes.len()
+            );
+        }
+        assert!(DownlinkMsg::from_bytes(&dl_bytes[..dl_bytes.len() - 1]).is_err());
+        assert!(UplinkMsg::from_bytes(&ul_bytes[..ul_bytes.len() - 1]).is_err());
+        // trailing garbage
+        let mut padded = dl_bytes.clone();
+        padded.push(0);
+        assert!(DownlinkMsg::from_bytes(&padded).is_err(), "case {case}");
+        let mut padded = ul_bytes.clone();
+        padded.push(0);
+        assert!(UplinkMsg::from_bytes(&padded).is_err(), "case {case}");
+        // version / kind corruption
+        let mut bad = dl_bytes.clone();
+        bad[0] ^= 1;
+        assert!(DownlinkMsg::from_bytes(&bad).is_err(), "case {case}: version");
+        let mut bad = ul_bytes.clone();
+        bad[1] = 0xEE;
+        assert!(UplinkMsg::from_bytes(&bad).is_err(), "case {case}: kind");
+    });
+}
+
+// ---------------------------------------------------------------------------
 // downlink quantizer properties (DESIGN.md §Downlink)
 // ---------------------------------------------------------------------------
 

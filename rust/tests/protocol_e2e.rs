@@ -1,0 +1,239 @@
+//! Protocol-level end-to-end test: full federated rounds driven purely
+//! over serialized wire bytes — the server and the simulated devices
+//! exchange nothing but `Vec<u8>` (downlink envelope, round plan, uplink
+//! envelopes), exactly what a real transport would carry. The result
+//! must be bit-identical to the in-process `RoundEngine::run_round`
+//! path, for every strategy family and both downlink wire formats —
+//! proving the envelopes are lossless and the engine adds no hidden
+//! side channel.
+
+use fedsrn::algos::{build_server, ClientTask as _, EvalModel, RoundStats, ServerLogic};
+use fedsrn::compress::DownlinkMode;
+use fedsrn::config::{Algorithm, ExperimentConfig};
+use fedsrn::coordinator::RoundEngine;
+use fedsrn::data::{partition_iid, Dataset, SynthSpec, Synthetic};
+use fedsrn::fl::{Client, DownlinkMsg, Participation, RoundComm, RoundPlan, UplinkMsg};
+use fedsrn::runtime::ModelRuntime;
+use fedsrn::util::SeedSequence;
+
+const ROUNDS: usize = 3;
+
+fn config(algo: Algorithm, downlink: DownlinkMode) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp_tiny".into();
+    cfg.dataset = "tiny".into();
+    cfg.algorithm = algo;
+    cfg.downlink = downlink;
+    cfg.clients = 4;
+    cfg.rounds = ROUNDS;
+    cfg.train_samples = 256;
+    cfg.lambda = 1.0;
+    cfg.lr = 0.1;
+    cfg.server_lr = 0.05;
+    cfg.seed = 321;
+    cfg
+}
+
+/// Mirror `Experiment::build`'s data + fleet derivation so both drivers
+/// below start from the identical simulated federation.
+fn setup(cfg: &ExperimentConfig) -> (ModelRuntime, Dataset, Vec<Client>) {
+    let rt = ModelRuntime::load(std::path::Path::new(&cfg.artifacts_dir), &cfg.model).unwrap();
+    let mut spec = SynthSpec::by_name(&cfg.dataset).unwrap();
+    spec.n_classes = rt.manifest.n_classes;
+    let train = Synthetic::new(spec, cfg.seed ^ 0xDA7A).generate(cfg.train_samples, 1);
+    let streams = SeedSequence::new(cfg.seed).child(0xC11E);
+    let clients: Vec<Client> = partition_iid(&train, cfg.clients, cfg.seed ^ 0x5A)
+        .into_iter()
+        .map(|s| {
+            let seed = streams.child(s.client_id as u64).seed();
+            Client::new(s, seed)
+        })
+        .collect();
+    (rt, train, clients)
+}
+
+fn plan_for(cfg: &ExperimentConfig, round: usize) -> RoundPlan {
+    RoundPlan {
+        round,
+        seed: cfg.seed,
+        lambda: cfg.effective_lambda(),
+        lr: cfg.lr,
+        local_epochs: cfg.local_epochs,
+        topk_frac: cfg.topk_frac,
+        server_lr: cfg.server_lr,
+        adam: cfg.adam,
+    }
+}
+
+/// Everything a run produces, as exact bit patterns.
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    model_bits: Vec<u32>,
+    stats_bits: Vec<[u64; 3]>,
+    ul_bits: u64,
+    dl_bits: u64,
+    clients: usize,
+    broadcasts: usize,
+    est_bpp_bits: Vec<u64>,
+}
+
+fn stats_bits(s: &RoundStats) -> [u64; 3] {
+    [s.train_loss.to_bits(), s.mean_theta.to_bits(), s.mask_density.to_bits()]
+}
+
+fn model_bits(server: &dyn ServerLogic) -> Vec<u32> {
+    match server.eval_model(ROUNDS) {
+        EvalModel::Masked(m) => m.iter().map(|v| v.to_bits()).collect(),
+        EvalModel::Dense(w) => w.iter().map(|v| v.to_bits()).collect(),
+    }
+}
+
+/// Reference: the in-process engine path every experiment uses.
+fn run_in_process(cfg: &ExperimentConfig) -> Outcome {
+    let (rt, train, mut clients) = setup(cfg);
+    let mut server = build_server(cfg, rt.manifest.n_params, rt.weights());
+    let engine = RoundEngine::new(1);
+    let mut fleet_state: Option<Vec<f32>> = None;
+    let mut out = Outcome {
+        model_bits: Vec::new(),
+        stats_bits: Vec::new(),
+        ul_bits: 0,
+        dl_bits: 0,
+        clients: 0,
+        broadcasts: 0,
+        est_bpp_bits: Vec::new(),
+    };
+    for round in 1..=ROUNDS {
+        let mut comm = RoundComm::new(rt.manifest.n_params);
+        let stats = engine
+            .run_round(
+                server.as_mut(),
+                &rt,
+                &train,
+                &mut clients,
+                &mut fleet_state,
+                Participation::default(),
+                &plan_for(cfg, round),
+                &mut comm,
+            )
+            .unwrap();
+        out.stats_bits.push(stats_bits(&stats));
+        out.ul_bits += comm.ul_bits;
+        out.dl_bits += comm.dl_bits;
+        out.clients += comm.clients;
+        out.broadcasts += comm.broadcasts;
+        out.est_bpp_bits.push(comm.est_bpp().to_bits());
+    }
+    out.model_bits = model_bits(server.as_ref());
+    out
+}
+
+/// The same federation, but every server<->client hop is a `Vec<u8>`:
+/// the broadcast and the round plan travel as serialized bytes to the
+/// device side, every uplink travels back as serialized bytes, and each
+/// is re-parsed (with full validation) before use.
+fn run_over_wire_bytes(cfg: &ExperimentConfig) -> Outcome {
+    let (rt, train, mut clients) = setup(cfg);
+    let mut server = build_server(cfg, rt.manifest.n_params, rt.weights());
+    // the device side's own reconstruction of the broadcast state
+    let mut device_state: Option<Vec<f32>> = None;
+    let mut out = Outcome {
+        model_bits: Vec::new(),
+        stats_bits: Vec::new(),
+        ul_bits: 0,
+        dl_bits: 0,
+        clients: 0,
+        broadcasts: 0,
+        est_bpp_bits: Vec::new(),
+    };
+    for round in 1..=ROUNDS {
+        let mut comm = RoundComm::new(rt.manifest.n_params);
+        let plan = plan_for(cfg, round);
+
+        // server -> wire
+        let dl_wire: Vec<u8> = server.begin_round(&plan).unwrap().to_bytes();
+        let plan_wire: Vec<u8> = plan.to_bytes();
+
+        // wire -> device side
+        let dl = DownlinkMsg::from_bytes(&dl_wire).unwrap();
+        let device_plan = RoundPlan::from_bytes(&plan_wire).unwrap();
+        assert_eq!(device_plan, plan, "the plan must survive the wire");
+        // full participation: the cohort is the fleet, so every device
+        // receives the broadcast whatever its kind
+        for _ in 0..clients.len() {
+            comm.add_downlink_msg(&dl);
+        }
+
+        // each device computes its uplink and ships bytes back
+        let task = server.client_task();
+        let prev = device_state.take();
+        let mut ul_wires: Vec<Vec<u8>> = Vec::new();
+        for client in clients.iter_mut() {
+            let up = task
+                .run(&rt, &train, client, &dl, prev.as_deref(), &device_plan)
+                .unwrap();
+            ul_wires.push(up.to_bytes());
+        }
+        device_state = Some(dl.decode_state(prev.as_deref()).unwrap());
+
+        // wire -> server: parse + fold each envelope as it lands
+        for ul_wire in &ul_wires {
+            let up = UplinkMsg::from_bytes(ul_wire).unwrap();
+            server.fold_uplink(&up, &mut comm).unwrap();
+        }
+        let stats = server.end_round(&plan).unwrap();
+
+        out.stats_bits.push(stats_bits(&stats));
+        out.ul_bits += comm.ul_bits;
+        out.dl_bits += comm.dl_bits;
+        out.clients += comm.clients;
+        out.broadcasts += comm.broadcasts;
+        out.est_bpp_bits.push(comm.est_bpp().to_bits());
+    }
+    out.model_bits = model_bits(server.as_ref());
+    out
+}
+
+#[test]
+fn wire_bytes_round_is_bit_identical_to_in_process() {
+    for algo in [Algorithm::FedPMReg, Algorithm::SignSGD, Algorithm::FedAvg] {
+        for downlink in [DownlinkMode::Float32, DownlinkMode::QDelta { bits: 8 }] {
+            let cfg = config(algo, downlink);
+            let reference = run_in_process(&cfg);
+            let wired = run_over_wire_bytes(&cfg);
+            assert_eq!(
+                reference, wired,
+                "{algo:?}/{}: a round driven purely over serialized bytes \
+                 must match the in-process engine bit-for-bit",
+                downlink.name()
+            );
+            assert!(reference.ul_bits > 0 && reference.dl_bits > 0);
+        }
+    }
+}
+
+#[test]
+fn tampered_wire_bytes_never_fold() {
+    // A corrupted uplink envelope must be rejected before it can touch
+    // the aggregator — the server's fold state stays clean.
+    let cfg = config(Algorithm::FedPMReg, DownlinkMode::Float32);
+    let (rt, train, mut clients) = setup(&cfg);
+    let mut server = build_server(&cfg, rt.manifest.n_params, rt.weights());
+    let plan = plan_for(&cfg, 1);
+    let dl = DownlinkMsg::from_bytes(&server.begin_round(&plan).unwrap().to_bytes()).unwrap();
+    let task = server.client_task();
+    let mut comm = RoundComm::new(rt.manifest.n_params);
+    let up = task.run(&rt, &train, &mut clients[0], &dl, None, &plan).unwrap();
+    let wire = up.to_bytes();
+    // flip the version, truncate, and pad — all must fail to parse
+    let mut bad = wire.clone();
+    bad[0] ^= 0xFF;
+    assert!(UplinkMsg::from_bytes(&bad).is_err());
+    assert!(UplinkMsg::from_bytes(&wire[..wire.len() - 3]).is_err());
+    let mut padded = wire.clone();
+    padded.push(7);
+    assert!(UplinkMsg::from_bytes(&padded).is_err());
+    // the intact envelope still folds
+    server.fold_uplink(&UplinkMsg::from_bytes(&wire).unwrap(), &mut comm).unwrap();
+    assert_eq!(comm.clients, 1);
+}
