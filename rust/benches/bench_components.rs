@@ -162,6 +162,63 @@ fn main() {
         r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.mean_s / 1e6));
     }
 
+    // --- compute kernels: blocked vs naive GEMM (DESIGN.md §Compute-core) --
+    {
+        use fedsrn::runtime::kernels::gemm_nn;
+        // mlp_mnist first-layer shape at batch 64: the hot matmul of a
+        // local-train step.
+        let (m, k, n) = (64usize, 784usize, 256usize);
+        let mut rng = Xoshiro256::new(21);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal() as f32).collect();
+        let mut c = vec![0.0f32; m * n];
+        let flops = 2.0 * (m * k * n) as f64;
+        let naive = |a: &[f32], b: &[f32], c: &mut [f32]| {
+            // the pre-refactor loop: one saxpy row per (i, k), B row
+            // re-streamed for every single output row
+            for i in 0..m {
+                for kk in 0..k {
+                    let av = a[i * k + kk];
+                    if av != 0.0 {
+                        let b_row = &b[kk * n..(kk + 1) * n];
+                        let c_row = &mut c[i * n..(i + 1) * n];
+                        for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            }
+        };
+        let mut blocked_s = 0.0f64;
+        let mut naive_s = 0.0f64;
+        let name = format!("kernels/gemm/blocked/{m}x{k}x{n}");
+        if should_run(&filter, &name) {
+            let r = bench(&name, 1.0, 200, || {
+                c.fill(0.0);
+                gemm_nn(&a, &b, &mut c, m, k, n);
+                std::hint::black_box(&c);
+            });
+            r.print(&format!("{:>7.2} GFLOP/s", flops / r.mean_s / 1e9));
+            blocked_s = r.mean_s;
+        }
+        let name = format!("kernels/gemm/naive/{m}x{k}x{n}");
+        if should_run(&filter, &name) {
+            let r = bench(&name, 1.0, 200, || {
+                c.fill(0.0);
+                naive(&a, &b, &mut c);
+                std::hint::black_box(&c);
+            });
+            r.print(&format!("{:>7.2} GFLOP/s", flops / r.mean_s / 1e9));
+            naive_s = r.mean_s;
+        }
+        if blocked_s > 0.0 && naive_s > 0.0 {
+            println!(
+                "  kernels/gemm: blocked is {:.2}x the naive loop",
+                naive_s / blocked_s
+            );
+        }
+    }
+
     // --- model-program call path (tiny model: overhead-dominated) ----------
     if let Ok(rt) = ModelRuntime::load(std::path::Path::new("artifacts"), "mlp_tiny") {
         let be = rt.backend_name();
@@ -176,6 +233,7 @@ fn main() {
         let xs: Vec<f32> =
             (0..steps * batch * dim).map(|_| rng.next_normal() as f32).collect();
         let ys: Vec<i32> = (0..steps * batch).map(|_| rng.below(10) as i32).collect();
+        let mut workspace_s = 0.0f64;
         if should_run(&filter, "runtime/local_train") {
             let name = format!("runtime/local_train/{be}/mlp_tiny({steps} steps)");
             let r = bench(&name, 3.0, 100, || {
@@ -184,6 +242,38 @@ fn main() {
                 );
             });
             r.print(&format!("{:>7.1} steps/s", steps as f64 / r.mean_s));
+            workspace_s = r.mean_s;
+        }
+        // A/B: the pre-refactor allocate-per-step chained-MLP loop
+        // (double sigmoid pass, fresh Vec per layer per step) vs the
+        // workspace-driven graph core. Target: >= 1.5x (ISSUE 4 /
+        // DESIGN.md §Compute-core); CI prints this informationally.
+        if should_run(&filter, "runtime/local_train-naive") && rt.backend_name() == "native" {
+            let weights = rt.weights().to_vec();
+            let layers: Vec<(usize, usize, usize)> = rt
+                .manifest
+                .layers
+                .iter()
+                .filter_map(|l| match l.spec {
+                    fedsrn::mask::LayerSpec::Dense { k, n } => Some((k, n, l.offset)),
+                    _ => None,
+                })
+                .collect();
+            let name = format!("runtime/local_train-naive/pre-refactor({steps} steps)");
+            let r = bench(&name, 3.0, 100, || {
+                std::hint::black_box(naive_ref::local_train(
+                    &layers, n, dim, 10, batch, steps, &weights, &scores, &xs, &ys, 1, 1.0,
+                    0.1,
+                ));
+            });
+            r.print(&format!("{:>7.1} steps/s", steps as f64 / r.mean_s));
+            if workspace_s > 0.0 {
+                println!(
+                    "  runtime/local_train: workspace core is {:.2}x the \
+                     pre-refactor loop (target >= 1.5x)",
+                    r.mean_s / workspace_s
+                );
+            }
         }
         let mask = vec![1.0f32; n];
         let tx: Vec<f32> = (0..256 * dim).map(|_| rng.next_normal() as f32).collect();
@@ -240,5 +330,145 @@ fn main() {
         }
     } else {
         eprintln!("(skipping runtime benches: no artifacts and no built-in model?)");
+    }
+}
+
+/// The pre-refactor native `local_train`: chained dense layers with
+/// implicit ReLU, a fresh `Vec` per layer per step, `sigmoid(s)`
+/// computed twice per step. Kept verbatim (minus the error plumbing) as
+/// the before/after baseline for the workspace-driven graph core.
+mod naive_ref {
+    use fedsrn::util::{sigmoid, SeedSequence};
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_train(
+        layers: &[(usize, usize, usize)], // (k, n, offset)
+        n_params: usize,
+        input_dim: usize,
+        n_classes: usize,
+        batch: usize,
+        steps: usize,
+        weights: &[f32],
+        scores: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        seed: i32,
+        lambda: f32,
+        lr: f32,
+    ) -> Vec<f32> {
+        let n = n_params;
+        let root = SeedSequence::new(seed as u32 as u64);
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let mut s = scores.to_vec();
+        let mut m1 = vec![0.0f32; n];
+        let mut v2 = vec![0.0f32; n];
+        let mut u = vec![0.5f32; n];
+        for h in 0..steps {
+            root.child(h as u64).philox().fill_uniform(0, &mut u);
+            let mut w_eff = vec![0.0f32; n];
+            for j in 0..n {
+                if u[j] < sigmoid(s[j]) {
+                    w_eff[j] = weights[j];
+                }
+            }
+            let x = &xs[h * batch * input_dim..(h + 1) * batch * input_dim];
+            let y = &ys[h * batch..(h + 1) * batch];
+            // forward: fresh Vec per layer
+            let mut outs: Vec<Vec<f32>> = Vec::with_capacity(layers.len());
+            for (li, &(k, nn, off)) in layers.iter().enumerate() {
+                let a: &[f32] = if li == 0 { x } else { &outs[li - 1] };
+                let mut z = vec![0.0f32; batch * nn];
+                for b in 0..batch {
+                    let arow = &a[b * k..(b + 1) * k];
+                    let zrow = &mut z[b * nn..(b + 1) * nn];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av != 0.0 {
+                            let wrow = &w_eff[off + kk * nn..][..nn];
+                            for (zv, &wv) in zrow.iter_mut().zip(wrow) {
+                                *zv += av * wv;
+                            }
+                        }
+                    }
+                }
+                if li + 1 < layers.len() {
+                    z.iter_mut().for_each(|v| *v = v.max(0.0));
+                }
+                outs.push(z);
+            }
+            // mean-CE gradient on the logits
+            let logits = outs.last().unwrap();
+            let c = n_classes;
+            let denom = batch as f32;
+            let mut g = vec![0.0f32; logits.len()];
+            for (b, &yb) in y.iter().enumerate() {
+                if yb < 0 {
+                    continue;
+                }
+                let row = &logits[b * c..(b + 1) * c];
+                let grow = &mut g[b * c..(b + 1) * c];
+                let amax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0f32;
+                for (gv, &v) in grow.iter_mut().zip(row) {
+                    *gv = (v - amax).exp();
+                    sum += *gv;
+                }
+                let inv = 1.0 / (sum * denom);
+                for gv in grow.iter_mut() {
+                    *gv *= inv;
+                }
+                grow[yb as usize] -= 1.0 / denom;
+            }
+            // backward: fresh dw + per-layer gprev Vecs
+            let mut dw = vec![0.0f32; n];
+            for li in (0..layers.len()).rev() {
+                let (k, nn, off) = layers[li];
+                let a: &[f32] = if li == 0 { x } else { &outs[li - 1] };
+                for b in 0..batch {
+                    let arow = &a[b * k..(b + 1) * k];
+                    let grow = &g[b * nn..(b + 1) * nn];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av != 0.0 {
+                            let drow = &mut dw[off + kk * nn..][..nn];
+                            for (dv, &gv) in drow.iter_mut().zip(grow) {
+                                *dv += av * gv;
+                            }
+                        }
+                    }
+                }
+                if li == 0 {
+                    break;
+                }
+                let mut gprev = vec![0.0f32; batch * k];
+                for b in 0..batch {
+                    let arow = &a[b * k..(b + 1) * k];
+                    let grow = &g[b * nn..(b + 1) * nn];
+                    let prow = &mut gprev[b * k..(b + 1) * k];
+                    for (kk, pv) in prow.iter_mut().enumerate() {
+                        if arow[kk] > 0.0 {
+                            let wrow = &w_eff[off + kk * nn..][..nn];
+                            let mut acc = 0.0f32;
+                            for (&gv, &wv) in grow.iter().zip(wrow) {
+                                acc += gv * wv;
+                            }
+                            *pv = acc;
+                        }
+                    }
+                }
+                g = gprev;
+            }
+            // second sigmoid pass + Adam step
+            let t = (h + 1) as f32;
+            let bc1 = 1.0 - b1.powf(t);
+            let bc2 = 1.0 - b2.powf(t);
+            for j in 0..n {
+                let th = sigmoid(s[j]);
+                let dsig = th * (1.0 - th);
+                let gj = dw[j] * weights[j] * dsig + (lambda / n as f32) * dsig;
+                m1[j] = b1 * m1[j] + (1.0 - b1) * gj;
+                v2[j] = b2 * v2[j] + (1.0 - b2) * gj * gj;
+                s[j] -= lr * (m1[j] / bc1) / ((v2[j] / bc2).sqrt() + eps);
+            }
+        }
+        s
     }
 }

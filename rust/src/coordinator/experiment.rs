@@ -242,7 +242,7 @@ impl Experiment {
         // Perf telemetry: per-program wall-clock breakdown (FEDSRN_TIMERS=1).
         if std::env::var("FEDSRN_TIMERS").is_ok() {
             eprintln!("--- runtime timer breakdown ---");
-            for (label, secs, calls) in self.rt.timers.lock().unwrap().summary() {
+            for (label, secs, calls) in self.rt.timers.snapshot().summary() {
                 eprintln!(
                     "{label:<24} {secs:>9.3}s over {calls:>6} calls ({:.2}ms/call)",
                     secs / calls.max(1) as f64 * 1e3

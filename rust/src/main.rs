@@ -46,6 +46,11 @@ server_lr train_samples test_samples eval_every optimizer adam
 participation dropout bayes_prior downlink threads seed artifacts_dir
 out
 
+model names the built-in native registry entry or an exported artifact:
+mlp_tiny | mlp_mnist | mlp_cifar10 | mlp_cifar100 (dense) and conv_tiny
+| conv4 | conv6 (layer graphs; pair conv4/conv6 with dataset=cifar10,
+conv_tiny with dataset=tiny). `fedsrn inspect-artifacts` lists both.
+
 downlink selects the broadcast wire format: float32 (raw, 32 Bpp) or
 qdelta<bits> (quantized sparse deltas with residual feedback, e.g.
 qdelta8); clients train on exactly what the wire delivered.
@@ -176,8 +181,10 @@ fn cmd_figure(args: &Args) -> Result<()> {
             let mut all = Vec::new();
             for ds in ["mnist", "cifar10", "cifar100"] {
                 let model = figures::default_model_for(ds).to_string();
-                if Manifest::load(Path::new("artifacts"), &model).is_err() {
-                    eprintln!("skipping {ds}: artifacts for {model} not exported");
+                if Manifest::load(Path::new("artifacts"), &model).is_err()
+                    && Manifest::builtin(&model).is_none()
+                {
+                    eprintln!("skipping {ds}: no artifacts or built-in for {model}");
                     continue;
                 }
                 let curves = figures::run_fig1(ds, &model, rounds, 10, seed, &out)?;
@@ -286,26 +293,37 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 fn cmd_inspect(args: &Args) -> Result<()> {
     args.ensure_known_flags(&["dir"])?;
     let dir = args.flag_or("dir", "artifacts");
-    let models = available_models(Path::new(&dir));
-    if models.is_empty() {
-        bail!("no artifacts in '{dir}' — run `make artifacts`");
-    }
-    println!(
-        "{:<16} {:>10} {:>8} {:>8} {:>6} {:>6} {:>10}",
-        "model", "n_params", "in_dim", "classes", "B", "S", "eval_chunk"
+    let header = format!(
+        "{:<16} {:<9} {:>10} {:>8} {:>8} {:>6} {:>6} {:>7}",
+        "model", "source", "n_params", "in_dim", "classes", "B", "S", "layers"
     );
-    for m in models {
-        let man = Manifest::load(Path::new(&dir), &m)?;
+    let row = |man: &Manifest, source: &str| {
         println!(
-            "{:<16} {:>10} {:>8} {:>8} {:>6} {:>6} {:>10}",
+            "{:<16} {:<9} {:>10} {:>8} {:>8} {:>6} {:>6} {:>7}",
             man.model,
+            source,
             man.n_params,
             man.input_dim,
             man.n_classes,
             man.batch,
             man.steps,
-            man.eval_chunk
+            man.layers.iter().filter(|l| !l.is_empty()).count()
         );
+    };
+    println!("{header}");
+    let exported = available_models(Path::new(&dir));
+    for m in &exported {
+        row(&Manifest::load(Path::new(&dir), m)?, "artifact");
+    }
+    // The built-in native registry runs with no artifacts at all
+    // (DESIGN.md §Substitutions); exported manifests shadow it.
+    for m in Manifest::builtin_models() {
+        if !exported.iter().any(|e| e == m) {
+            row(&Manifest::builtin(m).unwrap(), "builtin");
+        }
+    }
+    if exported.is_empty() {
+        eprintln!("(no artifacts in '{dir}' — built-in native registry only)");
     }
     Ok(())
 }

@@ -1,31 +1,113 @@
-//! Layer-resolved sparsity telemetry.
+//! Layer-graph layout + layer-resolved sparsity telemetry.
 //!
 //! The flat mask layout is opaque to the coordinator except for the
-//! `layers` line in the AOT manifest ("KxN@offset" per parameterized
-//! layer). This module decodes that line and reports per-layer density
-//! / entropy — the unstructured-sparsity telemetry that shows WHERE the
-//! regularizer prunes (the paper's sec. III intuition: redundant
-//! sub-network features get eliminated, which concentrates in the
-//! over-provisioned layers).
+//! `layers` line in the AOT manifest. Historically that line described
+//! an MLP ("KxN@offset" per dense layer); it is now a v2 **layer-graph
+//! grammar** covering the paper's conv model family (DESIGN.md
+//! §Compute-core):
+//!
+//! ```text
+//! layers = entry ("," entry)*
+//! entry  = KxN@off                      # v1 compat: dense layer
+//!        | dense:KxN@off                # dense K -> N
+//!        | conv:CINxCOUT:kK[:sS][:pP]@off   # 2-D conv, square kernel
+//!        | pool:S                       # max-pool SxS, stride S
+//!        | flatten                      # HxWxC -> H*W*C
+//!        | relu                         # elementwise activation
+//! ```
+//!
+//! Parameterized entries (dense/conv) carry `@offset` into the flat
+//! parameter vector and must tile it contiguously from 0; structural
+//! entries (pool/flatten/relu) carry no parameters. A layout made only
+//! of dense entries is the v1 MLP form — the runtime inserts the
+//! implicit inter-layer ReLUs it always had (`runtime/graph.rs`).
+//!
+//! This module also reports per-layer density / entropy per
+//! [`LayerSpec`] kind — the unstructured-sparsity telemetry that shows
+//! WHERE the regularizer prunes (the paper's sec. III intuition:
+//! redundant sub-network features get eliminated, which concentrates in
+//! the over-provisioned layers).
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::util::BitVec;
 
 use super::entropy_bits;
 
-/// One parameterized layer's slice of the flat vector.
+/// One node of the layer graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// Fully-connected K -> N (row-major K x N weight block).
+    Dense { k: usize, n: usize },
+    /// 2-D convolution, square `kernel`, NHWC activations, weights laid
+    /// out `[kernel, kernel, in_ch, out_ch]` (DESIGN.md §Compute-core).
+    Conv2d { in_ch: usize, out_ch: usize, kernel: usize, stride: usize, pad: usize },
+    /// Max-pool `size` x `size` with stride `size` (non-overlapping).
+    MaxPool { size: usize },
+    /// Reshape HxWxC -> H*W*C (no-op on already-flat activations).
+    Flatten,
+    /// Elementwise max(0, x).
+    Relu,
+}
+
+impl LayerSpec {
+    /// Number of parameters this node owns in the flat vector.
+    pub fn params(&self) -> usize {
+        match *self {
+            LayerSpec::Dense { k, n } => k * n,
+            LayerSpec::Conv2d { in_ch, out_ch, kernel, .. } => kernel * kernel * in_ch * out_ch,
+            _ => 0,
+        }
+    }
+
+    /// Fan-in for signed-constant Kaiming initialization.
+    pub fn fan_in(&self) -> usize {
+        match *self {
+            LayerSpec::Dense { k, .. } => k,
+            LayerSpec::Conv2d { in_ch, kernel, .. } => in_ch * kernel * kernel,
+            _ => 0,
+        }
+    }
+
+    /// Short kind tag for telemetry tables.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            LayerSpec::Dense { .. } => "dense",
+            LayerSpec::Conv2d { .. } => "conv2d",
+            LayerSpec::MaxPool { .. } => "maxpool",
+            LayerSpec::Flatten => "flatten",
+            LayerSpec::Relu => "relu",
+        }
+    }
+
+    /// Compact shape label ("64x10", "3>16 k3s1p1", "2x2", "-").
+    pub fn shape_label(&self) -> String {
+        match *self {
+            LayerSpec::Dense { k, n } => format!("{k}x{n}"),
+            LayerSpec::Conv2d { in_ch, out_ch, kernel, stride, pad } => {
+                format!("{in_ch}>{out_ch} k{kernel}s{stride}p{pad}")
+            }
+            LayerSpec::MaxPool { size } => format!("{size}x{size}"),
+            LayerSpec::Flatten | LayerSpec::Relu => "-".into(),
+        }
+    }
+}
+
+/// One graph node's position in the layout plus its slice of the flat
+/// parameter vector (empty slice for structural nodes).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerSlice {
+    /// Position in the layout line (counts structural nodes too).
     pub index: usize,
-    pub rows: usize,
-    pub cols: usize,
+    pub spec: LayerSpec,
+    /// Offset into the flat vector; for structural nodes this is the
+    /// running offset (their slice is empty).
     pub offset: usize,
 }
 
 impl LayerSlice {
     pub fn len(&self) -> usize {
-        self.rows * self.cols
+        self.spec.params()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -33,39 +115,134 @@ impl LayerSlice {
     }
 }
 
-/// Parse the manifest `layers=` line: comma-separated "KxN@offset".
+fn parse_dense(shape: &str) -> Result<LayerSpec> {
+    let (k, n) = shape
+        .split_once('x')
+        .with_context(|| format!("layer shape '{shape}' missing KxN"))?;
+    Ok(LayerSpec::Dense {
+        k: k.trim().parse().context("layer rows")?,
+        n: n.trim().parse().context("layer cols")?,
+    })
+}
+
+/// `CINxCOUT:kK[:sS][:pP]` — stride defaults to 1, pad to 0.
+fn parse_conv(body: &str) -> Result<LayerSpec> {
+    let mut parts = body.split(':');
+    let chans = parts.next().context("conv entry missing channels")?;
+    let (cin, cout) = chans
+        .split_once('x')
+        .with_context(|| format!("conv channels '{chans}' missing CINxCOUT"))?;
+    let (mut kernel, mut stride, mut pad) = (None, 1usize, 0usize);
+    for p in parts {
+        let p = p.trim();
+        let parse = |v: &str| -> Result<usize> {
+            v.parse().with_context(|| format!("conv field '{p}'"))
+        };
+        if let Some(v) = p.strip_prefix('k') {
+            kernel = Some(parse(v)?);
+        } else if let Some(v) = p.strip_prefix('s') {
+            stride = parse(v)?;
+        } else if let Some(v) = p.strip_prefix('p') {
+            pad = parse(v)?;
+        } else {
+            bail!("unknown conv field '{p}' (want kK / sS / pP)");
+        }
+    }
+    let kernel = kernel.context("conv entry missing kernel size (kK)")?;
+    ensure!(kernel > 0 && stride > 0, "conv kernel/stride must be > 0");
+    Ok(LayerSpec::Conv2d {
+        in_ch: cin.trim().parse().context("conv in_ch")?,
+        out_ch: cout.trim().parse().context("conv out_ch")?,
+        kernel,
+        stride,
+        pad,
+    })
+}
+
+/// Parse the manifest `layers=` line (v1 + v2 grammar, module docs).
 pub fn parse_layout(s: &str) -> Result<Vec<LayerSlice>> {
-    let mut out = Vec::new();
+    let mut out: Vec<LayerSlice> = Vec::new();
     if s.trim().is_empty() {
         return Ok(out);
     }
+    let mut running = 0usize; // params consumed so far
     for (index, item) in s.split(',').enumerate() {
-        let (shape, off) = item
-            .split_once('@')
-            .with_context(|| format!("layer entry '{item}' missing @offset"))?;
-        let (k, n) = shape
-            .split_once('x')
-            .with_context(|| format!("layer shape '{shape}' missing KxN"))?;
-        let slice = LayerSlice {
-            index,
-            rows: k.trim().parse().context("layer rows")?,
-            cols: n.trim().parse().context("layer cols")?,
-            offset: off.trim().parse().context("layer offset")?,
+        let item = item.trim();
+        let (body, off) = match item.split_once('@') {
+            Some((b, o)) => (b.trim(), Some(o.trim())),
+            None => (item, None),
         };
-        if let Some(prev) = out.last() {
-            let prev: &LayerSlice = prev;
-            if slice.offset != prev.offset + prev.len() {
-                bail!("layer layout not contiguous at entry {index}");
-            }
-        } else if slice.offset != 0 {
-            bail!("first layer must start at offset 0");
+        let spec = if let Some(rest) = body.strip_prefix("dense:") {
+            parse_dense(rest)?
+        } else if let Some(rest) = body.strip_prefix("conv:") {
+            parse_conv(rest)?
+        } else if let Some(rest) = body.strip_prefix("pool:") {
+            let size: usize = rest.trim().parse().context("pool size")?;
+            ensure!(size > 0, "pool size must be > 0");
+            LayerSpec::MaxPool { size }
+        } else if body == "flatten" {
+            LayerSpec::Flatten
+        } else if body == "relu" {
+            LayerSpec::Relu
+        } else {
+            // v1 compat: bare "KxN" is a dense layer
+            parse_dense(body)?
+        };
+        if spec.params() > 0 {
+            let off: usize = off
+                .with_context(|| format!("parameterized entry '{item}' missing @offset"))?
+                .parse()
+                .context("layer offset")?;
+            ensure!(
+                off == running,
+                "layer layout not contiguous at entry {index}: offset {off}, expected {running}"
+            );
+            running += spec.params();
+        } else {
+            ensure!(off.is_none(), "structural entry '{item}' must not carry @offset");
         }
-        out.push(slice);
+        out.push(LayerSlice { index, spec, offset: running - spec.params() });
     }
     Ok(out)
 }
 
-/// Per-layer sparsity report for one mask.
+/// True when every entry uses the bare v1 `KxN@off` dense syntax — the
+/// pre-graph MLP manifests, whose runtime semantics include implicit
+/// inter-layer ReLUs. v2 layouts name every node explicitly (a v2
+/// `dense:...,dense:...` chain really is linear).
+pub fn layout_is_v1(s: &str) -> bool {
+    !s.trim().is_empty()
+        && s.split(',').all(|e| {
+            let e = e.trim();
+            !e.contains(':') && e != "flatten" && e != "relu"
+        })
+}
+
+/// Render a layout back to a `layers=` string. `v1` must be the
+/// layout's [`layout_is_v1`] provenance (`Manifest.layers_v1`): a v1
+/// layout round-trips to the bare `KxN@off` form (keeping its implicit
+/// inter-layer ReLUs on re-parse), while a v2 layout — even a
+/// dense-only, deliberately linear chain — keeps its explicit `dense:`
+/// spelling so re-parsing never injects activations that were not
+/// there.
+pub fn format_layout(layout: &[LayerSlice], v1: bool) -> String {
+    layout
+        .iter()
+        .map(|l| match l.spec {
+            LayerSpec::Dense { k, n } if v1 => format!("{k}x{n}@{}", l.offset),
+            LayerSpec::Dense { k, n } => format!("dense:{k}x{n}@{}", l.offset),
+            LayerSpec::Conv2d { in_ch, out_ch, kernel, stride, pad } => {
+                format!("conv:{in_ch}x{out_ch}:k{kernel}:s{stride}:p{pad}@{}", l.offset)
+            }
+            LayerSpec::MaxPool { size } => format!("pool:{size}"),
+            LayerSpec::Flatten => "flatten".into(),
+            LayerSpec::Relu => "relu".into(),
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Per-layer sparsity report for one mask (parameterized layers only).
 #[derive(Debug, Clone)]
 pub struct LayerStats {
     pub layer: LayerSlice,
@@ -75,14 +252,17 @@ pub struct LayerStats {
 }
 
 /// Compute per-layer density/entropy of `mask` under `layout`.
+/// Structural nodes (pool/flatten/relu) own no parameters and are
+/// skipped; each report row is tagged with its [`LayerSpec`] kind.
 pub fn layer_stats(mask: &BitVec, layout: &[LayerSlice]) -> Vec<LayerStats> {
     layout
         .iter()
+        .filter(|l| !l.is_empty())
         .map(|l| {
             let ones = (l.offset..l.offset + l.len())
                 .filter(|&i| mask.get(i))
                 .count();
-            let density = if l.len() == 0 { 0.0 } else { ones as f64 / l.len() as f64 };
+            let density = ones as f64 / l.len() as f64;
             LayerStats {
                 layer: l.clone(),
                 ones,
@@ -95,13 +275,14 @@ pub fn layer_stats(mask: &BitVec, layout: &[LayerSlice]) -> Vec<LayerStats> {
 
 /// Render a compact per-layer table (used by `fedsrn eval` / analyze).
 pub fn format_table(stats: &[LayerStats]) -> String {
-    let mut out = String::from("layer      shape          params    density   H(bits)\n");
+    let mut out =
+        String::from("layer  kind     shape             params    density   H(bits)\n");
     for s in stats {
         out.push_str(&format!(
-            "{:<10} {:>6}x{:<7} {:>8}   {:>7.4}   {:>7.4}\n",
+            "{:<6} {:<8} {:<15} {:>8}   {:>7.4}   {:>7.4}\n",
             s.layer.index,
-            s.layer.rows,
-            s.layer.cols,
+            s.layer.spec.kind_name(),
+            s.layer.spec.shape_label(),
             s.layer.len(),
             s.density,
             s.entropy
@@ -115,12 +296,53 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_round_trip() {
+    fn parse_v1_round_trip() {
         let layout = parse_layout("64x64@0,64x10@4096").unwrap();
         assert_eq!(layout.len(), 2);
+        assert_eq!(layout[0].spec, LayerSpec::Dense { k: 64, n: 64 });
         assert_eq!(layout[0].len(), 4096);
         assert_eq!(layout[1].offset, 4096);
         assert_eq!(layout[1].len(), 640);
+        assert_eq!(format_layout(&layout, true), "64x64@0,64x10@4096");
+        // a v2-origin dense chain must KEEP its explicit spelling:
+        // rendering it bare would gain implicit ReLUs on re-parse
+        let rendered = format_layout(&layout, false);
+        assert_eq!(rendered, "dense:64x64@0,dense:64x10@4096");
+        assert!(!layout_is_v1(&rendered));
+        assert_eq!(parse_layout(&rendered).unwrap(), layout);
+    }
+
+    #[test]
+    fn parse_v2_conv_graph() {
+        let s = "conv:3x16:k3:s1:p1@0,relu,pool:2,conv:16x32:k3:s1:p1@432,relu,\
+                 pool:2,flatten,dense:2048x64@5040,relu,dense:64x10@136112";
+        let layout = parse_layout(s).unwrap();
+        assert_eq!(layout.len(), 10);
+        assert_eq!(
+            layout[0].spec,
+            LayerSpec::Conv2d { in_ch: 3, out_ch: 16, kernel: 3, stride: 1, pad: 1 }
+        );
+        assert_eq!(layout[0].len(), 432);
+        assert_eq!(layout[1].spec, LayerSpec::Relu);
+        assert_eq!(layout[2].spec, LayerSpec::MaxPool { size: 2 });
+        assert_eq!(layout[3].offset, 432);
+        assert_eq!(layout[6].spec, LayerSpec::Flatten);
+        assert_eq!(layout[7].offset, 5040);
+        assert_eq!(layout[9].offset, 136112);
+        let total: usize = layout.iter().map(|l| l.len()).sum();
+        assert_eq!(total, 136752);
+        // canonical render re-parses to the same layout
+        assert_eq!(parse_layout(&format_layout(&layout, false)).unwrap(), layout);
+    }
+
+    #[test]
+    fn conv_stride_pad_default() {
+        let layout = parse_layout("conv:1x4:k5@0,flatten,dense:144x2@100").unwrap();
+        assert_eq!(
+            layout[0].spec,
+            LayerSpec::Conv2d { in_ch: 1, out_ch: 4, kernel: 5, stride: 1, pad: 0 }
+        );
+        assert_eq!(layout[0].len(), 100);
     }
 
     #[test]
@@ -129,16 +351,40 @@ mod tests {
     }
 
     #[test]
-    fn non_contiguous_rejected() {
-        assert!(parse_layout("4x4@0,4x4@99").is_err());
-        assert!(parse_layout("4x4@7").is_err());
-        assert!(parse_layout("4y4@0").is_err());
+    fn bad_entries_rejected() {
+        assert!(parse_layout("4x4@0,4x4@99").is_err()); // gap
+        assert!(parse_layout("4x4@7").is_err()); // nonzero start
+        assert!(parse_layout("4y4@0").is_err()); // bad shape
+        assert!(parse_layout("conv:3x16@0").is_err()); // missing kernel
+        assert!(parse_layout("conv:3x16:k3:q9@0").is_err()); // bad field
+        assert!(parse_layout("pool:2@0").is_err()); // offset on structural
+        assert!(parse_layout("4x4").is_err()); // missing offset on dense
+        assert!(parse_layout("pool:0").is_err()); // degenerate pool
     }
 
     #[test]
-    fn stats_per_layer() {
-        let layout = parse_layout("2x4@0,4x2@8").unwrap();
-        // layer 0: 8 params, set 2; layer 1: 8 params, set all
+    fn v1_detection_keys_on_syntax() {
+        assert!(layout_is_v1("64x64@0,64x10@4096"));
+        assert!(!layout_is_v1("dense:64x64@0,dense:64x10@4096"));
+        assert!(!layout_is_v1("64x64@0,relu,64x10@4096"));
+        assert!(!layout_is_v1("conv:1x8:k3:s1:p1@0,flatten,dense:128x10@72"));
+        assert!(!layout_is_v1(""));
+    }
+
+    #[test]
+    fn fan_in_per_kind() {
+        assert_eq!(LayerSpec::Dense { k: 64, n: 10 }.fan_in(), 64);
+        assert_eq!(
+            LayerSpec::Conv2d { in_ch: 3, out_ch: 16, kernel: 3, stride: 1, pad: 1 }.fan_in(),
+            27
+        );
+        assert_eq!(LayerSpec::Relu.fan_in(), 0);
+    }
+
+    #[test]
+    fn stats_per_layer_skip_structural() {
+        let layout = parse_layout("2x4@0,relu,4x2@8").unwrap();
+        // layer 0: 8 params, set 2; layer 2: 8 params, set all
         let mut m = BitVec::zeros(16);
         m.set(0, true);
         m.set(5, true);
@@ -146,6 +392,7 @@ mod tests {
             m.set(i, true);
         }
         let stats = layer_stats(&m, &layout);
+        assert_eq!(stats.len(), 2, "relu owns no params and reports no row");
         assert_eq!(stats[0].ones, 2);
         assert!((stats[0].density - 0.25).abs() < 1e-12);
         assert_eq!(stats[1].ones, 8);
@@ -153,5 +400,19 @@ mod tests {
         assert_eq!(stats[1].entropy, 0.0);
         let table = format_table(&stats);
         assert!(table.contains("0.2500"));
+        assert!(table.contains("dense"));
+    }
+
+    #[test]
+    fn conv_stats_report_kind() {
+        let layout = parse_layout("conv:1x2:k3@0,relu,flatten,dense:8x2@18").unwrap();
+        let m = BitVec::zeros(18 + 16);
+        let stats = layer_stats(&m, &layout);
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].layer.spec.kind_name(), "conv2d");
+        assert_eq!(stats[0].layer.len(), 18);
+        let table = format_table(&stats);
+        assert!(table.contains("conv2d"));
+        assert!(table.contains("1>2 k3s1p0"));
     }
 }

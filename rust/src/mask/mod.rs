@@ -12,7 +12,7 @@ pub mod layers;
 
 pub use aggregate::{BetaAggregator, MaskAggregator};
 pub use entropy::{empirical_bpp, entropy_bits, mean_client_bpp};
-pub use layers::{layer_stats, parse_layout, LayerSlice, LayerStats};
+pub use layers::{format_layout, layer_stats, parse_layout, LayerSlice, LayerSpec, LayerStats};
 
 use crate::util::{logit, sigmoid, BitVec, Philox4x32};
 

@@ -12,7 +12,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::mask::layers::{parse_layout, LayerSlice};
+use crate::mask::layers::{layout_is_v1, parse_layout, LayerSlice, LayerSpec};
 use crate::util::SeedSequence;
 
 /// Parsed `<model>.meta` manifest.
@@ -32,6 +32,15 @@ pub struct Manifest {
     pub has_dense_grad: bool,
     /// Per-layer flat layout (empty for manifests without `layers=`).
     pub layers: Vec<LayerSlice>,
+    /// True when `layers=` used the bare v1 `KxN@off` grammar, whose
+    /// semantics include implicit inter-layer ReLUs; v2 layouts list
+    /// every activation explicitly (`runtime/graph.rs`).
+    pub layers_v1: bool,
+    /// Spatial input geometry `(height, width, channels)` for layer
+    /// graphs that open with conv/pool nodes (`input_shape=HxWxC`);
+    /// `None` for flat (MLP) inputs. Rows are NHWC, matching the
+    /// synthetic generator's `(y * width + x) * channels + c` layout.
+    pub input_shape: Option<(usize, usize, usize)>,
     pub weights_file: PathBuf,
     pub local_train_file: PathBuf,
     pub eval_file: PathBuf,
@@ -64,13 +73,19 @@ impl Manifest {
         let parse_usize =
             |k: &str| -> Result<usize> { Ok(get(k)?.parse().with_context(|| format!("key {k}"))?) };
         let has_dense = parse_usize("has_dense_grad")? != 0;
-        let layers = match kv.get("layers") {
-            Some(l) => parse_layout(l)?,
-            None => Vec::new(),
+        let (layers, layers_v1) = match kv.get("layers") {
+            Some(l) => (parse_layout(l)?, layout_is_v1(l)),
+            None => (Vec::new(), false),
+        };
+        let input_shape = match kv.get("input_shape") {
+            Some(s) => Some(parse_input_shape(s)?),
+            None => None,
         };
         let man = Self {
             model: get("model")?.clone(),
             layers,
+            layers_v1,
+            input_shape,
             n_params: parse_usize("n_params")?,
             input_dim: parse_usize("input_dim")?,
             n_classes: parse_usize("n_classes")?,
@@ -91,57 +106,129 @@ impl Manifest {
         };
         ensure!(man.model == model, "manifest model name mismatch");
         ensure!(man.n_params > 0 && man.input_dim > 0, "degenerate manifest");
+        if let Some((h, w, c)) = man.input_shape {
+            ensure!(
+                h * w * c == man.input_dim,
+                "input_shape {h}x{w}x{c} does not cover input_dim {}",
+                man.input_dim
+            );
+        }
         Ok(man)
     }
 
-    /// Synthesize a manifest for one of the built-in MLP models — the
-    /// same registry as `python/compile/model.py`'s MLP family, so a
-    /// checkout with no exported artifacts still runs every experiment
-    /// natively (DESIGN.md §Substitutions).
+    /// Synthesize a manifest for one of the built-in models — the same
+    /// registry as `python/compile/model.py`, so a checkout with no
+    /// exported artifacts still runs every experiment natively
+    /// (DESIGN.md §Substitutions). The MLP family is the v1 dense
+    /// layout; `conv_tiny` / `conv4` / `conv6` are layer graphs in the
+    /// v2 grammar (DESIGN.md §Compute-core), channel-scaled from the
+    /// paper's Conv4/Conv6 stacks to CPU-tractable size.
     pub fn builtin(model: &str) -> Option<Self> {
-        let dims: &[usize] = match model {
-            "mlp_tiny" => &[64, 64, 10],
-            "mlp_mnist" => &[784, 256, 256, 10],
-            "mlp_cifar10" => &[3072, 256, 256, 10],
-            "mlp_cifar100" => &[3072, 512, 256, 100],
+        // MLP family: chained dense layers over a flat input.
+        let dims: Option<&[usize]> = match model {
+            "mlp_tiny" => Some(&[64, 64, 10]),
+            "mlp_mnist" => Some(&[784, 256, 256, 10]),
+            "mlp_cifar10" => Some(&[3072, 256, 256, 10]),
+            "mlp_cifar100" => Some(&[3072, 512, 256, 100]),
+            _ => None,
+        };
+        if let Some(dims) = dims {
+            let mut layers = Vec::with_capacity(dims.len() - 1);
+            let mut offset = 0usize;
+            for (index, pair) in dims.windows(2).enumerate() {
+                let (k, n) = (pair[0], pair[1]);
+                layers.push(LayerSlice { index, spec: LayerSpec::Dense { k, n }, offset });
+                offset += k * n;
+            }
+            return Some(Self::builtin_from(
+                model,
+                layers,
+                true, // programmatic dense chain = v1 semantics
+                offset,
+                dims[0],
+                *dims.last().unwrap(),
+                None,
+            ));
+        }
+        // Conv family: layer graphs in the v2 `layers=` grammar.
+        let (shape, layout): ((usize, usize, usize), &str) = match model {
+            "conv_tiny" => (
+                (8, 8, 1),
+                "conv:1x8:k3:s1:p1@0,relu,pool:2,flatten,dense:128x10@72",
+            ),
+            "conv4" => (
+                (32, 32, 3),
+                "conv:3x16:k3:s1:p1@0,relu,pool:2,conv:16x32:k3:s1:p1@432,relu,pool:2,\
+                 flatten,dense:2048x64@5040,relu,dense:64x10@136112",
+            ),
+            "conv6" => (
+                (32, 32, 3),
+                "conv:3x16:k3:s1:p1@0,relu,conv:16x16:k3:s1:p1@432,relu,pool:2,\
+                 conv:16x32:k3:s1:p1@2736,relu,conv:32x32:k3:s1:p1@7344,relu,pool:2,\
+                 flatten,dense:2048x64@16560,relu,dense:64x10@147632",
+            ),
             _ => return None,
         };
-        let mut layers = Vec::with_capacity(dims.len() - 1);
-        let mut offset = 0usize;
-        for (index, pair) in dims.windows(2).enumerate() {
-            let (rows, cols) = (pair[0], pair[1]);
-            layers.push(LayerSlice { index, rows, cols, offset });
-            offset += rows * cols;
-        }
-        Some(Self {
+        let layers = parse_layout(layout).expect("built-in conv layout must parse");
+        let n_params: usize = layers.iter().map(|l| l.len()).sum();
+        let (h, w, c) = shape;
+        Some(Self::builtin_from(model, layers, false, n_params, h * w * c, 10, Some(shape)))
+    }
+
+    fn builtin_from(
+        model: &str,
+        layers: Vec<LayerSlice>,
+        layers_v1: bool,
+        n_params: usize,
+        input_dim: usize,
+        n_classes: usize,
+        input_shape: Option<(usize, usize, usize)>,
+    ) -> Self {
+        Self {
             model: model.to_string(),
-            n_params: offset,
-            input_dim: dims[0],
-            n_classes: *dims.last().unwrap(),
+            n_params,
+            input_dim,
+            n_classes,
             batch: 32,
             steps: 6,
             eval_chunk: 512,
             weight_seed: 2023,
             has_dense_grad: true,
             layers,
+            layers_v1,
+            input_shape,
             weights_file: PathBuf::new(),
             local_train_file: PathBuf::new(),
             eval_file: PathBuf::new(),
             dense_grad_file: None,
             builtin: true,
-        })
+        }
+    }
+
+    /// Names in the built-in native registry (artifact-free models).
+    pub fn builtin_models() -> &'static [&'static str] {
+        &[
+            "mlp_tiny",
+            "mlp_mnist",
+            "mlp_cifar10",
+            "mlp_cifar100",
+            "conv_tiny",
+            "conv4",
+            "conv6",
+        ]
     }
 
     /// Load the frozen weight vector. Built-in manifests synthesize the
     /// signed-constant distribution U{-sc, +sc} with sc = sqrt(2/fan_in)
-    /// (paper sec. IV) deterministically from `weight_seed`; artifact
-    /// manifests read the exporter's flat f32 little-endian blob.
+    /// (paper sec. IV; conv fan-in = in_ch * k * k) deterministically
+    /// from `weight_seed`; artifact manifests read the exporter's flat
+    /// f32 little-endian blob.
     pub fn load_weights(&self) -> Result<Vec<f32>> {
         if self.builtin {
             let root = SeedSequence::new(self.weight_seed);
             let mut w = vec![0.0f32; self.n_params];
-            for l in &self.layers {
-                let sc = (2.0 / l.rows as f64).sqrt() as f32;
+            for l in self.layers.iter().filter(|l| !l.is_empty()) {
+                let sc = (2.0 / l.spec.fan_in() as f64).sqrt() as f32;
                 let mut u = vec![0.0f32; l.len()];
                 root.child(l.index as u64).philox().fill_uniform(0, &mut u);
                 for (j, &uv) in u.iter().enumerate() {
@@ -169,6 +256,17 @@ impl Manifest {
     pub fn rows_per_call(&self) -> usize {
         self.batch * self.steps
     }
+}
+
+/// Parse `HxWxC` (e.g. `32x32x3`) from the `input_shape=` manifest key.
+fn parse_input_shape(s: &str) -> Result<(usize, usize, usize)> {
+    let parts: Vec<&str> = s.split('x').map(str::trim).collect();
+    ensure!(parts.len() == 3, "input_shape must be HxWxC, got '{s}'");
+    let h: usize = parts[0].parse().context("input_shape height")?;
+    let w: usize = parts[1].parse().context("input_shape width")?;
+    let c: usize = parts[2].parse().context("input_shape channels")?;
+    ensure!(h > 0 && w > 0 && c > 0, "degenerate input_shape '{s}'");
+    Ok((h, w, c))
 }
 
 /// List models with manifests present in an artifacts directory.
@@ -255,8 +353,34 @@ mod tests {
         assert_eq!(man.n_classes, 10);
         assert_eq!(man.layers.len(), 2);
         assert_eq!(man.layers[1].offset, 64 * 64);
+        assert!(man.input_shape.is_none());
         let mnist = Manifest::builtin("mlp_mnist").unwrap();
         assert_eq!(mnist.n_params, 784 * 256 + 256 * 256 + 256 * 10);
+    }
+
+    #[test]
+    fn builtin_conv_registry_geometry() {
+        use crate::mask::layers::LayerSpec;
+        let tiny = Manifest::builtin("conv_tiny").unwrap();
+        assert_eq!(tiny.input_dim, 64);
+        assert_eq!(tiny.input_shape, Some((8, 8, 1)));
+        assert_eq!(tiny.n_params, 72 + 128 * 10);
+        let c4 = Manifest::builtin("conv4").unwrap();
+        assert_eq!(c4.input_dim, 3072);
+        assert_eq!(c4.input_shape, Some((32, 32, 3)));
+        assert_eq!(c4.n_params, 432 + 4608 + 2048 * 64 + 640);
+        assert_eq!(
+            c4.layers.iter().filter(|l| !l.is_empty()).count(),
+            4,
+            "conv4 = 2 conv + 2 dense parameterized layers"
+        );
+        let c6 = Manifest::builtin("conv6").unwrap();
+        assert_eq!(c6.n_params, 432 + 2304 + 4608 + 9216 + 2048 * 64 + 640);
+        assert_eq!(c6.layers.iter().filter(|l| !l.is_empty()).count(), 6);
+        assert!(matches!(c6.layers[0].spec, LayerSpec::Conv2d { in_ch: 3, out_ch: 16, .. }));
+        for name in Manifest::builtin_models() {
+            assert!(Manifest::builtin(name).is_some(), "{name} must resolve");
+        }
     }
 
     #[test]
@@ -270,5 +394,26 @@ mod tests {
         let pos = w.iter().filter(|&&v| v > 0.0).count();
         assert!(pos > man.n_params / 3 && pos < 2 * man.n_params / 3);
         assert_eq!(w, man.load_weights().unwrap(), "weights must replay");
+    }
+
+    #[test]
+    fn conv_weights_use_conv_fan_in() {
+        let man = Manifest::builtin("conv_tiny").unwrap();
+        let w = man.load_weights().unwrap();
+        // conv 1->8 k3: fan_in = 1*3*3 = 9
+        let sc_conv = (2.0f64 / 9.0).sqrt() as f32;
+        assert!(w[..72].iter().all(|&v| v == sc_conv || v == -sc_conv));
+        // dense 128x10: fan_in = 128
+        let sc_fc = (2.0f64 / 128.0).sqrt() as f32;
+        assert!(w[72..].iter().all(|&v| v == sc_fc || v == -sc_fc));
+        assert_eq!(w, man.load_weights().unwrap(), "weights must replay");
+    }
+
+    #[test]
+    fn input_shape_key_parses_and_validates() {
+        assert_eq!(parse_input_shape("32x32x3").unwrap(), (32, 32, 3));
+        assert!(parse_input_shape("32x32").is_err());
+        assert!(parse_input_shape("0x4x1").is_err());
+        assert!(parse_input_shape("axbxc").is_err());
     }
 }

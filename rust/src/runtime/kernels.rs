@@ -1,0 +1,490 @@
+//! Native compute kernels: blocked GEMM, im2col convolution, pooling,
+//! and the softmax/cross-entropy pair (DESIGN.md §Compute-core).
+//!
+//! Every function here is allocation-free: callers hand in preallocated
+//! output and scratch slices (the per-call [`super::graph::Workspace`]
+//! lives in `runtime/graph.rs`), which is what lets the masked-STE
+//! inner loop do zero heap allocation per step.
+//!
+//! Layout conventions:
+//! * activations are row-major `[rows, features]`; spatial tensors are
+//!   NHWC (`(row * H + y) * W + x) * C + c`), matching the synthetic
+//!   data generator;
+//! * conv weights are `[kernel, kernel, in_ch, out_ch]` flattened, so
+//!   an im2col patch row multiplies a `[k*k*cin, cout]` matrix with the
+//!   same `gemm_nn` that drives dense layers;
+//! * accumulation order per output element is ascending over the
+//!   contraction index — identical to the scalar reference loops the
+//!   blocked forms replace, so the refactor is bit-exact for MLPs.
+//!
+//! The blocking strategy is deliberately simple: process `MR = 4` rows
+//! of the left operand at a time so each row of the right operand is
+//! streamed from cache once per 4 output rows instead of once per row.
+//! On post-ReLU activations the `a == 0` skip prunes whole saxpy rows.
+
+/// Left-operand row block: B rows reused per pass.
+const MR: usize = 4;
+
+/// C[m x n] += A[m x k] · B[k x n].
+///
+/// Per-element accumulation runs over `kk` ascending (bit-compatible
+/// with the naive i-k-j loop). Zero entries of A skip their saxpy row —
+/// post-ReLU activations make this branch worth its cost.
+pub fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+    let mut i0 = 0;
+    while i0 < m {
+        let mb = MR.min(m - i0);
+        for kk in 0..k {
+            let b_row = &b[kk * n..kk * n + n];
+            for r in 0..mb {
+                let av = a[(i0 + r) * k + kk];
+                if av != 0.0 {
+                    let c_row = &mut c[(i0 + r) * n..(i0 + r) * n + n];
+                    for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+        i0 += mb;
+    }
+}
+
+/// C[k x n] += Aᵀ · G, with A[m x k], G[m x n] (the dW = aᵀg update).
+///
+/// Per-element accumulation runs over rows `r` ascending.
+pub fn gemm_tn(a: &[f32], g: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert!(a.len() >= m * k && g.len() >= m * n && c.len() >= k * n);
+    let mut r0 = 0;
+    while r0 < m {
+        let mb = MR.min(m - r0);
+        for kk in 0..k {
+            for r in r0..r0 + mb {
+                let av = a[r * k + kk];
+                if av != 0.0 {
+                    let g_row = &g[r * n..r * n + n];
+                    let c_row = &mut c[kk * n..kk * n + n];
+                    for (cv, &gv) in c_row.iter_mut().zip(g_row) {
+                        *cv += av * gv;
+                    }
+                }
+            }
+        }
+        r0 += mb;
+    }
+}
+
+/// C[m x k] += G · Bᵀ, with G[m x n], B[k x n] (the g_prev = g·Wᵀ pass).
+///
+/// Each output element is a dot product over `n` ascending; four output
+/// columns share one pass over the G row.
+pub fn gemm_nt(g: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert!(g.len() >= m * n && b.len() >= k * n && c.len() >= m * k);
+    for i in 0..m {
+        let g_row = &g[i * n..i * n + n];
+        let c_row = &mut c[i * k..i * k + k];
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = MR.min(k - k0);
+            for (dk, cv) in c_row[k0..k0 + kb].iter_mut().enumerate() {
+                let b_row = &b[(k0 + dk) * n..(k0 + dk) * n + n];
+                let mut s = 0.0f32;
+                for (&gv, &bv) in g_row.iter().zip(b_row) {
+                    s += gv * bv;
+                }
+                *cv += s;
+            }
+            k0 += kb;
+        }
+    }
+}
+
+/// Conv geometry shared by im2col/col2im and the graph planner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub oh: usize,
+    pub ow: usize,
+}
+
+impl ConvGeom {
+    /// Patch width of the im2col matrix: kernel * kernel * cin.
+    pub fn patch(&self) -> usize {
+        self.kernel * self.kernel * self.cin
+    }
+
+    /// im2col rows for `rows` batch items: rows * oh * ow.
+    pub fn col_rows(&self, rows: usize) -> usize {
+        rows * self.oh * self.ow
+    }
+}
+
+/// Unfold NHWC input `[rows, h, w, cin]` into `col[rows*oh*ow, k*k*cin]`
+/// so the convolution becomes one `gemm_nn` against the
+/// `[k*k*cin, cout]` weight block. Out-of-bounds taps are zeroed.
+pub fn im2col(x: &[f32], col: &mut [f32], g: ConvGeom, rows: usize) {
+    let (k, cin) = (g.kernel, g.cin);
+    let patch = g.patch();
+    for b in 0..rows {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let row = ((b * g.oh + oy) * g.ow + ox) * patch;
+                for ky in 0..k {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    for kx in 0..k {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        let dst = &mut col[row + (ky * k + kx) * cin..][..cin];
+                        if iy >= 0 && (iy as usize) < g.h && ix >= 0 && (ix as usize) < g.w {
+                            let src = ((b * g.h + iy as usize) * g.w + ix as usize) * cin;
+                            dst.copy_from_slice(&x[src..src + cin]);
+                        } else {
+                            dst.fill(0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col`]: scatter-add `dcol` back into `dx` (NHWC).
+/// `dx` must be zeroed by the caller; out-of-bounds taps are dropped.
+pub fn col2im_add(dcol: &[f32], dx: &mut [f32], g: ConvGeom, rows: usize) {
+    let (k, cin) = (g.kernel, g.cin);
+    let patch = g.patch();
+    for b in 0..rows {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let row = ((b * g.oh + oy) * g.ow + ox) * patch;
+                for ky in 0..k {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    if iy < 0 || iy as usize >= g.h {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        if ix < 0 || ix as usize >= g.w {
+                            continue;
+                        }
+                        let src = &dcol[row + (ky * k + kx) * cin..][..cin];
+                        let dst = ((b * g.h + iy as usize) * g.w + ix as usize) * cin;
+                        for (dv, &sv) in dx[dst..dst + cin].iter_mut().zip(src) {
+                            *dv += sv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Non-overlapping max-pool forward over NHWC `[rows, h, w, c]` with
+/// window/stride `size` (h and w must divide evenly — validated at plan
+/// build). Writes the pooled output and, per output element, the flat
+/// input index of the winning tap (`idx`) for the backward scatter.
+/// Ties break toward the first tap in (ky, kx) scan order.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_fwd(
+    x: &[f32],
+    out: &mut [f32],
+    idx: &mut [u32],
+    h: usize,
+    w: usize,
+    c: usize,
+    size: usize,
+    rows: usize,
+) {
+    let (oh, ow) = (h / size, w / size);
+    for b in 0..rows {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_i = 0u32;
+                    for ky in 0..size {
+                        for kx in 0..size {
+                            let iy = oy * size + ky;
+                            let ix = ox * size + kx;
+                            let i = ((b * h + iy) * w + ix) * c + ch;
+                            if x[i] > best {
+                                best = x[i];
+                                best_i = i as u32;
+                            }
+                        }
+                    }
+                    let o = ((b * oh + oy) * ow + ox) * c + ch;
+                    out[o] = best;
+                    idx[o] = best_i;
+                }
+            }
+        }
+    }
+}
+
+/// Max-pool backward: route each output gradient to its argmax tap.
+/// `dx` must be zeroed by the caller.
+pub fn maxpool_bwd(dout: &[f32], idx: &[u32], dx: &mut [f32]) {
+    for (&g, &i) in dout.iter().zip(idx) {
+        dx[i as usize] += g;
+    }
+}
+
+/// ReLU forward, in place.
+pub fn relu_fwd(a: &mut [f32]) {
+    for v in a.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// ReLU backward, in place on the gradient: `g *= (act > 0)`, where
+/// `act` is the stored *post*-activation (relu' == (a > 0) there).
+pub fn relu_bwd(g: &mut [f32], act: &[f32]) {
+    for (gv, &av) in g.iter_mut().zip(act) {
+        if av <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// Per-row stable log-softmax CE + correctness on `logits[rows, c]`.
+/// Rows with y < 0 are padding and contribute nothing.
+/// Returns (loss_sum, correct, valid_rows).
+pub fn softmax_xent_stats(logits: &[f32], y: &[i32], c: usize) -> (f64, f64, usize) {
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut valid = 0usize;
+    for (b, &yb) in y.iter().enumerate() {
+        if yb < 0 {
+            continue;
+        }
+        valid += 1;
+        let row = &logits[b * c..(b + 1) * c];
+        let (mut amax, mut imax) = (f32::NEG_INFINITY, 0);
+        for (i, &v) in row.iter().enumerate() {
+            if v > amax {
+                amax = v;
+                imax = i;
+            }
+        }
+        let lse = amax + row.iter().map(|&v| (v - amax).exp()).sum::<f32>().ln();
+        loss_sum += (lse - row[yb as usize]) as f64;
+        if imax == yb as usize {
+            correct += 1.0;
+        }
+    }
+    (loss_sum, correct, valid)
+}
+
+/// dL/dlogits for mean-CE over the valid rows, written into `g`
+/// (padding rows are zeroed): (softmax - onehot) / denom.
+pub fn softmax_xent_grad(logits: &[f32], y: &[i32], c: usize, denom: f32, g: &mut [f32]) {
+    g.fill(0.0);
+    for (b, &yb) in y.iter().enumerate() {
+        if yb < 0 {
+            continue;
+        }
+        let row = &logits[b * c..(b + 1) * c];
+        let grow = &mut g[b * c..(b + 1) * c];
+        let amax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (gv, &v) in grow.iter_mut().zip(row) {
+            *gv = (v - amax).exp();
+            sum += *gv;
+        }
+        let inv = 1.0 / (sum * denom);
+        for gv in grow.iter_mut() {
+            *gv *= inv;
+        }
+        grow[yb as usize] -= 1.0 / denom;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n).map(|_| rng.next_normal() as f32).collect()
+    }
+
+    fn gemm_nn_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                for j in 0..n {
+                    c[i * n + j] += av * b[kk * n + j];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive_bitwise() {
+        // odd sizes exercise the partial row-block tail
+        for (m, k, n) in [(1, 1, 1), (5, 7, 3), (8, 16, 10), (13, 9, 17)] {
+            let a = rand_vec(m * k, 1);
+            let b = rand_vec(k * n, 2);
+            let mut c0 = vec![0.0f32; m * n];
+            let mut c1 = vec![0.0f32; m * n];
+            gemm_nn_naive(&a, &b, &mut c0, m, k, n);
+            gemm_nn(&a, &b, &mut c1, m, k, n);
+            assert_eq!(
+                c0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                c1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "m={m} k={k} n={n}: blocked gemm must keep accumulation order"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_tn_is_a_transpose_gemm() {
+        let (m, k, n) = (6, 5, 4);
+        let a = rand_vec(m * k, 3);
+        let g = rand_vec(m * n, 4);
+        let mut c = vec![0.0f32; k * n];
+        gemm_tn(&a, &g, &mut c, m, k, n);
+        // reference: explicit transpose + naive gemm
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        let mut c0 = vec![0.0f32; k * n];
+        gemm_nn_naive(&at, &g, &mut c0, k, m, n);
+        for (x, y) in c.iter().zip(&c0) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_nt_is_a_transpose_gemm() {
+        let (m, n, k) = (5, 6, 7);
+        let g = rand_vec(m * n, 5);
+        let b = rand_vec(k * n, 6);
+        let mut c = vec![0.0f32; m * k];
+        gemm_nt(&g, &b, &mut c, m, n, k);
+        let mut bt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let mut c0 = vec![0.0f32; m * k];
+        gemm_nn_naive(&g, &bt, &mut c0, m, n, k);
+        for (x, y) in c.iter().zip(&c0) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    fn geom(h: usize, w: usize, cin: usize, cout: usize, k: usize, s: usize, p: usize) -> ConvGeom {
+        ConvGeom {
+            h,
+            w,
+            cin,
+            cout,
+            kernel: k,
+            stride: s,
+            pad: p,
+            oh: (h + 2 * p - k) / s + 1,
+            ow: (w + 2 * p - k) / s + 1,
+        }
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1, no pad: col == x
+        let g = geom(3, 4, 2, 1, 1, 1, 0);
+        let x = rand_vec(2 * 3 * 4 * 2, 7);
+        let mut col = vec![0.0f32; g.col_rows(2) * g.patch()];
+        im2col(&x, &mut col, g, 2);
+        assert_eq!(x, col);
+    }
+
+    #[test]
+    fn im2col_padding_zeros_out_of_bounds() {
+        // 3x3 kernel pad 1 on a 2x2 single-channel image: corner patch
+        // has 5 zeros
+        let g = geom(2, 2, 1, 1, 3, 1, 1);
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut col = vec![9.0f32; g.col_rows(1) * g.patch()];
+        im2col(&x, &mut col, g, 1);
+        // output (0,0): taps rows -1..1 x cols -1..1
+        let first = &col[..9];
+        assert_eq!(first, &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y
+        let g = geom(5, 4, 3, 2, 3, 2, 1);
+        let rows = 2;
+        let x = rand_vec(rows * g.h * g.w * g.cin, 8);
+        let y = rand_vec(g.col_rows(rows) * g.patch(), 9);
+        let mut col = vec![0.0f32; y.len()];
+        im2col(&x, &mut col, g, rows);
+        let lhs: f64 = col.iter().zip(&y).map(|(&a, &b)| (a * b) as f64).sum();
+        let mut xback = vec![0.0f32; x.len()];
+        col2im_add(&y, &mut xback, g, rows);
+        let rhs: f64 = x.iter().zip(&xback).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_argmax() {
+        // 4x4 single channel, pool 2: known maxima
+        #[rustfmt::skip]
+        let x = vec![
+            1.0f32, 2.0, 0.0, 0.0,
+            3.0,    0.0, 5.0, 0.0,
+            0.0,    0.0, 0.0, 1.0,
+            0.0,    7.0, 1.0, 0.0,
+        ];
+        let mut out = vec![0.0f32; 4];
+        let mut idx = vec![0u32; 4];
+        maxpool_fwd(&x, &mut out, &mut idx, 4, 4, 1, 2, 1);
+        assert_eq!(out, vec![3.0, 5.0, 7.0, 1.0]);
+        let dout = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut dx = vec![0.0f32; 16];
+        maxpool_bwd(&dout, &idx, &mut dx);
+        assert_eq!(dx[4], 1.0); // 3.0 at (1,0)
+        assert_eq!(dx[6], 2.0); // 5.0 at (1,2)
+        assert_eq!(dx[13], 3.0); // 7.0 at (3,1)
+        assert_eq!(dx[11], 4.0); // 1.0 at (2,3)
+        assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn relu_pair() {
+        let mut a = vec![-1.0f32, 0.5, 0.0, 2.0];
+        relu_fwd(&mut a);
+        assert_eq!(a, vec![0.0, 0.5, 0.0, 2.0]);
+        let mut g = vec![1.0f32, 1.0, 1.0, 1.0];
+        relu_bwd(&mut g, &a);
+        assert_eq!(g, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn softmax_xent_ignores_padding() {
+        let logits = vec![0.0f32, 1.0, 1.0, 0.0, 5.0, 5.0];
+        let y = vec![1, -1, 0];
+        let (loss, correct, valid) = softmax_xent_stats(&logits, &y, 2);
+        assert_eq!(valid, 2);
+        assert!(correct >= 1.0);
+        assert!(loss.is_finite());
+        let mut g = vec![7.0f32; 6];
+        softmax_xent_grad(&logits, &y, 2, valid as f32, &mut g);
+        assert_eq!(&g[2..4], &[0.0, 0.0], "padding rows carry zero gradient");
+        // gradient rows sum to ~0 (softmax minus one-hot)
+        assert!((g[0] + g[1]).abs() < 1e-6);
+    }
+}

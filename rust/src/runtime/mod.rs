@@ -4,9 +4,11 @@
 //! actually runs the three L2 programs (local_train / eval / dense_grad)
 //! is an implementation detail resolved at load time:
 //!
-//! * **native** (default) — the pure-Rust re-implementation in
-//!   [`native`]: no Python, no XLA, no artifacts required. MLP models
-//!   are built in; exported artifact manifests with a `layers=` layout
+//! * **native** (default) — the pure-Rust layer-graph core: manifest
+//!   layouts compile to a [`graph::Plan`] executed by the blocked
+//!   kernels in [`kernels`] (DESIGN.md §Compute-core). No Python, no
+//!   XLA, no artifacts required: the MLP *and* conv model families are
+//!   built in, and exported artifact manifests with a `layers=` layout
 //!   also run natively. See DESIGN.md §Substitutions.
 //! * **pjrt** (`--features pjrt`) — the AOT path: HLO text emitted by
 //!   `python/compile/aot.py`, compiled through the PJRT C API, with the
@@ -16,9 +18,12 @@
 //! All methods take `&self` and the facade is `Sync`: the parallel round
 //! engine (DESIGN.md §Parallel round engine) shares one runtime across
 //! its worker threads. Wall-clock per program is accumulated into
-//! `timers` for the perf pass (`FEDSRN_TIMERS=1`).
+//! `timers` (thread-sharded, merged on read — workers never serialize
+//! on telemetry) for the perf pass (`FEDSRN_TIMERS=1`).
 
 pub mod artifacts;
+pub mod graph;
+pub mod kernels;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -28,12 +33,11 @@ pub mod xla_stub;
 pub use artifacts::{available_models, Manifest};
 
 use std::path::Path;
-use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::util::Timers;
+use crate::util::ShardedTimers;
 
 use native::NativeBackend;
 
@@ -88,9 +92,10 @@ pub struct ModelRuntime {
     backend: Backend,
     /// Host copy (used by baselines that mutate weights, e.g. SignSGD).
     weights_host: Vec<f32>,
-    /// Per-program wall-clock accounting for the perf pass. Behind a
-    /// mutex so the runtime stays `Sync` for the parallel round engine.
-    pub timers: Mutex<Timers>,
+    /// Per-program wall-clock accounting for the perf pass. Sharded by
+    /// calling thread so the parallel round engine's workers accumulate
+    /// without contending; read with [`ShardedTimers::snapshot`].
+    pub timers: ShardedTimers,
 }
 
 impl ModelRuntime {
@@ -120,7 +125,7 @@ impl ModelRuntime {
     pub fn from_manifest(manifest: Manifest) -> Result<Self> {
         let weights_host = manifest.load_weights()?;
         let backend = Self::build_backend(&manifest, &weights_host)?;
-        Ok(Self { manifest, backend, weights_host, timers: Mutex::new(Timers::new()) })
+        Ok(Self { manifest, backend, weights_host, timers: ShardedTimers::new() })
     }
 
     #[cfg(feature = "pjrt")]
@@ -159,7 +164,7 @@ impl ModelRuntime {
     }
 
     fn time(&self, label: &str, t0: Instant) {
-        self.timers.lock().unwrap().add(label, t0.elapsed());
+        self.timers.add(label, t0.elapsed());
     }
 
     /// One client local phase: `steps` minibatches of STE-SGD.
@@ -251,8 +256,10 @@ impl ModelRuntime {
 
     /// Dense forward/backward for the SignSGD / FedAvg baselines.
     ///
-    /// `x` is (rows*input_dim) with rows <= exported batch. Returns
-    /// (grads, mean_loss, correct).
+    /// `x` is (rows*input_dim). The native graph accepts any row count;
+    /// only the PJRT path is bound to the exported fixed-batch program
+    /// (rows <= batch, padded with y = -1 behind the feature gate).
+    /// Returns (grads, mean_loss, correct).
     pub fn dense_grad(
         &self,
         weights: &[f32],
@@ -261,7 +268,6 @@ impl ModelRuntime {
     ) -> Result<(Vec<f32>, f32, f32)> {
         let m = &self.manifest;
         ensure!(weights.len() == m.n_params, "weights length mismatch");
-        ensure!(y.len() <= m.batch, "at most {} rows per dense_grad call", m.batch);
         ensure!(x.len() == y.len() * m.input_dim, "x/y size mismatch");
         let t0 = Instant::now();
         let out = match &self.backend {
@@ -269,6 +275,11 @@ impl ModelRuntime {
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(b) => {
                 // the exported program takes a fixed batch: pad with y=-1
+                ensure!(
+                    y.len() <= m.batch,
+                    "at most {} rows per pjrt dense_grad call",
+                    m.batch
+                );
                 let mut xb = vec![0.0f32; m.batch * m.input_dim];
                 xb[..x.len()].copy_from_slice(x);
                 let mut yb = vec![-1i32; m.batch];

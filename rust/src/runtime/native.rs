@@ -1,19 +1,26 @@
 //! Native backend: the L2 programs re-implemented in pure Rust.
 //!
-//! Mirrors `python/compile/model.py` for the MLP model family — masked
+//! Mirrors `python/compile/model.py` for the built-in model zoo — masked
 //! STE local training (paper eq. 5-7 + eq. 12), masked evaluation and
 //! the dense forward/backward used by the baselines — with no Python,
 //! XLA or artifact dependency. This is the default execution backend
-//! (DESIGN.md §Substitutions): the AOT/PJRT path compiles the exact same
-//! math from the JAX source when the `pjrt` feature is enabled, and the
-//! conv models only exist there.
+//! (DESIGN.md §Substitutions) and it executes the full layer-graph
+//! model family: chained MLPs *and* the conv stacks (conv_tiny / conv4
+//! / conv6) via the compiled [`Plan`] + blocked kernels in
+//! `runtime/graph.rs` / `runtime/kernels.rs` (DESIGN.md §Compute-core).
 //!
 //! Semantics held in common with the Pallas kernels (see
 //! `python/compile/kernels/ref.py`):
 //!     theta = sigmoid(s)            per-parameter keep probability
 //!     m     = 1[u < theta]          sampled mask, u ~ U[0,1)
-//!     y     = x @ (m * w)           masked affine transform
-//!     ds    = (x^T g) * w * sigmoid'(s)      (straight-through)
+//!     y     = f(x; m * w)           masked layer-graph forward
+//!     ds    = dL/dw_eff * w * sigmoid'(s)     (straight-through)
+//!
+//! The masked-STE inner loop performs **zero heap allocation per step**:
+//! all activation/gradient/scratch buffers live in a [`Workspace`]
+//! allocated once per `local_train` call, and sigmoid(s) is computed
+//! once per step into a reused buffer shared by the mask draw and the
+//! score update.
 //!
 //! Everything is `&self`: the backend is freely shared across the worker
 //! threads of the parallel round engine (DESIGN.md §Parallel round
@@ -21,204 +28,48 @@
 //! streams keyed by a [`SeedSequence`] path, so results depend only on
 //! the call's seed — never on thread count or call order.
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
-use crate::mask::layers::LayerSlice;
 use crate::util::{sigmoid, SeedSequence};
 
 use super::artifacts::Manifest;
+use super::graph::{Plan, Workspace};
+use super::kernels::{softmax_xent_grad, softmax_xent_stats};
 use super::{EvalMetrics, TrainMetrics};
 
-/// One dense layer's slice of the flat parameter vector.
-#[derive(Debug, Clone, Copy)]
-struct Layer {
-    /// Input width K.
-    k: usize,
-    /// Output width N.
-    n: usize,
-    /// Offset into the flat vector (row-major K x N).
-    offset: usize,
-}
+/// Reserved [`SeedSequence`] child tag for the end-of-call sparsity
+/// probe. Per-step Bernoulli streams use `root.child(h)` with `h` a
+/// step index, so the probe must live outside every reachable step
+/// index — a `local_train` call can never run `u64::MAX` steps. (The
+/// seed's `child(0x5EED)` probe collided with step 0x5EED whenever a
+/// call ran more than 23277 steps.)
+pub const SPARSITY_PROBE_CHILD: u64 = u64::MAX;
 
-/// Pure-Rust MLP executor over the manifest's flat parameter layout.
+/// Pure-Rust layer-graph executor over the manifest's flat parameters.
 #[derive(Debug, Clone)]
 pub struct NativeBackend {
-    layers: Vec<Layer>,
+    plan: Plan,
     n_params: usize,
     input_dim: usize,
     n_classes: usize,
 }
 
 impl NativeBackend {
-    /// Build from a manifest's `layers=` layout (artifact or built-in).
+    /// Compile the manifest's `layers=` layout (artifact or built-in)
+    /// into an execution plan.
     pub fn from_manifest(man: &Manifest) -> Result<Self> {
-        ensure!(
-            !man.layers.is_empty(),
-            "model '{}' has no layer layout in its manifest; the native \
-             backend needs one (re-export artifacts, or build with \
-             --features pjrt to run the compiled HLO instead)",
-            man.model
-        );
-        let layers: Vec<Layer> = man
-            .layers
-            .iter()
-            .map(|l: &LayerSlice| Layer { k: l.rows, n: l.cols, offset: l.offset })
-            .collect();
-        ensure!(layers[0].k == man.input_dim, "first layer width != input_dim");
-        for w in layers.windows(2) {
-            ensure!(w[0].n == w[1].k, "layer widths must chain (MLP layout)");
-        }
-        let last = layers.last().unwrap();
-        ensure!(last.n == man.n_classes, "last layer width != n_classes");
-        let total: usize = layers.iter().map(|l| l.k * l.n).sum();
-        ensure!(total == man.n_params, "layer layout does not cover n_params");
+        let plan = Plan::build(man)?;
         Ok(Self {
-            layers,
+            plan,
             n_params: man.n_params,
             input_dim: man.input_dim,
             n_classes: man.n_classes,
         })
     }
 
-    /// Forward through effective weights `w_eff` for `rows` inputs.
-    /// Returns one output per layer (`outs[L-1]` is the logits); hidden
-    /// outputs carry ReLU already applied. The input is read in place —
-    /// never copied — so eval over large test sets costs no extra
-    /// input-sized allocation.
-    fn forward(&self, w_eff: &[f32], x: &[f32], rows: usize) -> Vec<Vec<f32>> {
-        let n_layers = self.layers.len();
-        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
-        for (li, layer) in self.layers.iter().enumerate() {
-            let a: &[f32] = if li == 0 { x } else { &outs[li - 1] };
-            let mut z = vec![0.0f32; rows * layer.n];
-            for b in 0..rows {
-                let arow = &a[b * layer.k..(b + 1) * layer.k];
-                let zrow = &mut z[b * layer.n..(b + 1) * layer.n];
-                for (k, &av) in arow.iter().enumerate() {
-                    if av != 0.0 {
-                        let wrow = &w_eff[layer.offset + k * layer.n..][..layer.n];
-                        for (zv, &wv) in zrow.iter_mut().zip(wrow) {
-                            *zv += av * wv;
-                        }
-                    }
-                }
-            }
-            if li + 1 < n_layers {
-                z.iter_mut().for_each(|v| *v = v.max(0.0));
-            }
-            outs.push(z);
-        }
-        outs
-    }
-
-    /// Per-row stable log-softmax CE + correctness on `logits`.
-    /// Rows with y < 0 are padding and contribute nothing.
-    /// Returns (loss_sum, correct, valid_rows).
-    fn ce_stats(&self, logits: &[f32], y: &[i32]) -> (f64, f64, usize) {
-        let c = self.n_classes;
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0.0f64;
-        let mut valid = 0usize;
-        for (b, &yb) in y.iter().enumerate() {
-            if yb < 0 {
-                continue;
-            }
-            valid += 1;
-            let row = &logits[b * c..(b + 1) * c];
-            let (mut amax, mut imax) = (f32::NEG_INFINITY, 0);
-            for (i, &v) in row.iter().enumerate() {
-                if v > amax {
-                    amax = v;
-                    imax = i;
-                }
-            }
-            let lse =
-                amax + row.iter().map(|&v| (v - amax).exp()).sum::<f32>().ln();
-            loss_sum += (lse - row[yb as usize]) as f64;
-            if imax == yb as usize {
-                correct += 1.0;
-            }
-        }
-        (loss_sum, correct, valid)
-    }
-
-    /// dL/dlogits for mean-CE over the valid rows: (softmax - onehot) / denom.
-    fn logit_grad(&self, logits: &[f32], y: &[i32], denom: f32) -> Vec<f32> {
-        let c = self.n_classes;
-        let mut g = vec![0.0f32; logits.len()];
-        for (b, &yb) in y.iter().enumerate() {
-            if yb < 0 {
-                continue;
-            }
-            let row = &logits[b * c..(b + 1) * c];
-            let grow = &mut g[b * c..(b + 1) * c];
-            let amax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0.0f32;
-            for (gv, &v) in grow.iter_mut().zip(row) {
-                *gv = (v - amax).exp();
-                sum += *gv;
-            }
-            let inv = 1.0 / (sum * denom);
-            for gv in grow.iter_mut() {
-                *gv *= inv;
-            }
-            grow[yb as usize] -= 1.0 / denom;
-        }
-        g
-    }
-
-    /// Backprop `g_logits` through a forward pass's layer outputs,
-    /// producing the gradient w.r.t. the (effective) flat weight vector.
-    /// `x` is the original input (layer 0's activations).
-    fn backward_weights(
-        &self,
-        x: &[f32],
-        outs: &[Vec<f32>],
-        w_eff: &[f32],
-        g_logits: Vec<f32>,
-        rows: usize,
-    ) -> Vec<f32> {
-        let mut dw = vec![0.0f32; self.n_params];
-        let mut g = g_logits;
-        for li in (0..self.layers.len()).rev() {
-            let layer = self.layers[li];
-            let a: &[f32] = if li == 0 { x } else { &outs[li - 1] };
-            // dW = a^T g
-            for b in 0..rows {
-                let arow = &a[b * layer.k..(b + 1) * layer.k];
-                let grow = &g[b * layer.n..(b + 1) * layer.n];
-                for (k, &av) in arow.iter().enumerate() {
-                    if av != 0.0 {
-                        let drow = &mut dw[layer.offset + k * layer.n..][..layer.n];
-                        for (dv, &gv) in drow.iter_mut().zip(grow) {
-                            *dv += av * gv;
-                        }
-                    }
-                }
-            }
-            if li == 0 {
-                break;
-            }
-            // g_prev = (g @ W^T) ⊙ relu'(z_{l-1});  relu' == (a > 0)
-            let mut gprev = vec![0.0f32; rows * layer.k];
-            for b in 0..rows {
-                let arow = &a[b * layer.k..(b + 1) * layer.k];
-                let grow = &g[b * layer.n..(b + 1) * layer.n];
-                let prow = &mut gprev[b * layer.k..(b + 1) * layer.k];
-                for (k, pv) in prow.iter_mut().enumerate() {
-                    if arow[k] > 0.0 {
-                        let wrow = &w_eff[layer.offset + k * layer.n..][..layer.n];
-                        let mut s = 0.0f32;
-                        for (&gv, &wv) in grow.iter().zip(wrow) {
-                            s += gv * wv;
-                        }
-                        *pv = s;
-                    }
-                }
-            }
-            g = gprev;
-        }
-        dw
+    /// The compiled execution plan (tests / benches).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
     }
 
     /// One client local phase: `steps` minibatches of STE training on
@@ -242,45 +93,60 @@ impl NativeBackend {
         let root = SeedSequence::new(seed as u32 as u64);
         let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
 
+        // Everything the step loop touches is allocated here, once.
+        let mut ws = Workspace::for_train(&self.plan, batch);
         let mut s = scores.to_vec();
+        let mut th = vec![0.0f32; n]; // sigmoid(s), shared mask/update
+        let mut w_eff = vec![0.0f32; n];
+        let mut dw = vec![0.0f32; n];
         let mut m1 = vec![0.0f32; n];
         let mut v2 = vec![0.0f32; n];
         let mut u = vec![0.5f32; n];
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f32;
+        let logits_buf = self.plan.logits_buf();
 
         for h in 0..steps {
             if !deterministic {
                 root.child(h as u64).philox().fill_uniform(0, &mut u);
             }
-            // m = 1[u < sigmoid(s)], w_eff = m * w
-            let mut w_eff = vec![0.0f32; n];
+            // theta = sigmoid(s) once per step; m = 1[u < theta];
+            // w_eff = m * w — one fused pass.
             let mut sum_sigma_step = 0.0f64;
             for j in 0..n {
-                let th = sigmoid(s[j]);
-                sum_sigma_step += th as f64;
-                if u[j] < th {
-                    w_eff[j] = weights[j];
-                }
+                let t = sigmoid(s[j]);
+                th[j] = t;
+                sum_sigma_step += t as f64;
+                w_eff[j] = if u[j] < t { weights[j] } else { 0.0 };
             }
             let x = &xs[h * batch * self.input_dim..(h + 1) * batch * self.input_dim];
             let y = &ys[h * batch..(h + 1) * batch];
-            let acts = self.forward(&w_eff, x, batch);
-            let logits = acts.last().unwrap();
-            let (ce_sum, corr, valid) = self.ce_stats(logits, y);
+            self.plan.forward(&w_eff, x, batch, &mut ws);
+            let logits = &ws.acts[logits_buf][..batch * self.n_classes];
+            let (ce_sum, corr, valid) = softmax_xent_stats(logits, y, self.n_classes);
             let denom = valid.max(1) as f32;
             loss_sum += ce_sum / denom as f64
                 + (lambda as f64) * sum_sigma_step / n as f64;
             correct += corr as f32;
-            let g_logits = self.logit_grad(logits, y, denom);
-            let dw = self.backward_weights(x, &acts, &w_eff, g_logits, batch);
-            // STE to scores + regularizer gradient, then Adam/SGD step.
+            {
+                let (acts, grads) = (&ws.acts, &mut ws.grads);
+                softmax_xent_grad(
+                    &acts[logits_buf][..batch * self.n_classes],
+                    y,
+                    self.n_classes,
+                    denom,
+                    &mut grads[logits_buf][..batch * self.n_classes],
+                );
+            }
+            dw.fill(0.0);
+            self.plan.backward(&w_eff, x, batch, &mut ws, &mut dw);
+            // STE to scores + regularizer gradient, then Adam/SGD step,
+            // reusing the step's sigmoid values.
             let t = (h + 1) as f32;
             let bc1 = 1.0 - b1.powf(t);
             let bc2 = 1.0 - b2.powf(t);
             for j in 0..n {
-                let th = sigmoid(s[j]);
-                let dsig = th * (1.0 - th);
+                let dsig = th[j] * (1.0 - th[j]);
                 let g = dw[j] * weights[j] * dsig + (lambda / n as f32) * dsig;
                 let step = if adam {
                     m1[j] = b1 * m1[j] + (1.0 - b1) * g;
@@ -293,17 +159,18 @@ impl NativeBackend {
             }
         }
 
-        // Final sparsity stats on the updated scores.
+        // Final sparsity stats on the updated scores, from the reserved
+        // probe stream (domain-separated from every per-step stream).
         let mut u_fin = vec![0.5f32; n];
         if !deterministic {
-            root.child(0x5EED).philox().fill_uniform(0, &mut u_fin);
+            root.child(SPARSITY_PROBE_CHILD).philox().fill_uniform(0, &mut u_fin);
         }
         let mut sum_sigma = 0.0f32;
         let mut active = 0.0f32;
         for j in 0..n {
-            let th = sigmoid(s[j]);
-            sum_sigma += th;
-            if u_fin[j] < th {
+            let t = sigmoid(s[j]);
+            sum_sigma += t;
+            if u_fin[j] < t {
                 active += 1.0;
             }
         }
@@ -319,9 +186,10 @@ impl NativeBackend {
     }
 
     /// Masked evaluation over arbitrary-size inputs (y < 0 rows are
-    /// padding and ignored, as in the exported eval program). Processed
-    /// in row chunks so peak activation memory is bounded regardless of
-    /// test-set size.
+    /// padding: they contribute nothing and are not counted in
+    /// `examples`, so accuracy/mean_loss denominators stay correct on
+    /// padded batches). Processed in row chunks so peak activation
+    /// memory is bounded regardless of test-set size.
     pub fn eval_mask(
         &self,
         mask_f32: &[f32],
@@ -329,27 +197,37 @@ impl NativeBackend {
         x: &[f32],
         y: &[i32],
     ) -> Result<EvalMetrics> {
-        const CHUNK_ROWS: usize = 1024;
+        // Chunk rows to a scratch budget, not a fixed count: a conv
+        // plan's per-row im2col + activation footprint is orders of
+        // magnitude bigger than an MLP's (conv4: ~67k floats/row).
+        let chunk_rows = self.scratch_chunk_rows(false);
         let rows = y.len();
         let w_eff: Vec<f32> =
             mask_f32.iter().zip(weights).map(|(&m, &w)| m * w).collect();
-        let mut out = EvalMetrics { examples: rows, ..Default::default() };
+        let mut ws = Workspace::for_eval(&self.plan, rows.min(chunk_rows).max(1));
+        let mut out = EvalMetrics::default();
         let mut start = 0;
         while start < rows {
-            let take = (rows - start).min(CHUNK_ROWS);
+            let take = (rows - start).min(chunk_rows);
             let xc = &x[start * self.input_dim..(start + take) * self.input_dim];
-            let outs = self.forward(&w_eff, xc, take);
-            let (loss_sum, correct, _valid) =
-                self.ce_stats(outs.last().unwrap(), &y[start..start + take]);
+            self.plan.forward(&w_eff, xc, take, &mut ws);
+            let logits = &ws.acts[self.plan.logits_buf()][..take * self.n_classes];
+            let (loss_sum, correct, valid) =
+                softmax_xent_stats(logits, &y[start..start + take], self.n_classes);
             out.loss_sum += loss_sum;
             out.correct += correct;
+            out.examples += valid;
             start += take;
         }
         Ok(out)
     }
 
-    /// Dense forward/backward (SignSGD / FedAvg). `y.len()` rows, no
-    /// padding needed natively. Returns (grads, mean loss, correct).
+    /// Dense forward/backward (SignSGD / FedAvg). Any number of rows —
+    /// the native graph has no fixed-batch program, so no padding is
+    /// ever needed; large row counts are processed in workspace-budget
+    /// chunks (the mean-CE gradient uses the total valid-row
+    /// denominator, so chunked accumulation into `dw` reproduces the
+    /// single-pass result exactly). Returns (grads, mean loss, correct).
     pub fn dense_grad(
         &self,
         weights: &[f32],
@@ -357,12 +235,56 @@ impl NativeBackend {
         y: &[i32],
     ) -> Result<(Vec<f32>, f32, f32)> {
         let rows = y.len();
-        let acts = self.forward(weights, x, rows);
-        let logits = acts.last().unwrap();
-        let (loss_sum, correct, valid) = self.ce_stats(logits, y);
-        let denom = valid.max(1) as f32;
-        let g_logits = self.logit_grad(logits, y, denom);
-        let grads = self.backward_weights(x, &acts, weights, g_logits, rows);
-        Ok((grads, (loss_sum / denom as f64) as f32, correct as f32))
+        let chunk_rows = self.scratch_chunk_rows(true);
+        let mut ws = Workspace::for_train(&self.plan, rows.min(chunk_rows).max(1));
+        let logits_buf = self.plan.logits_buf();
+        // Mean-CE normalizes by the valid rows of the WHOLE call, so
+        // per-chunk gradients can accumulate without reweighting.
+        let total_valid = y.iter().filter(|&&v| v >= 0).count();
+        let denom = total_valid.max(1) as f32;
+        let mut grads_out = vec![0.0f32; self.n_params];
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut start = 0;
+        while start < rows {
+            let take = (rows - start).min(chunk_rows);
+            let xc = &x[start * self.input_dim..(start + take) * self.input_dim];
+            let yc = &y[start..start + take];
+            self.plan.forward(weights, xc, take, &mut ws);
+            let (ls, corr, _valid) = softmax_xent_stats(
+                &ws.acts[logits_buf][..take * self.n_classes],
+                yc,
+                self.n_classes,
+            );
+            loss_sum += ls;
+            correct += corr;
+            {
+                let (acts, grads) = (&ws.acts, &mut ws.grads);
+                softmax_xent_grad(
+                    &acts[logits_buf][..take * self.n_classes],
+                    yc,
+                    self.n_classes,
+                    denom,
+                    &mut grads[logits_buf][..take * self.n_classes],
+                );
+            }
+            self.plan.backward(weights, xc, take, &mut ws, &mut grads_out);
+            start += take;
+        }
+        Ok((grads_out, (loss_sum / denom as f64) as f32, correct as f32))
+    }
+
+    /// Row count that keeps one workspace's scratch near the float
+    /// budget — conv plans carry a far bigger per-row footprint
+    /// (im2col + activations) than MLPs. Counts what the workspace
+    /// actually allocates: buffer 0 (the caller's input) is never
+    /// allocated, and a training workspace mirrors every activation
+    /// buffer with a gradient buffer and `col` with `dcol`.
+    fn scratch_chunk_rows(&self, train: bool) -> usize {
+        const CHUNK_BUDGET_FLOATS: usize = 1 << 24; // ~64 MB of f32
+        let acts: usize = self.plan.buf_elems().iter().skip(1).sum();
+        let per_row =
+            (self.plan.col_elems_per_row() + acts) * if train { 2 } else { 1 };
+        (CHUNK_BUDGET_FLOATS / per_row.max(1)).clamp(32, 1024)
     }
 }

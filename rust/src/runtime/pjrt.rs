@@ -220,7 +220,10 @@ impl PjrtBackend {
         y: &[i32],
     ) -> Result<EvalMetrics> {
         let t = man.eval_chunk;
-        let mut out = EvalMetrics { examples: y.len(), ..Default::default() };
+        // Count only valid rows (y >= 0), matching the native backend:
+        // padding must not inflate accuracy/mean_loss denominators.
+        let valid = y.iter().filter(|&&v| v >= 0).count();
+        let mut out = EvalMetrics { examples: valid, ..Default::default() };
         let mut xc = vec![0.0f32; t * man.input_dim];
         let mut yc = vec![-1i32; t];
         let mut start = 0;

@@ -10,7 +10,7 @@ pub use bitvec::BitVec;
 pub use json::{parse_flat_json, read_jsonl, JsonValue};
 pub use rng::{Philox4x32, SeedSequence, SplitMix64, Xoshiro256};
 pub use stats::{ci95, mean, std_dev, Ema, Running};
-pub use timer::Timers;
+pub use timer::{ShardedTimers, Timers};
 
 /// Numerically-stable logistic function, mirroring `jax.nn.sigmoid`.
 #[inline]

@@ -1,6 +1,12 @@
 //! Lightweight scoped timers used by the metrics sink and the perf pass.
+//!
+//! [`Timers`] is the single-threaded accumulator; [`ShardedTimers`]
+//! spreads `add` calls over per-thread shards so the parallel round
+//! engine's workers never serialize on telemetry, merging on read.
 
 use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// A named stopwatch accumulating durations per label; cheap enough to
@@ -46,6 +52,65 @@ impl Timers {
     pub fn clear(&mut self) {
         self.acc.clear();
     }
+
+    /// Fold another accumulator into this one (label-wise sums).
+    pub fn merge(&mut self, other: &Timers) {
+        for (label, (d, n)) in &other.acc {
+            let e = self.acc.entry(label.clone()).or_insert((Duration::ZERO, 0));
+            e.0 += *d;
+            e.1 += *n;
+        }
+    }
+}
+
+/// Shard count: enough that concurrent workers land on distinct locks
+/// with high probability at typical core counts.
+const TIMER_SHARDS: usize = 16;
+
+/// Thread-sharded timer accumulation, merged on read.
+///
+/// `add` hashes the calling thread's id to one of 16
+/// independently-locked [`Timers`]; concurrent workers therefore take
+/// uncontended locks instead of serializing on one global mutex (the
+/// seed's `Mutex<Timers>` made every runtime call a rendezvous point
+/// for the parallel round engine). Reads (`snapshot`) merge all shards
+/// into one `Timers` — telemetry only, so a racing `add` landing just
+/// after a snapshot is fine.
+#[derive(Debug, Default)]
+pub struct ShardedTimers {
+    shards: [Mutex<Timers>; TIMER_SHARDS],
+}
+
+impl ShardedTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn shard(&self) -> &Mutex<Timers> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        std::thread::current().id().hash(&mut h);
+        &self.shards[(h.finish() as usize) % TIMER_SHARDS]
+    }
+
+    /// Record an externally-measured duration on this thread's shard.
+    pub fn add(&self, label: &str, d: Duration) {
+        self.shard().lock().unwrap().add(label, d);
+    }
+
+    /// Merge every shard into one accumulator.
+    pub fn snapshot(&self) -> Timers {
+        let mut out = Timers::new();
+        for s in &self.shards {
+            out.merge(&s.lock().unwrap());
+        }
+        out
+    }
+
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -72,5 +137,42 @@ mod tests {
         t.time("x", || ());
         t.clear();
         assert!(t.summary().is_empty());
+    }
+
+    #[test]
+    fn merge_sums_labels() {
+        let mut a = Timers::new();
+        a.add("x", Duration::from_millis(2));
+        let mut b = Timers::new();
+        b.add("x", Duration::from_millis(3));
+        b.add("y", Duration::from_millis(1));
+        a.merge(&b);
+        let s = a.summary();
+        let x = s.iter().find(|(k, _, _)| k == "x").unwrap();
+        assert_eq!(x.2, 2);
+        assert!((x.1 - 0.005).abs() < 1e-9);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn sharded_accumulates_across_threads() {
+        let st = ShardedTimers::new();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..10 {
+                        st.add("work", Duration::from_micros(5));
+                    }
+                });
+            }
+        });
+        st.add("main", Duration::from_micros(1));
+        let snap = st.snapshot();
+        let s = snap.summary();
+        let work = s.iter().find(|(k, _, _)| k == "work").unwrap();
+        assert_eq!(work.2, 80, "all worker adds must survive the merge");
+        assert!(s.iter().any(|(k, _, _)| k == "main"));
+        st.clear();
+        assert!(st.snapshot().summary().is_empty());
     }
 }

@@ -164,6 +164,33 @@ fn qdelta_every_strategy_is_thread_count_invariant() {
 }
 
 #[test]
+fn conv_model_bit_identical_at_1_2_8_threads() {
+    // The layer-graph compute core (conv_tiny: conv -> relu -> pool ->
+    // flatten -> dense, DESIGN.md §Compute-core) must satisfy the same
+    // determinism contract as the MLPs: per-round records and the final
+    // mask bit-identical at any worker count.
+    let mk = |threads| {
+        let mut cfg = base_cfg(threads);
+        cfg.model = "conv_tiny".into();
+        cfg.clients = 4;
+        cfg.rounds = 2;
+        cfg.train_samples = 320;
+        cfg.test_samples = 80;
+        cfg
+    };
+    let (ref_records, ref_model) = run(mk(1));
+    assert!(
+        ref_records.iter().all(|r| r.accuracy.is_finite() && r.train_loss.is_finite()),
+        "conv rounds must produce finite metrics"
+    );
+    for threads in [2, 8] {
+        let (records, model) = run(mk(threads));
+        assert_records_identical(&ref_records, &records, &format!("conv threads={threads}"));
+        assert_eq!(ref_model, model, "conv threads={threads}: final mask must be bit-identical");
+    }
+}
+
+#[test]
 fn noniid_partition_is_thread_count_invariant() {
     let mk = |threads| {
         let mut cfg = base_cfg(threads);
