@@ -5,12 +5,16 @@
 //! mask sampling, top-k selection, and the PJRT call overhead
 //! (local_train / eval on the tiny model = FFI + transfer dominated).
 //!
+//! Every result also lands in the machine-readable trajectory
+//! `BENCH_components.json` (see `$BENCH_JSON_DIR`), which CI gates on
+//! and uploads as an artifact.
+//!
 //! Run: `cargo bench --bench bench_components [-- filter]`
 
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{bench, filter_from_args, should_run};
+use common::{filter_from_args, should_run, BenchResult, Suite};
 use fedsrn::compress::{self, Method};
 use fedsrn::mask::{sample_mask, topk_mask, MaskAggregator, ProbMask};
 use fedsrn::runtime::ModelRuntime;
@@ -25,31 +29,46 @@ fn random_mask(n: usize, p: f64, seed: u64) -> BitVec {
 
 fn main() {
     let filter = filter_from_args();
+    let mut suite = Suite::new("components");
     println!("== component benches (n = {N} params) ==");
 
     // --- codecs ---------------------------------------------------------
     for &p in &[0.5, 0.1, 0.02] {
         let mask = random_mask(N, p, 7);
+        let enc_raw_name = format!("encode/{:?}/p={p}", Method::Raw);
+        let dec_raw_name = format!("decode/{:?}/p={p}", Method::Raw);
         for method in [Method::Arithmetic, Method::Golomb, Method::Raw] {
             let name = format!("encode/{method:?}/p={p}");
             if should_run(&filter, &name) {
                 let enc = compress::encode_with(&mask, method);
-                let r = bench(&name, 1.0, 200, || {
-                    std::hint::black_box(compress::encode_with(&mask, method));
-                });
+                let r = if matches!(method, Method::Raw) {
+                    suite.bench(&name, 1.0, 200, || {
+                        std::hint::black_box(compress::encode_with(&mask, method));
+                    })
+                } else {
+                    suite.bench_vs(&name, &enc_raw_name, 1.0, 200, || {
+                        std::hint::black_box(compress::encode_with(&mask, method));
+                    })
+                };
                 r.print(&format!(
                     "{:>7.1} Mbit/s  {:.4} Bpp",
-                    N as f64 / r.mean_s / 1e6,
+                    N as f64 / r.timing.mean_s / 1e6,
                     enc.bpp(N)
                 ));
             }
             let name = format!("decode/{method:?}/p={p}");
             if should_run(&filter, &name) {
                 let enc = compress::encode_with(&mask, method);
-                let r = bench(&name, 1.0, 200, || {
-                    std::hint::black_box(compress::decode(&enc, N).unwrap());
-                });
-                r.print(&format!("{:>7.1} Mbit/s", N as f64 / r.mean_s / 1e6));
+                let r = if matches!(method, Method::Raw) {
+                    suite.bench(&name, 1.0, 200, || {
+                        std::hint::black_box(compress::decode(&enc, N).unwrap());
+                    })
+                } else {
+                    suite.bench_vs(&name, &dec_raw_name, 1.0, 200, || {
+                        std::hint::black_box(compress::decode(&enc, N).unwrap());
+                    })
+                };
+                r.print(&format!("{:>7.1} Mbit/s", N as f64 / r.timing.mean_s / 1e6));
             }
         }
     }
@@ -78,13 +97,13 @@ fn main() {
                 // Alternate targets so every half-iteration encodes a
                 // fresh delta at this change density — no O(n) encoder
                 // clone inside the timed region.
-                let r = bench(&name, 1.0, 200, || {
+                let r = suite.bench(&name, 1.0, 200, || {
                     std::hint::black_box(probe.encode_frame(&state));
                     std::hint::black_box(probe.encode_frame(&prev));
                 });
                 r.print(&format!(
                     "{:>7.1} Mparam/s  {:.4} DL Bpp",
-                    2.0 * N as f64 / r.mean_s / 1e6,
+                    2.0 * N as f64 / r.timing.mean_s / 1e6,
                     sample.wire_bits() as f64 / N as f64
                 ));
             }
@@ -93,11 +112,11 @@ fn main() {
                 let mut enc = DownlinkEncoder::new(DownlinkMode::QDelta { bits: 8 });
                 enc.encode_frame(&prev);
                 let bytes = enc.encode_frame(&state).to_bytes();
-                let r = bench(&name, 1.0, 200, || {
+                let r = suite.bench(&name, 1.0, 200, || {
                     let frame = DownlinkFrame::from_bytes(&bytes).unwrap();
                     std::hint::black_box(frame.decode(Some(&prev)).unwrap());
                 });
-                r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.mean_s / 1e6));
+                r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.timing.mean_s / 1e6));
             }
         }
     }
@@ -105,9 +124,10 @@ fn main() {
     // --- aggregation (eq. 8): word-scan vs scalar A/B ---------------------
     for &p in &[0.5, 0.1] {
         let masks: Vec<BitVec> = (0..10).map(|i| random_mask(N, p, i)).collect();
+        let scalar_name = format!("aggregate/10c/scalar/p={p}");
         let name = format!("aggregate/10c/wordscan/p={p}");
         if should_run(&filter, &name) {
-            let r = bench(&name, 1.5, 100, || {
+            let r = suite.bench_vs(&name, &scalar_name, 1.5, 100, || {
                 let mut agg = MaskAggregator::new(N);
                 for m in &masks {
                     agg.add_mask(m, 1.0);
@@ -116,12 +136,11 @@ fn main() {
             });
             r.print(&format!(
                 "{:>7.1} Mparam/s",
-                (N * masks.len()) as f64 / r.mean_s / 1e6
+                (N * masks.len()) as f64 / r.timing.mean_s / 1e6
             ));
         }
-        let name = format!("aggregate/10c/scalar/p={p}");
-        if should_run(&filter, &name) {
-            let r = bench(&name, 1.5, 100, || {
+        if should_run(&filter, &scalar_name) {
+            let r = suite.bench(&scalar_name, 1.5, 100, || {
                 let mut agg = MaskAggregator::new(N);
                 for m in &masks {
                     agg.add_mask_scalar(m, 1.0);
@@ -130,7 +149,7 @@ fn main() {
             });
             r.print(&format!(
                 "{:>7.1} Mparam/s",
-                (N * masks.len()) as f64 / r.mean_s / 1e6
+                (N * masks.len()) as f64 / r.timing.mean_s / 1e6
             ));
         }
     }
@@ -138,40 +157,44 @@ fn main() {
     // --- sampling & top-k -------------------------------------------------
     let theta = ProbMask::uniform_random(N, 3);
     if should_run(&filter, "sample_mask") {
-        let r = bench("sample_mask/philox", 1.0, 200, || {
+        let r = suite.bench("sample_mask/philox", 1.0, 200, || {
             std::hint::black_box(sample_mask(&theta, 42));
         });
-        r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.mean_s / 1e6));
+        r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.timing.mean_s / 1e6));
     }
     let scores: Vec<f32> = {
         let mut rng = Xoshiro256::new(9);
         (0..N).map(|_| rng.next_normal() as f32).collect()
     };
     if should_run(&filter, "topk") {
-        let r = bench("topk/frac=0.3", 1.0, 200, || {
+        let r = suite.bench("topk/frac=0.3", 1.0, 200, || {
             std::hint::black_box(topk_mask(&scores, 0.3));
         });
-        r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.mean_s / 1e6));
+        r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.timing.mean_s / 1e6));
     }
 
     // --- logit broadcast (scores from theta) ------------------------------
     if should_run(&filter, "broadcast_scores") {
-        let r = bench("broadcast_scores/logit", 1.0, 200, || {
+        let r = suite.bench("broadcast_scores/logit", 1.0, 200, || {
             std::hint::black_box(theta.to_scores());
         });
-        r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.mean_s / 1e6));
+        r.print(&format!("{:>7.1} Mparam/s", N as f64 / r.timing.mean_s / 1e6));
     }
 
     // --- compute kernels: blocked vs naive GEMM (DESIGN.md §Compute-core) --
-    {
+    // mlp_mnist first-layer shape at batch 64: the hot matmul of a
+    // local-train step. The pair runs if the filter matches either
+    // side's full name (the two benches share setup and budget).
+    let (m, k, n) = (64usize, 784usize, 256usize);
+    let blocked_name = format!("kernels/gemm/blocked/{m}x{k}x{n}");
+    let naive_name = format!("kernels/gemm/naive/{m}x{k}x{n}");
+    if should_run(&filter, &blocked_name) || should_run(&filter, &naive_name) {
         use fedsrn::runtime::kernels::gemm_nn;
-        // mlp_mnist first-layer shape at batch 64: the hot matmul of a
-        // local-train step.
-        let (m, k, n) = (64usize, 784usize, 256usize);
         let mut rng = Xoshiro256::new(21);
         let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal() as f32).collect();
         let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal() as f32).collect();
-        let mut c = vec![0.0f32; m * n];
+        let mut c_blocked = vec![0.0f32; m * n];
+        let mut c_naive = vec![0.0f32; m * n];
         let flops = 2.0 * (m * k * n) as f64;
         let naive = |a: &[f32], b: &[f32], c: &mut [f32]| {
             // the pre-refactor loop: one saxpy row per (i, k), B row
@@ -189,34 +212,32 @@ fn main() {
                 }
             }
         };
-        let mut blocked_s = 0.0f64;
-        let mut naive_s = 0.0f64;
-        let name = format!("kernels/gemm/blocked/{m}x{k}x{n}");
-        if should_run(&filter, &name) {
-            let r = bench(&name, 1.0, 200, || {
-                c.fill(0.0);
-                gemm_nn(&a, &b, &mut c, m, k, n);
-                std::hint::black_box(&c);
-            });
-            r.print(&format!("{:>7.2} GFLOP/s", flops / r.mean_s / 1e9));
-            blocked_s = r.mean_s;
-        }
-        let name = format!("kernels/gemm/naive/{m}x{k}x{n}");
-        if should_run(&filter, &name) {
-            let r = bench(&name, 1.0, 200, || {
-                c.fill(0.0);
-                naive(&a, &b, &mut c);
-                std::hint::black_box(&c);
-            });
-            r.print(&format!("{:>7.2} GFLOP/s", flops / r.mean_s / 1e9));
-            naive_s = r.mean_s;
-        }
-        if blocked_s > 0.0 && naive_s > 0.0 {
-            println!(
-                "  kernels/gemm: blocked is {:.2}x the naive loop",
-                naive_s / blocked_s
-            );
-        }
+        // One util::bench::time_pair drives both sides — the candidate
+        // and its named baseline share a budget and a JSON entry pair.
+        let pr = suite.pair(
+            &blocked_name,
+            &naive_name,
+            1.0,
+            200,
+            || {
+                c_blocked.fill(0.0);
+                gemm_nn(&a, &b, &mut c_blocked, m, k, n);
+                std::hint::black_box(&c_blocked);
+            },
+            || {
+                c_naive.fill(0.0);
+                naive(&a, &b, &mut c_naive);
+                std::hint::black_box(&c_naive);
+            },
+        );
+        let br = BenchResult { name: blocked_name, timing: pr.a };
+        br.print(&format!("{:>7.2} GFLOP/s", flops / pr.a.mean_s / 1e9));
+        let nr = BenchResult { name: naive_name, timing: pr.b };
+        nr.print(&format!("{:>7.2} GFLOP/s", flops / pr.b.mean_s / 1e9));
+        println!(
+            "  kernels/gemm: blocked is {:.2}x the naive loop",
+            pr.speedup_a_over_b()
+        );
     }
 
     // --- model-program call path (tiny model: overhead-dominated) ----------
@@ -233,21 +254,23 @@ fn main() {
         let xs: Vec<f32> =
             (0..steps * batch * dim).map(|_| rng.next_normal() as f32).collect();
         let ys: Vec<i32> = (0..steps * batch).map(|_| rng.below(10) as i32).collect();
+        let naive_name = format!("runtime/local_train-naive/pre-refactor({steps} steps)");
         let mut workspace_s = 0.0f64;
         if should_run(&filter, "runtime/local_train") {
             let name = format!("runtime/local_train/{be}/mlp_tiny({steps} steps)");
-            let r = bench(&name, 3.0, 100, || {
+            let r = suite.bench_vs(&name, &naive_name, 3.0, 100, || {
                 std::hint::black_box(
                     rt.local_train(&scores, &xs, &ys, 1, 1.0, 0.1, false, true).unwrap(),
                 );
             });
-            r.print(&format!("{:>7.1} steps/s", steps as f64 / r.mean_s));
-            workspace_s = r.mean_s;
+            r.print(&format!("{:>7.1} steps/s", steps as f64 / r.timing.mean_s));
+            workspace_s = r.timing.mean_s;
         }
         // A/B: the pre-refactor allocate-per-step chained-MLP loop
         // (double sigmoid pass, fresh Vec per layer per step) vs the
         // workspace-driven graph core. Target: >= 1.5x (ISSUE 4 /
-        // DESIGN.md §Compute-core); CI prints this informationally.
+        // DESIGN.md §Compute-core); CI records the ratio in the JSON
+        // trajectory.
         if should_run(&filter, "runtime/local_train-naive") && rt.backend_name() == "native" {
             let weights = rt.weights().to_vec();
             let layers: Vec<(usize, usize, usize)> = rt
@@ -259,19 +282,18 @@ fn main() {
                     _ => None,
                 })
                 .collect();
-            let name = format!("runtime/local_train-naive/pre-refactor({steps} steps)");
-            let r = bench(&name, 3.0, 100, || {
+            let r = suite.bench(&naive_name, 3.0, 100, || {
                 std::hint::black_box(naive_ref::local_train(
                     &layers, n, dim, 10, batch, steps, &weights, &scores, &xs, &ys, 1, 1.0,
                     0.1,
                 ));
             });
-            r.print(&format!("{:>7.1} steps/s", steps as f64 / r.mean_s));
+            r.print(&format!("{:>7.1} steps/s", steps as f64 / r.timing.mean_s));
             if workspace_s > 0.0 {
                 println!(
                     "  runtime/local_train: workspace core is {:.2}x the \
                      pre-refactor loop (target >= 1.5x)",
-                    r.mean_s / workspace_s
+                    r.timing.mean_s / workspace_s
                 );
             }
         }
@@ -280,10 +302,10 @@ fn main() {
         let ty: Vec<i32> = (0..256).map(|_| rng.below(10) as i32).collect();
         if should_run(&filter, "runtime/eval") {
             let name = format!("runtime/eval/{be}/mlp_tiny(256 rows)");
-            let r = bench(&name, 3.0, 100, || {
+            let r = suite.bench(&name, 3.0, 100, || {
                 std::hint::black_box(rt.eval_mask(&mask, &tx, &ty).unwrap());
             });
-            r.print(&format!("{:>7.1} rows/s", 256.0 / r.mean_s));
+            r.print(&format!("{:>7.1} rows/s", 256.0 / r.timing.mean_s));
         }
 
         // --- round engine: one cohort's local phases, 1 vs N workers -------
@@ -293,6 +315,7 @@ fn main() {
         let n_clients = 16;
         let data = Synthetic::new(SynthSpec::tiny(), 3).generate(100 * n_clients, 1);
         let cohort: Vec<usize> = (0..n_clients).collect();
+        let seq_name = format!("engine/local_phase/{n_clients}c/threads=1");
         for threads in [1usize, 2, 8] {
             let name = format!("engine/local_phase/{n_clients}c/threads={threads}");
             if !should_run(&filter, &name) {
@@ -307,7 +330,7 @@ fn main() {
                 })
                 .collect();
             let scores_ref = &scores;
-            let r = bench(&name, 2.0, 50, || {
+            let run = || {
                 let out = engine
                     .run_cohort(&mut clients, &cohort, |_pos, c| {
                         c.local_phase(
@@ -325,12 +348,19 @@ fn main() {
                     })
                     .unwrap();
                 std::hint::black_box(out);
-            });
-            r.print(&format!("{:>7.2} cohorts/s", 1.0 / r.mean_s));
+            };
+            let r = if threads == 1 {
+                suite.bench(&name, 2.0, 50, run)
+            } else {
+                suite.bench_vs(&name, &seq_name, 2.0, 50, run)
+            };
+            r.print(&format!("{:>7.2} cohorts/s", 1.0 / r.timing.mean_s));
         }
     } else {
         eprintln!("(skipping runtime benches: no artifacts and no built-in model?)");
     }
+
+    suite.write();
 }
 
 /// The pre-refactor native `local_train`: chained dense layers with

@@ -9,12 +9,16 @@
 //!   engine/fig1-iid — sequential vs parallel round engine throughput
 //!   storage         — seed+mask vs dense float storage (conclusion)
 //!
+//! Every run's secs/round also lands in the machine-readable trajectory
+//! `BENCH_figures.json` (see `$BENCH_JSON_DIR`), which CI gates on and
+//! uploads as an artifact.
+//!
 //! Run: `cargo bench --bench bench_figures [-- filter]`
 
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{filter_from_args, fmt_s, should_run};
+use common::{filter_from_args, fmt_s, should_run, Suite};
 use fedsrn::config::{Algorithm, ExperimentConfig, Partition};
 use fedsrn::coordinator::Experiment;
 use fedsrn::fl::MetricsSink;
@@ -23,7 +27,16 @@ struct FigRun {
     label: String,
     acc: f64,
     bpp: f64,
+    rounds: usize,
     secs_per_round: f64,
+}
+
+impl FigRun {
+    /// Record this run in the JSON trajectory: one entry, iters =
+    /// rounds, ns/iter = wall-clock per round.
+    fn record(&self, suite: &mut Suite, name: &str, baseline: Option<&str>) {
+        suite.record_run(name, self.rounds, self.secs_per_round * 1e9, baseline);
+    }
 }
 
 fn run(label: &str, cfg: ExperimentConfig) -> FigRun {
@@ -36,6 +49,7 @@ fn run(label: &str, cfg: ExperimentConfig) -> FigRun {
         label: label.to_string(),
         acc: summary.final_accuracy,
         bpp: summary.avg_est_bpp,
+        rounds,
         secs_per_round: t0.elapsed().as_secs_f64() / rounds as f64,
     }
 }
@@ -65,6 +79,7 @@ fn print_run(r: &FigRun) {
 
 fn main() {
     let filter = filter_from_args();
+    let mut suite = Suite::new("figures");
 
     // ---- Fig. 1 (IID): per dataset, FedPM vs FedPM+reg ------------------
     for (dataset, model) in [("tiny", "mlp_tiny"), ("mnist", "mlp_mnist")] {
@@ -88,6 +103,8 @@ fn main() {
         let reg = run("fedpm_reg", cfg);
         print_run(&fedpm);
         print_run(&reg);
+        fedpm.record(&mut suite, &format!("{name}/fedpm"), None);
+        reg.record(&mut suite, &format!("{name}/fedpm_reg"), Some(&format!("{name}/fedpm")));
         let ok = reg.bpp < fedpm.bpp - 0.02 && reg.acc > fedpm.acc - 0.15;
         println!(
             "  figure-1 shape {}: Bpp saved {:.3}, acc delta {:+.4}\n",
@@ -123,6 +140,7 @@ fn main() {
         };
         for r in [&fedpm, &reg_lo, &reg_hi, &topk, &sgd] {
             print_run(r);
+            r.record(&mut suite, &format!("fig2/tiny/{}", r.label), None);
         }
         let monotone = reg_hi.bpp < reg_lo.bpp && reg_lo.bpp < fedpm.bpp;
         println!(
@@ -153,6 +171,9 @@ fn main() {
         for r in [&seq, &par2, &par8] {
             print_run(r);
         }
+        seq.record(&mut suite, "engine/fig1-iid/threads=1", None);
+        par2.record(&mut suite, "engine/fig1-iid/threads=2", Some("engine/fig1-iid/threads=1"));
+        par8.record(&mut suite, "engine/fig1-iid/threads=8", Some("engine/fig1-iid/threads=1"));
         let identical =
             seq.acc.to_bits() == par8.acc.to_bits() && seq.bpp.to_bits() == par8.bpp.to_bits();
         println!(
@@ -184,4 +205,6 @@ fn main() {
             );
         }
     }
+
+    suite.write();
 }

@@ -1,18 +1,24 @@
 //! Minimal benchmark harness (criterion is not available offline).
 //!
-//! Measures wall-clock over repeated runs with warmup, reports
-//! mean / p50 / p95 and derived throughput. Used by both bench binaries
-//! via `#[path]` include.
+//! Timing lives in `fedsrn::util::bench` — the same `time`/`time_pair`
+//! loop the `fedsrn codec-bench` CLI uses — so "ns/iter" means one
+//! thing repo-wide. This wrapper adds the console table and collects
+//! every result into the machine-readable perf trajectory
+//! (`BENCH_<suite>.json`, schema in `util::bench::BenchJson`) that CI
+//! validates and uploads as an artifact.
 
-use std::time::Instant;
+// Included by both bench binaries via `#[path]`; not every item is used
+// by both.
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use fedsrn::util::bench::{time, time_pair, BenchJson, PairTiming, Timing};
 
 /// One measured benchmark result.
 pub struct BenchResult {
     pub name: String,
-    pub iters: usize,
-    pub mean_s: f64,
-    pub p50_s: f64,
-    pub p95_s: f64,
+    pub timing: Timing,
 }
 
 impl BenchResult {
@@ -20,10 +26,10 @@ impl BenchResult {
         println!(
             "{:<44} {:>7} it  mean {:>10} p50 {:>10} p95 {:>10}  {}",
             self.name,
-            self.iters,
-            fmt_s(self.mean_s),
-            fmt_s(self.p50_s),
-            fmt_s(self.p95_s),
+            self.timing.iters,
+            fmt_s(self.timing.mean_s),
+            fmt_s(self.timing.p50_s),
+            fmt_s(self.timing.p95_s),
             extra
         );
     }
@@ -41,29 +47,90 @@ pub fn fmt_s(s: f64) -> String {
     }
 }
 
-/// Run `f` repeatedly: a few warmup iterations, then timed iterations
-/// until ~`budget_s` seconds or `max_iters`, whichever first.
-pub fn bench(name: &str, budget_s: f64, max_iters: usize, mut f: impl FnMut()) -> BenchResult {
-    // warmup
-    for _ in 0..2 {
-        f();
+/// Collects every bench this binary ran and writes
+/// `$BENCH_JSON_DIR/BENCH_<suite>.json` at the end of `main`.
+pub struct Suite {
+    suite: &'static str,
+    json: BenchJson,
+}
+
+impl Suite {
+    pub fn new(suite: &'static str) -> Self {
+        Self { suite, json: BenchJson::new() }
     }
-    let mut times = Vec::new();
-    let start = Instant::now();
-    while start.elapsed().as_secs_f64() < budget_s && times.len() < max_iters {
-        let t0 = Instant::now();
-        f();
-        times.push(t0.elapsed().as_secs_f64());
+
+    /// Time `f` and record it in the trajectory (no baseline).
+    pub fn bench(
+        &mut self,
+        name: &str,
+        budget_s: f64,
+        max_iters: usize,
+        f: impl FnMut(),
+    ) -> BenchResult {
+        let timing = time(budget_s, max_iters, f);
+        self.json.record(name, &timing, None);
+        BenchResult { name: name.to_string(), timing }
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mean = times.iter().sum::<f64>() / times.len() as f64;
-    BenchResult {
-        name: name.to_string(),
-        iters: times.len(),
-        mean_s: mean,
-        p50_s: times[times.len() / 2],
-        p95_s: times[((times.len() as f64 * 0.95) as usize)
-            .min(times.len().saturating_sub(1))],
+
+    /// Time `f` against a named baseline entry (recorded or not-yet-
+    /// recorded; the ratio resolves at write time).
+    pub fn bench_vs(
+        &mut self,
+        name: &str,
+        baseline: &str,
+        budget_s: f64,
+        max_iters: usize,
+        f: impl FnMut(),
+    ) -> BenchResult {
+        let timing = time(budget_s, max_iters, f);
+        self.json.record(name, &timing, Some(baseline));
+        BenchResult { name: name.to_string(), timing }
+    }
+
+    /// Time a candidate/baseline pair with `util::bench::time_pair` and
+    /// record both (candidate carries the baseline link).
+    pub fn pair(
+        &mut self,
+        name_a: &str,
+        name_b: &str,
+        budget_s: f64,
+        max_iters: usize,
+        fa: impl FnMut(),
+        fb: impl FnMut(),
+    ) -> PairTiming {
+        let pair = time_pair(budget_s, max_iters, fa, fb);
+        self.json.record(name_a, &pair.a, Some(name_b));
+        self.json.record(name_b, &pair.b, None);
+        pair
+    }
+
+    /// Record an externally-measured result (e.g. secs/round from a
+    /// figure run) in the same trajectory schema.
+    pub fn record_run(
+        &mut self,
+        name: &str,
+        iters: usize,
+        ns_per_iter: f64,
+        baseline: Option<&str>,
+    ) {
+        self.json.record_raw(name, iters, ns_per_iter, baseline);
+    }
+
+    /// Write `BENCH_<suite>.json` into `$BENCH_JSON_DIR` (default `.`).
+    pub fn write(&self) {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = PathBuf::from(dir).join(format!("BENCH_{}.json", self.suite));
+        match self.json.write_file(&path) {
+            Ok(()) => println!(
+                "wrote {} trajectory entries -> {}",
+                self.json.len(),
+                path.display()
+            ),
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
     }
 }
 

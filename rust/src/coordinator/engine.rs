@@ -66,6 +66,14 @@ impl RoundEngine {
         self.threads
     }
 
+    /// Fan-out wave size: ~2x the worker count, so at most one wave of
+    /// uplink envelopes is in flight at a time. Shared with the
+    /// networked session ([`crate::fl::session::Session`]), which
+    /// bounds its remote cohorts the same way.
+    pub fn wave_size(&self) -> usize {
+        self.threads.max(4) * 2
+    }
+
     /// Run `work(pos, client)` once per cohort member, in parallel, and
     /// return the results in cohort order (`pos` = position within the
     /// cohort). `cohort` holds sorted, unique indices into `clients`.
@@ -187,7 +195,7 @@ impl RoundEngine {
         let prev = fleet_state.take();
         let prev_ref = prev.as_deref();
         let task_ref = task.as_ref();
-        let wave = self.threads().max(4) * 2;
+        let wave = self.wave_size();
         let mut offset = 0usize;
         for ids in cohort.chunks(wave) {
             let uplinks = self.run_cohort(clients, ids, |pos, client| {

@@ -9,16 +9,16 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::algos::{build_server, EvalModel, ServerLogic};
-use crate::config::{ExperimentConfig, Partition};
+use crate::algos::{build_server, EvalModel, RoundStats, ServerLogic};
+use crate::config::ExperimentConfig;
 use crate::coordinator::RoundEngine;
-use crate::data::{
-    loader, partition_iid, partition_noniid, subsample, Dataset, SynthSpec, Synthetic,
-};
+use crate::data::{load_experiment_data, partition_fleet, Dataset};
 use crate::fl::protocol::RoundPlan;
-use crate::fl::{Client, CommTotals, MetricsSink, Participation, RoundComm, RoundRecord};
+use crate::fl::session::Session;
+use crate::fl::{
+    derive_client_seed, Client, CommTotals, MetricsSink, Participation, RoundComm, RoundRecord,
+};
 use crate::runtime::{EvalMetrics, ModelRuntime};
-use crate::util::SeedSequence;
 
 /// Per-device evaluation view: which test rows match the device's
 /// target distribution (all rows for IID; own-classes rows non-IID).
@@ -77,19 +77,15 @@ impl Experiment {
         );
 
         // --- partition + device fleet ----------------------------------
-        let shards = match cfg.partition {
-            Partition::Iid => partition_iid(&train, cfg.clients, cfg.seed ^ 0x5A),
-            Partition::NonIid { c } => partition_noniid(&train, cfg.clients, c, cfg.seed ^ 0x5A),
-        };
         // Per-client seeds come from a splittable seed tree, never from
         // a shared sequential stream: a client's randomness is a pure
-        // function of (root seed, client id), which is what lets the
-        // parallel round engine replay the sequential path bit-for-bit.
-        let client_streams = SeedSequence::new(cfg.seed).child(0xC11E);
-        let clients: Vec<Client> = shards
+        // function of (root seed, client id), which is what lets both
+        // the parallel round engine and a remote device process replay
+        // the sequential path bit-for-bit (fl::derive_client_seed).
+        let clients: Vec<Client> = partition_fleet(&cfg, &train)
             .into_iter()
             .map(|s| {
-                let seed = client_streams.child(s.client_id as u64).seed();
+                let seed = derive_client_seed(cfg.seed, s.client_id);
                 Client::new(s, seed)
             })
             .collect();
@@ -137,27 +133,9 @@ impl Experiment {
     }
 
     fn load_data(cfg: &ExperimentConfig, dim: usize, n_classes: usize) -> Result<(Dataset, Dataset)> {
-        if let (Some(tr), Some(te)) = (
-            loader::try_load(&cfg.dataset, true),
-            loader::try_load(&cfg.dataset, false),
-        ) {
-            eprintln!("using real {} data ({} train / {} test)", cfg.dataset, tr.len(), te.len());
-            return Ok((subsample(tr, cfg.train_samples, cfg.seed), subsample(te, cfg.test_samples, cfg.seed ^ 1)));
-        }
-        let mut spec = SynthSpec::by_name(&cfg.dataset)
-            .with_context(|| format!("unknown dataset '{}'", cfg.dataset))?;
-        // Model and dataset must agree on geometry; the synthetic
-        // generator adapts to the model's class count (e.g. cifar100).
-        ensure!(
-            spec.dim() == dim,
-            "dataset '{}' dim {} != model input {}",
-            cfg.dataset,
-            spec.dim(),
-            dim
-        );
-        spec.n_classes = n_classes;
-        let gen = Synthetic::new(spec, cfg.seed ^ 0xDA7A);
-        Ok((gen.generate(cfg.train_samples, 1), gen.generate(cfg.test_samples, 2)))
+        // Shared with the networked device runtime: both ends of a
+        // socket derive byte-identical data from the same config.
+        load_experiment_data(cfg, dim, n_classes)
     }
 
     /// Evaluate the server's current global model over all device
@@ -192,20 +170,59 @@ impl Experiment {
         Ok(weighted_eval(&per_shard))
     }
 
-    /// Run all rounds, logging one record per round into `sink`.
+    /// Run all rounds through the in-process parallel round engine,
+    /// logging one record per round into `sink`.
     pub fn run(&mut self, sink: &mut MetricsSink) -> Result<RunSummary> {
+        let engine = self.engine;
+        self.run_with(sink, |server, rt, data, clients, fleet_state, part, plan, comm| {
+            engine.run_round(server, rt, data, clients, fleet_state, part, plan, comm)
+        })
+    }
+
+    /// Run all rounds over a networked [`Session`] (`fedsrn serve`):
+    /// identical lifecycle — same evaluation, metrics, and summaries —
+    /// with the round itself driven across real device sockets instead
+    /// of the in-process engine.
+    pub fn run_served(
+        &mut self,
+        session: &mut Session,
+        sink: &mut MetricsSink,
+    ) -> Result<RunSummary> {
+        self.run_with(sink, |server, _rt, _data, _clients, fleet_state, part, plan, comm| {
+            session.run_round(server, fleet_state, part, plan, comm)
+        })
+    }
+
+    /// Shared experiment lifecycle with a pluggable round driver: every
+    /// round, `round_fn` receives the server logic, runtime, data, the
+    /// (simulated) fleet, the fleet's broadcast reconstruction, the
+    /// participation model, the round plan, and the communication
+    /// accumulator, and returns the round's stats.
+    #[allow(clippy::type_complexity)]
+    pub fn run_with<F>(&mut self, sink: &mut MetricsSink, mut round_fn: F) -> Result<RunSummary>
+    where
+        F: FnMut(
+            &mut dyn ServerLogic,
+            &ModelRuntime,
+            &Dataset,
+            &mut [Client],
+            &mut Option<Vec<f32>>,
+            Participation,
+            &RoundPlan,
+            &mut RoundComm,
+        ) -> Result<RoundStats>,
+    {
         let mut last_acc = 0.0;
         let mut last_loss = 0.0;
         let mut est_bpp_sum = 0.0;
         let mut coded_bpp_sum = 0.0;
         let mut dl_bpp_sum = 0.0;
         let participation = Participation::new(self.cfg.participation, self.cfg.dropout);
-        let engine = self.engine;
         for round in 1..=self.cfg.rounds {
             let t0 = Instant::now();
             let mut comm = RoundComm::new(self.rt.manifest.n_params);
             let plan = self.round_plan(round);
-            let stats = engine.run_round(
+            let stats = round_fn(
                 self.server.as_mut(),
                 &self.rt,
                 &self.train,
@@ -292,6 +309,7 @@ fn weighted_eval(per_shard: &[EvalMetrics]) -> (f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Partition;
 
     fn metrics(correct: f64, loss_sum: f64, examples: usize) -> EvalMetrics {
         EvalMetrics { correct, loss_sum, examples }

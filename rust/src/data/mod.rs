@@ -13,6 +13,9 @@ pub mod synthetic;
 pub use partition::{partition_iid, partition_noniid, Shard};
 pub use synthetic::{SynthSpec, Synthetic};
 
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{ExperimentConfig, Partition};
 use crate::util::Xoshiro256;
 
 /// A dense in-memory classification dataset.
@@ -81,6 +84,56 @@ pub fn subsample(d: Dataset, n: usize, seed: u64) -> Dataset {
     idx.truncate(n);
     let (x, y) = d.gather(&idx);
     Dataset::new(x, y, d.dim, d.n_classes)
+}
+
+/// Derive an experiment's (train, test) datasets from its config: the
+/// real files when present, the seed-deterministic synthetic generator
+/// otherwise. Shared by the in-process experiment builder and the
+/// networked device runtime (`fedsrn device`), so both sides of a
+/// socket derive byte-identical data from the same config.
+pub fn load_experiment_data(
+    cfg: &ExperimentConfig,
+    dim: usize,
+    n_classes: usize,
+) -> Result<(Dataset, Dataset)> {
+    if let (Some(tr), Some(te)) =
+        (loader::try_load(&cfg.dataset, true), loader::try_load(&cfg.dataset, false))
+    {
+        eprintln!(
+            "using real {} data ({} train / {} test)",
+            cfg.dataset,
+            tr.len(),
+            te.len()
+        );
+        return Ok((
+            subsample(tr, cfg.train_samples, cfg.seed),
+            subsample(te, cfg.test_samples, cfg.seed ^ 1),
+        ));
+    }
+    let mut spec = SynthSpec::by_name(&cfg.dataset)
+        .with_context(|| format!("unknown dataset '{}'", cfg.dataset))?;
+    // Model and dataset must agree on geometry; the synthetic
+    // generator adapts to the model's class count (e.g. cifar100).
+    ensure!(
+        spec.dim() == dim,
+        "dataset '{}' dim {} != model input {}",
+        cfg.dataset,
+        spec.dim(),
+        dim
+    );
+    spec.n_classes = n_classes;
+    let gen = Synthetic::new(spec, cfg.seed ^ 0xDA7A);
+    Ok((gen.generate(cfg.train_samples, 1), gen.generate(cfg.test_samples, 2)))
+}
+
+/// Partition a training set into the config's device shards — the other
+/// half of the shared derivation: shard membership is a pure function of
+/// (dataset, partition scheme, clients, seed).
+pub fn partition_fleet(cfg: &ExperimentConfig, train: &Dataset) -> Vec<Shard> {
+    match cfg.partition {
+        Partition::Iid => partition_iid(train, cfg.clients, cfg.seed ^ 0x5A),
+        Partition::NonIid { c } => partition_noniid(train, cfg.clients, c, cfg.seed ^ 0x5A),
+    }
 }
 
 /// Cyclic minibatch sampler over a shard's indices: reshuffles each epoch

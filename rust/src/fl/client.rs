@@ -10,6 +10,16 @@ use anyhow::Result;
 
 use crate::data::{BatchSampler, Dataset, Shard};
 use crate::runtime::{ModelRuntime, TrainMetrics};
+use crate::util::SeedSequence;
+
+/// Per-client seed derivation shared by the in-process experiment and
+/// the networked device runtime ([`crate::fl::session::run_device`]): a
+/// client's randomness is a pure function of (root experiment seed,
+/// client id), which is what lets a remote device process reproduce the
+/// simulated fleet bit-for-bit.
+pub fn derive_client_seed(root_seed: u64, client_id: usize) -> u64 {
+    SeedSequence::new(root_seed).child(0xC11E).child(client_id as u64).seed()
+}
 
 /// Per-device state living across rounds.
 pub struct Client {

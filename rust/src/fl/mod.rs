@@ -1,9 +1,15 @@
-//! The federated-learning engine: wire protocol, server, simulated
-//! device fleet, communication accounting, metrics.
+//! The federated-learning engine: wire protocol, transport, networked
+//! sessions, server, simulated device fleet, communication accounting,
+//! metrics.
 //!
 //! A round is an exchange of the typed messages in [`protocol`]
 //! (DESIGN.md §Protocol); the strategy halves that speak them live in
-//! [`crate::algos`] and the round driver in [`crate::coordinator`].
+//! [`crate::algos`] and the in-process round driver in
+//! [`crate::coordinator`]. The [`transport`] module frames those
+//! messages over real TCP sockets and [`session`] drives full federated
+//! rounds across independent server/device processes (`fedsrn serve` /
+//! `fedsrn device` — DESIGN.md §Transport), bit-identical to the
+//! in-process path.
 
 pub mod client;
 pub mod participation;
@@ -11,10 +17,16 @@ pub mod comm;
 pub mod metrics;
 pub mod protocol;
 pub mod server;
+pub mod session;
+pub mod transport;
 
-pub use client::Client;
+pub use client::{derive_client_seed, Client};
 pub use participation::Participation;
 pub use comm::{CommTotals, RoundComm};
 pub use metrics::{MetricsSink, RoundRecord};
 pub use protocol::{DownlinkMsg, RoundPlan, UplinkMsg, UplinkPayload, PROTOCOL_VERSION};
 pub use server::Server;
+pub use session::{
+    run_device, DeviceOpts, DeviceReport, Session, SessionConfig, SessionStats,
+};
+pub use transport::{run_fingerprint, Conn, FrameKind, Hello, Welcome, TRANSPORT_VERSION};

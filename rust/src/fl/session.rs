@@ -1,0 +1,803 @@
+//! The networked federation runtime: server-side device sessions and the
+//! device-side run loop.
+//!
+//! `fedsrn serve` drives the same [`crate::algos::ServerLogic`] round
+//! (`begin_round -> fold_uplink* -> end_round`) as the in-process
+//! [`crate::coordinator::RoundEngine`], but every hop crosses a real
+//! [`crate::fl::transport`] socket:
+//!
+//! * **Registry** — [`Session`] owns one framed connection per device
+//!   id. Devices register with the [`crate::fl::transport::Hello`]
+//!   handshake (version + run fingerprint validated, mismatches get a
+//!   typed error frame back); a reconnecting device replaces its stale
+//!   connection and, when the `qdelta` chain made its state
+//!   irrecoverable, receives a full-state `Sync` frame first.
+//! * **Round barrier** — [`Session::run_round`] mirrors the engine's
+//!   schedule exactly: sample the cohort, broadcast one `Round` frame
+//!   (chain links go to the whole fleet, stateless broadcasts only to
+//!   the cohort), then collect uplinks **in cohort order** in bounded
+//!   waves of ~2x the worker count, folding each envelope the moment it
+//!   lands — coordinator memory stays O(wave × n_params) at any cohort
+//!   size, and the fold order (hence the aggregate) is bit-identical to
+//!   the in-process path.
+//! * **Straggler deadline** — every uplink read carries a wall-clock
+//!   deadline; a device that blows it is converted into the existing
+//!   dropout path ("trained, but the uplink never lands"), its
+//!   connection is dropped, and the round continues. Injected dropout
+//!   (the `dropout` config key) is decided device-side from the same
+//!   seeded [`Participation::drops`] the engine uses, shipped as a tiny
+//!   `Dropped` frame so accounting matches the simulation bit-for-bit.
+//! * **Accounting** — [`crate::fl::RoundComm`] records the serialized
+//!   envelope bytes exactly as the in-process engine does (the envelope
+//!   is byte-identical on the socket); [`SessionStats`] additionally
+//!   reports the transport-level totals (frame headers, checksums,
+//!   handshakes) actually moved.
+//!
+//! The device half, [`run_device`], derives its shard, seeds, cohort
+//! membership, and dropout decisions from the shared config — pure
+//! functions of `(seed, round, id)` — so a fleet of independent
+//! processes reproduces the simulated federation exactly.
+
+use std::net::{SocketAddr, TcpListener};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::algos::{build_server, RoundStats, ServerLogic};
+use crate::compress::DownlinkMode;
+use crate::config::ExperimentConfig;
+use crate::coordinator::RoundEngine;
+use crate::data::{load_experiment_data, partition_fleet};
+use crate::fl::client::derive_client_seed;
+use crate::fl::protocol::{DownlinkMsg, RoundPlan};
+use crate::fl::transport::{
+    is_timeout, run_fingerprint, Conn, FrameKind, Hello, Welcome, TRANSPORT_VERSION,
+};
+use crate::fl::{Client, Participation, RoundComm, UplinkMsg};
+use crate::runtime::ModelRuntime;
+
+/// How long a registering device may take to complete its handshake.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Accept-loop poll cadence (the listener is non-blocking).
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Server-session knobs (the CLI flags of `fedsrn serve`).
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Devices the federation expects (= the config's `clients`).
+    pub expected: usize,
+    /// [`run_fingerprint`] every device must present.
+    pub fingerprint: u64,
+    /// Total rounds (echoed in the handshake for operator sanity).
+    pub rounds: usize,
+    /// Straggler deadline per uplink read.
+    pub deadline: Duration,
+    /// Uplink collection wave size; 0 = the round engine's sizing.
+    pub wave: usize,
+    /// `downlink=qdelta`: a reconnecting device that missed chain links
+    /// needs a full-state `Sync` frame before its next round.
+    pub needs_state_sync: bool,
+}
+
+impl SessionConfig {
+    /// Derive the session parameters a config implies.
+    pub fn from_experiment(
+        cfg: &ExperimentConfig,
+        fingerprint: u64,
+        deadline: Duration,
+        wave: usize,
+    ) -> Self {
+        Self {
+            expected: cfg.clients,
+            fingerprint,
+            rounds: cfg.rounds,
+            deadline,
+            wave,
+            needs_state_sync: matches!(cfg.downlink, DownlinkMode::QDelta { .. }),
+        }
+    }
+}
+
+/// Transport-level telemetry for one serve run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SessionStats {
+    /// Bytes actually written to sockets (frames, headers, checksums).
+    pub tx_bytes: u64,
+    /// Bytes actually read from sockets.
+    pub rx_bytes: u64,
+    /// Uplinks that blew the straggler deadline (-> dropout path).
+    pub stragglers: usize,
+    /// Cohort members with no live connection when their turn came.
+    pub missing: usize,
+    /// Devices that re-registered after a drop.
+    pub reconnects: usize,
+    /// Full-state resync frames sent to reconnecting devices.
+    pub syncs: usize,
+}
+
+/// The server side of the networked runtime: listener + device registry
+/// + the socket-driven round barrier.
+pub struct Session {
+    listener: TcpListener,
+    devices: Vec<Option<Conn>>,
+    cfg: SessionConfig,
+    rounds_completed: usize,
+    pub stats: SessionStats,
+}
+
+impl Session {
+    /// Bind the coordinator socket (`addr` may use port 0; see
+    /// [`Session::local_addr`]).
+    pub fn bind(addr: &str, cfg: SessionConfig) -> Result<Self> {
+        ensure!(cfg.expected > 0, "a session needs at least one device");
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true).context("setting listener non-blocking")?;
+        let devices = (0..cfg.expected).map(|_| None).collect();
+        Ok(Self { listener, devices, cfg, rounds_completed: 0, stats: SessionStats::default() })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading listener address")
+    }
+
+    /// Registered devices with a live connection.
+    pub fn connected(&self) -> usize {
+        self.devices.iter().filter(|d| d.is_some()).count()
+    }
+
+    /// Block (polling) until every expected device has registered, or
+    /// fail after `timeout` naming the ids still missing.
+    pub fn wait_for_fleet(&mut self, timeout: Duration) -> Result<()> {
+        let start = Instant::now();
+        while self.connected() < self.cfg.expected {
+            if !self.accept_pending(&None)? && start.elapsed() > timeout {
+                let missing: Vec<usize> = self
+                    .devices
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, d)| d.is_none().then_some(i))
+                    .collect();
+                bail!(
+                    "{}/{} devices registered after {:.0?}; missing ids {missing:?}",
+                    self.connected(),
+                    self.cfg.expected,
+                    timeout
+                );
+            }
+            std::thread::sleep(ACCEPT_POLL);
+        }
+        Ok(())
+    }
+
+    /// Drain the accept queue, handshaking every pending connection.
+    /// Returns whether any registration happened. `fleet_state` is the
+    /// current broadcast reconstruction, used to resync reconnects.
+    fn accept_pending(&mut self, fleet_state: &Option<Vec<f32>>) -> Result<bool> {
+        let mut any = false;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    match self.handshake(Conn::new(stream)?, fleet_state) {
+                        Ok(id) => {
+                            any = true;
+                            eprintln!("session: device {id} registered");
+                        }
+                        Err(e) => eprintln!("session: handshake rejected: {e:#}"),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                // A peer that connected and reset before we got to it
+                // is its problem, not the federation's: skip it.
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionAborted
+                            | std::io::ErrorKind::ConnectionReset
+                            | std::io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(e).context("accepting device connection"),
+            }
+        }
+        Ok(any)
+    }
+
+    /// Validate one device's `Hello`, reply `Welcome` (or a typed error
+    /// frame), register the connection, and resync a reconnect that
+    /// missed `qdelta` chain links.
+    fn handshake(&mut self, mut conn: Conn, fleet_state: &Option<Vec<f32>>) -> Result<usize> {
+        conn.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let hello = match conn
+            .recv_expect(FrameKind::Hello)
+            .and_then(|p| Hello::from_bytes(&p))
+        {
+            Ok(h) => h,
+            Err(e) => {
+                let _ = conn.send(FrameKind::Error, format!("{e:#}").as_bytes());
+                self.retire(conn);
+                return Err(e);
+            }
+        };
+        let reject = if hello.fingerprint != self.cfg.fingerprint {
+            Some(format!(
+                "run fingerprint {:#018x} != server's {:#018x} \
+                 (different config/model on the two sides?)",
+                hello.fingerprint, self.cfg.fingerprint
+            ))
+        } else if hello.device_id >= self.cfg.expected as u64 {
+            Some(format!(
+                "device id {} out of range for a {}-device federation",
+                hello.device_id, self.cfg.expected
+            ))
+        } else {
+            None
+        };
+        if let Some(msg) = reject {
+            let _ = conn.send(FrameKind::Error, msg.as_bytes());
+            self.retire(conn);
+            bail!("device {} rejected: {msg}", hello.device_id);
+        }
+        let id = hello.device_id as usize;
+        let welcome = Welcome {
+            version: TRANSPORT_VERSION,
+            fingerprint: self.cfg.fingerprint,
+            n_clients: self.cfg.expected as u64,
+            rounds: self.cfg.rounds as u64,
+        };
+        conn.send(FrameKind::Welcome, &welcome.to_bytes())?;
+        // A device that missed chain links cannot decode the next frame;
+        // bring it back in sync with a full-state broadcast.
+        if self.cfg.needs_state_sync && (hello.resume_round as usize) < self.rounds_completed {
+            if let Some(state) = fleet_state {
+                conn.send(FrameKind::Sync, &DownlinkMsg::RawF32(state.clone()).to_bytes())?;
+                self.stats.syncs += 1;
+            }
+        }
+        if let Some(old) = self.devices[id].take() {
+            self.stats.reconnects += 1;
+            self.retire(old);
+        }
+        self.devices[id] = Some(conn);
+        Ok(id)
+    }
+
+    /// Fold a dead or replaced connection's byte counters into the
+    /// session totals before dropping it.
+    fn retire(&mut self, conn: Conn) {
+        self.stats.tx_bytes += conn.tx_bytes;
+        self.stats.rx_bytes += conn.rx_bytes;
+    }
+
+    fn drop_device(&mut self, id: usize) {
+        if let Some(conn) = self.devices[id].take() {
+            self.retire(conn);
+        }
+    }
+
+    /// Send one frame to a device; returns whether it was delivered. A
+    /// write failure retires the connection (the device will reconnect).
+    /// Missed *cohort turns* are counted once, in [`Self::collect_uplink`].
+    fn send_to(&mut self, id: usize, kind: FrameKind, payload: &[u8]) -> bool {
+        let Some(conn) = &mut self.devices[id] else {
+            return false;
+        };
+        match conn.send(kind, payload) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!("session: device {id} send failed ({e:#}); dropping connection");
+                self.drop_device(id);
+                false
+            }
+        }
+    }
+
+    /// Wave size: the engine's sizing unless overridden.
+    fn wave(&self) -> usize {
+        if self.cfg.wave > 0 {
+            self.cfg.wave
+        } else {
+            RoundEngine::new(0).wave_size()
+        }
+    }
+
+    /// Drive one full round over the connected fleet — the socket twin
+    /// of [`RoundEngine::run_round`], same schedule, same accounting,
+    /// same fold order.
+    pub fn run_round(
+        &mut self,
+        server: &mut dyn ServerLogic,
+        fleet_state: &mut Option<Vec<f32>>,
+        participation: Participation,
+        plan: &RoundPlan,
+        comm: &mut RoundComm,
+    ) -> Result<RoundStats> {
+        // Reconnecting devices re-register between rounds.
+        self.accept_pending(fleet_state)?;
+        let n = self.cfg.expected;
+        let cohort = participation.sample_round(n, plan.seed, plan.round);
+        let msg = server.begin_round(plan)?;
+        let payload = round_payload(plan, &msg);
+        // A frame chain link must reach every device (one missed link
+        // and the chain is undecodable); stateless broadcasts only the
+        // cohort. Mirrors the engine's receiver accounting exactly.
+        if matches!(msg, DownlinkMsg::Frame(_)) {
+            for id in 0..n {
+                if cohort.binary_search(&id).is_err()
+                    && self.send_to(id, FrameKind::Round, &payload)
+                {
+                    comm.add_downlink_msg(&msg);
+                }
+            }
+        }
+        let prev = fleet_state.take();
+        let wave = self.wave();
+        for ids in cohort.chunks(wave) {
+            for &id in ids {
+                if self.send_to(id, FrameKind::Round, &payload) {
+                    comm.add_downlink_msg(&msg);
+                }
+            }
+            // Ordered streaming fold: envelopes land in cohort order, so
+            // the aggregate is bit-identical to the in-process engine.
+            for &id in ids {
+                self.collect_uplink(id, server, comm)?;
+            }
+        }
+        *fleet_state = Some(msg.decode_state(prev.as_deref())?);
+        self.rounds_completed = plan.round;
+        server.end_round(plan)
+    }
+
+    /// Read one device's round reply under the straggler deadline and
+    /// fold it. Timeouts, disconnects, protocol violations, and corrupt
+    /// envelopes all become the dropout path: the uplink never lands,
+    /// the round goes on.
+    fn collect_uplink(
+        &mut self,
+        id: usize,
+        server: &mut dyn ServerLogic,
+        comm: &mut RoundComm,
+    ) -> Result<()> {
+        let deadline = self.cfg.deadline;
+        let Some(conn) = &mut self.devices[id] else {
+            self.stats.missing += 1;
+            return Ok(());
+        };
+        conn.set_read_timeout(Some(deadline))?;
+        match conn.recv() {
+            Ok((FrameKind::Uplink, bytes)) => match UplinkMsg::from_bytes(&bytes) {
+                Ok(up) => {
+                    debug_assert_eq!(up.wire_bytes(), bytes.len());
+                    server.fold_uplink(&up, comm)?;
+                }
+                Err(e) => {
+                    eprintln!("session: device {id} sent a corrupt envelope ({e:#}); dropping");
+                    self.drop_device(id);
+                }
+            },
+            // Injected failure model: trained, uplink never lands.
+            Ok((FrameKind::Dropped, _)) => {}
+            Ok((kind, _)) => {
+                eprintln!(
+                    "session: device {id} broke protocol ({} instead of uplink); dropping",
+                    kind.name()
+                );
+                self.drop_device(id);
+            }
+            Err(e) if is_timeout(&e) => {
+                eprintln!(
+                    "session: device {id} missed the {deadline:.0?} straggler deadline; \
+                     treating as dropout"
+                );
+                self.stats.stragglers += 1;
+                self.drop_device(id);
+            }
+            Err(e) => {
+                eprintln!("session: device {id} connection lost ({e:#}); treating as dropout");
+                self.drop_device(id);
+            }
+        }
+        Ok(())
+    }
+
+    /// End the run: tell every live device we're done and fold the
+    /// remaining byte counters into the stats.
+    pub fn finish(&mut self) -> Result<()> {
+        for id in 0..self.devices.len() {
+            self.send_to(id, FrameKind::Done, &[]);
+        }
+        for id in 0..self.devices.len() {
+            self.drop_device(id);
+        }
+        Ok(())
+    }
+}
+
+/// `Round` frame payload: `[u32 plan_len][plan][downlink envelope]`.
+fn round_payload(plan: &RoundPlan, msg: &DownlinkMsg) -> Vec<u8> {
+    let plan_bytes = plan.to_bytes();
+    let dl_bytes = msg.to_bytes();
+    let mut out = Vec::with_capacity(4 + plan_bytes.len() + dl_bytes.len());
+    out.extend_from_slice(&(plan_bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&plan_bytes);
+    out.extend_from_slice(&dl_bytes);
+    out
+}
+
+/// Parse a `Round` frame payload back into its typed halves, validating
+/// every recorded length (the envelope re-validates itself).
+pub fn parse_round(payload: &[u8]) -> Result<(RoundPlan, DownlinkMsg)> {
+    ensure!(payload.len() >= 4, "round payload truncated");
+    let plan_len = u32::from_le_bytes(payload[..4].try_into()?) as usize;
+    ensure!(
+        payload.len() > 4 + plan_len,
+        "round payload records {plan_len} plan bytes but carries {}",
+        payload.len() - 4
+    );
+    let plan = RoundPlan::from_bytes(&payload[4..4 + plan_len]).context("round plan")?;
+    let msg = DownlinkMsg::from_bytes(&payload[4 + plan_len..]).context("round downlink")?;
+    Ok((plan, msg))
+}
+
+/// Device-side runtime knobs (the CLI flags of `fedsrn device`).
+#[derive(Debug, Clone)]
+pub struct DeviceOpts {
+    /// Server address, e.g. `127.0.0.1:7878`.
+    pub addr: String,
+    /// This device's client id in `[0, clients)`.
+    pub device_id: usize,
+    /// Total budget for (re)connect attempts.
+    pub connect_timeout: Duration,
+}
+
+/// What one device run did (printed by `fedsrn device`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeviceReport {
+    /// Rounds this device received a broadcast for.
+    pub rounds_seen: usize,
+    /// Rounds it was in the cohort and ran local training.
+    pub trained: usize,
+    /// Trained rounds whose uplink the failure model suppressed.
+    pub dropped: usize,
+    /// Times the connection was lost and re-established.
+    pub reconnects: usize,
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+}
+
+/// Keep trying to connect until `budget` runs out (the server may still
+/// be binding, or be mid-restart).
+fn connect_with_retry(addr: &str, budget: Duration) -> Result<Conn> {
+    let start = Instant::now();
+    let mut wait = Duration::from_millis(50);
+    loop {
+        match Conn::connect(addr) {
+            Ok(conn) => return Ok(conn),
+            Err(_) if start.elapsed() + wait < budget => {
+                std::thread::sleep(wait);
+                wait = (wait * 2).min(Duration::from_secs(2));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("no server at {addr} after {:.0?}", start.elapsed())
+                })
+            }
+        }
+    }
+}
+
+/// Run one device against a remote server: derive the local shard and
+/// seeds from the shared config, register over the handshake, then
+/// answer `Round` frames until `Done`. Connection loss triggers a
+/// reconnect with the in-memory reconstruction state carried over (and
+/// a server-side `Sync` when `qdelta` chain links were missed).
+pub fn run_device(cfg: &ExperimentConfig, opts: &DeviceOpts) -> Result<DeviceReport> {
+    cfg.validate()?;
+    ensure!(
+        opts.device_id < cfg.clients,
+        "--id {} out of range for a {}-device federation",
+        opts.device_id,
+        cfg.clients
+    );
+    let rt = ModelRuntime::load(Path::new(&cfg.artifacts_dir), &cfg.model)
+        .with_context(|| format!("loading model '{}'", cfg.model))?;
+    let (train, _test) =
+        load_experiment_data(cfg, rt.manifest.input_dim, rt.manifest.n_classes)?;
+    let shard = partition_fleet(cfg, &train)
+        .into_iter()
+        .find(|s| s.client_id == opts.device_id)
+        .context("partition did not produce this device's shard")?;
+    let mut client = Client::new(shard, derive_client_seed(cfg.seed, opts.device_id));
+    // The pure device half of the strategy; the throwaway server object
+    // only exists to hand it out.
+    let task = build_server(cfg, rt.manifest.n_params, rt.weights()).client_task();
+    let participation = Participation::new(cfg.participation, cfg.dropout);
+    let fingerprint = run_fingerprint(cfg, &rt.manifest);
+
+    let mut report = DeviceReport::default();
+    let mut prev_state: Option<Vec<f32>> = None;
+    let mut rounds_done = 0usize;
+    'connection: loop {
+        let mut conn = connect_with_retry(&opts.addr, opts.connect_timeout)?;
+        let hello = Hello {
+            version: TRANSPORT_VERSION,
+            fingerprint,
+            device_id: opts.device_id as u64,
+            resume_round: rounds_done as u64,
+        };
+        conn.send(FrameKind::Hello, &hello.to_bytes())?;
+        // A mid-run reconnect is only welcomed at the server's next
+        // round barrier, which can be a full round away — so wait out
+        // the silence in ONE read on THIS connection (re-dialing would
+        // queue stale Hellos the server would later mis-count as
+        // reconnects, and resuming a framed stream after a mid-frame
+        // timeout would desync it). The connect budget bounds the wait;
+        // a typed rejection (Error frame) or a dead socket is fatal.
+        conn.set_read_timeout(Some(opts.connect_timeout.max(HANDSHAKE_TIMEOUT)))?;
+        let welcome_bytes = conn.recv_expect(FrameKind::Welcome).map_err(|e| {
+            if is_timeout(&e) {
+                e.context(format!("no welcome from {} within the connect budget", opts.addr))
+            } else {
+                e
+            }
+        })?;
+        let welcome = Welcome::from_bytes(&welcome_bytes)?;
+        ensure!(
+            welcome.fingerprint == fingerprint,
+            "server fingerprint {:#018x} != ours {:#018x}",
+            welcome.fingerprint,
+            fingerprint
+        );
+        ensure!(
+            welcome.n_clients == cfg.clients as u64,
+            "server runs a {}-device federation, our config says {}",
+            welcome.n_clients,
+            cfg.clients
+        );
+        // Rounds are server-paced: block until the next frame arrives.
+        conn.set_read_timeout(None)?;
+        loop {
+            match conn.recv() {
+                Ok((FrameKind::Sync, bytes)) => {
+                    let msg = DownlinkMsg::from_bytes(&bytes).context("sync frame")?;
+                    prev_state = Some(msg.decode_state(None)?);
+                }
+                Ok((FrameKind::Round, bytes)) => {
+                    let (plan, dl) = parse_round(&bytes)?;
+                    let cohort =
+                        participation.sample_round(cfg.clients, plan.seed, plan.round);
+                    let mut sent = Ok(());
+                    if let Some(pos) =
+                        cohort.iter().position(|&c| c == opts.device_id)
+                    {
+                        let up = task
+                            .run(&rt, &train, &mut client, &dl, prev_state.as_deref(), &plan)?;
+                        report.trained += 1;
+                        sent = if participation.drops(pos, plan.seed, plan.round, opts.device_id)
+                        {
+                            report.dropped += 1;
+                            conn.send(FrameKind::Dropped, &[])
+                        } else {
+                            conn.send(FrameKind::Uplink, &up.to_bytes())
+                        };
+                    }
+                    // The broadcast itself landed: advance the local
+                    // reconstruction even if the reply could not be sent.
+                    prev_state = Some(dl.decode_state(prev_state.as_deref())?);
+                    rounds_done = plan.round;
+                    report.rounds_seen += 1;
+                    if let Err(e) = sent {
+                        // e.g. the server already dropped us as a
+                        // straggler and closed the socket: reconnect,
+                        // same as a recv-side connection loss.
+                        eprintln!(
+                            "device {}: uplink send failed ({e:#}); reconnecting",
+                            opts.device_id
+                        );
+                        report.tx_bytes += conn.tx_bytes;
+                        report.rx_bytes += conn.rx_bytes;
+                        report.reconnects += 1;
+                        continue 'connection;
+                    }
+                }
+                Ok((FrameKind::Done, _)) => {
+                    report.tx_bytes += conn.tx_bytes;
+                    report.rx_bytes += conn.rx_bytes;
+                    return Ok(report);
+                }
+                Ok((FrameKind::Error, bytes)) => {
+                    bail!("server error: {}", String::from_utf8_lossy(&bytes));
+                }
+                Ok((kind, _)) => bail!("unexpected {} frame from server", kind.name()),
+                Err(e) => {
+                    eprintln!(
+                        "device {}: connection lost ({e:#}); reconnecting",
+                        opts.device_id
+                    );
+                    report.tx_bytes += conn.tx_bytes;
+                    report.rx_bytes += conn.rx_bytes;
+                    report.reconnects += 1;
+                    continue 'connection;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{MaskMode, MaskStrategy};
+    use crate::compress;
+    use crate::fl::protocol::UplinkPayload;
+    use crate::util::BitVec;
+    use std::thread;
+
+    const N_PARAMS: usize = 64;
+
+    fn test_session(expected: usize, deadline_ms: u64) -> (Session, String) {
+        let cfg = SessionConfig {
+            expected,
+            fingerprint: 0xFEED,
+            rounds: 1,
+            deadline: Duration::from_millis(deadline_ms),
+            wave: 0,
+            needs_state_sync: false,
+        };
+        let session = Session::bind("127.0.0.1:0", cfg).unwrap();
+        let addr = session.local_addr().unwrap().to_string();
+        (session, addr)
+    }
+
+    fn fake_handshake(addr: &str, fingerprint: u64, id: u64, resume: u64) -> Conn {
+        let mut conn = Conn::connect(addr).unwrap();
+        // fakes never block forever: a missing server reply fails the
+        // test instead of hanging it
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let hello = Hello {
+            version: TRANSPORT_VERSION,
+            fingerprint,
+            device_id: id,
+            resume_round: resume,
+        };
+        conn.send(FrameKind::Hello, &hello.to_bytes()).unwrap();
+        conn
+    }
+
+    fn plan() -> RoundPlan {
+        RoundPlan {
+            round: 1,
+            seed: 7,
+            lambda: 0.0,
+            lr: 0.1,
+            local_epochs: 1,
+            topk_frac: 0.3,
+            server_lr: 0.001,
+            adam: true,
+        }
+    }
+
+    fn mask_uplink(weight: f64) -> Vec<u8> {
+        let mask = BitVec::from_iter_len((0..N_PARAMS).map(|i| i % 3 == 0), N_PARAMS);
+        UplinkMsg {
+            weight,
+            train_loss: 0.5,
+            payload: UplinkPayload::CodedMask(compress::encode(&mask)),
+        }
+        .to_bytes()
+    }
+
+    #[test]
+    fn straggler_deadline_converts_to_dropout() {
+        let (mut session, addr) = test_session(2, 500);
+        // device 0 answers promptly; device 1 sleeps past the deadline
+        let a0 = addr.clone();
+        let t0 = thread::spawn(move || {
+            let mut conn = fake_handshake(&a0, 0xFEED, 0, 0);
+            conn.recv_expect(FrameKind::Welcome).unwrap();
+            let (kind, payload) = conn.recv().unwrap();
+            assert_eq!(kind, FrameKind::Round);
+            parse_round(&payload).unwrap();
+            conn.send(FrameKind::Uplink, &mask_uplink(10.0)).unwrap();
+            // stay alive until the server is done with the round
+            let _ = conn.recv();
+        });
+        let a1 = addr.clone();
+        let t1 = thread::spawn(move || {
+            let mut conn = fake_handshake(&a1, 0xFEED, 1, 0);
+            conn.recv_expect(FrameKind::Welcome).unwrap();
+            let _ = conn.recv(); // the Round frame
+            thread::sleep(Duration::from_millis(2500)); // blow the deadline
+        });
+        session.wait_for_fleet(Duration::from_secs(5)).unwrap();
+        let mut server = MaskStrategy::new(N_PARAMS, 1, MaskMode::Stochastic);
+        let mut fleet_state = None;
+        let mut comm = RoundComm::new(N_PARAMS);
+        let stats = session
+            .run_round(
+                &mut server,
+                &mut fleet_state,
+                Participation::default(),
+                &plan(),
+                &mut comm,
+            )
+            .unwrap();
+        // one uplink folded, one straggler converted into dropout
+        assert_eq!(comm.clients, 1);
+        assert_eq!(comm.broadcasts, 2);
+        assert_eq!(session.stats.stragglers, 1);
+        assert_eq!(session.connected(), 1);
+        assert!(stats.train_loss > 0.0);
+        session.finish().unwrap();
+        t0.join().unwrap();
+        t1.join().unwrap();
+    }
+
+    #[test]
+    fn handshake_rejects_fingerprint_mismatch_and_bad_id() {
+        let (mut session, addr) = test_session(1, 1000);
+        let t = thread::spawn(move || {
+            let mut conn = fake_handshake(&addr, 0xBAD, 0, 0);
+            let err = conn.recv_expect(FrameKind::Welcome).unwrap_err();
+            assert!(err.to_string().contains("fingerprint"), "{err}");
+            let mut conn = fake_handshake(&addr, 0xFEED, 9, 0);
+            let err = conn.recv_expect(FrameKind::Welcome).unwrap_err();
+            assert!(err.to_string().contains("out of range"), "{err}");
+        });
+        let err = session.wait_for_fleet(Duration::from_millis(900)).unwrap_err();
+        assert!(err.to_string().contains("missing ids [0]"), "{err}");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn reconnect_reregisters_and_gets_state_sync() {
+        let (mut session, addr) = test_session(1, 1000);
+        session.cfg.needs_state_sync = true;
+        session.rounds_completed = 3;
+        let state = vec![0.25f32; 8];
+        let fleet_state = Some(state.clone());
+        let t = thread::spawn(move || {
+            // first registration: resume_round = 0 < 3 -> expect a Sync
+            let mut conn = fake_handshake(&addr, 0xFEED, 0, 0);
+            conn.recv_expect(FrameKind::Welcome).unwrap();
+            let sync = conn.recv_expect(FrameKind::Sync).unwrap();
+            let msg = DownlinkMsg::from_bytes(&sync).unwrap();
+            assert_eq!(msg.decode_state(None).unwrap(), vec![0.25f32; 8]);
+            drop(conn);
+            // reconnect already in sync: no Sync frame follows Welcome
+            let mut conn = fake_handshake(&addr, 0xFEED, 0, 3);
+            conn.recv_expect(FrameKind::Welcome).unwrap();
+            conn.send(FrameKind::Dropped, &[]).unwrap();
+        });
+        let start = Instant::now();
+        while session.connected() == 0 && start.elapsed() < Duration::from_secs(5) {
+            session.accept_pending(&fleet_state).unwrap();
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(session.stats.syncs, 1);
+        // wait for the re-registration to land
+        let start = Instant::now();
+        while session.stats.reconnects == 0 && start.elapsed() < Duration::from_secs(5) {
+            session.accept_pending(&fleet_state).unwrap();
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(session.stats.reconnects, 1);
+        assert_eq!(session.stats.syncs, 1, "in-sync reconnect must not resync");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn round_payload_parses_and_validates() {
+        let msg = DownlinkMsg::Theta(vec![0.5f32; 16]);
+        let payload = round_payload(&plan(), &msg);
+        let (p, m) = parse_round(&payload).unwrap();
+        assert_eq!(p, plan());
+        assert_eq!(m.n(), 16);
+        assert!(parse_round(&payload[..3]).is_err());
+        assert!(parse_round(&payload[..payload.len() - 1]).is_err());
+        let mut bad = payload.clone();
+        bad[0] = 99; // plan_len corrupted
+        assert!(parse_round(&bad).is_err());
+    }
+}

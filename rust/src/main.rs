@@ -2,6 +2,8 @@
 //!
 //! Commands:
 //!   train              one experiment from a config file / overrides
+//!   serve              run the federation server over real TCP sessions
+//!   device             run one remote device against a server
 //!   figure fig1|fig2|summary   regenerate the paper's figures
 //!   eval               evaluate a saved checkpoint
 //!   analyze            summarize a run's JSONL metrics log
@@ -28,6 +30,10 @@ fedsrn — Communication-Efficient FL via Regularized Sparse Random Networks
 
 USAGE:
   fedsrn train [--config FILE] [--set key=value]... [--checkpoint FILE]
+  fedsrn serve [--config FILE] [--set key=value]... [--addr 127.0.0.1:7878]
+               [--deadline-ms 30000] [--register-timeout-ms 120000] [--wave N]
+  fedsrn device --id N [--addr 127.0.0.1:7878] [--config FILE]
+               [--set key=value]... [--connect-timeout-ms 60000]
   fedsrn figure fig1 [--dataset mnist|cifar10|cifar100] [--model M]
                      [--rounds N] [--clients K] [--seed S] [--out DIR]
   fedsrn figure fig2 [--dataset mnist|cifar10] [--model M] [--rounds N]
@@ -57,6 +63,12 @@ qdelta8); clients train on exactly what the wire delivered.
 
 threads controls the parallel round engine (0 = all cores, 1 =
 sequential); results are bit-identical at any thread count.
+
+serve/device run the same federation over real sockets: start `fedsrn
+serve`, then one `fedsrn device --id I` process per client id with the
+SAME config/--set values (a version/fingerprint handshake rejects
+mismatches). The result is bit-identical to `fedsrn train`
+(DESIGN.md §Transport).
 ";
 
 fn main() -> ExitCode {
@@ -82,6 +94,8 @@ fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "device" => cmd_device(&args),
         "figure" => cmd_figure(&args),
         "eval" => cmd_eval(&args),
         "analyze" => cmd_analyze(&args),
@@ -110,6 +124,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut sink = MetricsSink::new(&out, 1)?;
     let mut exp = Experiment::build(cfg)?;
     let summary = exp.run(&mut sink)?;
+    print_summary(&summary);
+    if let Some(ck_path) = args.flag("checkpoint") {
+        save_checkpoint(&exp, ck_path)?;
+    }
+    Ok(())
+}
+
+/// Shared summary line (train + serve): the CI loopback job parses the
+/// `avg_estBpp=` field (eq. 13, the paper's reported UL Bpp) to assert
+/// the mask uplink stays <= 1 Bpp — keep the key=value format stable.
+fn print_summary(summary: &fedsrn::coordinator::RunSummary) {
     println!(
         "final: acc={:.4} avg_estBpp={:.4} avg_codedBpp={:.4} avg_DLBpp={:.4} \
          UL={:.3}MB DL={:.3}MB storage={}bits",
@@ -121,9 +146,98 @@ fn cmd_train(args: &Args) -> Result<()> {
         summary.total_dl_mb,
         summary.storage_bits
     );
-    if let Some(ck_path) = args.flag("checkpoint") {
-        save_checkpoint(&exp, ck_path)?;
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use fedsrn::fl::{run_fingerprint, Session, SessionConfig};
+    use std::time::Duration;
+    args.ensure_known_flags(&["config", "addr", "deadline-ms", "register-timeout-ms", "wave"])?;
+    let mut cfg = match args.flag("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    for (k, v) in &args.overrides {
+        cfg.apply(k, v)?;
     }
+    cfg.validate()?;
+    let addr = args.flag_or("addr", "127.0.0.1:7878");
+    let deadline = Duration::from_millis(args.flag_parse("deadline-ms", 30_000u64)?);
+    let register_timeout =
+        Duration::from_millis(args.flag_parse("register-timeout-ms", 120_000u64)?);
+    let wave: usize = args.flag_parse("wave", 0usize)?;
+    eprintln!(
+        "serving: model={} dataset={} algo={} K={} T={} downlink={}",
+        cfg.model,
+        cfg.dataset,
+        cfg.algorithm.name(),
+        cfg.clients,
+        cfg.rounds,
+        cfg.downlink.name()
+    );
+    let out = cfg.out.clone();
+    let mut sink = MetricsSink::new(&out, 1)?;
+    let mut exp = Experiment::build(cfg)?;
+    let fingerprint = run_fingerprint(&exp.cfg, &exp.runtime().manifest);
+    let scfg = SessionConfig::from_experiment(&exp.cfg, fingerprint, deadline, wave);
+    let mut session = Session::bind(&addr, scfg)?;
+    eprintln!(
+        "listening on {} (fingerprint {fingerprint:#018x}); waiting for {} devices",
+        session.local_addr()?,
+        exp.cfg.clients
+    );
+    session.wait_for_fleet(register_timeout)?;
+    let summary = exp.run_served(&mut session, &mut sink)?;
+    session.finish()?;
+    print_summary(&summary);
+    let stats = session.stats;
+    println!(
+        "transport: tx={:.3}MB rx={:.3}MB stragglers={} missing={} reconnects={} syncs={}",
+        stats.tx_bytes as f64 / 1e6,
+        stats.rx_bytes as f64 / 1e6,
+        stats.stragglers,
+        stats.missing,
+        stats.reconnects,
+        stats.syncs
+    );
+    Ok(())
+}
+
+fn cmd_device(args: &Args) -> Result<()> {
+    use fedsrn::fl::{run_device, DeviceOpts};
+    use std::time::Duration;
+    args.ensure_known_flags(&["config", "addr", "id", "connect-timeout-ms"])?;
+    let mut cfg = match args.flag("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    for (k, v) in &args.overrides {
+        cfg.apply(k, v)?;
+    }
+    cfg.validate()?;
+    let id: usize = args
+        .flag("id")
+        .context("--id N required (this device's client id)")?
+        .parse()
+        .context("--id must be an integer")?;
+    let opts = DeviceOpts {
+        addr: args.flag_or("addr", "127.0.0.1:7878"),
+        device_id: id,
+        connect_timeout: Duration::from_millis(
+            args.flag_parse("connect-timeout-ms", 60_000u64)?,
+        ),
+    };
+    eprintln!("device {id}: connecting to {}", opts.addr);
+    let report = run_device(&cfg, &opts)?;
+    println!(
+        "device {id}: done — rounds_seen={} trained={} dropped={} reconnects={} \
+         tx={:.3}MB rx={:.3}MB",
+        report.rounds_seen,
+        report.trained,
+        report.dropped,
+        report.reconnects,
+        report.tx_bytes as f64 / 1e6,
+        report.rx_bytes as f64 / 1e6
+    );
     Ok(())
 }
 
@@ -333,27 +447,39 @@ fn cmd_codec_bench(args: &Args) -> Result<()> {
     let n: usize = args.flag_parse("n", 268_800usize)?;
     println!("mask codec sweep over n={n} parameters:");
     println!(
-        "{:>8} {:>12} {:>12} {:>12} {:>10} {:>12}",
-        "density", "H(p) bits", "arith Bpp", "golomb Bpp", "winner", "enc MB/s"
+        "{:>8} {:>12} {:>12} {:>12} {:>10} {:>12} {:>12}",
+        "density", "H(p) bits", "arith Bpp", "golomb Bpp", "winner", "arith MB/s", "golomb MB/s"
     );
     let mut rng = Xoshiro256::new(7);
     for &p in &[0.005, 0.01, 0.05, 0.1, 0.25, 0.5] {
         let theta = ProbMask::constant(n, p as f32);
         let mask = fedsrn::mask::sample_mask(&theta, rng.next_u64());
         let h = fedsrn::mask::entropy_bits(p);
-        let t0 = std::time::Instant::now();
         let arith = compress::encode_with(&mask, compress::Method::Arithmetic);
-        let dt = t0.elapsed().as_secs_f64();
         let gol = compress::encode_with(&mask, compress::Method::Golomb);
         let best = compress::encode(&mask);
+        // One timing loop for the whole repo (util::bench): the same
+        // helper drives the cargo-bench harness and its JSON emitter.
+        let pair = fedsrn::util::bench::time_pair(
+            0.25,
+            50,
+            || {
+                std::hint::black_box(compress::encode_with(&mask, compress::Method::Arithmetic));
+            },
+            || {
+                std::hint::black_box(compress::encode_with(&mask, compress::Method::Golomb));
+            },
+        );
+        let mbs = |t: &fedsrn::util::bench::Timing| n as f64 / 8.0 / 1e6 / t.mean_s;
         println!(
-            "{:>8.3} {:>12.4} {:>12.4} {:>12.4} {:>10} {:>12.1}",
+            "{:>8.3} {:>12.4} {:>12.4} {:>12.4} {:>10} {:>12.1} {:>12.1}",
             p,
             h,
             arith.bpp(n),
             gol.bpp(n),
             format!("{:?}", best.method),
-            n as f64 / 8.0 / 1e6 / dt
+            mbs(&pair.a),
+            mbs(&pair.b)
         );
     }
     Ok(())

@@ -1,0 +1,247 @@
+//! Shared micro-benchmark timing + the machine-readable perf trajectory.
+//!
+//! One timing loop ([`time`] / [`time_pair`]) serves every consumer —
+//! the `cargo bench` harnesses (`benches/common/mod.rs`) and the
+//! `fedsrn codec-bench` CLI — so the JSON trajectory emitter
+//! ([`BenchJson`]) has a single source of truth for what "ns/iter"
+//! means. CI runs the bench binaries, which write
+//! `BENCH_components.json` / `BENCH_figures.json` (see
+//! `$BENCH_JSON_DIR`), validates the files, and uploads them as
+//! artifacts — the repo's perf history is data, not log text.
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// One measured timing: wall-clock over repeated runs with warmup.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl Timing {
+    pub fn ns_per_iter(&self) -> f64 {
+        self.mean_s * 1e9
+    }
+}
+
+/// Run `f` repeatedly: 2 warmup iterations, then timed iterations until
+/// ~`budget_s` seconds or `max_iters`, whichever first — always at
+/// least one timed iteration.
+pub fn time(budget_s: f64, max_iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..2 {
+        f();
+    }
+    let max_iters = max_iters.max(1);
+    let mut times = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() >= budget_s || times.len() >= max_iters {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Timing {
+        iters: times.len(),
+        mean_s: mean,
+        p50_s: times[times.len() / 2],
+        p95_s: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+    }
+}
+
+/// An A/B pair measured under the same budget (candidate vs baseline).
+#[derive(Debug, Clone, Copy)]
+pub struct PairTiming {
+    pub a: Timing,
+    pub b: Timing,
+}
+
+impl PairTiming {
+    /// How many times faster `a` is than `b` (> 1 means `a` wins).
+    pub fn speedup_a_over_b(&self) -> f64 {
+        self.b.mean_s / self.a.mean_s
+    }
+}
+
+/// Time a candidate/baseline pair back to back with the same budget.
+pub fn time_pair(
+    budget_s: f64,
+    max_iters: usize,
+    fa: impl FnMut(),
+    fb: impl FnMut(),
+) -> PairTiming {
+    PairTiming { a: time(budget_s, max_iters, fa), b: time(budget_s, max_iters, fb) }
+}
+
+struct BenchEntry {
+    name: String,
+    iters: usize,
+    ns_per_iter: f64,
+    baseline: Option<String>,
+}
+
+/// Collects bench results and emits one machine-readable JSON array:
+/// `[{"name", "iters", "ns_per_iter", "baseline", "ratio_vs_baseline"}]`
+/// where `ratio_vs_baseline` = baseline ns / own ns (> 1 ⇒ faster than
+/// the named baseline), resolved at write time against the entries
+/// actually recorded (`null` when the baseline didn't run).
+#[derive(Default)]
+pub struct BenchJson {
+    entries: Vec<BenchEntry>,
+}
+
+impl BenchJson {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, name: &str, t: &Timing, baseline: Option<&str>) {
+        self.record_raw(name, t.iters, t.ns_per_iter(), baseline);
+    }
+
+    /// Record an externally-measured result (e.g. secs/round from a
+    /// figure harness) in the same schema.
+    pub fn record_raw(
+        &mut self,
+        name: &str,
+        iters: usize,
+        ns_per_iter: f64,
+        baseline: Option<&str>,
+    ) {
+        self.entries.push(BenchEntry {
+            name: name.to_string(),
+            iters,
+            ns_per_iter,
+            baseline: baseline.map(str::to_string),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn ns_of(&self, name: &str) -> Option<f64> {
+        self.entries.iter().find(|e| e.name == name).map(|e| e.ns_per_iter)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            let ratio = e
+                .baseline
+                .as_deref()
+                .and_then(|b| self.ns_of(b))
+                .map(|base_ns| base_ns / e.ns_per_iter);
+            let _ = write!(
+                s,
+                "  {{\"name\":\"{}\",\"iters\":{},\"ns_per_iter\":{:.1},\"baseline\":{},\
+                 \"ratio_vs_baseline\":{}}}",
+                escape(&e.name),
+                e.iters,
+                e.ns_per_iter,
+                match &e.baseline {
+                    Some(b) => format!("\"{}\"", escape(b)),
+                    None => "null".to_string(),
+                },
+                match ratio {
+                    Some(r) if r.is_finite() => format!("{r:.4}"),
+                    _ => "null".to_string(),
+                },
+            );
+            s.push_str(if i + 1 < self.entries.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("]\n");
+        s
+    }
+
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing bench JSON {path:?}"))
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_always_produces_a_sample() {
+        let t = time(0.0, 0, || std::hint::black_box(2u64.pow(10)));
+        assert_eq!(t.iters, 1);
+        assert!(t.mean_s >= 0.0 && t.p50_s >= 0.0 && t.p95_s >= 0.0);
+        assert!(t.ns_per_iter() >= 0.0);
+    }
+
+    #[test]
+    fn time_respects_iteration_cap() {
+        let mut calls = 0usize;
+        let t = time(10.0, 5, || calls += 1);
+        assert_eq!(t.iters, 5);
+        assert_eq!(calls, 5 + 2); // warmup included
+    }
+
+    #[test]
+    fn pair_speedup_orientation() {
+        let p = time_pair(
+            0.01,
+            20,
+            || std::hint::black_box(1 + 1),
+            || std::thread::sleep(std::time::Duration::from_micros(200)),
+        );
+        assert!(p.speedup_a_over_b() > 1.0, "{}", p.speedup_a_over_b());
+    }
+
+    #[test]
+    fn json_schema_and_baseline_ratio() {
+        let mut j = BenchJson::new();
+        j.record_raw("fast", 10, 100.0, Some("slow"));
+        j.record_raw("slow", 10, 400.0, None);
+        j.record_raw("orphan", 3, 50.0, Some("not-recorded"));
+        let out = j.to_json();
+        assert!(out.starts_with('[') && out.trim_end().ends_with(']'));
+        assert!(out.contains("\"name\":\"fast\""));
+        assert!(out.contains("\"baseline\":\"slow\""));
+        assert!(out.contains("\"ratio_vs_baseline\":4.0000"), "{out}");
+        assert!(out.contains("\"baseline\":null"));
+        // unknown baseline resolves to null, not a crash
+        assert!(out.contains("\"baseline\":\"not-recorded\",\"ratio_vs_baseline\":null"));
+        assert_eq!(j.len(), 3);
+        assert!(!j.is_empty());
+    }
+
+    #[test]
+    fn json_writes_to_disk() {
+        let path =
+            std::env::temp_dir().join(format!("fedsrn_bench_{}.json", std::process::id()));
+        let mut j = BenchJson::new();
+        j.record_raw("x", 1, 1.0, None);
+        j.write_file(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"name\":\"x\""));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn names_are_escaped() {
+        let mut j = BenchJson::new();
+        j.record_raw("weird\"name", 1, 1.0, None);
+        assert!(j.to_json().contains("weird\\\"name"));
+    }
+}

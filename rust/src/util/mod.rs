@@ -1,5 +1,7 @@
-//! Shared substrate: PRNGs, bit vectors, statistics, timers.
+//! Shared substrate: PRNGs, bit vectors, statistics, timers, bench
+//! timing.
 
+pub mod bench;
 pub mod bitvec;
 pub mod json;
 pub mod rng;

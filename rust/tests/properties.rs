@@ -8,6 +8,10 @@
 use fedsrn::compress::{self, DownlinkEncoder, DownlinkFrame, DownlinkMode, Method};
 use fedsrn::config::ExperimentConfig;
 use fedsrn::coordinator::Checkpoint;
+use fedsrn::fl::transport::{
+    self, framed_len, read_frame, write_frame, FrameKind, Hello, Welcome, MAX_FRAME_BYTES,
+    TRANSPORT_VERSION,
+};
 use fedsrn::data::{partition_iid, partition_noniid, Dataset, SynthSpec, Synthetic};
 use fedsrn::mask::{
     empirical_bpp, entropy_bits, mean_client_bpp, sample_mask, topk_mask, BetaAggregator,
@@ -233,6 +237,155 @@ fn prop_envelopes_reject_truncation_and_corruption() {
         let mut bad = ul_bytes.clone();
         bad[1] = 0xEE;
         assert!(UplinkMsg::from_bytes(&bad).is_err(), "case {case}: kind");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// transport framing properties (DESIGN.md §Transport)
+// ---------------------------------------------------------------------------
+
+const FRAME_KINDS: [FrameKind; 8] = [
+    FrameKind::Hello,
+    FrameKind::Welcome,
+    FrameKind::Round,
+    FrameKind::Uplink,
+    FrameKind::Dropped,
+    FrameKind::Sync,
+    FrameKind::Done,
+    FrameKind::Error,
+];
+
+fn arb_frame(rng: &mut Xoshiro256) -> (FrameKind, Vec<u8>, Vec<u8>) {
+    let kind = FRAME_KINDS[rng.below(FRAME_KINDS.len() as u64) as usize];
+    let len = rng.below(4096) as usize;
+    let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+    let mut wire = Vec::new();
+    write_frame(&mut wire, kind, &payload).unwrap();
+    (kind, payload, wire)
+}
+
+#[test]
+fn prop_transport_frame_roundtrip_bit_identical() {
+    forall(120, |rng, case| {
+        let (kind, payload, wire) = arb_frame(rng);
+        assert_eq!(wire.len(), framed_len(payload.len()), "case {case}");
+        let (k, p) = read_frame(&mut std::io::Cursor::new(&wire), MAX_FRAME_BYTES)
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        assert_eq!(k, kind, "case {case}");
+        assert_eq!(p, payload, "case {case}");
+        // framing is self-delimiting: two frames back to back parse in
+        // order from one stream
+        let mut stream = wire.clone();
+        stream.extend_from_slice(&wire);
+        let mut cur = std::io::Cursor::new(&stream);
+        for _ in 0..2 {
+            let (k, p) = read_frame(&mut cur, MAX_FRAME_BYTES).unwrap();
+            assert_eq!((k, &p), (kind, &payload), "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_transport_truncated_frames_always_error() {
+    // A frame cut anywhere — header, payload, or checksum — must be a
+    // typed error, never a panic or a silent short read.
+    forall(80, |rng, case| {
+        let (_, _, wire) = arb_frame(rng);
+        for _ in 0..6 {
+            let cut = rng.below(wire.len() as u64) as usize;
+            let out = std::panic::catch_unwind(|| {
+                read_frame(&mut std::io::Cursor::new(&wire[..cut]), MAX_FRAME_BYTES)
+            });
+            match out {
+                Ok(res) => assert!(
+                    res.is_err(),
+                    "case {case}: truncated frame decoded at {cut}/{}",
+                    wire.len()
+                ),
+                Err(_) => panic!("case {case}: truncation at {cut} panicked"),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_transport_byte_flips_never_decode_silently() {
+    // The trailing checksum covers kind, length, and payload: ANY
+    // single-byte corruption anywhere in the frame must fail to read —
+    // silent garbage can never reach the envelope layer.
+    forall(60, |rng, case| {
+        let (_, _, wire) = arb_frame(rng);
+        for _ in 0..8 {
+            let at = rng.below(wire.len() as u64) as usize;
+            let flip = 1 + rng.below(255) as u8;
+            let mut bad = wire.clone();
+            bad[at] ^= flip;
+            assert!(
+                read_frame(&mut std::io::Cursor::new(&bad), MAX_FRAME_BYTES).is_err(),
+                "case {case}: flip {flip:#04x} at byte {at}/{} decoded",
+                wire.len()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_transport_oversize_length_prefix_rejected() {
+    // A hostile or corrupt length prefix past the cap errors before any
+    // allocation — with an arbitrarily small backing buffer.
+    forall(60, |rng, case| {
+        let over = MAX_FRAME_BYTES as u64 + 1 + rng.below(1 << 30);
+        // header claiming `over` payload bytes (kind 3 = Round)
+        let mut wire = vec![0xF5u8, 3u8];
+        wire.extend_from_slice(&(over.min(u32::MAX as u64) as u32).to_le_bytes());
+        let err = read_frame(&mut std::io::Cursor::new(&wire), MAX_FRAME_BYTES)
+            .expect_err(&format!("case {case}: oversize prefix {over} accepted"));
+        assert!(err.to_string().contains("exceeds"), "case {case}: {err:#}");
+        // the session can also tighten the cap below the global one
+        let (_, payload, wire) = arb_frame(rng);
+        if !payload.is_empty() {
+            assert!(
+                read_frame(&mut std::io::Cursor::new(&wire), payload.len() - 1).is_err(),
+                "case {case}: tightened cap not enforced"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_transport_handshake_version_skew_rejected() {
+    // Any version other than TRANSPORT_VERSION — older or newer — is a
+    // typed handshake error, never a silent reinterpretation.
+    forall(60, |rng, _case| {
+        let hello = Hello {
+            version: TRANSPORT_VERSION,
+            fingerprint: rng.next_u64(),
+            device_id: rng.below(1 << 20),
+            resume_round: rng.below(1 << 20),
+        };
+        assert_eq!(Hello::from_bytes(&hello.to_bytes()).unwrap(), hello);
+        let welcome = Welcome {
+            version: TRANSPORT_VERSION,
+            fingerprint: rng.next_u64(),
+            n_clients: 1 + rng.below(1 << 16),
+            rounds: rng.below(1 << 16),
+        };
+        assert_eq!(Welcome::from_bytes(&welcome.to_bytes()).unwrap(), welcome);
+        let skew = (rng.below(255) + 1) as u8;
+        let bad_version = TRANSPORT_VERSION.wrapping_add(skew);
+        let err = Hello::from_bytes(&Hello { version: bad_version, ..hello }.to_bytes())
+            .expect_err("hello version skew accepted");
+        assert!(err.to_string().contains("version"), "{err:#}");
+        let err =
+            Welcome::from_bytes(&Welcome { version: bad_version, ..welcome }.to_bytes())
+                .expect_err("welcome version skew accepted");
+        assert!(err.to_string().contains("version"), "{err:#}");
+        // truncation of the fixed-size handshake payloads
+        let hb = hello.to_bytes();
+        let cut = rng.below(hb.len() as u64) as usize;
+        assert!(Hello::from_bytes(&hb[..cut]).is_err());
+        // non-io errors never classify as straggler timeouts
+        assert!(!transport::is_timeout(&anyhow::anyhow!("not io")));
     });
 }
 

@@ -12,9 +12,10 @@ use fedsrn::compress::DownlinkMode;
 use fedsrn::config::{Algorithm, ExperimentConfig};
 use fedsrn::coordinator::RoundEngine;
 use fedsrn::data::{partition_iid, Dataset, SynthSpec, Synthetic};
-use fedsrn::fl::{Client, DownlinkMsg, Participation, RoundComm, RoundPlan, UplinkMsg};
+use fedsrn::fl::{
+    derive_client_seed, Client, DownlinkMsg, Participation, RoundComm, RoundPlan, UplinkMsg,
+};
 use fedsrn::runtime::ModelRuntime;
-use fedsrn::util::SeedSequence;
 
 const ROUNDS: usize = 3;
 
@@ -41,11 +42,10 @@ fn setup(cfg: &ExperimentConfig) -> (ModelRuntime, Dataset, Vec<Client>) {
     let mut spec = SynthSpec::by_name(&cfg.dataset).unwrap();
     spec.n_classes = rt.manifest.n_classes;
     let train = Synthetic::new(spec, cfg.seed ^ 0xDA7A).generate(cfg.train_samples, 1);
-    let streams = SeedSequence::new(cfg.seed).child(0xC11E);
     let clients: Vec<Client> = partition_iid(&train, cfg.clients, cfg.seed ^ 0x5A)
         .into_iter()
         .map(|s| {
-            let seed = streams.child(s.client_id as u64).seed();
+            let seed = derive_client_seed(cfg.seed, s.client_id);
             Client::new(s, seed)
         })
         .collect();
