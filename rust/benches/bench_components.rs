@@ -360,6 +360,158 @@ fn main() {
         eprintln!("(skipping runtime benches: no artifacts and no built-in model?)");
     }
 
+    // --- networked session loop (DESIGN.md §Transport) --------------------
+    // Loopback throughput of the readiness loop itself, against fake
+    // in-thread devices: whole session lifecycles (bind + fleet
+    // handshake + Done + teardown) and the steady-state round path
+    // (pipelined broadcast -> coded-mask uplinks -> ordered fold).
+    {
+        use fedsrn::algos::{MaskMode, MaskStrategy};
+        use fedsrn::fl::{
+            Conn, FrameKind, Hello, Participation, RoundComm, RoundPlan, Session,
+            SessionConfig, UplinkMsg, UplinkPayload, TRANSPORT_VERSION,
+        };
+        use std::time::{Duration, Instant};
+
+        const FLEET: usize = 8;
+        const NP: usize = 65_536;
+        const FP: u64 = 0x5E55;
+
+        fn session_cfg() -> SessionConfig {
+            SessionConfig {
+                expected: FLEET,
+                fingerprint: FP,
+                rounds: 1,
+                deadline: Duration::from_secs(10),
+                wave: 0,
+                needs_state_sync: false,
+            }
+        }
+        fn handshake(addr: &str, id: u64) -> Conn {
+            let mut conn = Conn::connect(addr).unwrap();
+            conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let hello = Hello {
+                version: TRANSPORT_VERSION,
+                fingerprint: FP,
+                device_id: id,
+                resume_round: 0,
+            };
+            conn.send(FrameKind::Hello, &hello.to_bytes()).unwrap();
+            conn.recv_expect(FrameKind::Welcome).unwrap();
+            conn
+        }
+
+        let name = "transport/sessions_per_sec";
+        if should_run(&filter, name) {
+            // one iter = one full lifecycle: bind, an 8-device fleet
+            // handshakes through the readiness loop, Done, teardown
+            let r = suite.bench(name, 2.0, 40, || {
+                let mut session = Session::bind("127.0.0.1:0", session_cfg()).unwrap();
+                let addr = session.local_addr().unwrap().to_string();
+                let devices: Vec<_> = (0..FLEET as u64)
+                    .map(|id| {
+                        let addr = addr.clone();
+                        std::thread::spawn(move || {
+                            let mut conn = handshake(&addr, id);
+                            conn.recv_expect(FrameKind::Done).unwrap();
+                        })
+                    })
+                    .collect();
+                session.wait_for_fleet(Duration::from_secs(10)).unwrap();
+                session.finish().unwrap();
+                for d in devices {
+                    d.join().unwrap();
+                }
+            });
+            r.print(&format!(
+                "{:>7.1} sessions/s ({FLEET} devices)",
+                1.0 / r.timing.mean_s
+            ));
+        }
+
+        let name = "transport/agg_mbps";
+        if should_run(&filter, name) {
+            let mut session = Session::bind("127.0.0.1:0", session_cfg()).unwrap();
+            let addr = session.local_addr().unwrap().to_string();
+            let up_bytes = UplinkMsg {
+                weight: 100.0,
+                train_loss: 0.5,
+                payload: UplinkPayload::CodedMask(compress::encode(&random_mask(
+                    NP, 0.5, 11,
+                ))),
+            }
+            .to_bytes();
+            let devices: Vec<_> = (0..FLEET as u64)
+                .map(|id| {
+                    let addr = addr.clone();
+                    let up = up_bytes.clone();
+                    std::thread::spawn(move || {
+                        let mut conn = handshake(&addr, id);
+                        loop {
+                            match conn.recv() {
+                                Ok((FrameKind::Round, _)) => {
+                                    conn.send(FrameKind::Uplink, &up).unwrap();
+                                }
+                                Ok((FrameKind::Done, _)) | Err(_) => break,
+                                Ok(_) => {}
+                            }
+                        }
+                    })
+                })
+                .collect();
+            session.wait_for_fleet(Duration::from_secs(10)).unwrap();
+            let mut server = MaskStrategy::new(NP, 5, MaskMode::Stochastic);
+            let mut fleet_state = None;
+            let mut plan = RoundPlan {
+                round: 0,
+                seed: 7,
+                lambda: 0.0,
+                lr: 0.1,
+                local_epochs: 1,
+                topk_frac: 0.3,
+                server_lr: 0.001,
+                adam: true,
+            };
+            let mut rounds = 0usize;
+            let start = Instant::now();
+            while rounds < 100 && start.elapsed() < Duration::from_secs(1) {
+                plan.round += 1;
+                let mut comm = RoundComm::new(NP);
+                session
+                    .run_round(
+                        &mut server,
+                        &mut fleet_state,
+                        Participation::default(),
+                        &plan,
+                        &mut comm,
+                    )
+                    .unwrap();
+                assert_eq!(comm.clients, FLEET, "every fake device must fold");
+                rounds += 1;
+            }
+            let elapsed = start.elapsed().as_secs_f64();
+            let naps = session.stats.idle_naps;
+            session.finish().unwrap();
+            for d in devices {
+                d.join().unwrap();
+            }
+            // byte counters fold into stats as connections retire, so
+            // totals are only complete after finish()
+            let mb = (session.stats.tx_bytes + session.stats.rx_bytes) as f64 / 1e6;
+            // trajectory entry: one "iter" = one MB through the loop
+            // (ns/MB), so ratios against future runs stay meaningful
+            suite.record_run(name, rounds, elapsed * 1e9 / mb, None);
+            println!(
+                "{:<44} {:>7} rounds  {:>7.1} MB/s aggregate  \
+                 ({FLEET} devices, {} B uplinks, {naps} idle naps)",
+                name,
+                rounds,
+                mb / elapsed,
+                up_bytes.len()
+            );
+        }
+    }
+
     suite.write();
 }
 

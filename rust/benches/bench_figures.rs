@@ -185,6 +185,75 @@ fn main() {
         );
     }
 
+    // ---- serve: the same round loop over real loopback sockets -----------
+    // One end-to-end networked run (serve-side session + device threads,
+    // the full `fedsrn serve`/`device` code path) so the trajectory
+    // tracks socket-runtime round throughput next to the in-process
+    // engine's.
+    if should_run(&filter, "serve/fig1-loopback") {
+        use fedsrn::fl::{run_device, run_fingerprint, DeviceOpts, Session, SessionConfig};
+        use std::time::Duration;
+        println!("== serve/fig1-loopback (FedPM+reg, 8 devices over TCP, 8 rounds) ==");
+        // same shape as engine/fig1-iid/threads=1, so the recorded
+        // ratio is the socket runtime's overhead over the in-process
+        // engine
+        let mut cfg = base("mlp_tiny", "tiny");
+        cfg.clients = 8;
+        cfg.rounds = 8;
+        cfg.algorithm = Algorithm::FedPMReg;
+        cfg.lambda = 1.0;
+        cfg.eval_every = 1_000; // isolate the round loop from eval
+        let rounds = cfg.rounds;
+        let t0 = std::time::Instant::now();
+        let mut exp = Experiment::build(cfg.clone()).unwrap();
+        let fingerprint = run_fingerprint(&exp.cfg, &exp.runtime().manifest);
+        let scfg = SessionConfig::from_experiment(
+            &exp.cfg,
+            fingerprint,
+            Duration::from_secs(30),
+            0,
+        );
+        let mut session = Session::bind("127.0.0.1:0", scfg).unwrap();
+        let addr = session.local_addr().unwrap().to_string();
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|id| {
+                let cfg = cfg.clone();
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let opts = DeviceOpts {
+                        addr,
+                        device_id: id,
+                        connect_timeout: Duration::from_secs(30),
+                        chaos: None,
+                    };
+                    run_device(&cfg, &opts)
+                })
+            })
+            .collect();
+        session.wait_for_fleet(Duration::from_secs(30)).unwrap();
+        let mut sink = MetricsSink::new("", 10_000).unwrap();
+        let summary = exp.run_served(&mut session, &mut sink).unwrap();
+        session.finish().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        let r = FigRun {
+            label: "serve (loopback)".to_string(),
+            acc: summary.final_accuracy,
+            bpp: summary.avg_est_bpp,
+            rounds,
+            secs_per_round: t0.elapsed().as_secs_f64() / rounds as f64,
+        };
+        print_run(&r);
+        r.record(&mut suite, "serve/fig1-loopback", Some("engine/fig1-iid/threads=1"));
+        println!(
+            "  transport: tx {:.2} MB rx {:.2} MB, {} idle naps\n",
+            session.stats.tx_bytes as f64 / 1e6,
+            session.stats.rx_bytes as f64 / 1e6,
+            session.stats.idle_naps
+        );
+    }
+
     // ---- storage table (conclusion: model = seed + mask) ------------------
     if should_run(&filter, "storage") {
         println!("== storage (seed+mask vs dense float) ==");

@@ -181,8 +181,9 @@ impl Experiment {
 
     /// Run all rounds over a networked [`Session`] (`fedsrn serve`):
     /// identical lifecycle — same evaluation, metrics, and summaries —
-    /// with the round itself driven across real device sockets instead
-    /// of the in-process engine.
+    /// with the round itself driven by the session's single-threaded
+    /// readiness loop across real device sockets instead of the
+    /// in-process engine.
     pub fn run_served(
         &mut self,
         session: &mut Session,
@@ -231,7 +232,11 @@ impl Experiment {
                 participation,
                 &plan,
                 &mut comm,
-            )?;
+            )
+            // a failed round names itself: under fault injection the
+            // serve log must show *which* round died and why (e.g. a
+            // whole cohort lost -> "no uplinks received this round")
+            .with_context(|| format!("round {round}/{} failed", self.cfg.rounds))?;
             self.totals.add_round(&comm);
             est_bpp_sum += comm.est_bpp();
             coded_bpp_sum += comm.measured_bpp();

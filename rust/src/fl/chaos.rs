@@ -1,0 +1,420 @@
+//! Deterministic network-fault injection for the loopback harness.
+//!
+//! [`ChaosStream`] sits between `fl::transport` framing and the socket —
+//! it implements [`Wire`], so a [`crate::fl::transport::Conn`] built on
+//! it frames bytes exactly as usual while the wrapper mangles the I/O
+//! underneath. Every decision is drawn from a [`Xoshiro256`] stream
+//! derived via [`SeedSequence`] (`util/rng.rs`), so a *chaos schedule* —
+//! which writes stall, which frames are split or corrupted, when the
+//! connection dies — is a pure function of `(chaos seed, device id,
+//! connection attempt)` and replays identically across runs.
+//!
+//! The injected faults are the four real-network failure classes the
+//! session layer must absorb:
+//!
+//! * **Delays** — bounded sleeps before an op (always ≪ the session's
+//!   straggler deadline, so a delay alone never changes the outcome);
+//! * **Split/short writes** — a write accepts only a prefix, forcing
+//!   the peer's incremental `FrameBuf` to see partial frames;
+//! * **Corrupted frames** — one byte of a read or write is flipped,
+//!   which the FNV-1a frame checksum must catch;
+//! * **Mid-round disconnects** — the socket is shut down and every
+//!   later op fails with `ConnectionReset`, driving the peer into the
+//!   typed dropout/reconnect path.
+//!
+//! The chaos RNG starts **disarmed** so the Hello/Welcome handshake
+//! always completes cleanly (fleet assembly is not the failure model
+//! under test); the device loop arms it via the [`ChaosSwitch`] right
+//! after `Welcome` validates. The whole-session invariant this enables
+//! (`tests/transport_e2e.rs`): every schedule ends in a bit-identical
+//! run summary or a typed dropout/reconnect/error — never a hang, a
+//! panic, or a silently wrong aggregate.
+
+use std::io::{Error, ErrorKind, Read, Result, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::fl::transport::Wire;
+use crate::util::rng::{SeedSequence, Xoshiro256};
+
+/// Domain tag separating chaos streams from every other consumer of the
+/// experiment seed tree.
+const CHAOS_TAG: u64 = 0xC4A0_5EED;
+
+/// Per-op fault probabilities + delay bound: one *chaos schedule* when
+/// combined with a seed. Probabilities apply independently per
+/// `read`/`write` call on the wrapped socket.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosSpec {
+    pub seed: u64,
+    /// P(sleep before an op).
+    pub p_delay: f64,
+    /// Upper bound on one injected sleep.
+    pub max_delay: Duration,
+    /// P(a write accepts only a random prefix).
+    pub p_split: f64,
+    /// P(one byte of an op's buffer is flipped).
+    pub p_corrupt: f64,
+    /// P(the connection dies at this op, permanently).
+    pub p_disconnect: f64,
+}
+
+impl ChaosSpec {
+    /// A schedule whose intensities are themselves drawn from the seed:
+    /// each probability lands uniformly in `[0, max]`, so a sweep over
+    /// seeds covers everything from near-clean runs (which must stay
+    /// bit-identical) to heavily degraded ones (which must end typed).
+    pub fn from_seed(seed: u64) -> Self {
+        let mut rng = SeedSequence::new(seed).child(CHAOS_TAG).xoshiro();
+        Self {
+            seed,
+            p_delay: 0.25 * rng.next_f64(),
+            max_delay: Duration::from_micros(rng.below(5_000)),
+            p_split: 0.5 * rng.next_f64(),
+            p_corrupt: 0.12 * rng.next_f64(),
+            p_disconnect: 0.08 * rng.next_f64(),
+        }
+    }
+
+    /// A fixed high-intensity schedule for smoke jobs: frequent splits
+    /// and delays plus enough corruption/disconnection that a short
+    /// multi-device run is all but guaranteed to exercise the typed
+    /// degraded paths (used by `fedsrn device --chaos-seed`).
+    pub fn aggressive(seed: u64) -> Self {
+        Self {
+            seed,
+            p_delay: 0.15,
+            max_delay: Duration::from_millis(5),
+            p_split: 0.35,
+            p_corrupt: 0.06,
+            p_disconnect: 0.03,
+        }
+    }
+
+    /// The decision stream for one connection: distinct per device and
+    /// per reconnect attempt, pure in all three inputs.
+    pub fn rng_for(&self, device_id: usize, attempt: u64) -> Xoshiro256 {
+        SeedSequence::new(self.seed)
+            .child(CHAOS_TAG)
+            .child(device_id as u64)
+            .child(attempt)
+            .xoshiro()
+    }
+}
+
+/// Handle to arm a [`ChaosStream`] after the handshake completes.
+#[derive(Clone)]
+pub struct ChaosSwitch(Arc<AtomicBool>);
+
+impl ChaosSwitch {
+    pub fn arm(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn armed(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Counters of what the schedule actually injected (shared, so tests
+/// can assert determinism and harnesses can report degradation).
+#[derive(Debug, Default)]
+pub struct ChaosEvents {
+    pub delays: std::sync::atomic::AtomicU64,
+    pub splits: std::sync::atomic::AtomicU64,
+    pub corruptions: std::sync::atomic::AtomicU64,
+    pub disconnects: std::sync::atomic::AtomicU64,
+}
+
+impl ChaosEvents {
+    pub fn total_faults(&self) -> u64 {
+        self.corruptions.load(Ordering::Relaxed) + self.disconnects.load(Ordering::Relaxed)
+    }
+}
+
+/// A [`Wire`] that forwards to an inner wire while injecting the
+/// seeded fault schedule. Generic so tests can drive it over in-memory
+/// wires; the device loop uses `ChaosStream<TcpStream>`.
+pub struct ChaosStream<S: Wire> {
+    inner: S,
+    rng: Xoshiro256,
+    spec: ChaosSpec,
+    armed: Arc<AtomicBool>,
+    events: Arc<ChaosEvents>,
+    /// Once the schedule kills the connection, every op fails.
+    dead: bool,
+}
+
+impl<S: Wire> ChaosStream<S> {
+    /// Wrap `inner` with the schedule `spec`, drawing decisions from
+    /// `rng` (see [`ChaosSpec::rng_for`]). Starts disarmed.
+    pub fn wrap(
+        inner: S,
+        spec: ChaosSpec,
+        rng: Xoshiro256,
+    ) -> (Self, ChaosSwitch, Arc<ChaosEvents>) {
+        let armed = Arc::new(AtomicBool::new(false));
+        let events = Arc::new(ChaosEvents::default());
+        let stream = Self {
+            inner,
+            rng,
+            spec,
+            armed: Arc::clone(&armed),
+            events: Arc::clone(&events),
+            dead: false,
+        };
+        (stream, ChaosSwitch(armed), events)
+    }
+
+    fn active(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    /// Pre-op faults shared by reads and writes. Returns `Err` when the
+    /// schedule disconnects here.
+    fn pre_op(&mut self) -> Result<()> {
+        if self.dead {
+            return Err(Error::new(ErrorKind::ConnectionReset, "chaos: connection dead"));
+        }
+        if self.rng.next_f64() < self.spec.p_delay {
+            let us = self.spec.max_delay.as_micros() as u64;
+            if us > 0 {
+                let sleep = self.rng.below(us);
+                self.events.delays.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_micros(sleep));
+            }
+        }
+        if self.rng.next_f64() < self.spec.p_disconnect {
+            self.dead = true;
+            self.events.disconnects.fetch_add(1, Ordering::Relaxed);
+            self.inner.shutdown();
+            return Err(Error::new(ErrorKind::ConnectionReset, "chaos: injected disconnect"));
+        }
+        Ok(())
+    }
+}
+
+impl<S: Wire> Read for ChaosStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> Result<usize> {
+        if !self.active() {
+            return self.inner.read(buf);
+        }
+        self.pre_op()?;
+        let n = self.inner.read(buf)?;
+        if n > 0 && self.rng.next_f64() < self.spec.p_corrupt {
+            let i = self.rng.below(n as u64) as usize;
+            buf[i] ^= 1 << self.rng.below(8);
+            self.events.corruptions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(n)
+    }
+}
+
+impl<S: Wire> Write for ChaosStream<S> {
+    fn write(&mut self, buf: &[u8]) -> Result<usize> {
+        if !self.active() || buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        self.pre_op()?;
+        // short write: hand the kernel only a prefix; the caller's
+        // `write_all` (or the session's write queue) retries the rest,
+        // so the peer observes a partial frame in between
+        let len = if buf.len() > 1 && self.rng.next_f64() < self.spec.p_split {
+            self.events.splits.fetch_add(1, Ordering::Relaxed);
+            1 + self.rng.below(buf.len() as u64 - 1) as usize
+        } else {
+            buf.len()
+        };
+        if self.rng.next_f64() < self.spec.p_corrupt {
+            let mut mangled = buf[..len].to_vec();
+            let i = self.rng.below(len as u64) as usize;
+            mangled[i] ^= 1 << self.rng.below(8);
+            self.events.corruptions.fetch_add(1, Ordering::Relaxed);
+            self.inner.write(&mangled)
+        } else {
+            self.inner.write(&buf[..len])
+        }
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.inner.flush()
+    }
+}
+
+impl<S: Wire> Wire for ChaosStream<S> {
+    fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        self.inner.set_read_timeout(d)
+    }
+
+    fn set_nonblocking(&self, on: bool) -> Result<()> {
+        self.inner.set_nonblocking(on)
+    }
+
+    fn shutdown(&self) {
+        self.inner.shutdown();
+    }
+
+    fn peer_desc(&self) -> String {
+        format!("{} (chaos seed {})", self.inner.peer_desc(), self.spec.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::transport::{write_frame, FrameBuf, FrameKind, MAX_FRAME_BYTES};
+
+    /// In-memory wire: reads from a script, records writes.
+    struct MemWire {
+        input: std::io::Cursor<Vec<u8>>,
+        output: Vec<u8>,
+    }
+
+    impl MemWire {
+        fn new(input: Vec<u8>) -> Self {
+            Self { input: std::io::Cursor::new(input), output: Vec::new() }
+        }
+    }
+
+    impl Read for MemWire {
+        fn read(&mut self, buf: &mut [u8]) -> Result<usize> {
+            self.input.read(buf)
+        }
+    }
+
+    impl Write for MemWire {
+        fn write(&mut self, buf: &[u8]) -> Result<usize> {
+            self.output.write(buf)
+        }
+
+        fn flush(&mut self) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    impl Wire for MemWire {
+        fn set_read_timeout(&self, _d: Option<Duration>) -> Result<()> {
+            Ok(())
+        }
+
+        fn set_nonblocking(&self, _on: bool) -> Result<()> {
+            Ok(())
+        }
+
+        fn shutdown(&self) {}
+
+        fn peer_desc(&self) -> String {
+            "mem".into()
+        }
+    }
+
+    fn spec_hot() -> ChaosSpec {
+        ChaosSpec {
+            seed: 11,
+            p_delay: 0.0, // keep unit tests instant
+            max_delay: Duration::ZERO,
+            p_split: 0.6,
+            p_corrupt: 0.3,
+            p_disconnect: 0.05,
+        }
+    }
+
+    /// Drive `frames` through a fresh chaos stream; return the mangled
+    /// bytes that reached the wire and the event counts.
+    fn run_schedule(spec: &ChaosSpec, attempt: u64) -> (Vec<u8>, u64, u64, u64) {
+        let (mut chaos, switch, events) =
+            ChaosStream::wrap(MemWire::new(Vec::new()), *spec, spec.rng_for(0, attempt));
+        switch.arm();
+        for i in 0..40u8 {
+            let _ = write_frame(&mut chaos, FrameKind::Uplink, &[i; 50]);
+        }
+        (
+            chaos.inner.output,
+            events.splits.load(Ordering::Relaxed),
+            events.corruptions.load(Ordering::Relaxed),
+            events.disconnects.load(Ordering::Relaxed),
+        )
+    }
+
+    #[test]
+    fn schedule_is_deterministic_in_seed_and_attempt() {
+        let spec = spec_hot();
+        let a = run_schedule(&spec, 0);
+        let b = run_schedule(&spec, 0);
+        assert_eq!(a, b, "same (seed, device, attempt) => same mangling");
+        let c = run_schedule(&spec, 1);
+        assert_ne!(a.0, c.0, "a reconnect draws a fresh stream");
+    }
+
+    #[test]
+    fn disarmed_stream_is_transparent() {
+        let spec = spec_hot();
+        let (mut chaos, _switch, events) =
+            ChaosStream::wrap(MemWire::new(Vec::new()), spec, spec.rng_for(0, 0));
+        let mut clean = Vec::new();
+        for i in 0..10u8 {
+            write_frame(&mut chaos, FrameKind::Round, &[i; 30]).unwrap();
+            write_frame(&mut clean, FrameKind::Round, &[i; 30]).unwrap();
+        }
+        assert_eq!(chaos.inner.output, clean, "disarmed chaos must not touch bytes");
+        assert_eq!(events.total_faults(), 0);
+    }
+
+    #[test]
+    fn corrupted_writes_fail_frame_validation_never_decode_wrong() {
+        // whatever chaos does to framed bytes, the receiving FrameBuf
+        // yields either intact frames or a typed error — the transport
+        // guarantee the session invariant is built on
+        for seed in 0..32u64 {
+            let spec = ChaosSpec { seed, ..spec_hot() };
+            let (wire_bytes, _s, corruptions, disconnects) = run_schedule(&spec, 0);
+            let mut fb = FrameBuf::new();
+            fb.extend(&wire_bytes);
+            let mut intact = 0u64;
+            loop {
+                match fb.next_frame(MAX_FRAME_BYTES) {
+                    Ok(Some((kind, payload))) => {
+                        // a yielded frame is bitwise what the sender
+                        // framed — chaos may lose frames (typed error or
+                        // truncation) but can never hand back wrong data
+                        assert_eq!(kind, FrameKind::Uplink);
+                        assert_eq!(payload.len(), 50);
+                        let fill = payload[0];
+                        assert!(payload.iter().all(|&b| b == fill), "mangled frame decoded");
+                        intact += 1;
+                    }
+                    Ok(None) | Err(_) => break,
+                }
+            }
+            if corruptions + disconnects > 0 {
+                assert!(intact < 40, "seed {seed}: a faulted frame cannot arrive intact");
+            } else {
+                // splits and delays alone reorder nothing and lose nothing
+                assert_eq!(intact, 40, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn disconnect_is_permanent() {
+        let spec = ChaosSpec { p_disconnect: 1.0, ..spec_hot() };
+        let (mut chaos, switch, events) =
+            ChaosStream::wrap(MemWire::new(Vec::new()), spec, spec.rng_for(3, 0));
+        switch.arm();
+        assert!(write_frame(&mut chaos, FrameKind::Uplink, b"x").is_err());
+        assert!(write_frame(&mut chaos, FrameKind::Uplink, b"x").is_err());
+        let mut buf = [0u8; 4];
+        assert!(chaos.read(&mut buf).is_err());
+        assert_eq!(events.disconnects.load(Ordering::Relaxed), 1, "dies once, stays dead");
+    }
+
+    #[test]
+    fn from_seed_spans_mild_to_wild() {
+        let specs: Vec<ChaosSpec> = (0..64).map(ChaosSpec::from_seed).collect();
+        assert!(specs.iter().any(|s| s.p_corrupt < 0.06), "some schedules are near-clean");
+        assert!(specs.iter().any(|s| s.p_corrupt > 0.06), "some schedules corrupt hard");
+        assert!(specs.iter().all(|s| s.max_delay < Duration::from_millis(10)));
+        assert_eq!(ChaosSpec::from_seed(5), ChaosSpec::from_seed(5));
+    }
+}

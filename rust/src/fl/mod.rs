@@ -11,6 +11,7 @@
 //! `fedsrn device` — DESIGN.md §Transport), bit-identical to the
 //! in-process path.
 
+pub mod chaos;
 pub mod client;
 pub mod participation;
 pub mod comm;
@@ -20,6 +21,7 @@ pub mod server;
 pub mod session;
 pub mod transport;
 
+pub use chaos::{ChaosEvents, ChaosSpec, ChaosStream, ChaosSwitch};
 pub use client::{derive_client_seed, Client};
 pub use participation::Participation;
 pub use comm::{CommTotals, RoundComm};
@@ -29,4 +31,6 @@ pub use server::Server;
 pub use session::{
     run_device, DeviceOpts, DeviceReport, Session, SessionConfig, SessionStats,
 };
-pub use transport::{run_fingerprint, Conn, FrameKind, Hello, Welcome, TRANSPORT_VERSION};
+pub use transport::{
+    run_fingerprint, Conn, FrameBuf, FrameKind, Hello, Welcome, Wire, TRANSPORT_VERSION,
+};

@@ -6,39 +6,58 @@
 //! [`crate::coordinator::RoundEngine`], but every hop crosses a real
 //! [`crate::fl::transport`] socket:
 //!
-//! * **Registry** — [`Session`] owns one framed connection per device
-//!   id. Devices register with the [`crate::fl::transport::Hello`]
-//!   handshake (version + run fingerprint validated, mismatches get a
-//!   typed error frame back); a reconnecting device replaces its stale
-//!   connection and, when the `qdelta` chain made its state
-//!   irrecoverable, receives a full-state `Sync` frame first.
-//! * **Round barrier** — [`Session::run_round`] mirrors the engine's
-//!   schedule exactly: sample the cohort, broadcast one `Round` frame
-//!   (chain links go to the whole fleet, stateless broadcasts only to
-//!   the cohort), then collect uplinks **in cohort order** in bounded
-//!   waves of ~2x the worker count, folding each envelope the moment it
-//!   lands — coordinator memory stays O(wave × n_params) at any cohort
-//!   size, and the fold order (hence the aggregate) is bit-identical to
-//!   the in-process path.
-//! * **Straggler deadline** — every uplink read carries a wall-clock
-//!   deadline; a device that blows it is converted into the existing
-//!   dropout path ("trained, but the uplink never lands"), its
+//! * **Readiness loop** — [`Session`] owns one non-blocking framed
+//!   connection per device id plus a pending-handshake list, and drives
+//!   them all from a single thread: each [`Session::sweep`] drains the
+//!   accept queue, pumps every socket's reads and writes as far as the
+//!   kernel allows, and parses completed frames into per-device inboxes
+//!   (incremental [`crate::fl::transport::FrameBuf`] decoding). No
+//!   thread-per-connection, no blocking reads, no fixed-cadence polling:
+//!   the loop naps (500µs, counted in [`SessionStats::idle_naps`]) only
+//!   on sweeps that provably made no progress, so one server multiplexes
+//!   thousands of device sockets.
+//! * **Registry** — devices register with the
+//!   [`crate::fl::transport::Hello`] handshake (version + run
+//!   fingerprint validated, mismatches get a typed error frame back); a
+//!   reconnecting device replaces its stale connection. Each connection
+//!   carries a generation tag so a mid-round reconnect can never be
+//!   mistaken for the connection a broadcast went out on.
+//! * **Pipelined round barrier** — [`Session::run_round`] mirrors the
+//!   engine's schedule exactly: sample the cohort, queue the `Round`
+//!   frame (chain links go to the whole fleet, stateless broadcasts only
+//!   to the cohort), then slide a bounded window of ~2x the worker count
+//!   over the cohort — broadcasting ahead of the fold frontier while
+//!   late uplinks drain — and fold every envelope **in cohort order**,
+//!   so coordinator memory stays O(wave × n_params) and the aggregate is
+//!   bit-identical to the in-process path. A device that missed `qdelta`
+//!   chain links is resynced with a full-state `Sync` frame queued
+//!   immediately before its next `Round` frame.
+//! * **Straggler deadline** — every in-flight uplink carries a
+//!   wall-clock deadline; a device that blows it is converted into the
+//!   existing dropout path ("trained, but the uplink never lands"), its
 //!   connection is dropped, and the round continues. Injected dropout
 //!   (the `dropout` config key) is decided device-side from the same
 //!   seeded [`Participation::drops`] the engine uses, shipped as a tiny
 //!   `Dropped` frame so accounting matches the simulation bit-for-bit.
+//!   An uplink that fully arrived before its connection died still
+//!   counts: dead connections park their parsed inbox as dead letters
+//!   for the round to collect.
 //! * **Accounting** — [`crate::fl::RoundComm`] records the serialized
 //!   envelope bytes exactly as the in-process engine does (the envelope
 //!   is byte-identical on the socket); [`SessionStats`] additionally
 //!   reports the transport-level totals (frame headers, checksums,
-//!   handshakes) actually moved.
+//!   handshakes) actually moved, plus the degraded-path counters.
 //!
 //! The device half, [`run_device`], derives its shard, seeds, cohort
 //! membership, and dropout decisions from the shared config — pure
 //! functions of `(seed, round, id)` — so a fleet of independent
-//! processes reproduces the simulated federation exactly.
+//! processes reproduces the simulated federation exactly. For fault
+//! testing it can wrap its socket in a [`crate::fl::chaos::ChaosStream`]
+//! ([`DeviceOpts::chaos`]), which injects seeded delays, split writes,
+//! corrupted frames, and disconnects *after* a clean handshake.
 
-use std::net::{SocketAddr, TcpListener};
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::time::{Duration, Instant};
 
@@ -49,18 +68,23 @@ use crate::compress::DownlinkMode;
 use crate::config::ExperimentConfig;
 use crate::coordinator::RoundEngine;
 use crate::data::{load_experiment_data, partition_fleet};
+use crate::fl::chaos::{ChaosSpec, ChaosStream};
 use crate::fl::client::derive_client_seed;
 use crate::fl::protocol::{DownlinkMsg, RoundPlan};
 use crate::fl::transport::{
-    is_timeout, run_fingerprint, Conn, FrameKind, Hello, Welcome, TRANSPORT_VERSION,
+    is_timeout, run_fingerprint, write_frame, Conn, FrameBuf, FrameKind, Hello, Welcome,
+    MAX_FRAME_BYTES, TRANSPORT_VERSION,
 };
 use crate::fl::{Client, Participation, RoundComm, UplinkMsg};
 use crate::runtime::ModelRuntime;
 
 /// How long a registering device may take to complete its handshake.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
-/// Accept-loop poll cadence (the listener is non-blocking).
-const ACCEPT_POLL: Duration = Duration::from_millis(10);
+/// Nap length for sweeps that made no progress (the only sleep in the
+/// readiness loop; counted in [`SessionStats::idle_naps`]).
+const NAP: Duration = Duration::from_micros(500);
+/// How long [`Session::finish`] keeps flushing queued `Done` frames.
+const FINISH_FLUSH: Duration = Duration::from_secs(5);
 
 /// Server-session knobs (the CLI flags of `fedsrn serve`).
 #[derive(Debug, Clone)]
@@ -71,9 +95,9 @@ pub struct SessionConfig {
     pub fingerprint: u64,
     /// Total rounds (echoed in the handshake for operator sanity).
     pub rounds: usize,
-    /// Straggler deadline per uplink read.
+    /// Straggler deadline per in-flight uplink.
     pub deadline: Duration,
-    /// Uplink collection wave size; 0 = the round engine's sizing.
+    /// Broadcast window size; 0 = the round engine's wave sizing.
     pub wave: usize,
     /// `downlink=qdelta`: a reconnecting device that missed chain links
     /// needs a full-state `Sync` frame before its next round.
@@ -114,16 +138,91 @@ pub struct SessionStats {
     pub reconnects: usize,
     /// Full-state resync frames sent to reconnecting devices.
     pub syncs: usize,
+    /// Corrupt frames / protocol violations that cost a connection.
+    pub protocol_errors: usize,
+    /// Zero-progress sweeps that slept one [`NAP`]. The readiness loop's
+    /// only sleep — a busy fleet keeps this near zero.
+    pub idle_naps: u64,
+}
+
+/// One registered device in the readiness loop: the non-blocking
+/// connection plus its partial-frame read buffer, queued writes, parsed
+/// inbox, and the generation tag that distinguishes this connection
+/// from any earlier one under the same device id.
+struct DeviceConn {
+    conn: Conn,
+    rbuf: FrameBuf,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    inbox: VecDeque<(FrameKind, Vec<u8>)>,
+    gen: u64,
+    /// Last round whose broadcast this connection is known (or queued)
+    /// to have decoded — drives lazy `Sync` scheduling for `qdelta`.
+    state_round: usize,
+}
+
+/// An accepted connection that has not completed its `Hello` yet.
+struct Pending {
+    conn: Conn,
+    rbuf: FrameBuf,
+    since: Instant,
 }
 
 /// The server side of the networked runtime: listener + device registry
-/// + the socket-driven round barrier.
+/// + the single-threaded readiness loop that drives the round barrier.
 pub struct Session {
     listener: TcpListener,
-    devices: Vec<Option<Conn>>,
+    devices: Vec<Option<DeviceConn>>,
+    pending: Vec<Pending>,
+    /// Parsed-but-unconsumed frames from connections that died, keyed by
+    /// device id and tagged with the dead connection's generation: an
+    /// uplink that fully arrived before the disconnect still counts.
+    dead_letters: Vec<Option<(u64, VecDeque<(FrameKind, Vec<u8>)>)>>,
+    /// Which ids have ever registered (re-registration = reconnect).
+    seen: Vec<bool>,
+    next_gen: u64,
     cfg: SessionConfig,
     rounds_completed: usize,
     pub stats: SessionStats,
+}
+
+/// Drain one socket's readable bytes into its frame buffer. Returns
+/// `(bytes_read, dead)`; EOF and non-retryable errors mean dead.
+fn pump_reads(conn: &mut Conn, rbuf: &mut FrameBuf, scratch: &mut [u8]) -> (usize, bool) {
+    let mut total = 0;
+    loop {
+        match conn.read_some(scratch) {
+            Ok(0) => return (total, true),
+            Ok(n) => {
+                rbuf.extend(&scratch[..n]);
+                total += n;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return (total, false),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return (total, true),
+        }
+    }
+}
+
+/// Flush as much of a device's queued writes as the kernel accepts.
+/// Returns `(bytes_written, dead)`.
+fn pump_writes(dc: &mut DeviceConn) -> (usize, bool) {
+    let mut total = 0;
+    while dc.wpos < dc.wbuf.len() {
+        match dc.conn.write_some(&dc.wbuf[dc.wpos..]) {
+            Ok(0) => return (total, true),
+            Ok(n) => {
+                dc.wpos += n;
+                total += n;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return (total, false),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return (total, true),
+        }
+    }
+    dc.wbuf.clear();
+    dc.wpos = 0;
+    (total, false)
 }
 
 impl Session {
@@ -135,7 +234,19 @@ impl Session {
             TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         listener.set_nonblocking(true).context("setting listener non-blocking")?;
         let devices = (0..cfg.expected).map(|_| None).collect();
-        Ok(Self { listener, devices, cfg, rounds_completed: 0, stats: SessionStats::default() })
+        let dead_letters = (0..cfg.expected).map(|_| None).collect();
+        let seen = vec![false; cfg.expected];
+        Ok(Self {
+            listener,
+            devices,
+            pending: Vec::new(),
+            dead_letters,
+            seen,
+            next_gen: 0,
+            cfg,
+            rounds_completed: 0,
+            stats: SessionStats::default(),
+        })
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
@@ -147,49 +258,30 @@ impl Session {
         self.devices.iter().filter(|d| d.is_some()).count()
     }
 
-    /// Block (polling) until every expected device has registered, or
-    /// fail after `timeout` naming the ids still missing.
-    pub fn wait_for_fleet(&mut self, timeout: Duration) -> Result<()> {
-        let start = Instant::now();
-        while self.connected() < self.cfg.expected {
-            if !self.accept_pending(&None)? && start.elapsed() > timeout {
-                let missing: Vec<usize> = self
-                    .devices
-                    .iter()
-                    .enumerate()
-                    .filter_map(|(i, d)| d.is_none().then_some(i))
-                    .collect();
-                bail!(
-                    "{}/{} devices registered after {:.0?}; missing ids {missing:?}",
-                    self.connected(),
-                    self.cfg.expected,
-                    timeout
-                );
-            }
-            std::thread::sleep(ACCEPT_POLL);
-        }
-        Ok(())
-    }
-
-    /// Drain the accept queue, handshaking every pending connection.
-    /// Returns whether any registration happened. `fleet_state` is the
-    /// current broadcast reconstruction, used to resync reconnects.
-    fn accept_pending(&mut self, fleet_state: &Option<Vec<f32>>) -> Result<bool> {
-        let mut any = false;
+    /// One pass of the readiness loop: accept new connections, advance
+    /// pending handshakes, and pump every registered socket's reads and
+    /// writes, parsing completed frames into the per-device inboxes.
+    /// Returns whether anything moved (a byte, a frame, a registration);
+    /// callers nap only when it did not.
+    fn sweep(&mut self) -> Result<bool> {
+        let mut progress = false;
+        let mut scratch = [0u8; 16 * 1024];
+        // 1) accept queue -> pending handshakes
         loop {
             match self.listener.accept() {
                 Ok((stream, _)) => {
-                    match self.handshake(Conn::new(stream)?, fleet_state) {
-                        Ok(id) => {
-                            any = true;
-                            eprintln!("session: device {id} registered");
-                        }
-                        Err(e) => eprintln!("session: handshake rejected: {e:#}"),
-                    }
+                    let conn = Conn::new(stream)?;
+                    conn.set_nonblocking(true)?;
+                    self.pending.push(Pending {
+                        conn,
+                        rbuf: FrameBuf::new(),
+                        since: Instant::now(),
+                    });
+                    progress = true;
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                // A peer that connected and reset before we got to it
-                // is its problem, not the federation's: skip it.
+                // A peer that connected and reset before we got to it is
+                // its problem, not the federation's: skip it.
                 Err(e)
                     if matches!(
                         e.kind(),
@@ -200,22 +292,140 @@ impl Session {
                 Err(e) => return Err(e).context("accepting device connection"),
             }
         }
-        Ok(any)
+        // 2) pending handshakes: read until one whole frame is in
+        let mut i = 0;
+        while i < self.pending.len() {
+            let (n, dead) = {
+                let p = &mut self.pending[i];
+                pump_reads(&mut p.conn, &mut p.rbuf, &mut scratch)
+            };
+            progress |= n > 0;
+            let frame = self.pending[i].rbuf.next_frame(MAX_FRAME_BYTES);
+            let expired = self.pending[i].since.elapsed() > HANDSHAKE_TIMEOUT;
+            match frame {
+                Ok(Some((FrameKind::Hello, payload))) => {
+                    let p = self.pending.swap_remove(i);
+                    progress = true;
+                    match self.finish_handshake(p.conn, p.rbuf, &payload) {
+                        Ok(id) => eprintln!("session: device {id} registered"),
+                        Err(e) => eprintln!("session: handshake rejected: {e:#}"),
+                    }
+                }
+                Ok(Some((kind, _))) => {
+                    let p = self.pending.swap_remove(i);
+                    eprintln!(
+                        "session: pending connection sent {} before Hello; dropping",
+                        kind.name()
+                    );
+                    self.stats.protocol_errors += 1;
+                    self.retire(p.conn);
+                }
+                Err(e) => {
+                    let p = self.pending.swap_remove(i);
+                    eprintln!("session: pending connection sent a corrupt frame ({e:#}); dropping");
+                    self.stats.protocol_errors += 1;
+                    self.retire(p.conn);
+                }
+                Ok(None) if dead || expired => {
+                    let p = self.pending.swap_remove(i);
+                    self.retire(p.conn);
+                }
+                Ok(None) => i += 1,
+            }
+        }
+        // 3) registered devices: flush writes, drain reads, parse frames
+        for id in 0..self.devices.len() {
+            let mut dead = false;
+            let mut corrupt = false;
+            if let Some(dc) = &mut self.devices[id] {
+                let (wn, wdead) = pump_writes(dc);
+                let (rn, rdead) = pump_reads(&mut dc.conn, &mut dc.rbuf, &mut scratch);
+                progress |= wn > 0 || rn > 0;
+                dead = wdead || rdead;
+                // Parse everything delivered, even from a dying
+                // connection: an uplink that fully arrived before the
+                // EOF still counts (dead-letter path).
+                loop {
+                    match dc.rbuf.next_frame(MAX_FRAME_BYTES) {
+                        Ok(Some(frame)) => {
+                            dc.inbox.push_back(frame);
+                            progress = true;
+                        }
+                        Ok(None) => break,
+                        Err(_) => {
+                            dead = true;
+                            corrupt = true;
+                            break;
+                        }
+                    }
+                }
+            } else {
+                continue;
+            }
+            if corrupt {
+                self.stats.protocol_errors += 1;
+            }
+            if dead {
+                let reason = if corrupt { "corrupt frame" } else { "peer closed or reset" };
+                eprintln!("session: device {id} connection lost ({reason}); dropping connection");
+                self.drop_device(id);
+            }
+        }
+        Ok(progress)
     }
 
-    /// Validate one device's `Hello`, reply `Welcome` (or a typed error
-    /// frame), register the connection, and resync a reconnect that
-    /// missed `qdelta` chain links.
-    fn handshake(&mut self, mut conn: Conn, fleet_state: &Option<Vec<f32>>) -> Result<usize> {
-        conn.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
-        let hello = match conn
-            .recv_expect(FrameKind::Hello)
-            .and_then(|p| Hello::from_bytes(&p))
-        {
+    /// Sweep until `done` holds or `timeout` passes, napping only on
+    /// zero-progress sweeps. Returns whether `done` was reached.
+    fn poll_until(
+        &mut self,
+        timeout: Duration,
+        mut done: impl FnMut(&Self) -> bool,
+    ) -> Result<bool> {
+        let start = Instant::now();
+        loop {
+            let progress = self.sweep()?;
+            if done(self) {
+                return Ok(true);
+            }
+            if start.elapsed() > timeout {
+                return Ok(false);
+            }
+            if !progress {
+                self.stats.idle_naps += 1;
+                std::thread::sleep(NAP);
+            }
+        }
+    }
+
+    /// Run the readiness loop until every expected device has
+    /// registered, or fail after `timeout` naming the ids still missing.
+    pub fn wait_for_fleet(&mut self, timeout: Duration) -> Result<()> {
+        let expected = self.cfg.expected;
+        if self.poll_until(timeout, |s| s.connected() >= expected)? {
+            return Ok(());
+        }
+        let missing: Vec<usize> = self
+            .devices
+            .iter()
+            .enumerate()
+            .filter_map(|(i, d)| d.is_none().then_some(i))
+            .collect();
+        bail!(
+            "{}/{} devices registered after {:.0?}; missing ids {missing:?}",
+            self.connected(),
+            expected,
+            timeout
+        );
+    }
+
+    /// Validate a completed `Hello`, queue the `Welcome` (or send a
+    /// typed error frame), and register the connection under a fresh
+    /// generation tag.
+    fn finish_handshake(&mut self, conn: Conn, rbuf: FrameBuf, payload: &[u8]) -> Result<usize> {
+        let hello = match Hello::from_bytes(payload) {
             Ok(h) => h,
             Err(e) => {
-                let _ = conn.send(FrameKind::Error, format!("{e:#}").as_bytes());
-                self.retire(conn);
+                self.reject(conn, &format!("{e:#}"));
                 return Err(e);
             }
         };
@@ -234,8 +444,7 @@ impl Session {
             None
         };
         if let Some(msg) = reject {
-            let _ = conn.send(FrameKind::Error, msg.as_bytes());
-            self.retire(conn);
+            self.reject(conn, &msg);
             bail!("device {} rejected: {msg}", hello.device_id);
         }
         let id = hello.device_id as usize;
@@ -245,21 +454,37 @@ impl Session {
             n_clients: self.cfg.expected as u64,
             rounds: self.cfg.rounds as u64,
         };
-        conn.send(FrameKind::Welcome, &welcome.to_bytes())?;
-        // A device that missed chain links cannot decode the next frame;
-        // bring it back in sync with a full-state broadcast.
-        if self.cfg.needs_state_sync && (hello.resume_round as usize) < self.rounds_completed {
-            if let Some(state) = fleet_state {
-                conn.send(FrameKind::Sync, &DownlinkMsg::RawF32(state.clone()).to_bytes())?;
-                self.stats.syncs += 1;
-            }
-        }
-        if let Some(old) = self.devices[id].take() {
+        self.next_gen += 1;
+        let mut dc = DeviceConn {
+            conn,
+            rbuf,
+            wbuf: Vec::new(),
+            wpos: 0,
+            inbox: VecDeque::new(),
+            gen: self.next_gen,
+            state_round: hello.resume_round as usize,
+        };
+        write_frame(&mut dc.wbuf, FrameKind::Welcome, &welcome.to_bytes())?;
+        // a replaced connection's undelivered inbox survives as dead
+        // letters — an uplink that landed before the re-registration
+        // still counts
+        self.drop_device(id);
+        if self.seen[id] {
             self.stats.reconnects += 1;
-            self.retire(old);
+        } else {
+            self.seen[id] = true;
         }
-        self.devices[id] = Some(conn);
+        self.devices[id] = Some(dc);
         Ok(id)
+    }
+
+    /// Turn a bad handshake away with a typed error frame. The frame is
+    /// tiny and the socket buffer fresh, so a blocking send completes
+    /// immediately (or fails — the peer is gone anyway).
+    fn reject(&mut self, mut conn: Conn, msg: &str) {
+        let _ = conn.set_nonblocking(false);
+        let _ = conn.send(FrameKind::Error, msg.as_bytes());
+        self.retire(conn);
     }
 
     /// Fold a dead or replaced connection's byte counters into the
@@ -269,27 +494,83 @@ impl Session {
         self.stats.rx_bytes += conn.rx_bytes;
     }
 
+    /// Drop a device's connection, parking any parsed-but-unconsumed
+    /// frames as dead letters for the current round to collect.
     fn drop_device(&mut self, id: usize) {
-        if let Some(conn) = self.devices[id].take() {
+        if let Some(dc) = self.devices[id].take() {
+            let DeviceConn { conn, inbox, gen, .. } = dc;
+            if !inbox.is_empty() {
+                self.dead_letters[id] = Some((gen, inbox));
+            }
             self.retire(conn);
         }
     }
 
-    /// Send one frame to a device; returns whether it was delivered. A
-    /// write failure retires the connection (the device will reconnect).
-    /// Missed *cohort turns* are counted once, in [`Self::collect_uplink`].
-    fn send_to(&mut self, id: usize, kind: FrameKind, payload: &[u8]) -> bool {
-        let Some(conn) = &mut self.devices[id] else {
-            return false;
+    /// Queue one round broadcast to a device — preceded by a full-state
+    /// `Sync` when the connection's known state is too old to decode a
+    /// `qdelta` chain link. Returns the connection generation the frame
+    /// went out on, or `None` if the device has no live connection.
+    fn queue_round(
+        &mut self,
+        id: usize,
+        round: usize,
+        payload: &[u8],
+        prev: Option<&[f32]>,
+    ) -> Result<Option<u64>> {
+        let needs_sync = self.cfg.needs_state_sync;
+        let mut synced = false;
+        let gen = {
+            let Some(dc) = &mut self.devices[id] else {
+                return Ok(None);
+            };
+            if needs_sync && dc.state_round + 1 < round {
+                if let Some(state) = prev {
+                    let sync = DownlinkMsg::RawF32(state.to_vec()).to_bytes();
+                    write_frame(&mut dc.wbuf, FrameKind::Sync, &sync)?;
+                    synced = true;
+                }
+            }
+            write_frame(&mut dc.wbuf, FrameKind::Round, payload)?;
+            // Optimistic: if the connection dies before this drains, the
+            // device reconnects and re-reports its true resume round.
+            dc.state_round = round;
+            dc.gen
         };
-        match conn.send(kind, payload) {
-            Ok(()) => true,
-            Err(e) => {
-                eprintln!("session: device {id} send failed ({e:#}); dropping connection");
-                self.drop_device(id);
-                false
+        if synced {
+            self.stats.syncs += 1;
+        }
+        Ok(Some(gen))
+    }
+
+    /// Pop the next reply frame for `(id, gen)` — from the live
+    /// connection if it is still the one the broadcast went out on,
+    /// else from its dead letters.
+    fn take_reply(&mut self, id: usize, gen: u64) -> Option<(FrameKind, Vec<u8>)> {
+        if let Some(dc) = &mut self.devices[id] {
+            if dc.gen == gen {
+                return dc.inbox.pop_front();
             }
         }
+        if let Some((dgen, letters)) = &mut self.dead_letters[id] {
+            if *dgen == gen {
+                let frame = letters.pop_front();
+                if letters.is_empty() {
+                    self.dead_letters[id] = None;
+                }
+                return frame;
+            }
+        }
+        None
+    }
+
+    /// Can a reply for `(id, gen)` still arrive or be waiting?
+    fn reply_possible(&self, id: usize, gen: u64) -> bool {
+        if let Some(dc) = &self.devices[id] {
+            if dc.gen == gen {
+                return true;
+            }
+        }
+        matches!(&self.dead_letters[id], Some((dgen, _)) if *dgen == gen)
     }
 
     /// Wave size: the engine's sizing unless overridden.
@@ -303,7 +584,8 @@ impl Session {
 
     /// Drive one full round over the connected fleet — the socket twin
     /// of [`RoundEngine::run_round`], same schedule, same accounting,
-    /// same fold order.
+    /// same fold order. Broadcasts are pipelined a bounded window ahead
+    /// of the ordered streaming fold frontier.
     pub fn run_round(
         &mut self,
         server: &mut dyn ServerLogic,
@@ -312,36 +594,101 @@ impl Session {
         plan: &RoundPlan,
         comm: &mut RoundComm,
     ) -> Result<RoundStats> {
-        // Reconnecting devices re-register between rounds.
-        self.accept_pending(fleet_state)?;
         let n = self.cfg.expected;
         let cohort = participation.sample_round(n, plan.seed, plan.round);
         let msg = server.begin_round(plan)?;
         let payload = round_payload(plan, &msg);
+        let prev = fleet_state.take();
+        // Stale uplinks parked by a previous round's disconnects answer
+        // an older broadcast; never fold them into this round.
+        for slot in &mut self.dead_letters {
+            *slot = None;
+        }
+        // Pick up reconnects that arrived between rounds.
+        self.sweep()?;
         // A frame chain link must reach every device (one missed link
         // and the chain is undecodable); stateless broadcasts only the
         // cohort. Mirrors the engine's receiver accounting exactly.
         if matches!(msg, DownlinkMsg::Frame(_)) {
             for id in 0..n {
                 if cohort.binary_search(&id).is_err()
-                    && self.send_to(id, FrameKind::Round, &payload)
+                    && self.queue_round(id, plan.round, &payload, prev.as_deref())?.is_some()
                 {
                     comm.add_downlink_msg(&msg);
                 }
             }
         }
-        let prev = fleet_state.take();
-        let wave = self.wave();
-        for ids in cohort.chunks(wave) {
-            for &id in ids {
-                if self.send_to(id, FrameKind::Round, &payload) {
-                    comm.add_downlink_msg(&msg);
+        let wave = self.wave().max(1);
+        let m = cohort.len();
+        // resolved[pos]: None = in flight; Some(None) = dropout/missing;
+        // Some(Some(up)) = an envelope awaiting its in-order fold turn.
+        let mut resolved: Vec<Option<Option<UplinkMsg>>> = (0..m).map(|_| None).collect();
+        let mut deadlines = vec![Instant::now(); m];
+        let mut gens = vec![0u64; m];
+        let mut sent = 0usize;
+        let mut frontier = 0usize;
+        while frontier < m {
+            // (a) broadcast up to `wave` positions ahead of the frontier
+            while sent < m && sent < frontier + wave {
+                let id = cohort[sent];
+                match self.queue_round(id, plan.round, &payload, prev.as_deref())? {
+                    Some(gen) => {
+                        comm.add_downlink_msg(&msg);
+                        gens[sent] = gen;
+                        deadlines[sent] = Instant::now() + self.cfg.deadline;
+                    }
+                    None => {
+                        self.stats.missing += 1;
+                        resolved[sent] = Some(None);
+                    }
+                }
+                sent += 1;
+            }
+            // (b) one readiness sweep moves every socket forward
+            let progress = self.sweep()?;
+            // (c) classify the in-flight positions
+            let mut advanced = false;
+            for pos in frontier..sent {
+                if resolved[pos].is_some() {
+                    continue;
+                }
+                let id = cohort[pos];
+                if let Some((kind, bytes)) = self.take_reply(id, gens[pos]) {
+                    resolved[pos] = Some(self.classify_reply(id, kind, &bytes));
+                    advanced = true;
+                } else if !self.reply_possible(id, gens[pos]) {
+                    eprintln!(
+                        "session: device {id} connection lost mid-round; treating as dropout"
+                    );
+                    resolved[pos] = Some(None);
+                    advanced = true;
+                } else if Instant::now() > deadlines[pos] {
+                    eprintln!(
+                        "session: device {id} missed the {:.0?} straggler deadline; \
+                         treating as dropout",
+                        self.cfg.deadline
+                    );
+                    self.stats.stragglers += 1;
+                    self.drop_device(id);
+                    // a straggler's late bytes are void, not dead letters
+                    self.dead_letters[id] = None;
+                    resolved[pos] = Some(None);
+                    advanced = true;
                 }
             }
-            // Ordered streaming fold: envelopes land in cohort order, so
-            // the aggregate is bit-identical to the in-process engine.
-            for &id in ids {
-                self.collect_uplink(id, server, comm)?;
+            // (d) ordered streaming fold: envelopes fold strictly in
+            // cohort order, so the aggregate is bit-identical to the
+            // in-process engine.
+            while frontier < m && resolved[frontier].is_some() {
+                if let Some(Some(up)) = resolved[frontier].take() {
+                    server.fold_uplink(&up, comm)?;
+                }
+                frontier += 1;
+                advanced = true;
+            }
+            if !progress && !advanced && frontier < m {
+                self.stats.idle_naps += 1;
+                std::thread::sleep(NAP);
             }
         }
         *fleet_state = Some(msg.decode_state(prev.as_deref())?);
@@ -349,66 +696,61 @@ impl Session {
         server.end_round(plan)
     }
 
-    /// Read one device's round reply under the straggler deadline and
-    /// fold it. Timeouts, disconnects, protocol violations, and corrupt
-    /// envelopes all become the dropout path: the uplink never lands,
-    /// the round goes on.
-    fn collect_uplink(
-        &mut self,
-        id: usize,
-        server: &mut dyn ServerLogic,
-        comm: &mut RoundComm,
-    ) -> Result<()> {
-        let deadline = self.cfg.deadline;
-        let Some(conn) = &mut self.devices[id] else {
-            self.stats.missing += 1;
-            return Ok(());
-        };
-        conn.set_read_timeout(Some(deadline))?;
-        match conn.recv() {
-            Ok((FrameKind::Uplink, bytes)) => match UplinkMsg::from_bytes(&bytes) {
+    /// Turn one reply frame into its fold decision. Corrupt envelopes
+    /// and protocol violations become the dropout path (typed, logged,
+    /// connection dropped); `Dropped` is the injected failure model.
+    fn classify_reply(&mut self, id: usize, kind: FrameKind, bytes: &[u8]) -> Option<UplinkMsg> {
+        match kind {
+            FrameKind::Uplink => match UplinkMsg::from_bytes(bytes) {
                 Ok(up) => {
                     debug_assert_eq!(up.wire_bytes(), bytes.len());
-                    server.fold_uplink(&up, comm)?;
+                    Some(up)
                 }
                 Err(e) => {
                     eprintln!("session: device {id} sent a corrupt envelope ({e:#}); dropping");
+                    self.stats.protocol_errors += 1;
                     self.drop_device(id);
+                    None
                 }
             },
-            // Injected failure model: trained, uplink never lands.
-            Ok((FrameKind::Dropped, _)) => {}
-            Ok((kind, _)) => {
+            FrameKind::Dropped => None,
+            other => {
                 eprintln!(
                     "session: device {id} broke protocol ({} instead of uplink); dropping",
-                    kind.name()
+                    other.name()
                 );
+                self.stats.protocol_errors += 1;
                 self.drop_device(id);
-            }
-            Err(e) if is_timeout(&e) => {
-                eprintln!(
-                    "session: device {id} missed the {deadline:.0?} straggler deadline; \
-                     treating as dropout"
-                );
-                self.stats.stragglers += 1;
-                self.drop_device(id);
-            }
-            Err(e) => {
-                eprintln!("session: device {id} connection lost ({e:#}); treating as dropout");
-                self.drop_device(id);
+                None
             }
         }
-        Ok(())
     }
 
-    /// End the run: tell every live device we're done and fold the
-    /// remaining byte counters into the stats.
+    /// End the run: queue `Done` to every live device, flush for up to
+    /// [`FINISH_FLUSH`], and fold the remaining byte counters into the
+    /// stats.
     pub fn finish(&mut self) -> Result<()> {
-        for id in 0..self.devices.len() {
-            self.send_to(id, FrameKind::Done, &[]);
+        for dc in self.devices.iter_mut().flatten() {
+            write_frame(&mut dc.wbuf, FrameKind::Done, &[])?;
+        }
+        let deadline = Instant::now() + FINISH_FLUSH;
+        loop {
+            let progress = self.sweep()?;
+            let unflushed =
+                self.devices.iter().flatten().any(|dc| dc.wpos < dc.wbuf.len());
+            if !unflushed || Instant::now() > deadline {
+                break;
+            }
+            if !progress {
+                self.stats.idle_naps += 1;
+                std::thread::sleep(NAP);
+            }
         }
         for id in 0..self.devices.len() {
             self.drop_device(id);
+        }
+        while let Some(p) = self.pending.pop() {
+            self.retire(p.conn);
         }
         Ok(())
     }
@@ -449,6 +791,9 @@ pub struct DeviceOpts {
     pub device_id: usize,
     /// Total budget for (re)connect attempts.
     pub connect_timeout: Duration,
+    /// Wrap the socket in a seeded fault injector (armed only after a
+    /// clean handshake). `None` = a plain TCP stream.
+    pub chaos: Option<ChaosSpec>,
 }
 
 /// What one device run did (printed by `fedsrn device`).
@@ -468,12 +813,12 @@ pub struct DeviceReport {
 
 /// Keep trying to connect until `budget` runs out (the server may still
 /// be binding, or be mid-restart).
-fn connect_with_retry(addr: &str, budget: Duration) -> Result<Conn> {
+fn connect_with_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
     let start = Instant::now();
     let mut wait = Duration::from_millis(50);
     loop {
-        match Conn::connect(addr) {
-            Ok(conn) => return Ok(conn),
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
             Err(_) if start.elapsed() + wait < budget => {
                 std::thread::sleep(wait);
                 wait = (wait * 2).min(Duration::from_secs(2));
@@ -491,7 +836,10 @@ fn connect_with_retry(addr: &str, budget: Duration) -> Result<Conn> {
 /// seeds from the shared config, register over the handshake, then
 /// answer `Round` frames until `Done`. Connection loss triggers a
 /// reconnect with the in-memory reconstruction state carried over (and
-/// a server-side `Sync` when `qdelta` chain links were missed).
+/// a server-side `Sync` when `qdelta` chain links were missed). With
+/// [`DeviceOpts::chaos`] set, every connection attempt gets its own
+/// deterministic fault schedule (seeded by `(chaos seed, id, attempt)`),
+/// armed only after the handshake validates.
 pub fn run_device(cfg: &ExperimentConfig, opts: &DeviceOpts) -> Result<DeviceReport> {
     cfg.validate()?;
     ensure!(
@@ -518,8 +866,20 @@ pub fn run_device(cfg: &ExperimentConfig, opts: &DeviceOpts) -> Result<DeviceRep
     let mut report = DeviceReport::default();
     let mut prev_state: Option<Vec<f32>> = None;
     let mut rounds_done = 0usize;
+    let mut attempt = 0u64;
     'connection: loop {
-        let mut conn = connect_with_retry(&opts.addr, opts.connect_timeout)?;
+        let stream = connect_with_retry(&opts.addr, opts.connect_timeout)?;
+        let (mut conn, switch) = match &opts.chaos {
+            Some(spec) => {
+                stream.set_nonblocking(false).context("clearing O_NONBLOCK")?;
+                stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+                let rng = spec.rng_for(opts.device_id, attempt);
+                let (wire, switch, _events) = ChaosStream::wrap(stream, *spec, rng);
+                (Conn::from_wire(Box::new(wire)), Some(switch))
+            }
+            None => (Conn::new(stream)?, None),
+        };
+        attempt += 1;
         let hello = Hello {
             version: TRANSPORT_VERSION,
             fingerprint,
@@ -528,12 +888,12 @@ pub fn run_device(cfg: &ExperimentConfig, opts: &DeviceOpts) -> Result<DeviceRep
         };
         conn.send(FrameKind::Hello, &hello.to_bytes())?;
         // A mid-run reconnect is only welcomed at the server's next
-        // round barrier, which can be a full round away — so wait out
-        // the silence in ONE read on THIS connection (re-dialing would
-        // queue stale Hellos the server would later mis-count as
-        // reconnects, and resuming a framed stream after a mid-frame
-        // timeout would desync it). The connect budget bounds the wait;
-        // a typed rejection (Error frame) or a dead socket is fatal.
+        // sweep; wait out the silence in ONE read on THIS connection
+        // (re-dialing would queue stale Hellos the server would later
+        // mis-count as reconnects, and resuming a framed stream after a
+        // mid-frame timeout would desync it). The connect budget bounds
+        // the wait; a typed rejection (Error frame) or a dead socket is
+        // fatal.
         conn.set_read_timeout(Some(opts.connect_timeout.max(HANDSHAKE_TIMEOUT)))?;
         let welcome_bytes = conn.recv_expect(FrameKind::Welcome).map_err(|e| {
             if is_timeout(&e) {
@@ -555,6 +915,12 @@ pub fn run_device(cfg: &ExperimentConfig, opts: &DeviceOpts) -> Result<DeviceRep
             welcome.n_clients,
             cfg.clients
         );
+        // Chaos arms only after a clean handshake: the fault schedule
+        // targets rounds, not registration (a fleet that can never
+        // assemble tests nothing).
+        if let Some(switch) = &switch {
+            switch.arm();
+        }
         // Rounds are server-paced: block until the next frame arrives.
         conn.set_read_timeout(None)?;
         loop {
@@ -632,6 +998,7 @@ mod tests {
     use crate::compress;
     use crate::fl::protocol::UplinkPayload;
     use crate::util::BitVec;
+    use std::sync::mpsc;
     use std::thread;
 
     const N_PARAMS: usize = 64;
@@ -691,7 +1058,7 @@ mod tests {
     #[test]
     fn straggler_deadline_converts_to_dropout() {
         let (mut session, addr) = test_session(2, 500);
-        // device 0 answers promptly; device 1 sleeps past the deadline
+        // device 0 answers promptly
         let a0 = addr.clone();
         let t0 = thread::spawn(move || {
             let mut conn = fake_handshake(&a0, 0xFEED, 0, 0);
@@ -703,12 +1070,16 @@ mod tests {
             // stay alive until the server is done with the round
             let _ = conn.recv();
         });
+        // device 1 never answers its Round frame: it parks on a channel
+        // (released only after the round's asserts ran) so the straggler
+        // deadline alone — not test timing — converts it into a dropout
+        let (release, park) = mpsc::channel::<()>();
         let a1 = addr.clone();
         let t1 = thread::spawn(move || {
             let mut conn = fake_handshake(&a1, 0xFEED, 1, 0);
             conn.recv_expect(FrameKind::Welcome).unwrap();
             let _ = conn.recv(); // the Round frame
-            thread::sleep(Duration::from_millis(2500)); // blow the deadline
+            let _ = park.recv(); // hold the socket open, silently
         });
         session.wait_for_fleet(Duration::from_secs(5)).unwrap();
         let mut server = MaskStrategy::new(N_PARAMS, 1, MaskMode::Stochastic);
@@ -729,6 +1100,7 @@ mod tests {
         assert_eq!(session.stats.stragglers, 1);
         assert_eq!(session.connected(), 1);
         assert!(stats.train_loss > 0.0);
+        drop(release);
         session.finish().unwrap();
         t0.join().unwrap();
         t1.join().unwrap();
@@ -751,40 +1123,113 @@ mod tests {
     }
 
     #[test]
-    fn reconnect_reregisters_and_gets_state_sync() {
-        let (mut session, addr) = test_session(1, 1000);
+    fn reconnect_resyncs_before_next_chain_round() {
+        let (mut session, addr) = test_session(1, 2000);
         session.cfg.needs_state_sync = true;
         session.rounds_completed = 3;
-        let state = vec![0.25f32; 8];
-        let fleet_state = Some(state.clone());
+        let state = vec![0.25f32; N_PARAMS];
+        let mut fleet_state = Some(state.clone());
         let t = thread::spawn(move || {
-            // first registration: resume_round = 0 < 3 -> expect a Sync
+            // registration with resume_round = 0: three completed rounds
+            // were missed, so the round-4 broadcast is preceded by Sync
             let mut conn = fake_handshake(&addr, 0xFEED, 0, 0);
             conn.recv_expect(FrameKind::Welcome).unwrap();
             let sync = conn.recv_expect(FrameKind::Sync).unwrap();
             let msg = DownlinkMsg::from_bytes(&sync).unwrap();
-            assert_eq!(msg.decode_state(None).unwrap(), vec![0.25f32; 8]);
+            assert_eq!(msg.decode_state(None).unwrap(), vec![0.25f32; N_PARAMS]);
+            let (kind, payload) = conn.recv().unwrap();
+            assert_eq!(kind, FrameKind::Round);
+            assert_eq!(parse_round(&payload).unwrap().0.round, 4);
+            conn.send(FrameKind::Uplink, &mask_uplink(10.0)).unwrap();
             drop(conn);
-            // reconnect already in sync: no Sync frame follows Welcome
-            let mut conn = fake_handshake(&addr, 0xFEED, 0, 3);
+            // reconnect already in sync with round 4: Welcome, then the
+            // round-5 broadcast with NO Sync in between
+            let mut conn = fake_handshake(&addr, 0xFEED, 0, 4);
             conn.recv_expect(FrameKind::Welcome).unwrap();
-            conn.send(FrameKind::Dropped, &[]).unwrap();
+            let (kind, payload) = conn.recv().unwrap();
+            assert_eq!(kind, FrameKind::Round);
+            assert_eq!(parse_round(&payload).unwrap().0.round, 5);
+            conn.send(FrameKind::Uplink, &mask_uplink(10.0)).unwrap();
+            let _ = conn.recv(); // Done
         });
-        let start = Instant::now();
-        while session.connected() == 0 && start.elapsed() < Duration::from_secs(5) {
-            session.accept_pending(&fleet_state).unwrap();
-            thread::sleep(Duration::from_millis(5));
-        }
-        assert_eq!(session.stats.syncs, 1);
-        // wait for the re-registration to land
-        let start = Instant::now();
-        while session.stats.reconnects == 0 && start.elapsed() < Duration::from_secs(5) {
-            session.accept_pending(&fleet_state).unwrap();
-            thread::sleep(Duration::from_millis(5));
-        }
-        assert_eq!(session.stats.reconnects, 1);
+        session.wait_for_fleet(Duration::from_secs(5)).unwrap();
+        let mut server = MaskStrategy::new(N_PARAMS, 1, MaskMode::Stochastic);
+        let mut p4 = plan();
+        p4.round = 4;
+        let mut comm = RoundComm::new(N_PARAMS);
+        session
+            .run_round(&mut server, &mut fleet_state, Participation::default(), &p4, &mut comm)
+            .unwrap();
+        assert_eq!(session.stats.syncs, 1, "stale reconnect gets exactly one Sync");
+        assert_eq!(comm.clients, 1, "the round-4 uplink folds despite the disconnect");
+        // handshake barrier, no timing sleeps: sweep until the
+        // re-registration lands
+        assert!(
+            session
+                .poll_until(Duration::from_secs(5), |s| s.stats.reconnects == 1)
+                .unwrap(),
+            "re-registration never landed"
+        );
+        let mut p5 = plan();
+        p5.round = 5;
+        let mut comm = RoundComm::new(N_PARAMS);
+        session
+            .run_round(&mut server, &mut fleet_state, Participation::default(), &p5, &mut comm)
+            .unwrap();
         assert_eq!(session.stats.syncs, 1, "in-sync reconnect must not resync");
+        session.finish().unwrap();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn fleet_of_64_assembles_and_completes_without_hot_path_naps() {
+        const FLEET: usize = 64;
+        let (mut session, addr) = test_session(FLEET, 5_000);
+        let handles: Vec<_> = (0..FLEET)
+            .map(|id| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    let mut conn = fake_handshake(&addr, 0xFEED, id as u64, 0);
+                    conn.recv_expect(FrameKind::Welcome).unwrap();
+                    let (kind, payload) = conn.recv().unwrap();
+                    assert_eq!(kind, FrameKind::Round);
+                    parse_round(&payload).unwrap();
+                    conn.send(FrameKind::Uplink, &mask_uplink(1.0)).unwrap();
+                    conn.recv_expect(FrameKind::Done).unwrap();
+                })
+            })
+            .collect();
+        session.wait_for_fleet(Duration::from_secs(10)).unwrap();
+        assert_eq!(session.connected(), FLEET);
+        let mut server = MaskStrategy::new(N_PARAMS, FLEET, MaskMode::Stochastic);
+        let mut fleet_state = None;
+        let mut comm = RoundComm::new(N_PARAMS);
+        session
+            .run_round(
+                &mut server,
+                &mut fleet_state,
+                Participation::default(),
+                &plan(),
+                &mut comm,
+            )
+            .unwrap();
+        assert_eq!(comm.clients, FLEET, "all 64 uplinks folded");
+        assert_eq!(session.stats.missing, 0);
+        assert_eq!(session.stats.stragglers, 0);
+        // The readiness loop may nap (500µs) only on provably idle
+        // sweeps. With the old 10ms ACCEPT_POLL cadence this fleet spent
+        // whole seconds asleep; the bound below caps total sleeping at
+        // <2s even on a fully serialized single-core scheduler, i.e.
+        // there is no fixed-cadence polling left on the hot path.
+        assert!(
+            session.stats.idle_naps < 4_000,
+            "hot path is polling-sleep-bound: {} naps",
+            session.stats.idle_naps
+        );
+        session.finish().unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

@@ -27,11 +27,16 @@
 //!   errors.
 //!
 //! Framing is generic over `io::Read`/`io::Write` so the property tests
-//! drive it with in-memory cursors; [`Conn`] specializes it to TCP and
-//! counts the actual framed bytes both directions.
+//! drive it with in-memory cursors; [`Conn`] specializes it to a boxed
+//! [`Wire`] (a real `TcpStream`, or a chaos-wrapped one — see
+//! `fl::chaos`) and counts the actual framed bytes both directions.
+//! [`FrameBuf`] is the incremental flip side of [`read_frame`]: it
+//! accumulates whatever bytes a non-blocking socket happens to deliver
+//! and yields complete validated frames, which is what the session
+//! readiness loop parses against.
 
 use std::io::{Read, Write};
-use std::net::TcpStream;
+use std::net::{Shutdown, TcpStream};
 use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
@@ -191,6 +196,72 @@ pub fn read_frame<R: Read>(r: &mut R, max_frame: usize) -> Result<(FrameKind, Ve
     Ok((kind, payload))
 }
 
+/// Incremental frame decoder for non-blocking sockets: feed it whatever
+/// bytes the kernel delivered, take complete validated frames out. The
+/// validation discipline is identical to [`read_frame`] — bad magic,
+/// unknown kind, and oversize length prefixes are rejected as soon as
+/// the offending byte arrives (before the payload is buffered or
+/// allocated), and the trailing checksum must match before a frame is
+/// yielded. `Ok(None)` means "incomplete, keep feeding".
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Buffered bytes not yet consumed by a complete frame.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Pop the next complete frame, if the buffer holds one.
+    pub fn next_frame(&mut self, max_frame: usize) -> Result<Option<(FrameKind, Vec<u8>)>> {
+        // validate eagerly: a desynced or hostile prefix fails on its
+        // first bytes, not after max_frame bytes of buffering
+        if let Some(&magic) = self.buf.first() {
+            ensure!(
+                magic == FRAME_MAGIC,
+                "bad frame magic {magic:#04x} (stream desync?)"
+            );
+        }
+        if let Some(&kind) = self.buf.get(1) {
+            FrameKind::from_u8(kind)?;
+        }
+        if self.buf.len() < FRAME_HEAD {
+            return Ok(None);
+        }
+        let kind = FrameKind::from_u8(self.buf[1])?;
+        let len = u32::from_le_bytes(self.buf[2..6].try_into()?) as usize;
+        ensure!(
+            len <= max_frame,
+            "frame length prefix {len} exceeds the {max_frame} byte cap"
+        );
+        let total = framed_len(len);
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let payload_end = FRAME_HEAD + len;
+        let expect = fnv1a64(&[&self.buf[1..2], &self.buf[2..6], &self.buf[FRAME_HEAD..payload_end]]);
+        let sum = u64::from_le_bytes(self.buf[payload_end..total].try_into()?);
+        ensure!(
+            sum == expect,
+            "frame checksum mismatch ({} frame, {len} payload bytes)",
+            kind.name()
+        );
+        let payload = self.buf[FRAME_HEAD..payload_end].to_vec();
+        self.buf.drain(..total);
+        Ok(Some((kind, payload)))
+    }
+}
+
 /// Device -> server handshake open.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Hello {
@@ -319,11 +390,43 @@ pub fn is_timeout(e: &anyhow::Error) -> bool {
     })
 }
 
-/// One framed TCP connection, counting the actual bytes both directions
+/// What a [`Conn`] moves bytes through: a plain `TcpStream`, or a
+/// fault-injecting wrapper around one (`fl::chaos::ChaosStream`). The
+/// supertrait `Read`/`Write` pair carries the data; the extra methods
+/// are the socket controls the session and device loops need.
+pub trait Wire: Read + Write + Send {
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()>;
+    fn set_nonblocking(&self, on: bool) -> std::io::Result<()>;
+    /// Best-effort close of both directions (peer sees EOF/RST).
+    fn shutdown(&self);
+    fn peer_desc(&self) -> String;
+}
+
+impl Wire for TcpStream {
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        TcpStream::set_read_timeout(self, d)
+    }
+
+    fn set_nonblocking(&self, on: bool) -> std::io::Result<()> {
+        TcpStream::set_nonblocking(self, on)
+    }
+
+    fn shutdown(&self) {
+        let _ = TcpStream::shutdown(self, Shutdown::Both);
+    }
+
+    fn peer_desc(&self) -> String {
+        self.peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "<unknown>".to_string())
+    }
+}
+
+/// One framed connection, counting the actual bytes both directions
 /// (frame headers and checksums included — the transport-level totals
 /// the session reports next to the envelope-level `RoundComm` numbers).
 pub struct Conn {
-    stream: TcpStream,
+    wire: Box<dyn Wire>,
     max_frame: usize,
     pub tx_bytes: u64,
     pub rx_bytes: u64,
@@ -331,13 +434,18 @@ pub struct Conn {
 
 impl Conn {
     pub fn new(stream: TcpStream) -> Result<Self> {
-        // Sessions accept from a non-blocking listener; the per-device
-        // stream itself is driven by blocking reads with timeouts (some
-        // platforms let accepted sockets inherit the listener's flag).
+        // A fresh TCP stream starts in blocking mode (some platforms let
+        // accepted sockets inherit the listener's O_NONBLOCK; clear it —
+        // the readiness loop opts back in via `set_nonblocking`).
         stream.set_nonblocking(false).context("clearing O_NONBLOCK")?;
         // Frames are written in one syscall; never Nagle-delay them.
         stream.set_nodelay(true).context("setting TCP_NODELAY")?;
-        Ok(Self { stream, max_frame: MAX_FRAME_BYTES, tx_bytes: 0, rx_bytes: 0 })
+        Ok(Self::from_wire(Box::new(stream)))
+    }
+
+    /// Wrap an already-configured wire (e.g. a `ChaosStream`).
+    pub fn from_wire(wire: Box<dyn Wire>) -> Self {
+        Self { wire, max_frame: MAX_FRAME_BYTES, tx_bytes: 0, rx_bytes: 0 }
     }
 
     pub fn connect(addr: &str) -> Result<Self> {
@@ -347,26 +455,50 @@ impl Conn {
     }
 
     pub fn peer_addr(&self) -> String {
-        self.stream
-            .peer_addr()
-            .map(|a| a.to_string())
-            .unwrap_or_else(|_| "<unknown>".to_string())
+        self.wire.peer_desc()
     }
 
     /// `None` blocks forever; `Some(d)` turns a silent peer into a
     /// [`is_timeout`] error after `d`.
     pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
-        self.stream.set_read_timeout(d).context("setting read timeout")
+        self.wire.set_read_timeout(d).context("setting read timeout")
+    }
+
+    /// Flip the connection between blocking sends/recvs and the
+    /// readiness-loop discipline (`read_some`/`write_some`).
+    pub fn set_nonblocking(&self, on: bool) -> Result<()> {
+        self.wire.set_nonblocking(on).context("toggling O_NONBLOCK")
+    }
+
+    /// Close both directions; the peer observes EOF.
+    pub fn shutdown(&self) {
+        self.wire.shutdown();
+    }
+
+    /// One non-blocking read into `scratch`. `Ok(0)` is EOF; a
+    /// `WouldBlock` error means "no bytes right now".
+    pub fn read_some(&mut self, scratch: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.wire.read(scratch)?;
+        self.rx_bytes += n as u64;
+        Ok(n)
+    }
+
+    /// One non-blocking write of as much of `bytes` as the socket
+    /// accepts; `WouldBlock` means "send buffer full, try later".
+    pub fn write_some(&mut self, bytes: &[u8]) -> std::io::Result<usize> {
+        let n = self.wire.write(bytes)?;
+        self.tx_bytes += n as u64;
+        Ok(n)
     }
 
     pub fn send(&mut self, kind: FrameKind, payload: &[u8]) -> Result<()> {
-        let n = write_frame(&mut self.stream, kind, payload)?;
+        let n = write_frame(&mut self.wire, kind, payload)?;
         self.tx_bytes += n as u64;
         Ok(())
     }
 
     pub fn recv(&mut self) -> Result<(FrameKind, Vec<u8>)> {
-        let (kind, payload) = read_frame(&mut self.stream, self.max_frame)?;
+        let (kind, payload) = read_frame(&mut self.wire, self.max_frame)?;
         self.rx_bytes += framed_len(payload.len()) as u64;
         Ok((kind, payload))
     }
@@ -503,6 +635,55 @@ mod tests {
         assert_ne!(base, run_fingerprint(&other_clients, &man));
         let other_model = Manifest::builtin("mlp_mnist").unwrap();
         assert_ne!(base, run_fingerprint(&cfg, &other_model));
+    }
+
+    #[test]
+    fn framebuf_yields_frames_fed_byte_by_byte() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Uplink, b"envelope").unwrap();
+        write_frame(&mut wire, FrameKind::Dropped, &[]).unwrap();
+        let mut fb = FrameBuf::new();
+        let mut got = Vec::new();
+        for &b in &wire {
+            fb.extend(&[b]);
+            while let Some(frame) = fb.next_frame(MAX_FRAME_BYTES).unwrap() {
+                got.push(frame);
+            }
+        }
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], (FrameKind::Uplink, b"envelope".to_vec()));
+        assert_eq!(got[1], (FrameKind::Dropped, Vec::new()));
+        assert_eq!(fb.pending(), 0);
+    }
+
+    #[test]
+    fn framebuf_rejects_bad_prefixes_before_buffering_payload() {
+        // bad magic fails on the very first byte
+        let mut fb = FrameBuf::new();
+        fb.extend(&[0x00]);
+        assert!(fb.next_frame(MAX_FRAME_BYTES).is_err());
+        // unknown kind fails on the second byte
+        let mut fb = FrameBuf::new();
+        fb.extend(&[FRAME_MAGIC, 0xEE]);
+        assert!(fb.next_frame(MAX_FRAME_BYTES).is_err());
+        // oversize length prefix fails as soon as the header is whole
+        let mut fb = FrameBuf::new();
+        fb.extend(&[FRAME_MAGIC, FrameKind::Round.to_u8()]);
+        fb.extend(&u32::MAX.to_le_bytes());
+        let err = fb.next_frame(MAX_FRAME_BYTES).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn framebuf_detects_checksum_corruption() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Sync, &[9u8; 64]).unwrap();
+        // flip one payload byte: the whole frame arrives, then fails
+        let flip = FRAME_HEAD + 10;
+        wire[flip] ^= 0x41;
+        let mut fb = FrameBuf::new();
+        fb.extend(&wire);
+        assert!(fb.next_frame(MAX_FRAME_BYTES).is_err());
     }
 
     #[test]

@@ -34,6 +34,7 @@ USAGE:
                [--deadline-ms 30000] [--register-timeout-ms 120000] [--wave N]
   fedsrn device --id N [--addr 127.0.0.1:7878] [--config FILE]
                [--set key=value]... [--connect-timeout-ms 60000]
+               [--chaos-seed S]
   fedsrn figure fig1 [--dataset mnist|cifar10|cifar100] [--model M]
                      [--rounds N] [--clients K] [--seed S] [--out DIR]
   fedsrn figure fig2 [--dataset mnist|cifar10] [--model M] [--rounds N]
@@ -69,6 +70,12 @@ serve`, then one `fedsrn device --id I` process per client id with the
 SAME config/--set values (a version/fingerprint handshake rejects
 mismatches). The result is bit-identical to `fedsrn train`
 (DESIGN.md §Transport).
+
+--chaos-seed wraps the device's socket in a deterministic fault
+injector (seeded delays, split writes, corrupted frames, mid-round
+disconnects) armed after a clean handshake — for torture-testing the
+server's readiness loop; every failure must surface as a typed
+dropout/reconnect, never a hang or a wrong aggregate.
 ";
 
 fn main() -> ExitCode {
@@ -191,21 +198,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     print_summary(&summary);
     let stats = session.stats;
     println!(
-        "transport: tx={:.3}MB rx={:.3}MB stragglers={} missing={} reconnects={} syncs={}",
+        "transport: tx={:.3}MB rx={:.3}MB stragglers={} missing={} reconnects={} syncs={} \
+         protocol_errors={} idle_naps={}",
         stats.tx_bytes as f64 / 1e6,
         stats.rx_bytes as f64 / 1e6,
         stats.stragglers,
         stats.missing,
         stats.reconnects,
-        stats.syncs
+        stats.syncs,
+        stats.protocol_errors,
+        stats.idle_naps
     );
     Ok(())
 }
 
 fn cmd_device(args: &Args) -> Result<()> {
-    use fedsrn::fl::{run_device, DeviceOpts};
+    use fedsrn::fl::{run_device, ChaosSpec, DeviceOpts};
     use std::time::Duration;
-    args.ensure_known_flags(&["config", "addr", "id", "connect-timeout-ms"])?;
+    args.ensure_known_flags(&["config", "addr", "id", "connect-timeout-ms", "chaos-seed"])?;
     let mut cfg = match args.flag("config") {
         Some(path) => ExperimentConfig::from_file(Path::new(path))?,
         None => ExperimentConfig::default(),
@@ -219,14 +229,28 @@ fn cmd_device(args: &Args) -> Result<()> {
         .context("--id N required (this device's client id)")?
         .parse()
         .context("--id must be an integer")?;
+    let chaos = match args.flag("chaos-seed") {
+        Some(s) => {
+            let seed: u64 = s.parse().context("--chaos-seed must be an integer")?;
+            Some(ChaosSpec::aggressive(seed))
+        }
+        None => None,
+    };
     let opts = DeviceOpts {
         addr: args.flag_or("addr", "127.0.0.1:7878"),
         device_id: id,
         connect_timeout: Duration::from_millis(
             args.flag_parse("connect-timeout-ms", 60_000u64)?,
         ),
+        chaos,
     };
-    eprintln!("device {id}: connecting to {}", opts.addr);
+    match &opts.chaos {
+        Some(spec) => eprintln!(
+            "device {id}: connecting to {} (chaos seed {})",
+            opts.addr, spec.seed
+        ),
+        None => eprintln!("device {id}: connecting to {}", opts.addr),
+    }
     let report = run_device(&cfg, &opts)?;
     println!(
         "device {id}: done — rounds_seen={} trained={} dropped={} reconnects={} \

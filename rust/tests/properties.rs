@@ -9,8 +9,8 @@ use fedsrn::compress::{self, DownlinkEncoder, DownlinkFrame, DownlinkMode, Metho
 use fedsrn::config::ExperimentConfig;
 use fedsrn::coordinator::Checkpoint;
 use fedsrn::fl::transport::{
-    self, framed_len, read_frame, write_frame, FrameKind, Hello, Welcome, MAX_FRAME_BYTES,
-    TRANSPORT_VERSION,
+    self, framed_len, read_frame, write_frame, FrameBuf, FrameKind, Hello, Welcome,
+    MAX_FRAME_BYTES, TRANSPORT_VERSION,
 };
 use fedsrn::data::{partition_iid, partition_noniid, Dataset, SynthSpec, Synthetic};
 use fedsrn::mask::{
@@ -349,6 +349,114 @@ fn prop_transport_oversize_length_prefix_rejected() {
                 "case {case}: tightened cap not enforced"
             );
         }
+    });
+}
+
+#[test]
+fn prop_sync_and_dropped_frames_roundtrip_and_reject_torture() {
+    // The two control frames the reconnect path lives on get the same
+    // torture the data frames get. Sync carries a full serialized
+    // downlink (the resync state), Dropped is an empty marker — both
+    // must round-trip bit-identically and reject truncation, byte
+    // flips, and hostile length prefixes with typed errors.
+    forall(50, |rng, case| {
+        let (msg, prev) = arb_downlink(rng);
+        let sync_payload = msg.to_bytes();
+        for (kind, payload) in
+            [(FrameKind::Sync, sync_payload.as_slice()), (FrameKind::Dropped, &[][..])]
+        {
+            let mut wire = Vec::new();
+            write_frame(&mut wire, kind, payload).unwrap();
+            assert_eq!(wire.len(), framed_len(payload.len()), "case {case}");
+            let (k, p) =
+                read_frame(&mut std::io::Cursor::new(&wire), MAX_FRAME_BYTES).unwrap();
+            assert_eq!(k, kind, "case {case}");
+            assert_eq!(p, payload, "case {case}");
+            // a Sync that survives framing must decode to the exact
+            // state the server serialized — this is the resync contract
+            if kind == FrameKind::Sync {
+                let back = DownlinkMsg::from_bytes(&p).unwrap();
+                let pr = prev.as_deref();
+                let want: Vec<u32> =
+                    msg.decode_state(pr).unwrap().iter().map(|v| v.to_bits()).collect();
+                let got: Vec<u32> =
+                    back.decode_state(pr).unwrap().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, want, "case {case}: sync state changed on the wire");
+            }
+            // truncation: random interior cuts plus both edges
+            for cut in
+                [0, wire.len() - 1].into_iter().chain((0..6).map(|_| {
+                    rng.below(wire.len() as u64) as usize
+                }))
+            {
+                assert!(
+                    read_frame(&mut std::io::Cursor::new(&wire[..cut]), MAX_FRAME_BYTES)
+                        .is_err(),
+                    "case {case}: {} truncated at {cut}/{} decoded",
+                    kind.name(),
+                    wire.len()
+                );
+            }
+            // single-byte flips anywhere in header, payload, or
+            // checksum must fail the trailing integrity check
+            for _ in 0..8 {
+                let at = rng.below(wire.len() as u64) as usize;
+                let mut bad = wire.clone();
+                bad[at] ^= 1 + rng.below(255) as u8;
+                assert!(
+                    read_frame(&mut std::io::Cursor::new(&bad), MAX_FRAME_BYTES).is_err(),
+                    "case {case}: {} flip at byte {at}/{} decoded",
+                    kind.name(),
+                    wire.len()
+                );
+            }
+        }
+        // oversize length prefix behind a Sync (6) or Dropped (5) kind
+        // byte: rejected before any payload allocation
+        for kind_byte in [6u8, 5u8] {
+            let over = MAX_FRAME_BYTES as u64 + 1 + rng.below(1 << 30);
+            let mut wire = vec![0xF5u8, kind_byte];
+            wire.extend_from_slice(&(over.min(u32::MAX as u64) as u32).to_le_bytes());
+            let err = read_frame(&mut std::io::Cursor::new(&wire), MAX_FRAME_BYTES)
+                .expect_err(&format!("case {case}: oversize kind {kind_byte} accepted"));
+            assert!(err.to_string().contains("exceeds"), "case {case}: {err:#}");
+        }
+    });
+}
+
+#[test]
+fn prop_framebuf_chunked_feed_matches_whole_stream() {
+    // The readiness loop's incremental decoder: a multi-frame stream
+    // fed to FrameBuf in arbitrary-size chunks yields exactly the
+    // frames a blocking reader would, in order, no matter where the
+    // chunk boundaries fall — including boundaries inside a header,
+    // payload, or checksum.
+    forall(70, |rng, case| {
+        let n = 1 + rng.below(6) as usize;
+        let mut stream = Vec::new();
+        let mut want = Vec::new();
+        for _ in 0..n {
+            let (kind, payload, wire) = arb_frame(rng);
+            stream.extend_from_slice(&wire);
+            want.push((kind, payload));
+        }
+        let mut buf = FrameBuf::new();
+        let mut got = Vec::new();
+        let mut off = 0;
+        while off < stream.len() {
+            let step = 1 + rng.below(257) as usize;
+            let end = (off + step).min(stream.len());
+            buf.extend(&stream[off..end]);
+            off = end;
+            while let Some(frame) = buf
+                .next_frame(MAX_FRAME_BYTES)
+                .unwrap_or_else(|e| panic!("case {case}: chunked parse errored: {e:#}"))
+            {
+                got.push(frame);
+            }
+        }
+        assert_eq!(got, want, "case {case}: chunked parse diverged from the stream");
+        assert_eq!(buf.pending(), 0, "case {case}: bytes left over after last frame");
     });
 }
 

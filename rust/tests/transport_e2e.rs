@@ -11,11 +11,11 @@ use std::thread;
 use std::time::Duration;
 
 use fedsrn::compress::DownlinkMode;
-use fedsrn::config::{Algorithm, ExperimentConfig};
+use fedsrn::config::{Algorithm, ExperimentConfig, Partition};
 use fedsrn::coordinator::{Experiment, RunSummary};
 use fedsrn::fl::{
-    run_device, run_fingerprint, DeviceOpts, DeviceReport, MetricsSink, Participation,
-    RoundRecord, Session, SessionConfig, SessionStats,
+    run_device, run_fingerprint, ChaosSpec, DeviceOpts, DeviceReport, MetricsSink,
+    Participation, RoundRecord, Session, SessionConfig, SessionStats,
 };
 
 fn config(algo: Algorithm, downlink: DownlinkMode) -> ExperimentConfig {
@@ -65,6 +65,7 @@ fn run_networked(
                     addr,
                     device_id: id,
                     connect_timeout: Duration::from_secs(30),
+                    chaos: None,
                 };
                 run_device(&cfg, &opts)
             })
@@ -182,6 +183,182 @@ fn loopback_partial_participation_and_dropout_match_simulation() {
     assert!(cohort_sum < cfg.rounds * cfg.clients, "cohorts must be partial");
 }
 
+/// Deterministically pick a seed whose run provably injects at least
+/// one dropout while leaving every round at least one surviving uplink
+/// (an all-dropped round is a *typed failure* on both sides, not a
+/// comparable run).
+fn find_dropout_seed(cfg: &ExperimentConfig) -> (u64, usize) {
+    let participation = Participation::new(cfg.participation, cfg.dropout);
+    let round_drops = |seed: u64| -> Option<usize> {
+        let mut total = 0;
+        for round in 1..=cfg.rounds {
+            let cohort = participation.sample_round(cfg.clients, seed, round);
+            let d = cohort
+                .iter()
+                .enumerate()
+                .filter(|(pos, &id)| participation.drops(*pos, seed, round, id))
+                .count();
+            if d == cohort.len() {
+                return None; // a whole cohort lost: typed error, skip
+            }
+            total += d;
+        }
+        (total > 0).then_some(total)
+    };
+    (100..400)
+        .find_map(|s| round_drops(s).map(|d| (s, d)))
+        .expect("no seed in [100, 400) both drops and survives")
+}
+
+#[test]
+fn loopback_noniid_dropout_bit_identical_per_strategy() {
+    // Non-IID partitioning changes every shard (and, for the mask
+    // strategies, every per-device eval target), and seeded dropout
+    // must follow the exact same decisions on both sides of the socket
+    // — one noniid configuration per strategy family.
+    for (algo, downlink) in [
+        (Algorithm::FedPMReg, DownlinkMode::QDelta { bits: 8 }),
+        (Algorithm::SignSGD, DownlinkMode::Float32),
+        (Algorithm::FedAvg, DownlinkMode::QDelta { bits: 8 }),
+    ] {
+        let mut cfg = config(algo, downlink);
+        cfg.partition = Partition::NonIid { c: 2 };
+        cfg.participation = 0.75;
+        cfg.dropout = 0.5;
+        cfg.rounds = 3;
+        let (seed, want_drops) = find_dropout_seed(&cfg);
+        cfg.seed = seed;
+        let label = format!("noniid/{algo:?}/{}", downlink.name());
+        let reference = run_in_process(&cfg);
+        let (net_sum, net_recs, stats, reports) = run_networked(&cfg);
+        assert_bit_identical(&label, &reference, &net_sum, &net_recs);
+        assert_eq!(stats.stragglers, 0, "{label}");
+        assert_eq!(stats.missing, 0, "{label}");
+        let total_dropped: usize = reports.iter().map(|r| r.dropped).sum();
+        assert_eq!(total_dropped, want_drops, "{label}: seeded drops over the socket");
+    }
+}
+
+#[test]
+fn fleet_of_256_devices_bit_identical_to_in_process() {
+    // The acceptance bar for the readiness loop: one server thread
+    // multiplexing 256 real sockets (full `fedsrn device` code path in
+    // every thread) computes the same federation as the in-process
+    // engine, bit for bit. Partial participation keeps training costs
+    // sane while the qdelta chain link still reaches all 256 devices.
+    let mut cfg = config(Algorithm::FedPMReg, DownlinkMode::QDelta { bits: 8 });
+    cfg.clients = 256;
+    cfg.rounds = 1;
+    cfg.participation = 0.25;
+    cfg.train_samples = 512;
+    cfg.test_samples = 32;
+    let reference = run_in_process(&cfg);
+    let (net_sum, net_recs, stats, reports) = run_networked(&cfg);
+    assert_bit_identical("fleet-256", &reference, &net_sum, &net_recs);
+    assert_eq!(stats.stragglers, 0);
+    assert_eq!(stats.missing, 0);
+    assert_eq!(stats.reconnects, 0);
+    assert_eq!(stats.protocol_errors, 0);
+    let cohort =
+        Participation::new(cfg.participation, cfg.dropout).sample_round(cfg.clients, cfg.seed, 1);
+    assert!(cohort.len() < cfg.clients, "cohort must be partial");
+    let trained: usize = reports.iter().map(|r| r.trained).sum();
+    assert_eq!(trained, cohort.len(), "only cohort members train");
+    for (id, rep) in reports.iter().enumerate() {
+        // the chain link reached every device, cohort member or not
+        assert_eq!(rep.rounds_seen, cfg.rounds, "device {id} rounds_seen");
+        assert_eq!(rep.reconnects, 0, "device {id} reconnects");
+    }
+}
+
+#[test]
+fn chaos_schedules_end_bit_identical_or_typed() {
+    // Whole-session chaos invariant (the session-level extension of the
+    // byte-flip torture properties): for 64 seeded chaos schedules —
+    // spanning near-clean to heavily faulted — every run must end in
+    // either a bit-identical summary (no degradation observed) or a
+    // typed dropout/reconnect/error. Never a hang, panic, or a silently
+    // wrong aggregate.
+    let mut cfg = config(Algorithm::FedPMReg, DownlinkMode::QDelta { bits: 8 });
+    cfg.clients = 3;
+    cfg.rounds = 2;
+    cfg.train_samples = 96;
+    cfg.test_samples = 32;
+    let reference = run_in_process(&cfg);
+    for chaos_seed in 0..64u64 {
+        let spec = ChaosSpec::from_seed(chaos_seed);
+        let mut exp = Experiment::build(cfg.clone()).unwrap();
+        let fingerprint = run_fingerprint(&exp.cfg, &exp.runtime().manifest);
+        let scfg =
+            SessionConfig::from_experiment(&exp.cfg, fingerprint, Duration::from_secs(2), 0);
+        let mut session = Session::bind("127.0.0.1:0", scfg).unwrap();
+        let addr = session.local_addr().unwrap().to_string();
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|id| {
+                let cfg = cfg.clone();
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    let opts = DeviceOpts {
+                        addr,
+                        device_id: id,
+                        connect_timeout: Duration::from_secs(2),
+                        chaos: Some(spec),
+                    };
+                    run_device(&cfg, &opts)
+                })
+            })
+            .collect();
+        // chaos arms only after the handshake: assembly is always clean
+        session.wait_for_fleet(Duration::from_secs(30)).unwrap();
+        let mut sink = MetricsSink::new("", 10_000).unwrap();
+        let outcome = exp.run_served(&mut session, &mut sink);
+        let _ = session.finish();
+        let stats = session.stats;
+        // Close the listener and every server-side socket BEFORE
+        // joining the device threads: a device mid-reconnect must see a
+        // typed refusal/EOF, not a silent server.
+        drop(session);
+        let device_trouble = handles
+            .into_iter()
+            .map(|h| h.join().expect("device thread must never panic"))
+            .filter(|r| match r {
+                Ok(rep) => rep.reconnects > 0,
+                Err(_) => true, // typed device-side failure
+            })
+            .count();
+        match outcome {
+            Ok(net_sum) => {
+                let degraded = stats.stragglers
+                    + stats.missing
+                    + stats.reconnects
+                    + stats.protocol_errors
+                    > 0
+                    || device_trouble > 0;
+                if !degraded {
+                    // nothing faulted its way into the round: the run
+                    // must be indistinguishable from the clean path
+                    assert_bit_identical(
+                        &format!("chaos seed {chaos_seed}"),
+                        &reference,
+                        &net_sum,
+                        sink.records(),
+                    );
+                }
+            }
+            Err(e) => {
+                // a server-side abort must be the typed round failure
+                // (e.g. a whole cohort wiped out mid-round), never a
+                // panic or a transport desync
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("round") && msg.contains("failed"),
+                    "untyped serve error under chaos seed {chaos_seed}: {msg}"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn mismatched_device_is_rejected_and_fleet_times_out() {
     let cfg = config(Algorithm::FedPMReg, DownlinkMode::Float32);
@@ -200,6 +377,7 @@ fn mismatched_device_is_rejected_and_fleet_times_out() {
             addr,
             device_id: 0,
             connect_timeout: Duration::from_secs(10),
+            chaos: None,
         };
         run_device(&other, &opts)
     });
