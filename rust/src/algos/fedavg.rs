@@ -8,6 +8,8 @@
 //! it lands. Combined with the engine's wave scheduling this keeps the
 //! coordinator at O(wave × n_params) resident uplinks and the server at
 //! O(n_params) fold state — never O(cohort × n_params).
+//!
+//! audit: deterministic
 
 use anyhow::{bail, ensure, Result};
 

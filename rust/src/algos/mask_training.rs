@@ -20,6 +20,8 @@
 //! The paper's algorithm is Stochastic with lambda > 0; lambda comes
 //! from the round plan so the same strategy object runs FedPM (0)
 //! and FedPM+reg (>0).
+//!
+//! audit: deterministic
 
 use anyhow::{bail, Result};
 

@@ -11,6 +11,8 @@
 //! basically incompressible — this is exactly the contrast with the
 //! regularized masks). Note the final model still needs float storage,
 //! unlike the strong-LTH seed+mask representation (paper's remark).
+//!
+//! audit: deterministic
 
 use anyhow::{bail, ensure, Result};
 

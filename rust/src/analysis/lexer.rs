@@ -1,0 +1,343 @@
+//! Source sanitizer for the audit pass.
+//!
+//! Produces a *blanked* view of a Rust source file: the same length in
+//! lines as the original, with comment bodies, string/char-literal
+//! contents and `#[cfg(test)]` items replaced by spaces (newlines are
+//! preserved, so line numbers survive). Rules then tokenize the blanked
+//! text and never see a forbidden name that only occurs in prose, a log
+//! message or a unit test.
+//!
+//! Line comments are additionally captured verbatim (with their line
+//! numbers) because the policy grammar lives in comments — see
+//! [`super::rules`] for the directives.
+//!
+//! This is a lexer, not a parser: it understands exactly as much Rust
+//! as it needs to (nested block comments, escapes, raw strings, byte
+//! literals, and the char-literal/lifetime ambiguity) and nothing more.
+
+/// One `//`-style comment, captured before blanking.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: usize,
+    /// `//!` inner doc comment (module policies live in these).
+    pub inner: bool,
+    /// Text after `//`, `//!` or `///`, untrimmed.
+    pub text: String,
+}
+
+/// Result of sanitizing one file.
+#[derive(Debug, Clone)]
+pub struct Sanitized {
+    /// Source with comments, literal contents and test items blanked.
+    pub blanked: String,
+    /// Line comments outside `#[cfg(test)]` items, in file order.
+    pub comments: Vec<Comment>,
+    /// 1-based inclusive line ranges of stripped `#[cfg(test)]` items.
+    pub test_regions: Vec<(usize, usize)>,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Blank comments and literals, capturing line comments on the way.
+fn blank_pass(src: &str) -> (Vec<char>, Vec<Comment>) {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out: Vec<char> = Vec::with_capacity(chars.len());
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    // Push a blank for every consumed char, keeping newlines (and the
+    // line counter) intact.
+    macro_rules! blank_upto {
+        ($j:expr) => {
+            while i < $j {
+                if chars[i] == '\n' {
+                    line += 1;
+                    out.push('\n');
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+        };
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        match c {
+            '\n' => {
+                line += 1;
+                out.push('\n');
+                i += 1;
+            }
+            '/' if next == Some('/') => {
+                let start_line = line;
+                let mut j = i + 2;
+                let inner = chars.get(j) == Some(&'!');
+                if inner || chars.get(j) == Some(&'/') {
+                    j += 1;
+                }
+                let text_start = j;
+                while j < chars.len() && chars[j] != '\n' {
+                    j += 1;
+                }
+                let text: String = chars[text_start..j].iter().collect();
+                comments.push(Comment { line: start_line, inner, text });
+                blank_upto!(j);
+            }
+            '/' if next == Some('*') => {
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < chars.len() && depth > 0 {
+                    if chars[j] == '/' && chars.get(j + 1) == Some(&'*') {
+                        depth += 1;
+                        j += 2;
+                    } else if chars[j] == '*' && chars.get(j + 1) == Some(&'/') {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                blank_upto!(j);
+            }
+            '"' => {
+                let j = end_of_string(&chars, i);
+                blank_upto!(j);
+            }
+            'r' | 'b' if !prev_is_ident(&chars, i) => {
+                if let Some(j) = end_of_prefixed_literal(&chars, i) {
+                    blank_upto!(j);
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            '\'' => {
+                if let Some(j) = end_of_char_literal(&chars, i) {
+                    blank_upto!(j);
+                } else {
+                    // Lifetime: keep the tick, the ident follows normally.
+                    out.push('\'');
+                    i += 1;
+                }
+            }
+            _ => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    (out, comments)
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && is_ident_char(chars[i - 1])
+}
+
+/// `chars[i]` is the opening `"`; return the index one past the close.
+fn end_of_string(chars: &[char], i: usize) -> usize {
+    let mut j = i + 1;
+    while j < chars.len() {
+        match chars[j] {
+            '\\' => j += 2,
+            '"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Handle `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#` and `b'…'` starting at
+/// `i`. Returns one past the literal, or `None` if this is a plain
+/// identifier after all.
+fn end_of_prefixed_literal(chars: &[char], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    if chars[i] == 'b' {
+        match chars.get(j) {
+            Some('"') => return Some(end_of_string(chars, j)),
+            Some('\'') => return end_of_char_literal(chars, j),
+            Some('r') => j += 1,
+            _ => return None,
+        }
+    }
+    // Raw string: hashes then a quote.
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) != Some(&'"') {
+        return None;
+    }
+    j += 1;
+    while j < chars.len() {
+        if chars[j] == '"' {
+            let tail = &chars[j + 1..];
+            if tail.len() >= hashes && tail[..hashes].iter().all(|&c| c == '#') {
+                return Some(j + 1 + hashes);
+            }
+        }
+        j += 1;
+    }
+    Some(j)
+}
+
+/// `chars[i]` is a `'`. Returns one past the closing quote for a char
+/// literal, or `None` for a lifetime.
+fn end_of_char_literal(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1) {
+        Some('\\') => {
+            // Escape: skip the escaped char, then scan to the close.
+            let mut j = i + 3;
+            while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+                j += 1;
+            }
+            Some(j + 1)
+        }
+        Some(&d) if is_ident_char(d) => {
+            // 'a' is a char literal; 'a (no closing quote) a lifetime.
+            if chars.get(i + 2) == Some(&'\'') {
+                Some(i + 3)
+            } else {
+                None
+            }
+        }
+        Some(_) => {
+            if chars.get(i + 2) == Some(&'\'') {
+                Some(i + 3)
+            } else {
+                None
+            }
+        }
+        None => None,
+    }
+}
+
+/// Blank every item annotated `#[cfg(test)]` in the already-blanked
+/// text; returns the 1-based inclusive line ranges removed.
+fn strip_test_items(blanked: &mut [char]) -> Vec<(usize, usize)> {
+    let pat: Vec<char> = "#[cfg(test)]".chars().collect();
+    let mut regions = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i + pat.len() <= blanked.len() {
+        if blanked[i] == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if blanked[i..i + pat.len()] != pat[..] {
+            i += 1;
+            continue;
+        }
+        // Attribute found: the item it governs ends at the matching
+        // close brace of its body, or at a `;` for braceless items.
+        let start_line = line;
+        let mut j = i + pat.len();
+        let mut depth = 0usize;
+        let mut end_line = line;
+        while j < blanked.len() {
+            match blanked[j] {
+                '\n' => end_line += 1,
+                '{' => depth += 1,
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                ';' if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let end = j.min(blanked.len().saturating_sub(1));
+        for slot in blanked.iter_mut().take(end + 1).skip(i) {
+            if *slot != '\n' {
+                *slot = ' ';
+            }
+        }
+        regions.push((start_line, end_line));
+        line = end_line;
+        i = end + 1;
+    }
+    regions
+}
+
+/// Sanitize one file: blank comments/literals, then strip test items
+/// (and any comments captured inside them).
+pub fn sanitize(src: &str) -> Sanitized {
+    let (mut blanked, mut comments) = blank_pass(src);
+    let test_regions = strip_test_items(&mut blanked);
+    comments.retain(|c| !test_regions.iter().any(|&(s, e)| c.line >= s && c.line <= e));
+    Sanitized { blanked: blanked.into_iter().collect(), comments, test_regions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_blanked_and_captured() {
+        let s = sanitize("let x = 1; // trailing note\n//! audit: deterministic\n");
+        assert!(!s.blanked.contains("trailing"));
+        assert!(s.blanked.contains("let x = 1;"));
+        assert_eq!(s.comments.len(), 2);
+        assert_eq!(s.comments[0].line, 1);
+        assert!(!s.comments[0].inner);
+        assert_eq!(s.comments[0].text, " trailing note");
+        assert!(s.comments[1].inner);
+        assert_eq!(s.comments[1].text, " audit: deterministic");
+    }
+
+    #[test]
+    fn strings_and_chars_are_blanked() {
+        let src = "call(\"panic! inside\", 'x', '\\n', b\"bytes\", r#\"raw \" str\"#);";
+        let s = sanitize(src);
+        assert!(!s.blanked.contains("panic"));
+        assert!(!s.blanked.contains("bytes"));
+        assert!(!s.blanked.contains("raw"));
+        assert!(s.blanked.contains("call("));
+        assert_eq!(s.blanked.chars().count(), src.chars().count());
+    }
+
+    #[test]
+    fn lifetimes_survive() {
+        let s = sanitize("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(s.blanked.contains("'a str"));
+    }
+
+    #[test]
+    fn multiline_and_nested_block_comments() {
+        let s = sanitize("a /* one /* two */ still */ b\nc");
+        assert!(s.blanked.contains('a'));
+        assert!(s.blanked.contains('b'));
+        assert!(!s.blanked.contains("still"));
+        assert_eq!(s.blanked.lines().count(), 2);
+    }
+
+    #[test]
+    fn test_items_are_stripped() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n\
+                   \x20   // audit:checked(bogus)\n    fn t() { x.unwrap(); }\n}\n\
+                   fn after() {}\n";
+        let s = sanitize(src);
+        assert!(s.blanked.contains("fn real"));
+        assert!(s.blanked.contains("fn after"));
+        assert!(!s.blanked.contains("unwrap"));
+        assert_eq!(s.test_regions, vec![(2, 6)]);
+        assert!(s.comments.is_empty(), "comments inside test items are dropped");
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_derail() {
+        let s = sanitize(r#"let a = "he said \"hi\""; let b = 2;"#);
+        assert!(s.blanked.contains("let b = 2;"));
+        assert!(!s.blanked.contains("hi"));
+    }
+}

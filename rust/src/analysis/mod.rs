@@ -1,0 +1,103 @@
+//! `fedsrn audit` — a zero-dependency invariant linter for this crate.
+//!
+//! The test suite can only spot-check the two contracts the whole
+//! reproduction rests on: aggregation must be bit-identical across
+//! sequential/parallel/socket/chaos execution, and every byte arriving
+//! off the wire must parse without panicking. This module *enforces*
+//! them structurally: a tiny lexer ([`lexer`]) blanks comments, string
+//! literals and `#[cfg(test)]` items out of each source file, and a
+//! rule engine ([`rules`]) checks the remaining tokens against
+//! policies the modules declare about themselves in comments.
+//!
+//! Run it as `fedsrn audit` (a required CI gate); rule families,
+//! the annotation grammar and the waiver protocol are documented in
+//! DESIGN.md §Static-analysis.
+
+mod lexer;
+mod rules;
+
+pub use lexer::{sanitize, Comment, Sanitized};
+pub use rules::{check_file, parse_directives, Directives, Finding, UNSAFE_BUDGET_FILE};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Outcome of auditing a source tree.
+#[derive(Debug)]
+pub struct AuditReport {
+    /// `.rs` files scanned.
+    pub files: usize,
+    /// Files that declared at least one policy or region.
+    pub annotated: usize,
+    /// All violations, in (file, line) order.
+    pub findings: Vec<Finding>,
+}
+
+impl AuditReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report: one line per finding plus a summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.to_string());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "audit: {} files scanned, {} under policy, {} finding(s)\n",
+            self.files,
+            self.annotated,
+            self.findings.len()
+        ));
+        out
+    }
+}
+
+/// Audit a single file's contents. `rel` is the path relative to the
+/// source root (it selects the `unsafe` budget); exposed for the
+/// fixture tests.
+pub fn audit_file(rel: &str, text: &str) -> Vec<Finding> {
+    check_file(rel, &sanitize(text)).1
+}
+
+/// Audit every `.rs` file under `src_root` (sorted walk, so output and
+/// exit status are deterministic).
+pub fn audit_tree(src_root: &Path) -> Result<AuditReport> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)
+        .with_context(|| format!("walking source tree {}", src_root.display()))?;
+    files.sort();
+    let mut report = AuditReport { files: 0, annotated: 0, findings: Vec::new() };
+    for path in &files {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text =
+            fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let (directives, findings) = check_file(&rel, &sanitize(&text));
+        report.files += 1;
+        if directives.any_policy() {
+            report.annotated += 1;
+        }
+        report.findings.extend(findings);
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

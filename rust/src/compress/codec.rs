@@ -11,6 +11,8 @@
 //!
 //! This is what turns the paper's "≤ 1 Bpp" bound into actually-measured
 //! uplink bytes in the experiment logs.
+//!
+//! audit: deterministic, panic-free
 
 use anyhow::{bail, ensure, Result};
 
@@ -81,6 +83,7 @@ impl Encoded {
 
     /// Parse from a flat byte vector, validating the recorded payload
     /// bit-length against the bytes actually present.
+    // audit:wire-decode-begin
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         ensure!(bytes.len() >= 9, "uplink header truncated ({} bytes)", bytes.len());
         let Some(method) = Method::from_u8(bytes[0]) else {
@@ -96,6 +99,7 @@ impl Encoded {
         );
         Ok(Self { method, ones, bit_len, payload })
     }
+    // audit:wire-decode-end
 }
 
 fn pack_raw(mask: &BitVec) -> Vec<u8> {
@@ -150,6 +154,7 @@ pub fn encode_with(mask: &BitVec, method: Method) -> Encoded {
 /// must match the payload bytes present, raw/Rice payloads must have
 /// exactly the size the mask demands, and the decoded mask must
 /// reproduce the recorded one-count.
+// audit:wire-decode-begin
 pub fn decode(enc: &Encoded, len: usize) -> Result<BitVec> {
     ensure!(
         enc.ones as usize <= len,
@@ -183,6 +188,7 @@ pub fn decode(enc: &Encoded, len: usize) -> Result<BitVec> {
     );
     Ok(mask)
 }
+// audit:wire-decode-end
 
 #[cfg(test)]
 mod tests {

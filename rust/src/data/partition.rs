@@ -5,6 +5,8 @@
 //!   (c ∈ {2,4} in the paper) and only receives samples of those
 //!   classes; each class's sample pool is split evenly among the
 //!   devices holding that class.
+//!
+//! audit: deterministic
 
 use super::Dataset;
 use crate::util::Xoshiro256;

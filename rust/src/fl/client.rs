@@ -5,6 +5,8 @@
 //! minibatches — the scan lives inside the HLO, so the FFI boundary is
 //! crossed once per S steps, not per step), and hands back its updated
 //! local scores plus train metrics.
+//!
+//! audit: deterministic
 
 use anyhow::Result;
 

@@ -13,6 +13,8 @@
 //! into independent `RoundComm` values on worker threads and folded into
 //! the round total with [`RoundComm::merge`] — no `&mut` interleaving
 //! per client, and the merged result is independent of merge order.
+//!
+//! audit: deterministic
 
 use super::protocol::DownlinkMsg;
 

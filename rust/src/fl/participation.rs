@@ -6,6 +6,8 @@
 //! participation; this module generalizes the round loop so the same
 //! code runs the paper's setting (fraction = 1, dropout = 0) and the
 //! robustness ablations in `coordinator::ablation`.
+//!
+//! audit: deterministic
 
 use crate::util::Xoshiro256;
 

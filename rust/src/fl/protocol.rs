@@ -25,6 +25,8 @@
 //! `fold_uplink` (see [`crate::algos`]) consumes envelopes one at a time
 //! as they land, keeping server memory O(n_params) — the streaming-fold
 //! contract described in DESIGN.md §Protocol.
+//!
+//! audit: wire-decode, deterministic
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -48,6 +50,7 @@ const ENVELOPE_HEAD: usize = 2;
 const UPLINK_HEAD: usize = ENVELOPE_HEAD + 8 + 4;
 
 fn put_f32s(out: &mut Vec<u8>, values: &[f32]) {
+    // audit:checked(a weight/state vector is far below 2^32 entries by model geometry)
     out.extend_from_slice(&(values.len() as u32).to_le_bytes());
     for v in values {
         out.extend_from_slice(&v.to_le_bytes());
@@ -149,6 +152,7 @@ impl DownlinkMsg {
             DownlinkMsg::Frame(f) => {
                 out.push(DL_FRAME);
                 let fb = f.to_bytes();
+                // audit:checked(a downlink frame is capped well below 2^32 wire bytes)
                 out.extend_from_slice(&(fb.len() as u32).to_le_bytes());
                 out.extend_from_slice(&fb);
             }
@@ -285,6 +289,7 @@ impl UplinkMsg {
         match &self.payload {
             UplinkPayload::CodedMask(e) | UplinkPayload::SignVector(e) => {
                 let eb = e.to_bytes();
+                // audit:checked(a coded mask is at most ~n/8 bytes, far below 2^32)
                 out.extend_from_slice(&(eb.len() as u32).to_le_bytes());
                 out.extend_from_slice(&eb);
             }
@@ -375,9 +380,11 @@ impl RoundPlan {
         out.extend_from_slice(&self.seed.to_le_bytes());
         out.extend_from_slice(&self.lambda.to_le_bytes());
         out.extend_from_slice(&self.lr.to_le_bytes());
+        // audit:checked(local_epochs is a config knob validated to a small count)
         out.extend_from_slice(&(self.local_epochs as u32).to_le_bytes());
         out.extend_from_slice(&self.topk_frac.to_le_bytes());
         out.extend_from_slice(&self.server_lr.to_le_bytes());
+        // audit:checked(a bool narrows losslessly into u8)
         out.push(self.adam as u8);
         out
     }

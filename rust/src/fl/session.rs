@@ -55,6 +55,8 @@
 //! testing it can wrap its socket in a [`crate::fl::chaos::ChaosStream`]
 //! ([`DeviceOpts::chaos`]), which injects seeded delays, split writes,
 //! corrupted frames, and disconnects *after* a clean handshake.
+//!
+//! audit: panic-free
 
 use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -769,6 +771,7 @@ fn round_payload(plan: &RoundPlan, msg: &DownlinkMsg) -> Vec<u8> {
 
 /// Parse a `Round` frame payload back into its typed halves, validating
 /// every recorded length (the envelope re-validates itself).
+// audit:wire-decode-begin
 pub fn parse_round(payload: &[u8]) -> Result<(RoundPlan, DownlinkMsg)> {
     ensure!(payload.len() >= 4, "round payload truncated");
     let plan_len = u32::from_le_bytes(payload[..4].try_into()?) as usize;
@@ -777,10 +780,13 @@ pub fn parse_round(payload: &[u8]) -> Result<(RoundPlan, DownlinkMsg)> {
         "round payload records {plan_len} plan bytes but carries {}",
         payload.len() - 4
     );
+    // audit:checked(the ensure above bounds 4 + plan_len by payload.len())
     let plan = RoundPlan::from_bytes(&payload[4..4 + plan_len]).context("round plan")?;
+    // audit:checked(the ensure above bounds 4 + plan_len by payload.len())
     let msg = DownlinkMsg::from_bytes(&payload[4 + plan_len..]).context("round downlink")?;
     Ok((plan, msg))
 }
+// audit:wire-decode-end
 
 /// Device-side runtime knobs (the CLI flags of `fedsrn device`).
 #[derive(Debug, Clone)]

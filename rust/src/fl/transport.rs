@@ -34,6 +34,8 @@
 //! accumulates whatever bytes a non-blocking socket happens to deliver
 //! and yields complete validated frames, which is what the session
 //! readiness loop parses against.
+//!
+//! audit: wire-decode, deterministic
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpStream};
@@ -152,6 +154,7 @@ pub fn write_frame<W: Write>(w: &mut W, kind: FrameKind, payload: &[u8]) -> Resu
         payload.len(),
         MAX_FRAME_BYTES
     );
+    // audit:checked(the ensure above caps payload.len() at MAX_FRAME_BYTES < 2^32)
     let len = (payload.len() as u32).to_le_bytes();
     let kind_byte = [kind.to_u8()];
     let sum = fnv1a64(&[&kind_byte[..], &len[..], payload]).to_le_bytes();
@@ -249,13 +252,16 @@ impl FrameBuf {
             return Ok(None);
         }
         let payload_end = FRAME_HEAD + len;
+        // audit:checked(the early return above guarantees buf.len() >= total > payload_end)
         let expect = fnv1a64(&[&self.buf[1..2], &self.buf[2..6], &self.buf[FRAME_HEAD..payload_end]]);
+        // audit:checked(the early return above guarantees buf.len() >= total)
         let sum = u64::from_le_bytes(self.buf[payload_end..total].try_into()?);
         ensure!(
             sum == expect,
             "frame checksum mismatch ({} frame, {len} payload bytes)",
             kind.name()
         );
+        // audit:checked(the early return above guarantees buf.len() >= total > payload_end)
         let payload = self.buf[FRAME_HEAD..payload_end].to_vec();
         self.buf.drain(..total);
         Ok(Some((kind, payload)))

@@ -25,8 +25,21 @@
 //! the parallel round engine ([`coordinator::RoundEngine`]), with
 //! results bit-identical to the sequential path at any thread count
 //! (DESIGN.md §Protocol, §Parallel round engine).
+//!
+//! The contracts above are enforced by tooling, not convention: the
+//! [`analysis`] module implements `fedsrn audit`, a zero-dependency
+//! invariant linter run as a required CI gate (DESIGN.md
+//! §Static-analysis). `unsafe` is budgeted to `runtime/pjrt.rs` alone
+//! (denied crate-wide here, allowed on that module with per-impl
+//! `SAFETY:` justifications), and clippy's `disallowed_methods` /
+//! `disallowed_types` (clippy.toml) police the determinism contract
+//! from the compiler's side.
+
+#![deny(unsafe_code)]
+#![warn(clippy::disallowed_methods, clippy::disallowed_types)]
 
 pub mod algos;
+pub mod analysis;
 pub mod cli;
 pub mod compress;
 pub mod config;

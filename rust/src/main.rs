@@ -9,7 +9,10 @@
 //!   analyze            summarize a run's JSONL metrics log
 //!   inspect-artifacts  list AOT artifacts and their manifests
 //!   codec-bench        entropy-coder throughput/rate sweep
+//!   audit              invariant linter over the crate sources (CI gate)
 //!   help
+
+#![warn(clippy::disallowed_methods, clippy::disallowed_types)]
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -45,6 +48,7 @@ USAGE:
   fedsrn analyze --run FILE.jsonl [--tail 5]
   fedsrn inspect-artifacts [--dir artifacts]
   fedsrn codec-bench [--n 268800]
+  fedsrn audit [--src rust/src]
   fedsrn help
 
 Config keys for --set (see rust/src/config/mod.rs): model dataset
@@ -76,6 +80,12 @@ injector (seeded delays, split writes, corrupted frames, mid-round
 disconnects) armed after a clean handshake — for torture-testing the
 server's readiness loop; every failure must surface as a typed
 dropout/reconnect, never a hang or a wrong aggregate.
+
+audit lints the crate sources for the contracts the test suite can
+only spot-check: wire-decode panic-freedom, aggregate determinism,
+alloc-free hot loops and the unsafe budget (DESIGN.md
+§Static-analysis). Any finding is a non-zero exit; CI runs it as a
+required gate.
 ";
 
 fn main() -> ExitCode {
@@ -108,8 +118,28 @@ fn run(argv: &[String]) -> Result<()> {
         "analyze" => cmd_analyze(&args),
         "inspect-artifacts" => cmd_inspect(&args),
         "codec-bench" => cmd_codec_bench(&args),
+        "audit" => cmd_audit(&args),
         other => bail!("unknown command '{other}' (try `fedsrn help`)"),
     }
+}
+
+/// Run the invariant linter over the crate sources (the CI gate).
+fn cmd_audit(args: &Args) -> Result<()> {
+    args.ensure_known_flags(&["src"])?;
+    let root = match args.flag("src") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => ["rust/src", "src"]
+            .into_iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.is_dir())
+            .context("no rust/src or src here; pass --src DIR")?,
+    };
+    let report = fedsrn::analysis::audit_tree(&root)?;
+    print!("{}", report.render());
+    if !report.is_clean() {
+        bail!("audit failed with {} finding(s)", report.findings.len());
+    }
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {

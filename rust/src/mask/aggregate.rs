@@ -5,6 +5,8 @@
 //! an unbiased estimate of the average of the clients' local probability
 //! masks (FedPM, thm. 1). Implemented as a streaming accumulator so the
 //! server never holds all masks in memory at once.
+//!
+//! audit: deterministic
 
 use crate::util::BitVec;
 

@@ -27,6 +27,8 @@
 //! WHERE the regularizer prunes (the paper's sec. III intuition:
 //! redundant sub-network features get eliminated, which concentrates in
 //! the over-provisioned layers).
+//!
+//! audit: deterministic
 
 use anyhow::{bail, ensure, Context, Result};
 

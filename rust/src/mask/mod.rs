@@ -5,6 +5,8 @@
 //!   * empirical Bpp of a transmitted mask (eq. 13) — [`entropy`]
 //!   * weighted mask averaging into the next global probability mask
 //!     (eq. 8) — [`aggregate::MaskAggregator`]
+//!
+//! audit: deterministic
 
 pub mod aggregate;
 pub mod entropy;

@@ -18,6 +18,8 @@
 //!
 //! All per-call scratch lives in a [`Workspace`] sized from the plan
 //! once per runtime call; the step loop then runs allocation-free.
+//!
+//! audit: deterministic
 
 use anyhow::{bail, ensure, Result};
 
@@ -234,6 +236,7 @@ impl Plan {
         self.col_elems_per_row
     }
 
+    // audit:no-alloc-begin
     /// Forward through effective weights `w` for `rows` inputs taken
     /// from `x` (read in place, never copied). Afterwards the logits
     /// sit in `ws.acts[self.logits_buf()][..rows * n_classes]`.
@@ -394,6 +397,7 @@ impl Plan {
             }
         }
     }
+    // audit:no-alloc-end
 }
 
 /// Disjoint (input, output) views over the activation buffers; buffer 0

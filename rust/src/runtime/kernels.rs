@@ -21,7 +21,10 @@
 //! of the left operand at a time so each row of the right operand is
 //! streamed from cache once per 4 output rows instead of once per row.
 //! On post-ReLU activations the `a == 0` skip prunes whole saxpy rows.
+//!
+//! audit: deterministic
 
+// audit:no-alloc-begin
 /// Left-operand row block: B rows reused per pass.
 const MR: usize = 4;
 
@@ -305,6 +308,7 @@ pub fn softmax_xent_grad(logits: &[f32], y: &[i32], c: usize, denom: f32, g: &mu
         grow[yb as usize] -= 1.0 / denom;
     }
 }
+// audit:no-alloc-end
 
 #[cfg(test)]
 mod tests {

@@ -25,7 +25,11 @@ pub mod artifacts;
 pub mod graph;
 pub mod kernels;
 pub mod native;
+// The crate denies `unsafe_code`; the PJRT FFI boundary is the one
+// budgeted exception, and `fedsrn audit` additionally requires every
+// `unsafe` there to carry a `SAFETY:` justification.
 #[cfg(feature = "pjrt")]
+#[allow(unsafe_code)]
 pub mod pjrt;
 #[cfg(feature = "pjrt")]
 pub mod xla_stub;

@@ -40,11 +40,19 @@ pub struct PjrtBackend {
     weights_dev: PjRtBuffer,
 }
 
-// SAFETY: the PJRT C API contract makes clients, loaded executables and
-// buffers safe to use from multiple threads (executions are internally
-// synchronized; buffers are immutable once created). The parallel round
-// engine only ever calls `&self` methods concurrently.
+// SAFETY: every handle in PjrtBackend (client, loaded executables,
+// staged buffer) is an owned pointer into the PJRT runtime, which the
+// PJRT C API contract allows to be *used from* any thread — handles
+// carry no thread-affine state, so moving the struct to another thread
+// cannot violate an API precondition.
 unsafe impl Send for PjrtBackend {}
+
+// SAFETY: all shared access goes through `&self` methods, and the PJRT
+// runtime synchronizes those entry points internally: executions on one
+// loaded executable are serialized by the runtime, host-to-device
+// transfers are independent, and the staged weight buffer is immutable
+// after creation. Concurrent `&self` calls (the parallel round engine's
+// worker threads) therefore cannot race on the underlying objects.
 unsafe impl Sync for PjrtBackend {}
 
 fn compile_hlo(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {

@@ -4,6 +4,8 @@
 //! over `n` parameters occupies `ceil(n/64)` words here, and the entropy
 //! coder in [`crate::compress`] pushes the *actual* uplink below that
 //! whenever the mask is sparse.
+//!
+//! audit: deterministic
 
 /// A fixed-length packed bit vector.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -11,6 +11,8 @@
 //! * [`Xoshiro256`] — xoshiro256++, the general-purpose stream.
 //! * [`Philox4x32`] — counter-based; used where random access by index
 //!   matters (per-parameter Bernoulli draws without storing a stream).
+//!
+//! audit: deterministic
 
 /// SplitMix64: tiny, passes BigCrush, standard seed expander.
 #[derive(Debug, Clone)]

@@ -1,0 +1,17 @@
+//! Aggregation state behind a hash map and a wall clock: the fold
+//! order (and so the float sums) would differ from run to run.
+//!
+//! audit: deterministic
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn fold(scores: &HashMap<u32, f32>) -> f32 {
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for v in scores.values() {
+        acc += *v;
+    }
+    let _ = t0.elapsed();
+    acc
+}

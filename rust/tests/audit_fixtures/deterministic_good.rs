@@ -1,0 +1,22 @@
+//! The same fold over an order-stable map. The test module may use
+//! whatever it likes: `#[cfg(test)]` items sit outside the policy.
+//!
+//! audit: deterministic
+
+use std::collections::BTreeMap;
+
+pub fn fold(scores: &BTreeMap<u32, f32>) -> f32 {
+    scores.values().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+    use std::time::Instant;
+
+    #[test]
+    fn exempt() {
+        let _ = (HashSet::<u8>::new(), Instant::now());
+        assert!(super::fold(&super::BTreeMap::new()) == 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! A "hot loop" that allocates on every step: each banned shape once.
+
+pub fn step(xs: &[f32]) -> Vec<f32> {
+    // audit:no-alloc-begin
+    let zeros = vec![0.0f32; xs.len()];
+    let doubled: Vec<f32> = xs.iter().map(|v| v * 2.0).collect();
+    let copy = doubled.to_vec();
+    let again = copy.clone();
+    // audit:no-alloc-end
+    let _ = zeros;
+    again
+}

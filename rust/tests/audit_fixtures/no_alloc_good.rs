@@ -1,0 +1,14 @@
+//! The same step against caller-provided buffers; allocation happens
+//! once, outside the fence, like `runtime::graph::Workspace` does it.
+
+pub fn make_scratch(n: usize) -> Vec<f32> {
+    vec![0.0f32; n]
+}
+
+// audit:no-alloc-begin
+pub fn step(xs: &[f32], out: &mut [f32]) {
+    for (o, v) in out.iter_mut().zip(xs) {
+        *o = v * 2.0;
+    }
+}
+// audit:no-alloc-end

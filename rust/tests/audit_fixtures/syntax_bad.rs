@@ -1,0 +1,8 @@
+//! Three ways to hold the annotation grammar wrong.
+//!
+//! audit: wire-safety
+
+// audit:checked()
+pub fn nothing() {}
+
+// audit:no-alloc-end

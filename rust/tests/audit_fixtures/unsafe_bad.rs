@@ -1,0 +1,5 @@
+//! An `unsafe` block with no SAFETY comment anywhere near it.
+
+pub fn read_first(xs: &[f32]) -> f32 {
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,8 @@
+//! An `unsafe` block carrying its justification. The test feeds this
+//! text to the auditor under the one path the budget allows.
+
+pub fn read_first(xs: &[f32]) -> f32 {
+    // SAFETY: the caller guarantees xs is non-empty, so the pointer
+    // read stays in bounds.
+    unsafe { *xs.as_ptr() }
+}

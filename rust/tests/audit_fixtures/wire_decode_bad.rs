@@ -1,0 +1,13 @@
+//! A frame decoder that trusts its input. Every flagged line below is
+//! a shape the wire-decode policy exists to catch.
+//!
+//! audit: wire-decode
+
+pub fn parse(buf: &[u8], at: usize) -> (u8, u16) {
+    let kind = buf[at];
+    let len = u16::from_le_bytes(buf[1..3].try_into().unwrap());
+    if kind > 9 {
+        panic!("bad frame kind {kind}");
+    }
+    (kind, buf.len() as u16 + len)
+}

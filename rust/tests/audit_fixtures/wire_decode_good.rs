@@ -1,0 +1,14 @@
+//! The same decoder written the way the policy wants: bounds checked
+//! up front, widening casts only, and a waiver naming the local guard.
+//!
+//! audit: wire-decode
+
+pub fn parse(buf: &[u8], at: usize) -> Option<(u8, u64)> {
+    if at >= buf.len() || buf.len() < 3 {
+        return None;
+    }
+    // audit:checked(the bounds test above guarantees at < buf.len())
+    let kind = buf[at];
+    let len = u64::from(buf[1]) | (u64::from(buf[2]) << 8);
+    Some((kind, u64::from(kind) + len))
+}

@@ -1,0 +1,103 @@
+//! Integration tests for `fedsrn audit` (DESIGN.md §Static-analysis).
+//!
+//! Each rule family has a fixture under `tests/audit_fixtures/` that
+//! trips it and a twin that passes clean — the fixtures are read as
+//! text, never compiled — plus a self-audit proving the shipped source
+//! tree satisfies every policy it declares.
+
+use std::fs;
+use std::path::Path;
+
+use fedsrn::analysis::{audit_file, audit_tree, UNSAFE_BUDGET_FILE};
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/audit_fixtures").join(name);
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Audit a fixture under a pretend source-root-relative path and
+/// return `(rule, line)` per finding.
+fn findings(rel: &str, name: &str) -> Vec<(&'static str, usize)> {
+    audit_file(rel, &fixture(name)).iter().map(|f| (f.rule, f.line)).collect()
+}
+
+#[test]
+fn wire_decode_fixture_trips_all_four_shapes() {
+    let got = findings("fl/fixture.rs", "wire_decode_bad.rs");
+    let want =
+        [("wire-decode", 7), ("wire-decode", 8), ("wire-decode", 10), ("wire-decode", 12)];
+    assert_eq!(got, want, "dynamic index, unwrap, panic!, as-narrowing");
+}
+
+#[test]
+fn wire_decode_fixture_passes_when_guarded() {
+    let got = findings("fl/fixture.rs", "wire_decode_good.rs");
+    assert!(got.is_empty(), "{got:?}");
+}
+
+#[test]
+fn deterministic_fixture_trips_on_clocks_and_hashers() {
+    let got = findings("mask/fixture.rs", "deterministic_bad.rs");
+    let want = [
+        ("deterministic", 6),
+        ("deterministic", 7),
+        ("deterministic", 9),
+        ("deterministic", 10),
+    ];
+    assert_eq!(got, want, "HashMap and Instant, at use and call sites");
+}
+
+#[test]
+fn deterministic_fixture_passes_with_ordered_maps() {
+    let got = findings("mask/fixture.rs", "deterministic_good.rs");
+    assert!(got.is_empty(), "test-module HashSet/Instant must be exempt: {got:?}");
+}
+
+#[test]
+fn no_alloc_fixture_trips_inside_the_fence() {
+    let got = findings("runtime/fixture.rs", "no_alloc_bad.rs");
+    let want = [("no-alloc", 5), ("no-alloc", 6), ("no-alloc", 7), ("no-alloc", 8)];
+    assert_eq!(got, want, "vec!, collect, to_vec, clone");
+}
+
+#[test]
+fn no_alloc_fixture_passes_with_workspace_buffers() {
+    let got = findings("runtime/fixture.rs", "no_alloc_good.rs");
+    assert!(got.is_empty(), "allocation outside the fence is fine: {got:?}");
+}
+
+#[test]
+fn unsafe_fixture_trips_with_and_without_budget() {
+    let undocumented = findings(UNSAFE_BUDGET_FILE, "unsafe_bad.rs");
+    assert_eq!(undocumented, [("unsafe-budget", 4)], "no SAFETY comment");
+    let outside = findings("fl/fixture.rs", "unsafe_bad.rs");
+    assert_eq!(outside, [("unsafe-budget", 4)], "outside the budgeted file");
+}
+
+#[test]
+fn unsafe_fixture_passes_documented_in_budget() {
+    let got = findings(UNSAFE_BUDGET_FILE, "unsafe_good.rs");
+    assert!(got.is_empty(), "{got:?}");
+}
+
+#[test]
+fn malformed_directives_are_findings_not_silence() {
+    let got = findings("fl/fixture.rs", "syntax_bad.rs");
+    let want = [("audit-syntax", 3), ("audit-syntax", 5), ("audit-syntax", 8)];
+    assert_eq!(got, want, "unknown policy, empty waiver reason, unpaired fence");
+}
+
+/// The gate CI enforces: the shipped tree is clean under its own
+/// declared policies, and the policies actually cover the crate.
+#[test]
+fn shipped_tree_passes_its_own_audit() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = audit_tree(&src).expect("walking src");
+    assert!(report.is_clean(), "audit findings in shipped tree:\n{}", report.render());
+    assert!(
+        report.annotated >= 15,
+        "expected >= 15 modules under policy, got {}",
+        report.annotated
+    );
+    assert!(report.files > report.annotated, "some modules are intentionally unannotated");
+}
