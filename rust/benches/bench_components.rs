@@ -367,6 +367,7 @@ fn main() {
     // (pipelined broadcast -> coded-mask uplinks -> ordered fold).
     {
         use fedsrn::algos::{MaskMode, MaskStrategy};
+        use fedsrn::config::Aggregation;
         use fedsrn::fl::{
             Conn, FrameKind, Hello, Participation, RoundComm, RoundPlan, Session,
             SessionConfig, UplinkMsg, UplinkPayload, TRANSPORT_VERSION,
@@ -385,6 +386,9 @@ fn main() {
                 deadline: Duration::from_secs(10),
                 wave: 0,
                 needs_state_sync: false,
+                aggregation: Aggregation::Sync,
+                staleness_beta: 1.0,
+                edges: 0,
             }
         }
         fn handshake(addr: &str, id: u64) -> Conn {
@@ -436,6 +440,7 @@ fn main() {
             let up_bytes = UplinkMsg {
                 weight: 100.0,
                 train_loss: 0.5,
+                trained_round: UplinkMsg::FRESH,
                 payload: UplinkPayload::CodedMask(compress::encode(&random_mask(
                     NP, 0.5, 11,
                 ))),

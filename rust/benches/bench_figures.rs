@@ -225,6 +225,8 @@ fn main() {
                         device_id: id,
                         connect_timeout: Duration::from_secs(30),
                         chaos: None,
+                        delay: None,
+                        deadline_ticks: u64::MAX,
                     };
                     run_device(&cfg, &opts)
                 })

@@ -19,7 +19,7 @@ use crate::fl::protocol::{DownlinkMsg, RoundPlan, UplinkMsg, UplinkPayload};
 use crate::fl::{Client, RoundComm};
 use crate::runtime::ModelRuntime;
 
-use super::{ClientTask, EvalModel, RoundStats, ServerLogic};
+use super::{AggKind, AggregateMsg, ClientTask, EvalModel, RoundStats, ServerLogic};
 
 /// FedAvg server logic. The dense local SGD learning rate is taken from
 /// `RoundPlan.server_lr` (distinct from the score lr).
@@ -30,7 +30,9 @@ pub struct FedAvg {
     /// Streaming |D_i|-weighted sum of landed uplinks (eq. 8 shape).
     acc: Vec<f64>,
     weight_sum: f64,
-    train_loss: f64,
+    /// Summed (not running-mean) client losses: a plain sum merges with
+    /// edge-tier partial sums in any grouping, unlike a running mean.
+    loss_sum: f64,
     reporters: usize,
 }
 
@@ -42,7 +44,7 @@ impl FedAvg {
             dl: DownlinkEncoder::new(downlink),
             acc: vec![0.0; n],
             weight_sum: 0.0,
-            train_loss: 0.0,
+            loss_sum: 0.0,
             reporters: 0,
         }
     }
@@ -87,6 +89,7 @@ impl ClientTask for FedAvgClientTask {
         Ok(UplinkMsg {
             weight: client.weight(),
             train_loss: last_loss,
+            trained_round: plan.round as u64,
             payload: UplinkPayload::DenseDelta(w_local),
         })
     }
@@ -100,7 +103,7 @@ impl ServerLogic for FedAvg {
     fn begin_round(&mut self, _plan: &RoundPlan) -> Result<DownlinkMsg> {
         self.acc.iter_mut().for_each(|a| *a = 0.0);
         self.weight_sum = 0.0;
-        self.train_loss = 0.0;
+        self.loss_sum = 0.0;
         self.reporters = 0;
         Ok(DownlinkMsg::broadcast(&mut self.dl, &self.weights, false))
     }
@@ -122,11 +125,37 @@ impl ServerLogic for FedAvg {
         // the serialized envelope).
         comm.add_uplink(msg.wire_bits(), 32.0);
         self.reporters += 1;
-        self.train_loss += (msg.train_loss as f64 - self.train_loss) / self.reporters as f64;
+        self.loss_sum += msg.train_loss as f64;
         for (a, &w) in self.acc.iter_mut().zip(w_local) {
             *a += msg.weight * w as f64;
         }
         self.weight_sum += msg.weight;
+        Ok(())
+    }
+
+    fn agg_kind(&self) -> AggKind {
+        AggKind::DenseSum
+    }
+
+    fn fold_aggregate(&mut self, msg: &AggregateMsg, comm: &mut RoundComm) -> Result<()> {
+        ensure!(
+            msg.kind == AggKind::DenseSum,
+            "fedavg server expects a dense-sum aggregate, got {:?}",
+            msg.kind
+        );
+        ensure!(
+            msg.acc.len() == self.weights.len(),
+            "aggregate covers {} params, model has {}",
+            msg.acc.len(),
+            self.weights.len()
+        );
+        comm.add_uplinks(msg.ul_bits, msg.est_bpp_sum, msg.reporters as usize);
+        for (a, &p) in self.acc.iter_mut().zip(&msg.acc) {
+            *a += p;
+        }
+        self.weight_sum += msg.weight_sum;
+        self.reporters += msg.reporters as usize;
+        self.loss_sum += msg.loss_sum;
         Ok(())
     }
 
@@ -135,7 +164,11 @@ impl ServerLogic for FedAvg {
         for (w, &a) in self.weights.iter_mut().zip(&self.acc) {
             *w = (a / self.weight_sum) as f32;
         }
-        Ok(RoundStats { train_loss: self.train_loss, mean_theta: 0.0, mask_density: 1.0 })
+        Ok(RoundStats {
+            train_loss: self.loss_sum / self.reporters as f64,
+            mean_theta: 0.0,
+            mask_density: 1.0,
+        })
     }
 
     fn client_task(&self) -> Box<dyn ClientTask> {
@@ -189,6 +222,7 @@ mod tests {
             let msg = UplinkMsg {
                 weight: w,
                 train_loss: 0.5,
+                trained_round: UplinkMsg::FRESH,
                 payload: UplinkPayload::DenseDelta(values),
             };
             srv.fold_uplink(&msg, &mut comm).unwrap();
@@ -208,6 +242,7 @@ mod tests {
         let wrong_len = UplinkMsg {
             weight: 1.0,
             train_loss: 0.0,
+            trained_round: UplinkMsg::FRESH,
             payload: UplinkPayload::DenseDelta(vec![0.0; 5]),
         };
         assert!(srv.fold_uplink(&wrong_len, &mut comm).is_err());

@@ -33,7 +33,7 @@ use crate::mask::{sample_mask, topk_mask, ProbMask};
 use crate::runtime::ModelRuntime;
 use crate::util::{logit, BitVec, SeedSequence};
 
-use super::{ClientTask, EvalModel, RoundStats, ServerLogic};
+use super::{AggKind, AggregateMsg, ClientTask, EvalModel, RoundStats, ServerLogic};
 
 /// Uplink mask construction mode.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -54,9 +54,10 @@ pub struct MaskStrategy {
     seed: u64,
     /// Downlink codec state: the theta reconstruction the fleet holds.
     dl: DownlinkEncoder,
-    /// Round-in-progress fold state: running mean train loss over the
-    /// uplinks that actually landed.
-    train_loss: f64,
+    /// Round-in-progress fold state: summed train loss over the uplinks
+    /// that actually landed (a plain sum merges with edge-tier partial
+    /// sums in any grouping, unlike a running mean).
+    loss_sum: f64,
     reporters: usize,
 }
 
@@ -83,7 +84,7 @@ impl MaskStrategy {
             mode,
             seed,
             dl: DownlinkEncoder::new(downlink),
-            train_loss: 0.0,
+            loss_sum: 0.0,
             reporters: 0,
         }
     }
@@ -180,6 +181,7 @@ impl ClientTask for MaskClientTask {
         Ok(UplinkMsg {
             weight: client.weight(),
             train_loss: met.mean_loss,
+            trained_round: plan.round as u64,
             payload: UplinkPayload::CodedMask(compress::encode(&mask)),
         })
     }
@@ -195,7 +197,7 @@ impl ServerLogic for MaskStrategy {
     }
 
     fn begin_round(&mut self, _plan: &RoundPlan) -> Result<DownlinkMsg> {
-        self.train_loss = 0.0;
+        self.loss_sum = 0.0;
         self.reporters = 0;
         Ok(DownlinkMsg::broadcast(&mut self.dl, self.server.theta().theta(), true))
     }
@@ -203,7 +205,18 @@ impl ServerLogic for MaskStrategy {
     fn fold_uplink(&mut self, msg: &UplinkMsg, comm: &mut RoundComm) -> Result<()> {
         self.server.receive_uplink(msg, comm)?;
         self.reporters += 1;
-        self.train_loss += (msg.train_loss as f64 - self.train_loss) / self.reporters as f64;
+        self.loss_sum += msg.train_loss as f64;
+        Ok(())
+    }
+
+    fn agg_kind(&self) -> AggKind {
+        AggKind::MaskSum
+    }
+
+    fn fold_aggregate(&mut self, msg: &AggregateMsg, comm: &mut RoundComm) -> Result<()> {
+        self.server.receive_aggregate(msg, comm)?;
+        self.reporters += msg.reporters as usize;
+        self.loss_sum += msg.loss_sum;
         Ok(())
     }
 
@@ -211,7 +224,7 @@ impl ServerLogic for MaskStrategy {
         self.server.finish_round()?;
         let theta = self.server.theta();
         Ok(RoundStats {
-            train_loss: self.train_loss,
+            train_loss: self.loss_sum / self.reporters.max(1) as f64,
             mean_theta: theta.mean_theta(),
             mask_density: self.server.eval_mask_sampled(plan.round).density(),
         })

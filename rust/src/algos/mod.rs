@@ -39,6 +39,7 @@ use anyhow::Result;
 
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::data::Dataset;
+use crate::fl::aggregator::{staleness_scale, AggKind, AggregateMsg};
 use crate::fl::protocol::{DownlinkMsg, RoundPlan, UplinkMsg};
 use crate::fl::server::AggMode;
 use crate::fl::{Client, RoundComm};
@@ -90,6 +91,39 @@ pub trait ServerLogic {
     /// retain the message — and record its actual serialized size into
     /// `comm` (the streaming-fold memory contract, DESIGN.md §Protocol).
     fn fold_uplink(&mut self, msg: &UplinkMsg, comm: &mut RoundComm) -> Result<()>;
+
+    /// Staleness-discounted fold (buffered-async mode, DESIGN.md §Fleet):
+    /// an uplink trained against round `msg.trained_round` but landing in
+    /// round `plan.round` folds with its weight scaled by
+    /// [`staleness_scale`] — `1/(1+gap)^beta`. A fresh envelope (gap 0,
+    /// including every v1 envelope tagged [`UplinkMsg::FRESH`]) takes the
+    /// plain [`ServerLogic::fold_uplink`] path unchanged.
+    fn fold_uplink_stale(
+        &mut self,
+        msg: &UplinkMsg,
+        plan: &RoundPlan,
+        beta: f64,
+        comm: &mut RoundComm,
+    ) -> Result<()> {
+        let gap = (plan.round as u64).saturating_sub(msg.trained_round);
+        if gap == 0 {
+            return self.fold_uplink(msg, comm);
+        }
+        let mut discounted = msg.clone();
+        discounted.weight *= staleness_scale(gap, beta);
+        self.fold_uplink(&discounted, comm)
+    }
+
+    /// The associative accumulator shape this strategy's edge tier folds
+    /// (hierarchical aggregation, DESIGN.md §Fleet).
+    fn agg_kind(&self) -> AggKind;
+
+    /// Fold one edge tier's merged partial sums — what an
+    /// [`crate::fl::EdgeAggregator`] produced from `msg.reporters`
+    /// constituent uplinks. Must be bit-identical to folding those
+    /// uplinks directly in order whenever the constituent terms are
+    /// grouping-exact f64 sums (the §Fleet associativity argument).
+    fn fold_aggregate(&mut self, msg: &AggregateMsg, comm: &mut RoundComm) -> Result<()>;
 
     /// Close the round: advance the global model from the folded state.
     fn end_round(&mut self, plan: &RoundPlan) -> Result<RoundStats>;

@@ -24,7 +24,7 @@ use crate::mask::empirical_bpp;
 use crate::runtime::ModelRuntime;
 use crate::util::BitVec;
 
-use super::{ClientTask, EvalModel, RoundStats, ServerLogic};
+use super::{AggKind, AggregateMsg, ClientTask, EvalModel, RoundStats, ServerLogic};
 
 /// MV-SignSGD server logic: model state + streaming vote tally.
 pub struct SignSgd {
@@ -35,7 +35,9 @@ pub struct SignSgd {
     /// (`+w` for a 1-bit, `-w` for a 0-bit — identical f64 sums to the
     /// batch `majority_vote_signs` it replaces).
     tally: Vec<f64>,
-    train_loss: f64,
+    /// Summed (not running-mean) client losses: a plain sum merges with
+    /// edge-tier partial sums in any grouping, unlike a running mean.
+    loss_sum: f64,
     reporters: usize,
 }
 
@@ -46,7 +48,7 @@ impl SignSgd {
             weights: init_weights,
             dl: DownlinkEncoder::new(downlink),
             tally: vec![0.0; n],
-            train_loss: 0.0,
+            loss_sum: 0.0,
             reporters: 0,
         }
     }
@@ -73,7 +75,7 @@ impl ClientTask for SignSgdClientTask {
         client: &mut Client,
         msg: &DownlinkMsg,
         prev_state: Option<&[f32]>,
-        _plan: &RoundPlan,
+        plan: &RoundPlan,
     ) -> Result<UplinkMsg> {
         if let DownlinkMsg::Theta(_) = msg {
             bail!("signsgd client expects a weight broadcast, got {}", msg.kind_name());
@@ -90,6 +92,7 @@ impl ClientTask for SignSgdClientTask {
         Ok(UplinkMsg {
             weight: client.weight(),
             train_loss: loss,
+            trained_round: plan.round as u64,
             payload: UplinkPayload::SignVector(compress::encode(&sign_bits)),
         })
     }
@@ -102,7 +105,7 @@ impl ServerLogic for SignSgd {
 
     fn begin_round(&mut self, _plan: &RoundPlan) -> Result<DownlinkMsg> {
         self.tally.iter_mut().for_each(|t| *t = 0.0);
-        self.train_loss = 0.0;
+        self.loss_sum = 0.0;
         self.reporters = 0;
         Ok(DownlinkMsg::broadcast(&mut self.dl, &self.weights, false))
     }
@@ -120,7 +123,32 @@ impl ServerLogic for SignSgd {
             self.tally[i] += if bit { msg.weight } else { -msg.weight };
         }
         self.reporters += 1;
-        self.train_loss += (msg.train_loss as f64 - self.train_loss) / self.reporters as f64;
+        self.loss_sum += msg.train_loss as f64;
+        Ok(())
+    }
+
+    fn agg_kind(&self) -> AggKind {
+        AggKind::SignTally
+    }
+
+    fn fold_aggregate(&mut self, msg: &AggregateMsg, comm: &mut RoundComm) -> Result<()> {
+        ensure!(
+            msg.kind == AggKind::SignTally,
+            "signsgd server expects a sign-tally aggregate, got {:?}",
+            msg.kind
+        );
+        ensure!(
+            msg.acc.len() == self.tally.len(),
+            "aggregate covers {} params, model has {}",
+            msg.acc.len(),
+            self.tally.len()
+        );
+        comm.add_uplinks(msg.ul_bits, msg.est_bpp_sum, msg.reporters as usize);
+        for (t, &p) in self.tally.iter_mut().zip(&msg.acc) {
+            *t += p;
+        }
+        self.reporters += msg.reporters as usize;
+        self.loss_sum += msg.loss_sum;
         Ok(())
     }
 
@@ -132,7 +160,11 @@ impl ServerLogic for SignSgd {
         );
         let density = vote.density();
         self.apply_vote(&vote, plan.server_lr);
-        Ok(RoundStats { train_loss: self.train_loss, mean_theta: 0.0, mask_density: density })
+        Ok(RoundStats {
+            train_loss: self.loss_sum / self.reporters as f64,
+            mean_theta: 0.0,
+            mask_density: density,
+        })
     }
 
     fn client_task(&self) -> Box<dyn ClientTask> {
@@ -206,6 +238,7 @@ mod tests {
             let msg = UplinkMsg {
                 weight: w,
                 train_loss: 0.25,
+                trained_round: UplinkMsg::FRESH,
                 payload: UplinkPayload::SignVector(compress::encode(s)),
             };
             srv.fold_uplink(&msg, &mut comm).unwrap();
@@ -240,6 +273,7 @@ mod tests {
         let msg = UplinkMsg {
             weight: 1.0,
             train_loss: 0.0,
+            trained_round: UplinkMsg::FRESH,
             payload: UplinkPayload::DenseDelta(vec![0.0; 8]),
         };
         assert!(srv.fold_uplink(&msg, &mut comm).is_err());

@@ -67,11 +67,29 @@ impl Algorithm {
 }
 
 /// Data distribution across devices.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Partition {
     Iid,
     /// Non-IID with `c` classes per device.
     NonIid { c: usize },
+    /// Non-IID with per-class Dirichlet(alpha) client proportions — the
+    /// standard heterogeneity benchmark axis (SparsyFed/SpaFL). Small
+    /// alpha concentrates each class on few devices; large alpha
+    /// approaches IID.
+    Dirichlet { alpha: f64 },
+}
+
+/// How the server closes a round over the fleet's uplinks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Aggregation {
+    /// Synchronous barrier: every sampled device either reports within
+    /// the deadline or maps to dropout (the pre-fleet behaviour).
+    Sync,
+    /// Buffered-async: the round closes once `k` uplinks have folded;
+    /// later envelopes are not dropped but carried into the next round
+    /// and folded with a staleness-discounted weight (their v2
+    /// `trained_round` tag dates them).
+    Buffered { k: usize },
 }
 
 /// Full experiment description (one figure line = one config).
@@ -111,6 +129,18 @@ pub struct ExperimentConfig {
     pub dropout: f64,
     /// Server aggregation: eq. 8 mean, or Beta-posterior damping.
     pub bayes_prior: f64,
+    /// Round-close policy: synchronous barrier or buffered-async
+    /// (`aggregation = sync | buffered<K>`).
+    pub aggregation: Aggregation,
+    /// Staleness discount exponent beta: a fold that trained `gap`
+    /// rounds ago contributes with weight scaled by `1/(1+gap)^beta`
+    /// (0 = no discount; only the buffered path ever sees gap > 0).
+    pub staleness_beta: f64,
+    /// Hierarchical aggregation: number of edge-tier aggregators the
+    /// cohort is split across (0 = flat single-tier fold). Edge folds
+    /// are proven bit-identical to the flat ordered fold, so this is a
+    /// topology knob, not a semantics knob.
+    pub edges: usize,
     /// Downlink wire format: raw f32 (the paper's implicit 32 Bpp) or
     /// quantized sparse deltas with residual feedback (`qdelta<bits>`,
     /// DESIGN.md §Downlink). Clients train on exactly what this ships.
@@ -148,6 +178,9 @@ impl Default for ExperimentConfig {
             participation: 1.0,
             dropout: 0.0,
             bayes_prior: 0.0,
+            aggregation: Aggregation::Sync,
+            staleness_beta: 1.0,
+            edges: 0,
             downlink: DownlinkMode::Float32,
             threads: 0,
             seed: 2023,
@@ -194,8 +227,13 @@ impl ExperimentConfig {
                         if let Some(c) = other.strip_prefix("noniid") {
                             let c = c.trim_matches(|ch| ch == '_' || ch == '-');
                             Partition::NonIid { c: c.parse().context("noniid_<c>")? }
+                        } else if let Some(a) = other.strip_prefix("dirichlet") {
+                            let a = a.trim_matches(|ch| ch == ':' || ch == '_' || ch == '-');
+                            Partition::Dirichlet {
+                                alpha: a.parse().context("dirichlet:<alpha>")?,
+                            }
                         } else {
-                            bail!("partition must be iid | noniid_<c>")
+                            bail!("partition must be iid | noniid_<c> | dirichlet:<alpha>")
                         }
                     }
                 }
@@ -214,6 +252,23 @@ impl ExperimentConfig {
             "participation" => self.participation = val.parse()?,
             "dropout" => self.dropout = val.parse()?,
             "bayes_prior" => self.bayes_prior = val.parse()?,
+            "aggregation" => {
+                self.aggregation = match val {
+                    "sync" => Aggregation::Sync,
+                    other => {
+                        if let Some(k) = other.strip_prefix("buffered") {
+                            let k = k.trim_matches(|ch| {
+                                ch == ':' || ch == '_' || ch == '-' || ch == '<' || ch == '>'
+                            });
+                            Aggregation::Buffered { k: k.parse().context("buffered<K>")? }
+                        } else {
+                            bail!("aggregation must be sync | buffered<K>")
+                        }
+                    }
+                }
+            }
+            "staleness_beta" => self.staleness_beta = val.parse()?,
+            "edges" => self.edges = val.parse()?,
             "downlink" => self.downlink = DownlinkMode::parse(val)?,
             "optimizer" => {
                 self.adam = match val {
@@ -255,6 +310,19 @@ impl ExperimentConfig {
             if c == 0 {
                 bail!("noniid c must be >= 1");
             }
+        }
+        if let Partition::Dirichlet { alpha } = self.partition {
+            if !(alpha.is_finite() && alpha > 0.0) {
+                bail!("dirichlet alpha must be a positive finite value");
+            }
+        }
+        if let Aggregation::Buffered { k } = self.aggregation {
+            if k == 0 {
+                bail!("buffered aggregation needs K >= 1 folds per round");
+            }
+        }
+        if !(self.staleness_beta.is_finite() && self.staleness_beta >= 0.0) {
+            bail!("staleness_beta must be >= 0");
         }
         if self.eval_every == 0 {
             bail!("eval_every must be > 0");
@@ -355,6 +423,49 @@ mod tests {
     fn uplink_kind() {
         assert!(Algorithm::FedPMReg.uplink_is_binary());
         assert!(!Algorithm::FedAvg.uplink_is_binary());
+    }
+
+    #[test]
+    fn dirichlet_partition_parses_and_validates() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply("partition", "dirichlet:0.5").unwrap();
+        assert_eq!(cfg.partition, Partition::Dirichlet { alpha: 0.5 });
+        cfg.validate().unwrap();
+        cfg.apply("partition", "dirichlet_2").unwrap();
+        assert_eq!(cfg.partition, Partition::Dirichlet { alpha: 2.0 });
+        assert!(cfg.apply("partition", "dirichlet:x").is_err());
+        cfg.partition = Partition::Dirichlet { alpha: 0.0 };
+        assert!(cfg.validate().is_err());
+        cfg.partition = Partition::Dirichlet { alpha: f64::NAN };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn aggregation_key_parses_and_validates() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.aggregation, Aggregation::Sync);
+        for spelling in ["buffered16", "buffered:16", "buffered_16", "buffered<16>"] {
+            cfg.apply("aggregation", spelling).unwrap();
+            assert_eq!(cfg.aggregation, Aggregation::Buffered { k: 16 }, "{spelling}");
+        }
+        cfg.validate().unwrap();
+        cfg.apply("aggregation", "sync").unwrap();
+        assert_eq!(cfg.aggregation, Aggregation::Sync);
+        assert!(cfg.apply("aggregation", "async").is_err());
+        cfg.aggregation = Aggregation::Buffered { k: 0 };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_keys_parse_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply("staleness_beta", "0.5").unwrap();
+        cfg.apply("edges", "4").unwrap();
+        assert_eq!(cfg.staleness_beta, 0.5);
+        assert_eq!(cfg.edges, 4);
+        cfg.validate().unwrap();
+        cfg.staleness_beta = -1.0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -35,6 +35,7 @@ use anyhow::{ensure, Result};
 
 use crate::algos::{ClientTask as _, RoundStats, ServerLogic};
 use crate::data::Dataset;
+use crate::fl::aggregator::{AggregateMsg, EdgeAggregator};
 use crate::fl::protocol::{DownlinkMsg, RoundPlan};
 use crate::fl::{Client, Participation, RoundComm};
 use crate::runtime::ModelRuntime;
@@ -43,6 +44,10 @@ use crate::runtime::ModelRuntime;
 #[derive(Debug, Clone, Copy)]
 pub struct RoundEngine {
     threads: usize,
+    /// Edge aggregator count for hierarchical folds (0 = flat fold).
+    edges: usize,
+    /// Staleness discount exponent the edge tier applies.
+    staleness_beta: f64,
 }
 
 impl Default for RoundEngine {
@@ -61,7 +66,19 @@ impl RoundEngine {
         } else {
             threads
         };
-        Self { threads }
+        Self { threads, edges: 0, staleness_beta: 1.0 }
+    }
+
+    /// Configure the hierarchical edge tier (DESIGN.md §Fleet):
+    /// `edges > 0` splits every cohort into that many contiguous slices,
+    /// folds each slice through an [`EdgeAggregator`], and ships one
+    /// serialized [`AggregateMsg`] envelope per edge to the server —
+    /// bit-identical to the flat ordered fold (grouping-exact sums).
+    /// `beta` is the staleness discount exponent the edges apply.
+    pub fn with_edges(mut self, edges: usize, beta: f64) -> Self {
+        self.edges = edges;
+        self.staleness_beta = beta;
+        self
     }
 
     pub fn threads(&self) -> usize {
@@ -193,6 +210,18 @@ impl RoundEngine {
             comm.add_downlink_msg(&msg);
         }
 
+        // Hierarchical mode: each cohort slice folds into its own edge
+        // aggregator; the server only ever sees the merged envelopes.
+        let n_edges = self.edges.min(cohort.len());
+        let mut edge_tier: Vec<EdgeAggregator> = if n_edges > 0 {
+            let kind = server.agg_kind();
+            (0..n_edges)
+                .map(|_| EdgeAggregator::new(kind, rt.manifest.n_params))
+                .collect()
+        } else {
+            Vec::new()
+        };
+
         let task = server.client_task();
         let prev = fleet_state.take();
         let prev_ref = prev.as_deref();
@@ -209,11 +238,28 @@ impl RoundEngine {
                 Ok(if dropped { None } else { Some(up) })
             })?;
             // Ordered streaming fold: envelopes land in cohort order, so
-            // the result is independent of worker scheduling.
-            for up in uplinks.into_iter().flatten() {
-                server.fold_uplink(&up, comm)?;
+            // the result is independent of worker scheduling. With edges
+            // each envelope folds into its contiguous slice's aggregator
+            // instead — the same terms in the same order, just grouped.
+            for (pos, up) in uplinks.into_iter().enumerate() {
+                let Some(up) = up else { continue };
+                if n_edges > 0 {
+                    let e = (offset + pos) * n_edges / cohort.len();
+                    edge_tier[e].fold(&up, plan.round, self.staleness_beta)?;
+                } else {
+                    server.fold_uplink(&up, comm)?;
+                }
             }
             offset += ids.len();
+        }
+        for edge in &edge_tier {
+            if edge.reporters() == 0 {
+                continue;
+            }
+            // Ship the merged envelope through its real wire layout so
+            // the hierarchical path exercises encode+decode end to end.
+            let agg = AggregateMsg::from_bytes(&edge.finish().to_bytes())?;
+            server.fold_aggregate(&agg, comm)?;
         }
 
         *fleet_state = Some(msg.decode_state(prev_ref)?);

@@ -10,7 +10,7 @@ pub mod loader;
 pub mod partition;
 pub mod synthetic;
 
-pub use partition::{partition_iid, partition_noniid, Shard};
+pub use partition::{partition_dirichlet, partition_iid, partition_noniid, Shard};
 pub use synthetic::{SynthSpec, Synthetic};
 
 use anyhow::{ensure, Context, Result};
@@ -133,6 +133,9 @@ pub fn partition_fleet(cfg: &ExperimentConfig, train: &Dataset) -> Vec<Shard> {
     match cfg.partition {
         Partition::Iid => partition_iid(train, cfg.clients, cfg.seed ^ 0x5A),
         Partition::NonIid { c } => partition_noniid(train, cfg.clients, c, cfg.seed ^ 0x5A),
+        Partition::Dirichlet { alpha } => {
+            partition_dirichlet(train, cfg.clients, alpha, cfg.seed ^ 0x5A)
+        }
     }
 }
 

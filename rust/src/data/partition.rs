@@ -5,6 +5,10 @@
 //!   (c ∈ {2,4} in the paper) and only receives samples of those
 //!   classes; each class's sample pool is split evenly among the
 //!   devices holding that class.
+//! * Dirichlet(alpha): per class, client proportions are drawn from a
+//!   symmetric Dirichlet — the standard heterogeneity benchmark axis
+//!   (SparsyFed/SpaFL). Small alpha concentrates each class on a few
+//!   devices; large alpha approaches IID.
 //!
 //! audit: deterministic
 
@@ -126,6 +130,111 @@ pub fn partition_noniid(data: &Dataset, k: usize, c: usize, seed: u64) -> Vec<Sh
         }
     }
     shards
+}
+
+/// One Gamma(alpha, 1) draw via Marsaglia–Tsang squeeze (alpha >= 1),
+/// with the standard `U^(1/alpha)` boost for alpha < 1. Dirichlet
+/// proportions are normalized Gamma draws, so this is all the sampler
+/// the partitioner needs.
+fn gamma_sample(rng: &mut Xoshiro256, alpha: f64) -> f64 {
+    debug_assert!(alpha.is_finite() && alpha > 0.0);
+    if alpha < 1.0 {
+        let boost = rng.next_f64().max(f64::MIN_POSITIVE).powf(1.0 / alpha);
+        return gamma_sample_ge1(rng, alpha + 1.0) * boost;
+    }
+    gamma_sample_ge1(rng, alpha)
+}
+
+fn gamma_sample_ge1(rng: &mut Xoshiro256, alpha: f64) -> f64 {
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.next_normal();
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v = v * v * v;
+        let u = rng.next_f64().max(f64::MIN_POSITIVE);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+/// Dirichlet(alpha) label-heterogeneous split: for every class, draw
+/// client proportions p ~ Dir(alpha, ..., alpha) and deal that class's
+/// shuffled sample pool by largest-remainder apportionment (exact
+/// coverage — every sample lands on exactly one device). Devices left
+/// empty by an extreme draw are deterministically backfilled with one
+/// sample stolen from the currently largest shard, so every shard
+/// satisfies the samplers' non-empty invariant.
+pub fn partition_dirichlet(data: &Dataset, k: usize, alpha: f64, seed: u64) -> Vec<Shard> {
+    assert!(k > 0 && k <= data.len(), "need 1..=len clients");
+    assert!(alpha.is_finite() && alpha > 0.0, "alpha must be positive");
+    let mut rng = Xoshiro256::new(seed);
+    let mut per_class = data.class_indices();
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for pool in per_class.iter_mut() {
+        if pool.is_empty() {
+            continue;
+        }
+        rng.shuffle(pool);
+        // Symmetric Dirichlet draw = normalized Gamma(alpha) draws; the
+        // floor keeps the normalizing sum positive even when a tiny
+        // alpha underflows a draw to zero.
+        let draws: Vec<f64> =
+            (0..k).map(|_| gamma_sample(&mut rng, alpha).max(1e-300)).collect();
+        let total: f64 = draws.iter().sum();
+        let m = pool.len();
+        // largest-remainder apportionment of m samples by proportion
+        let mut take: Vec<usize> = Vec::with_capacity(k);
+        let mut rem: Vec<(f64, usize)> = Vec::with_capacity(k);
+        let mut dealt = 0usize;
+        for (dev, &g) in draws.iter().enumerate() {
+            let exact = g / total * m as f64;
+            let floor = exact.floor().min(m as f64) as usize;
+            take.push(floor);
+            dealt += floor;
+            rem.push((exact - floor as f64, dev));
+        }
+        // ties break toward the lower device id for determinism
+        rem.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        for &(_, dev) in rem.iter().take(m.saturating_sub(dealt)) {
+            take[dev] += 1;
+        }
+        let mut cursor = 0usize;
+        for (dev, &t) in take.iter().enumerate() {
+            assigned[dev].extend_from_slice(&pool[cursor..cursor + t]);
+            cursor += t;
+        }
+        debug_assert_eq!(cursor, m, "largest remainder must deal the whole pool");
+    }
+    // Backfill empty shards (possible at tiny alpha): steal one sample
+    // from the largest shard, ties toward the lower device id.
+    while let Some(empty) = assigned.iter().position(Vec::is_empty) {
+        let donor = (0..k)
+            .max_by(|&a, &b| assigned[a].len().cmp(&assigned[b].len()).then(b.cmp(&a)))
+            .expect("k > 0");
+        assert!(assigned[donor].len() > 1, "dataset too small to cover {k} devices");
+        let sample = assigned[donor].pop().expect("donor shard non-empty");
+        assigned[empty].push(sample);
+    }
+    assigned
+        .into_iter()
+        .enumerate()
+        .map(|(client_id, indices)| {
+            let mut classes: Vec<usize> =
+                indices.iter().map(|&i| data.y[i] as usize).collect();
+            classes.sort_unstable();
+            classes.dedup();
+            Shard { client_id, indices, classes }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -259,5 +368,97 @@ mod tests {
         assert_eq!(shards.len(), 1);
         assert_eq!(shards[0].len(), d.len());
         assert_eq!(shards[0].classes.len(), d.n_classes);
+    }
+
+    #[test]
+    fn dirichlet_covers_exactly_and_shards_non_empty() {
+        let d = dataset();
+        for alpha in [0.05, 0.5, 10.0] {
+            for k in [3usize, 10, 30] {
+                let shards = partition_dirichlet(&d, k, alpha, 43);
+                assert_eq!(shards.len(), k);
+                let mut all: Vec<usize> =
+                    shards.iter().flat_map(|s| s.indices.clone()).collect();
+                all.sort_unstable();
+                assert_eq!(
+                    all,
+                    (0..d.len()).collect::<Vec<_>>(),
+                    "alpha={alpha} k={k}: every sample on exactly one device"
+                );
+                for s in &shards {
+                    assert!(!s.is_empty(), "alpha={alpha} k={k} client {}", s.client_id);
+                    // class list matches the labels actually present
+                    let mut want: Vec<usize> =
+                        s.indices.iter().map(|&i| d.y[i] as usize).collect();
+                    want.sort_unstable();
+                    want.dedup();
+                    assert_eq!(s.classes, want, "alpha={alpha} k={k}");
+                }
+                let total: f64 = shards.iter().map(Shard::weight).sum();
+                assert_eq!(total as usize, d.len());
+            }
+        }
+    }
+
+    #[test]
+    fn dirichlet_deterministic() {
+        let d = dataset();
+        let a = partition_dirichlet(&d, 12, 0.3, 47);
+        let b = partition_dirichlet(&d, 12, 0.3, 47);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices, y.indices);
+            assert_eq!(x.classes, y.classes);
+        }
+        // a different seed moves samples around
+        let c = partition_dirichlet(&d, 12, 0.3, 48);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.indices != y.indices));
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_heterogeneity() {
+        // Mean per-shard label entropy must be lower (more skewed) at
+        // small alpha than at large alpha, averaged over several seeds
+        // so one benign draw can't flip the ordering.
+        let d = dataset();
+        let mean_entropy = |alpha: f64| -> f64 {
+            let mut acc = 0.0;
+            let mut shard_count = 0usize;
+            for seed in [51u64, 52, 53, 54, 55] {
+                for s in partition_dirichlet(&d, 10, alpha, seed) {
+                    let mut counts = vec![0usize; d.n_classes];
+                    for &i in &s.indices {
+                        counts[d.y[i] as usize] += 1;
+                    }
+                    let n = s.len() as f64;
+                    acc -= counts
+                        .iter()
+                        .filter(|&&c| c > 0)
+                        .map(|&c| {
+                            let p = c as f64 / n;
+                            p * p.log2()
+                        })
+                        .sum::<f64>();
+                    shard_count += 1;
+                }
+            }
+            acc / shard_count as f64
+        };
+        let skewed = mean_entropy(0.05);
+        let flat = mean_entropy(50.0);
+        assert!(
+            skewed + 0.5 < flat,
+            "alpha=0.05 entropy {skewed} should be well below alpha=50 entropy {flat}"
+        );
+    }
+
+    #[test]
+    fn dirichlet_backfill_keeps_tiny_federations_legal() {
+        // 1000 samples, 200 devices, extreme skew: some devices would
+        // get nothing without the backfill.
+        let d = dataset();
+        let shards = partition_dirichlet(&d, 200, 0.01, 57);
+        assert!(shards.iter().all(|s| !s.is_empty()));
+        let total: f64 = shards.iter().map(Shard::weight).sum();
+        assert_eq!(total as usize, d.len());
     }
 }

@@ -1,0 +1,366 @@
+//! Hierarchical edge-tier aggregation (DESIGN.md §Fleet).
+//!
+//! At fleet scale a single server folding every uplink is a fan-in
+//! bottleneck. All three strategies' round states are associative sums —
+//! eq. 8 weighted mask sums, MV-SignSGD sign tallies, FedAvg weighted
+//! averages — so a cohort can be split across edge aggregators that each
+//! fold their slice into one O(n_params) accumulator and ship a single
+//! merged [`AggregateMsg`] envelope upstream. The top-tier fold of those
+//! partial sums is bit-identical to the flat ordered fold whenever the
+//! constituent terms form grouping-exact f64 sums: integer |D_i| weights
+//! times {0,1} mask bits or ±1 signs are exact unconditionally; FedAvg's
+//! weight×f32 products are exact, and their sums regroup exactly on a
+//! shared dyadic grid with headroom below 2^53 (the §Fleet associativity
+//! argument in DESIGN.md).
+//!
+//! The same module owns the staleness discount used by buffered-async
+//! aggregation ([`staleness_scale`]) so the edge tier and the flat
+//! server path scale weights with the identical expression.
+//!
+//! audit: wire-decode, deterministic
+
+use anyhow::{bail, ensure, Result};
+
+use crate::compress;
+use crate::mask::empirical_bpp;
+
+use super::protocol::{UplinkMsg, UplinkPayload, PROTOCOL_VERSION, PROTOCOL_VERSION_MIN};
+
+const AGG_MASK_SUM: u8 = 0;
+const AGG_SIGN_TALLY: u8 = 1;
+const AGG_DENSE_SUM: u8 = 2;
+
+/// Aggregate envelope header: version + kind bytes, u32 sum count, then
+/// f64 weight_sum, f64 loss_sum, u64 reporters, u64 ul_bits and
+/// f64 est_bpp_sum — 46 bytes before the packed f64 sums.
+const AGG_HEAD: usize = 2 + 4 + 8 + 8 + 8 + 8 + 8;
+
+/// The associative accumulator shape an edge tier folds for a strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggKind {
+    /// eq. 8 numerator: per-parameter sum of |D_i| × mask bit.
+    MaskSum,
+    /// MV-SignSGD: per-parameter sum of ±|D_i| (the majority tally).
+    SignTally,
+    /// FedAvg: per-parameter sum of |D_i| × local weight.
+    DenseSum,
+}
+
+impl AggKind {
+    fn wire_kind(self) -> u8 {
+        match self {
+            AggKind::MaskSum => AGG_MASK_SUM,
+            AggKind::SignTally => AGG_SIGN_TALLY,
+            AggKind::DenseSum => AGG_DENSE_SUM,
+        }
+    }
+}
+
+/// The staleness discount of buffered-async aggregation (DESIGN.md
+/// §Fleet): an uplink trained `gap` rounds before the round it lands in
+/// folds with its weight scaled by `1/(1+gap)^beta`. `gap = 0` returns
+/// exactly 1.0 (a fresh uplink folds unchanged in every rounding mode);
+/// `beta = 0` disables discounting.
+pub fn staleness_scale(gap: u64, beta: f64) -> f64 {
+    if gap == 0 {
+        return 1.0;
+    }
+    1.0 / (1.0 + gap as f64).powf(beta)
+}
+
+/// One edge tier's merged upstream envelope: the cohort-local partial
+/// sums plus every scalar the server needs to keep its round stats and
+/// communication accounting identical to the flat path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggregateMsg {
+    pub kind: AggKind,
+    /// Per-parameter partial sums (meaning depends on `kind`).
+    pub acc: Vec<f64>,
+    /// Sum of the folded uplinks' (discounted) aggregation weights.
+    pub weight_sum: f64,
+    /// Sum of the folded uplinks' train losses (mergeable round mean).
+    pub loss_sum: f64,
+    /// Number of constituent uplinks.
+    pub reporters: u64,
+    /// Summed serialized wire bits of the constituent uplink envelopes.
+    pub ul_bits: u64,
+    /// Summed per-uplink estimated source Bpp (eq. 13 terms).
+    pub est_bpp_sum: f64,
+}
+
+impl AggregateMsg {
+    /// Exact serialized envelope size in bytes.
+    pub fn wire_bytes(&self) -> usize {
+        AGG_HEAD + 8 * self.acc.len()
+    }
+
+    pub fn wire_bits(&self) -> u64 {
+        self.wire_bytes() as u64 * 8
+    }
+
+    /// Serialize to the flat little-endian wire layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        out.push(PROTOCOL_VERSION);
+        out.push(self.kind.wire_kind());
+        // audit:checked(n_params is far below 2^32 by model geometry)
+        out.extend_from_slice(&(self.acc.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.weight_sum.to_le_bytes());
+        out.extend_from_slice(&self.loss_sum.to_le_bytes());
+        out.extend_from_slice(&self.reporters.to_le_bytes());
+        out.extend_from_slice(&self.ul_bits.to_le_bytes());
+        out.extend_from_slice(&self.est_bpp_sum.to_le_bytes());
+        for a in &self.acc {
+            out.extend_from_slice(&a.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse and validate an aggregate envelope: version window, known
+    /// kind, a recorded sum count matching the bytes present, at least
+    /// one constituent uplink, and finite scalars/sums throughout —
+    /// truncated or corrupt envelopes never decode.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        ensure!(
+            bytes.len() >= AGG_HEAD,
+            "aggregate envelope truncated ({} bytes)",
+            bytes.len()
+        );
+        ensure!(
+            (PROTOCOL_VERSION_MIN..=PROTOCOL_VERSION).contains(&bytes[0]),
+            "aggregate protocol version {} outside supported \
+             {PROTOCOL_VERSION_MIN}..={PROTOCOL_VERSION}",
+            bytes[0]
+        );
+        let kind = match bytes[1] {
+            AGG_MASK_SUM => AggKind::MaskSum,
+            AGG_SIGN_TALLY => AggKind::SignTally,
+            AGG_DENSE_SUM => AggKind::DenseSum,
+            other => bail!("unknown aggregate kind {other}"),
+        };
+        let n = u32::from_le_bytes(bytes[2..6].try_into()?) as usize;
+        ensure!(
+            bytes.len() == AGG_HEAD + 8 * n,
+            "aggregate records {n} sums but carries {} payload bytes",
+            bytes.len() - AGG_HEAD
+        );
+        let weight_sum = f64::from_le_bytes(bytes[6..14].try_into()?);
+        let loss_sum = f64::from_le_bytes(bytes[14..22].try_into()?);
+        let reporters = u64::from_le_bytes(bytes[22..30].try_into()?);
+        let ul_bits = u64::from_le_bytes(bytes[30..38].try_into()?);
+        let est_bpp_sum = f64::from_le_bytes(bytes[38..46].try_into()?);
+        ensure!(reporters > 0, "aggregate envelope carries no uplinks");
+        ensure!(
+            weight_sum.is_finite() && weight_sum > 0.0,
+            "aggregate weight sum {weight_sum} must be a positive finite total"
+        );
+        ensure!(loss_sum.is_finite(), "aggregate loss sum {loss_sum} not finite");
+        ensure!(
+            est_bpp_sum.is_finite() && est_bpp_sum >= 0.0,
+            "aggregate est-Bpp sum {est_bpp_sum} must be non-negative and finite"
+        );
+        let mut acc = Vec::with_capacity(n);
+        for chunk in bytes[AGG_HEAD..].chunks_exact(8) {
+            let v = f64::from_le_bytes(chunk.try_into()?);
+            ensure!(v.is_finite(), "aggregate partial sum {v} not finite");
+            acc.push(v);
+        }
+        Ok(Self { kind, acc, weight_sum, loss_sum, reporters, ul_bits, est_bpp_sum })
+    }
+}
+
+/// One edge-tier instance: folds its slice of the cohort's uplinks into
+/// the strategy's associative accumulator and ships one merged envelope
+/// upstream via [`EdgeAggregator::finish`]. The per-uplink arithmetic is
+/// exactly the flat fold's step over the same decoded payloads, so the
+/// partial sums regroup without changing any term.
+#[derive(Debug, Clone)]
+pub struct EdgeAggregator {
+    kind: AggKind,
+    acc: Vec<f64>,
+    weight_sum: f64,
+    loss_sum: f64,
+    reporters: u64,
+    ul_bits: u64,
+    est_bpp_sum: f64,
+}
+
+impl EdgeAggregator {
+    pub fn new(kind: AggKind, n_params: usize) -> Self {
+        Self {
+            kind,
+            acc: vec![0.0; n_params],
+            weight_sum: 0.0,
+            loss_sum: 0.0,
+            reporters: 0,
+            ul_bits: 0,
+            est_bpp_sum: 0.0,
+        }
+    }
+
+    /// Constituent uplinks folded so far (0 = nothing to ship upstream).
+    pub fn reporters(&self) -> u64 {
+        self.reporters
+    }
+
+    /// Fold one uplink envelope: decode its payload, discount its weight
+    /// by the staleness gap against `round` (a fresh or v1 envelope
+    /// scales by exactly 1.0), and accumulate. Also records the scalars
+    /// the upstream fold needs for stats and communication accounting.
+    pub fn fold(&mut self, msg: &UplinkMsg, round: usize, beta: f64) -> Result<()> {
+        let gap = (round as u64).saturating_sub(msg.trained_round);
+        let w = msg.weight * staleness_scale(gap, beta);
+        let n = self.acc.len();
+        match (self.kind, &msg.payload) {
+            (AggKind::MaskSum, UplinkPayload::CodedMask(enc)) => {
+                let mask = compress::decode(enc, n)?;
+                self.est_bpp_sum += empirical_bpp(&mask);
+                for (a, bit) in self.acc.iter_mut().zip(mask.iter()) {
+                    if bit {
+                        *a += w;
+                    }
+                }
+            }
+            (AggKind::SignTally, UplinkPayload::SignVector(enc)) => {
+                let signs = compress::decode(enc, n)?;
+                self.est_bpp_sum += empirical_bpp(&signs);
+                for (a, bit) in self.acc.iter_mut().zip(signs.iter()) {
+                    *a += if bit { w } else { -w };
+                }
+            }
+            (AggKind::DenseSum, UplinkPayload::DenseDelta(v)) => {
+                ensure!(
+                    v.len() == n,
+                    "dense uplink carries {} params, edge expects {n}",
+                    v.len()
+                );
+                for (a, &x) in self.acc.iter_mut().zip(v) {
+                    *a += w * x as f64;
+                }
+                self.est_bpp_sum += 32.0;
+            }
+            (kind, payload) => bail!(
+                "edge aggregator for {kind:?} cannot fold a {} uplink",
+                payload.kind_name()
+            ),
+        }
+        self.weight_sum += w;
+        self.loss_sum += msg.train_loss as f64;
+        self.reporters += 1;
+        self.ul_bits += msg.wire_bits();
+        Ok(())
+    }
+
+    /// Close this edge's round slice into one upstream envelope.
+    pub fn finish(&self) -> AggregateMsg {
+        AggregateMsg {
+            kind: self.kind,
+            acc: self.acc.clone(),
+            weight_sum: self.weight_sum,
+            loss_sum: self.loss_sum,
+            reporters: self.reporters,
+            ul_bits: self.ul_bits,
+            est_bpp_sum: self.est_bpp_sum,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::BitVec;
+
+    fn mask_uplink(bits: &[u8], weight: f64, trained_round: u64) -> UplinkMsg {
+        let m = BitVec::from_iter_len(bits.iter().map(|&b| b == 1), bits.len());
+        UplinkMsg {
+            weight,
+            train_loss: 0.5,
+            trained_round,
+            payload: UplinkPayload::CodedMask(compress::encode(&m)),
+        }
+    }
+
+    #[test]
+    fn staleness_scale_contract() {
+        assert_eq!(staleness_scale(0, 1.0), 1.0);
+        assert_eq!(staleness_scale(0, 0.0), 1.0);
+        assert_eq!(staleness_scale(3, 0.0), 1.0);
+        assert!((staleness_scale(1, 1.0) - 0.5).abs() < 1e-15);
+        assert!((staleness_scale(3, 2.0) - 1.0 / 16.0).abs() < 1e-15);
+        // monotone in the gap for beta > 0
+        assert!(staleness_scale(2, 1.0) < staleness_scale(1, 1.0));
+    }
+
+    #[test]
+    fn envelope_roundtrip() {
+        let mut edge = EdgeAggregator::new(AggKind::MaskSum, 4);
+        edge.fold(&mask_uplink(&[1, 1, 0, 0], 3.0, UplinkMsg::FRESH), 5, 1.0).unwrap();
+        edge.fold(&mask_uplink(&[1, 0, 1, 0], 2.0, UplinkMsg::FRESH), 5, 1.0).unwrap();
+        let msg = edge.finish();
+        let back = AggregateMsg::from_bytes(&msg.to_bytes()).unwrap();
+        assert_eq!(back, msg);
+        assert_eq!(back.reporters, 2);
+        assert_eq!(back.acc, vec![5.0, 3.0, 2.0, 0.0]);
+        assert_eq!(back.weight_sum, 5.0);
+        assert!((back.loss_sum - 1.0).abs() < 1e-6);
+        assert!(back.ul_bits > 0);
+    }
+
+    #[test]
+    fn envelope_rejects_corruption() {
+        let mut edge = EdgeAggregator::new(AggKind::SignTally, 8);
+        let m = BitVec::from_iter_len((0..8).map(|i| i % 2 == 0), 8);
+        let up = UplinkMsg {
+            weight: 2.0,
+            train_loss: 0.1,
+            trained_round: UplinkMsg::FRESH,
+            payload: UplinkPayload::SignVector(compress::encode(&m)),
+        };
+        edge.fold(&up, 1, 1.0).unwrap();
+        let bytes = edge.finish().to_bytes();
+        // truncation at every prefix length must error, never panic
+        for cut in 0..bytes.len() {
+            assert!(AggregateMsg::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // bad version / unknown kind
+        let mut bad = bytes.clone();
+        bad[0] = 9;
+        assert!(AggregateMsg::from_bytes(&bad).is_err());
+        let mut bad = bytes.clone();
+        bad[1] = 7;
+        assert!(AggregateMsg::from_bytes(&bad).is_err());
+        // zero reporters
+        let mut bad = bytes.clone();
+        bad[22..30].copy_from_slice(&0u64.to_le_bytes());
+        assert!(AggregateMsg::from_bytes(&bad).is_err());
+        // non-finite partial sum
+        let mut bad = bytes;
+        let tail = bad.len() - 8;
+        bad[tail..].copy_from_slice(&f64::NAN.to_le_bytes());
+        assert!(AggregateMsg::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn fold_rejects_payload_kind_mismatch() {
+        let mut edge = EdgeAggregator::new(AggKind::MaskSum, 4);
+        let up = UplinkMsg {
+            weight: 1.0,
+            train_loss: 0.0,
+            trained_round: UplinkMsg::FRESH,
+            payload: UplinkPayload::DenseDelta(vec![0.0; 4]),
+        };
+        assert!(edge.fold(&up, 1, 1.0).is_err());
+        assert_eq!(edge.reporters(), 0, "rejected uplinks must not be accounted");
+    }
+
+    #[test]
+    fn stale_uplink_folds_discounted() {
+        let mut edge = EdgeAggregator::new(AggKind::MaskSum, 2);
+        // trained at round 3, lands in round 5: gap 2, beta 1 -> w/3
+        edge.fold(&mask_uplink(&[1, 0], 3.0, 3), 5, 1.0).unwrap();
+        let msg = edge.finish();
+        assert!((msg.acc[0] - 1.0).abs() < 1e-15);
+        assert_eq!(msg.acc[1], 0.0);
+        assert!((msg.weight_sum - 1.0).abs() < 1e-15);
+    }
+}

@@ -52,6 +52,17 @@ impl RoundComm {
         self.clients += 1;
     }
 
+    /// Record a batch of uplinks that arrived pre-folded in one edge
+    /// `AggregateMsg` (hierarchical aggregation, DESIGN.md §Fleet): the
+    /// summed wire bits and est-Bpp contributions of the constituent
+    /// envelopes, counted as `clients` uplinks so every Bpp denominator
+    /// matches the flat path exactly.
+    pub fn add_uplinks(&mut self, wire_bits: u64, est_bpp_sum: f64, clients: usize) {
+        self.ul_bits += wire_bits;
+        self.est_bpp_sum += est_bpp_sum;
+        self.clients += clients;
+    }
+
     /// Record a downlink broadcast of `bits` wire bits to one client.
     pub fn add_downlink_bits(&mut self, bits: u64) {
         self.dl_bits += bits;
@@ -151,6 +162,7 @@ mod tests {
         UplinkMsg {
             weight: 1.0,
             train_loss: 0.0,
+            trained_round: UplinkMsg::FRESH,
             payload: UplinkPayload::CodedMask(compress::encode(m)),
         }
     }
@@ -186,6 +198,7 @@ mod tests {
         let msg = UplinkMsg {
             weight: 10.0,
             train_loss: 0.1,
+            trained_round: UplinkMsg::FRESH,
             payload: UplinkPayload::DenseDelta(vec![0.0; n]),
         };
         rc.add_uplink(msg.wire_bits(), 32.0);

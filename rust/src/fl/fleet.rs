@@ -1,0 +1,437 @@
+//! Fleet-scale federation simulator: 100k-device rounds on one thread.
+//!
+//! `fedsrn fleet --devices 100000` answers the question the networked
+//! runtime cannot at laptop scale: what do staleness-discounted
+//! buffered aggregation (`aggregation=buffered<K>`), hierarchical edge
+//! folds (`edges=N`), churn, and heterogeneous device latency do to a
+//! federation round — without 100k OS threads or sockets. Devices are
+//! not processes here; each is a pure function of `(seed, id, round)`:
+//!
+//! * **Virtual clock** — time is a `u64` tick counter. A device sampled
+//!   into a round finishes `DelayProfile::delay_ticks` after the
+//!   broadcast; arrivals are ordered by `(tick, id)`. No wall clock
+//!   anywhere in this module (the CLI measures real rounds/sec around
+//!   it), so a schedule replays bit-for-bit.
+//! * **Churn** — each sampled device flips a seeded coin to go dark for
+//!   the round (position 0 is exempt, mirroring the dropout model's
+//!   guaranteed survivor, so a round can always aggregate).
+//! * **Sync mode** — arrivals after `deadline_ticks` are the engine's
+//!   straggler-dropout path: their uplinks are void. If *every* arrival
+//!   blows the deadline the earliest one folds anyway (a round with
+//!   zero uplinks cannot aggregate).
+//! * **Buffered mode** — nothing is dropped: every uplink carried from
+//!   an earlier round folds first, sorted by `(trained_round, id)` and
+//!   staleness-discounted via [`ServerLogic::fold_uplink_stale`]; fresh
+//!   arrivals then fold in `(tick, id)` order until `K` total folds,
+//!   and the rest carry to the next round tagged with the round they
+//!   trained against. The carry buffer is bounded by one cohort.
+//! * **Edge tier** — with `edges=N`, fresh arrivals route through
+//!   cohort-local [`EdgeAggregator`]s whose merged [`AggregateMsg`]
+//!   envelopes cross the (simulated) uplink — the same
+//!   serialize/validate/fold path the engine and session use.
+//!
+//! Uplinks are synthesized, not trained: integer `|D_i|` weights and
+//! 0/1 / ±1 / dyadic-grid payloads keep every fold grouping-exact (see
+//! DESIGN.md §Fleet), so the simulator doubles as the determinism and
+//! hierarchy-equivalence test bed for all three strategy families.
+//!
+//! audit: deterministic
+
+use anyhow::{ensure, Result};
+
+use crate::algos::{EvalModel, FedAvg, MaskMode, MaskStrategy, ServerLogic, SignSgd};
+use crate::compress::{self, DownlinkMode};
+use crate::config::{Aggregation, Algorithm};
+use crate::fl::aggregator::{AggKind, AggregateMsg, EdgeAggregator};
+use crate::fl::protocol::{RoundPlan, UplinkMsg, UplinkPayload};
+use crate::fl::{Participation, RoundComm};
+use crate::util::{BitVec, SeedSequence, Xoshiro256};
+
+/// Per-device compute latency in **virtual ticks**: a device sampled
+/// into a round finishes local training `base + seeded jitter` ticks
+/// after the broadcast. Shared with [`crate::fl::session::DeviceOpts`],
+/// where it drives the deterministic self-straggler path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DelayProfile {
+    /// Deterministic floor of the device's compute latency.
+    pub base: u64,
+    /// Upper bound on the seeded per-round jitter added to `base`.
+    pub jitter: u64,
+}
+
+impl DelayProfile {
+    /// Derive a device's profile from the fleet seed: a seeded speed
+    /// class scales the fleet-wide `base`/`jitter` by 1/2/4/8, giving
+    /// the heavy-tailed straggler mix real fleets show.
+    pub fn for_device(seed: u64, device: u64, base: u64, jitter: u64) -> Self {
+        let s = SeedSequence::new(seed).child(0xDE7A).child(device).seed();
+        let mult = 1u64 << Xoshiro256::new(s).below(4);
+        Self { base: base * mult, jitter: jitter * mult }
+    }
+
+    /// Ticks from broadcast to uplink for (`device`, `round`) — a pure
+    /// function of the seed path, so every schedule replays exactly.
+    pub fn delay_ticks(&self, seed: u64, device: u64, round: u64) -> u64 {
+        if self.jitter == 0 {
+            return self.base;
+        }
+        let s = SeedSequence::new(seed).child(0xD11A).child(device).child(round).seed();
+        self.base + Xoshiro256::new(s).below(self.jitter + 1)
+    }
+}
+
+/// Everything one simulated fleet run depends on. Identical opts
+/// produce an identical [`FleetReport`], bit for bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetOpts {
+    pub devices: usize,
+    pub rounds: usize,
+    /// Simulated model size (the real model is irrelevant here; small
+    /// keeps 100k-device rounds fast while exercising every fold path).
+    pub n_params: usize,
+    pub algorithm: Algorithm,
+    pub aggregation: Aggregation,
+    pub staleness_beta: f64,
+    /// Edge aggregators per round; 0 = flat folds.
+    pub edges: usize,
+    pub participation: f64,
+    /// Per-round probability a sampled device churns offline (cohort
+    /// position 0 is exempt so a round always has an arrival).
+    pub churn: f64,
+    /// Sync mode: arrivals later than this many ticks after the
+    /// broadcast are dropouts (buffered mode carries them instead).
+    pub deadline_ticks: u64,
+    /// Fleet-wide latency floor before the per-device speed class.
+    pub delay_base: u64,
+    /// Fleet-wide jitter bound before the per-device speed class.
+    pub delay_jitter: u64,
+    pub seed: u64,
+}
+
+impl FleetOpts {
+    /// Defaults sized so the slowest seeded speed class (8x) straddles
+    /// the sync deadline: sync runs show real straggler dropouts,
+    /// buffered runs show real carried folds.
+    pub fn new(devices: usize, rounds: usize) -> Self {
+        Self {
+            devices,
+            rounds,
+            n_params: 256,
+            algorithm: Algorithm::FedPMReg,
+            aggregation: Aggregation::Sync,
+            staleness_beta: 1.0,
+            edges: 0,
+            participation: 1.0,
+            churn: 0.01,
+            deadline_ticks: 150,
+            delay_base: 10,
+            delay_jitter: 20,
+            seed: 42,
+        }
+    }
+}
+
+/// What one simulated fleet run did. `PartialEq` makes determinism a
+/// one-line assertion.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    pub rounds_completed: usize,
+    /// Fresh (same-round) uplink folds, including edge-tier routing.
+    pub folds: usize,
+    /// Staleness-discounted folds of carried uplinks (buffered mode).
+    pub stale_folds: usize,
+    /// Sync-mode arrivals that blew the virtual deadline.
+    pub dropouts: usize,
+    /// Sampled devices that churned offline before training.
+    pub churned: usize,
+    /// Uplinks still buffered when the run ended.
+    pub carried: usize,
+    /// Final virtual clock value.
+    pub ticks: u64,
+    /// FNV-1a digest over the final model's evaluation-view f32 bits.
+    pub model_digest: u64,
+    /// Last round's mean train loss.
+    pub final_loss: f64,
+}
+
+/// The server under simulation, constructed directly (no model
+/// artifacts): the simulator exercises aggregation semantics, not
+/// gradients. Dense baselines start from seeded dyadic-grid weights.
+fn build_sim_server(opts: &FleetOpts) -> Box<dyn ServerLogic> {
+    let n = opts.n_params;
+    match opts.algorithm {
+        Algorithm::SignSGD => {
+            Box::new(SignSgd::new(sim_dense(n, opts.seed), DownlinkMode::Float32))
+        }
+        Algorithm::FedAvg => Box::new(FedAvg::new(sim_dense(n, opts.seed), DownlinkMode::Float32)),
+        Algorithm::FedMask => Box::new(MaskStrategy::new(n, opts.seed, MaskMode::Deterministic)),
+        Algorithm::TopK => Box::new(MaskStrategy::new(n, opts.seed, MaskMode::TopK { frac: 0.3 })),
+        _ => Box::new(MaskStrategy::new(n, opts.seed, MaskMode::Stochastic)),
+    }
+}
+
+/// Seeded dyadic-grid floats in [-1, 1): exactly representable, so
+/// weighted f64 sums over them are grouping-exact (DESIGN.md §Fleet).
+fn sim_dense(n: usize, seed: u64) -> Vec<f32> {
+    let s = SeedSequence::new(seed).child(0x57A7).seed();
+    let mut rng = Xoshiro256::new(s);
+    (0..n).map(|_| (rng.below(2048) as f32 - 1024.0) / 1024.0).collect()
+}
+
+/// One device's round product: a wire-faithful [`UplinkMsg`] that is a
+/// pure function of `(seed, device, round)` — integer `|D_i|` weight in
+/// `1..=16`, payload matched to the strategy's [`AggKind`].
+fn synth_uplink(kind: AggKind, n: usize, seed: u64, device: u64, round: usize) -> UplinkMsg {
+    let s = SeedSequence::new(seed).child(0x0731).child(device).child(round as u64).seed();
+    let mut rng = Xoshiro256::new(s);
+    let weight = (1 + rng.below(16)) as f64;
+    let train_loss = 0.1 + rng.next_f32() * 0.9;
+    let payload = match kind {
+        AggKind::MaskSum => {
+            let m = BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < 0.3), n);
+            UplinkPayload::CodedMask(compress::encode(&m))
+        }
+        AggKind::SignTally => {
+            let m = BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < 0.5), n);
+            UplinkPayload::SignVector(compress::encode(&m))
+        }
+        AggKind::DenseSum => {
+            let w = (0..n).map(|_| (rng.below(2048) as f32 - 1024.0) / 1024.0).collect();
+            UplinkPayload::DenseDelta(w)
+        }
+    };
+    UplinkMsg { weight, train_loss, trained_round: round as u64, payload }
+}
+
+/// Fold one round's fresh arrivals — flat, or through a cohort-local
+/// edge tier whose merged envelopes cross the (simulated) uplink wire.
+fn fold_fresh(
+    server: &mut dyn ServerLogic,
+    arrivals: &[(u64, u64, UplinkMsg)],
+    plan: &RoundPlan,
+    opts: &FleetOpts,
+    comm: &mut RoundComm,
+) -> Result<()> {
+    let n_edges = opts.edges.min(arrivals.len());
+    if n_edges == 0 {
+        for (_, _, up) in arrivals {
+            server.fold_uplink(up, comm)?;
+        }
+        return Ok(());
+    }
+    let mut tier: Vec<EdgeAggregator> = (0..n_edges)
+        .map(|_| EdgeAggregator::new(server.agg_kind(), opts.n_params))
+        .collect();
+    for (pos, (_, _, up)) in arrivals.iter().enumerate() {
+        let e = pos * n_edges / arrivals.len();
+        tier[e].fold(up, plan.round, opts.staleness_beta)?;
+    }
+    for edge in &tier {
+        if edge.reporters() == 0 {
+            continue;
+        }
+        let agg = AggregateMsg::from_bytes(&edge.finish().to_bytes())?;
+        server.fold_aggregate(&agg, comm)?;
+    }
+    Ok(())
+}
+
+/// Run one simulated fleet to completion.
+pub fn run_fleet(opts: &FleetOpts) -> Result<FleetReport> {
+    ensure!(opts.devices > 0, "fleet needs at least one device");
+    ensure!(opts.rounds > 0, "fleet needs at least one round");
+    ensure!(opts.n_params > 0, "fleet needs a non-empty model");
+    let mut server = build_sim_server(opts);
+    let kind = server.agg_kind();
+    let participation = Participation::new(opts.participation, 0.0);
+    let profiles: Vec<DelayProfile> = (0..opts.devices)
+        .map(|d| DelayProfile::for_device(opts.seed, d as u64, opts.delay_base, opts.delay_jitter))
+        .collect();
+    let buffered_k = match opts.aggregation {
+        Aggregation::Buffered { k } => Some(k.max(1)),
+        Aggregation::Sync => None,
+    };
+    let mut report = FleetReport {
+        rounds_completed: 0,
+        folds: 0,
+        stale_folds: 0,
+        dropouts: 0,
+        churned: 0,
+        carried: 0,
+        ticks: 0,
+        model_digest: 0,
+        final_loss: 0.0,
+    };
+    // Uplinks trained in an earlier round, awaiting their buffered fold.
+    let mut stale_buf: Vec<(u64, UplinkMsg)> = Vec::new();
+    let mut now = 0u64;
+    for round in 1..=opts.rounds {
+        let plan = RoundPlan {
+            round,
+            seed: opts.seed,
+            lambda: 0.0,
+            lr: 0.1,
+            local_epochs: 1,
+            topk_frac: 0.3,
+            server_lr: 0.1,
+            adam: false,
+        };
+        let mut comm = RoundComm::new(opts.n_params);
+        let _broadcast = server.begin_round(&plan)?;
+        let cohort = participation.sample_round(opts.devices, opts.seed, round);
+        let churn_seed = SeedSequence::new(opts.seed).child(0xC4E1).child(round as u64).seed();
+        let mut churn_rng = Xoshiro256::new(churn_seed);
+        let mut arrivals: Vec<(u64, u64, UplinkMsg)> = Vec::with_capacity(cohort.len());
+        for (pos, &dev) in cohort.iter().enumerate() {
+            if churn_rng.next_f64() < opts.churn && pos != 0 {
+                report.churned += 1;
+                continue;
+            }
+            let delay = profiles[dev].delay_ticks(opts.seed, dev as u64, round as u64);
+            let up = synth_uplink(kind, opts.n_params, opts.seed, dev as u64, round);
+            arrivals.push((now + delay, dev as u64, up));
+        }
+        arrivals.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let round_end;
+        let fresh = if let Some(k) = buffered_k {
+            // (1) Every carried uplink folds first, oldest rounds first,
+            // staleness-discounted; they count toward this round's K.
+            stale_buf.sort_by(|a, b| (a.1.trained_round, a.0).cmp(&(b.1.trained_round, b.0)));
+            let mut folded = 0usize;
+            for (_, up) in stale_buf.drain(..) {
+                server.fold_uplink_stale(&up, &plan, opts.staleness_beta, &mut comm)?;
+                report.stale_folds += 1;
+                folded += 1;
+            }
+            // (2) Fresh arrivals fold in (tick, id) order until K total
+            // folds; the rest carry, tagged with their training round.
+            let take = k.saturating_sub(folded).min(arrivals.len());
+            let mut fresh = arrivals;
+            let rest = fresh.split_off(take);
+            round_end = fresh.last().map_or(now, |a| a.0).max(now + 1);
+            for (_, dev, up) in rest {
+                stale_buf.push((dev, up));
+            }
+            fresh
+        } else {
+            // Sync barrier: the engine's straggler-deadline semantics.
+            let deadline = now + opts.deadline_ticks;
+            let (on_time, mut late): (Vec<_>, Vec<_>) =
+                arrivals.into_iter().partition(|a| a.0 <= deadline);
+            let on_time = if on_time.is_empty() {
+                // A round with zero uplinks cannot aggregate: the
+                // earliest straggler folds anyway, deterministically.
+                vec![late.remove(0)]
+            } else {
+                on_time
+            };
+            report.dropouts += late.len();
+            round_end = if late.is_empty() {
+                on_time.last().map_or(now, |a| a.0).max(now + 1)
+            } else {
+                deadline
+            };
+            on_time
+        };
+        fold_fresh(&mut *server, &fresh, &plan, opts, &mut comm)?;
+        report.folds += fresh.len();
+        let stats = server.end_round(&plan)?;
+        report.final_loss = stats.train_loss;
+        report.rounds_completed = round;
+        now = round_end;
+    }
+    report.carried = stale_buf.len();
+    report.ticks = now;
+    report.model_digest = match server.eval_model(opts.rounds) {
+        EvalModel::Masked(w) | EvalModel::Dense(w) => fnv1a_f32(&w),
+    };
+    Ok(report)
+}
+
+/// FNV-1a over the little-endian bit patterns of an f32 slice.
+fn fnv1a_f32(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(algorithm: Algorithm) -> FleetOpts {
+        FleetOpts { n_params: 64, algorithm, churn: 0.05, ..FleetOpts::new(200, 4) }
+    }
+
+    #[test]
+    fn same_opts_same_report_bit_for_bit() {
+        for algo in [Algorithm::FedPMReg, Algorithm::SignSGD, Algorithm::FedAvg] {
+            for agg in [Aggregation::Sync, Aggregation::Buffered { k: 64 }] {
+                let mut o = opts(algo);
+                o.aggregation = agg;
+                let a = run_fleet(&o).unwrap();
+                let b = run_fleet(&o).unwrap();
+                assert_eq!(a, b, "{algo:?}/{agg:?} must replay bit-for-bit");
+                assert_eq!(a.rounds_completed, 4);
+                let mut reseeded = o.clone();
+                reseeded.seed ^= 1;
+                let c = run_fleet(&reseeded).unwrap();
+                assert_ne!(a.model_digest, c.model_digest, "the seed must matter");
+            }
+        }
+    }
+
+    #[test]
+    fn buffered_mode_carries_stragglers_sync_drops_them() {
+        let mut o = opts(Algorithm::FedPMReg);
+        o.churn = 0.0;
+        o.deadline_ticks = 30; // slower speed classes always blow this
+        let sync = run_fleet(&o).unwrap();
+        assert!(sync.dropouts > 0, "tight deadline must produce sync dropouts");
+        assert_eq!(sync.stale_folds, 0);
+        assert_eq!(sync.carried, 0);
+        o.aggregation = Aggregation::Buffered { k: 150 };
+        let buf = run_fleet(&o).unwrap();
+        assert_eq!(buf.dropouts, 0, "buffered mode never voids an uplink");
+        assert!(buf.stale_folds > 0, "carried uplinks must fold in later rounds");
+        assert!(
+            buf.folds + buf.stale_folds + buf.carried > sync.folds,
+            "buffered mode must recover contributions sync dropped"
+        );
+    }
+
+    #[test]
+    fn edge_tier_is_bit_identical_to_flat_folds() {
+        for algo in [Algorithm::FedPMReg, Algorithm::SignSGD, Algorithm::FedAvg] {
+            let flat = opts(algo);
+            let mut edged = flat.clone();
+            edged.edges = 7;
+            let a = run_fleet(&flat).unwrap();
+            let b = run_fleet(&edged).unwrap();
+            assert_eq!(a.model_digest, b.model_digest, "{algo:?}: edge fold changed the model");
+            assert_eq!(a.folds, b.folds);
+            // loss is a plain f64 sum: merging per-edge partial sums may
+            // differ in the last ulp, never more
+            assert!((a.final_loss - b.final_loss).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn delay_profiles_are_heterogeneous_and_pure() {
+        let p = DelayProfile::for_device(7, 0, 10, 20);
+        assert_eq!(p, DelayProfile::for_device(7, 0, 10, 20));
+        let classes: std::collections::BTreeSet<u64> =
+            (0..64).map(|d| DelayProfile::for_device(7, d, 10, 20).base).collect();
+        assert!(classes.len() > 1, "a fleet must mix speed classes");
+        let t = p.delay_ticks(7, 0, 3);
+        assert_eq!(t, p.delay_ticks(7, 0, 3), "delay is pure in (seed, id, round)");
+        assert!(t >= p.base && t <= p.base + p.jitter);
+        let flat = DelayProfile { base: 5, jitter: 0 };
+        assert_eq!(flat.delay_ticks(7, 1, 1), 5);
+    }
+}

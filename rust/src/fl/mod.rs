@@ -11,20 +11,24 @@
 //! `fedsrn device` — DESIGN.md §Transport), bit-identical to the
 //! in-process path.
 
+pub mod aggregator;
 pub mod chaos;
 pub mod client;
 pub mod participation;
 pub mod comm;
+pub mod fleet;
 pub mod metrics;
 pub mod protocol;
 pub mod server;
 pub mod session;
 pub mod transport;
 
+pub use aggregator::{staleness_scale, AggKind, AggregateMsg, EdgeAggregator};
 pub use chaos::{ChaosEvents, ChaosSpec, ChaosStream, ChaosSwitch};
 pub use client::{derive_client_seed, Client};
 pub use participation::Participation;
 pub use comm::{CommTotals, RoundComm};
+pub use fleet::{run_fleet, DelayProfile, FleetOpts, FleetReport};
 pub use metrics::{MetricsSink, RoundRecord};
 pub use protocol::{DownlinkMsg, RoundPlan, UplinkMsg, UplinkPayload, PROTOCOL_VERSION};
 pub use server::Server;

@@ -32,9 +32,15 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::compress::{DownlinkEncoder, DownlinkFrame, DownlinkMode, Encoded};
 
-/// Wire-format version stamped on every envelope; a mismatch is a hard
-/// decode error, never a silent reinterpretation.
-pub const PROTOCOL_VERSION: u8 = 1;
+/// Wire-format version stamped on every envelope. Encoders always write
+/// the current version; decoders accept the back-compat window
+/// [`PROTOCOL_VERSION_MIN`]..=[`PROTOCOL_VERSION`] — anything outside it
+/// is a hard decode error, never a silent reinterpretation. v2 added the
+/// uplink `trained_round` staleness tag (buffered-async aggregation); a
+/// v1 uplink decodes with [`UplinkMsg::FRESH`].
+pub const PROTOCOL_VERSION: u8 = 2;
+/// Oldest wire-format version decoders still accept.
+pub const PROTOCOL_VERSION_MIN: u8 = 1;
 
 const DL_RAW_F32: u8 = 0;
 const DL_FRAME: u8 = 1;
@@ -46,8 +52,10 @@ const UL_DENSE_DELTA: u8 = 2;
 
 /// Envelope header size shared by both directions: version + kind bytes.
 const ENVELOPE_HEAD: usize = 2;
-/// Uplink header: envelope head + f64 weight + f32 train loss.
-const UPLINK_HEAD: usize = ENVELOPE_HEAD + 8 + 4;
+/// v1 uplink header: envelope head + f64 weight + f32 train loss.
+const UPLINK_HEAD_V1: usize = ENVELOPE_HEAD + 8 + 4;
+/// v2 uplink header: v1 head + u64 trained_round staleness tag.
+const UPLINK_HEAD: usize = UPLINK_HEAD_V1 + 8;
 
 fn put_f32s(out: &mut Vec<u8>, values: &[f32]) {
     // audit:checked(a weight/state vector is far below 2^32 entries by model geometry)
@@ -76,8 +84,8 @@ fn take_f32s(bytes: &[u8], what: &str) -> Result<Vec<f32>> {
 fn check_header(bytes: &[u8], what: &str) -> Result<u8> {
     ensure!(bytes.len() >= ENVELOPE_HEAD, "{what} envelope truncated ({} bytes)", bytes.len());
     ensure!(
-        bytes[0] == PROTOCOL_VERSION,
-        "{what} protocol version {} != supported {PROTOCOL_VERSION}",
+        (PROTOCOL_VERSION_MIN..=PROTOCOL_VERSION).contains(&bytes[0]),
+        "{what} protocol version {} outside supported {PROTOCOL_VERSION_MIN}..={PROTOCOL_VERSION}",
         bytes[0]
     );
     Ok(bytes[1])
@@ -254,10 +262,21 @@ pub struct UplinkMsg {
     /// Mean local train loss — rides the envelope so the server's round
     /// stats need no side channel.
     pub train_loss: f32,
+    /// The round this uplink trained against (v2 staleness tag). Under
+    /// buffered-async aggregation the server folds envelopes whose tag
+    /// trails the current round with a discounted weight instead of
+    /// dropping them. [`UplinkMsg::FRESH`] marks an always-fresh uplink
+    /// (and every decoded v1 envelope): `round.saturating_sub(FRESH)`
+    /// is 0, so the discount path is a no-op.
+    pub trained_round: u64,
     pub payload: UplinkPayload,
 }
 
 impl UplinkMsg {
+    /// `trained_round` sentinel meaning "never stale" — the value every
+    /// v1 envelope decodes with.
+    pub const FRESH: u64 = u64::MAX;
+
     /// Exact serialized envelope size in bytes — what the communication
     /// accounting records per received uplink.
     pub fn wire_bytes(&self) -> usize {
@@ -286,6 +305,7 @@ impl UplinkMsg {
         out.push(kind);
         out.extend_from_slice(&self.weight.to_le_bytes());
         out.extend_from_slice(&self.train_loss.to_le_bytes());
+        out.extend_from_slice(&self.trained_round.to_le_bytes());
         match &self.payload {
             UplinkPayload::CodedMask(e) | UplinkPayload::SignVector(e) => {
                 let eb = e.to_bytes();
@@ -304,7 +324,8 @@ impl UplinkMsg {
     /// own headers through [`Encoded::from_bytes`]).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let kind = check_header(bytes, "uplink")?;
-        ensure!(bytes.len() >= UPLINK_HEAD, "uplink header truncated ({} bytes)", bytes.len());
+        let head = if bytes[0] >= 2 { UPLINK_HEAD } else { UPLINK_HEAD_V1 };
+        ensure!(bytes.len() >= head, "uplink header truncated ({} bytes)", bytes.len());
         let weight = f64::from_le_bytes(bytes[2..10].try_into()?);
         ensure!(
             weight.is_finite() && weight > 0.0,
@@ -312,7 +333,12 @@ impl UplinkMsg {
         );
         let train_loss = f32::from_le_bytes(bytes[10..14].try_into()?);
         ensure!(train_loss.is_finite(), "uplink train loss {train_loss} not finite");
-        let body = &bytes[UPLINK_HEAD..];
+        let (trained_round, body) = if bytes[0] >= 2 {
+            (u64::from_le_bytes(bytes[14..22].try_into()?), &bytes[UPLINK_HEAD..])
+        } else {
+            // v1 envelopes predate the staleness tag: always fresh.
+            (Self::FRESH, &bytes[UPLINK_HEAD_V1..])
+        };
         let payload = match kind {
             UL_CODED_MASK | UL_SIGN_VECTOR => {
                 ensure!(body.len() >= 4, "uplink payload length field truncated");
@@ -339,7 +365,7 @@ impl UplinkMsg {
             }
             other => bail!("unknown uplink message kind {other}"),
         };
-        Ok(Self { weight, train_loss, payload })
+        Ok(Self { weight, train_loss, trained_round, payload })
     }
 }
 
@@ -396,8 +422,9 @@ impl RoundPlan {
             bytes.len()
         );
         ensure!(
-            bytes[0] == PROTOCOL_VERSION,
-            "round plan protocol version {} != supported {PROTOCOL_VERSION}",
+            (PROTOCOL_VERSION_MIN..=PROTOCOL_VERSION).contains(&bytes[0]),
+            "round plan protocol version {} outside supported \
+             {PROTOCOL_VERSION_MIN}..={PROTOCOL_VERSION}",
             bytes[0]
         );
         let round = u64::from_le_bytes(bytes[1..9].try_into()?) as usize;
@@ -487,12 +514,13 @@ mod tests {
             UplinkPayload::SignVector(enc.clone()),
             UplinkPayload::DenseDelta(dense.clone()),
         ] {
-            let msg = UplinkMsg { weight: 37.0, train_loss: 1.25, payload };
+            let msg = UplinkMsg { weight: 37.0, train_loss: 1.25, trained_round: 12, payload };
             let bytes = msg.to_bytes();
             assert_eq!(bytes.len(), msg.wire_bytes(), "{}", msg.payload.kind_name());
             let back = UplinkMsg::from_bytes(&bytes).unwrap();
             assert_eq!(back.weight.to_bits(), msg.weight.to_bits());
             assert_eq!(back.train_loss.to_bits(), msg.train_loss.to_bits());
+            assert_eq!(back.trained_round, 12);
             assert_eq!(back.payload.kind_name(), msg.payload.kind_name());
             match (&back.payload, &msg.payload) {
                 (UplinkPayload::CodedMask(a), UplinkPayload::CodedMask(b))
@@ -516,6 +544,7 @@ mod tests {
         let msg = UplinkMsg {
             weight: 1.0,
             train_loss: 0.0,
+            trained_round: UplinkMsg::FRESH,
             payload: UplinkPayload::DenseDelta(vec![0.0; 4]),
         };
         let mut ul = msg.to_bytes();
@@ -538,6 +567,7 @@ mod tests {
         let ul = UplinkMsg {
             weight: 3.0,
             train_loss: 0.5,
+            trained_round: UplinkMsg::FRESH,
             payload: UplinkPayload::CodedMask(compress::encode(&BitVec::zeros(64))),
         }
         .to_bytes();
@@ -569,10 +599,40 @@ mod tests {
             let msg = UplinkMsg {
                 weight,
                 train_loss: 0.0,
+                trained_round: UplinkMsg::FRESH,
                 payload: UplinkPayload::DenseDelta(vec![0.0; 2]),
             };
             assert!(UplinkMsg::from_bytes(&msg.to_bytes()).is_err(), "weight={weight}");
         }
+    }
+
+    #[test]
+    fn v1_uplink_decodes_as_fresh() {
+        // A v1 envelope has no trained_round field: build one by hand
+        // (v2 bytes minus the 8 tag bytes, version byte rewritten) and
+        // check it decodes with the FRESH sentinel — the back-compat
+        // contract of the v2 bump.
+        let msg = UplinkMsg {
+            weight: 5.0,
+            train_loss: 0.75,
+            trained_round: 9,
+            payload: UplinkPayload::DenseDelta(vec![0.25, -0.5]),
+        };
+        let v2 = msg.to_bytes();
+        let mut v1 = Vec::with_capacity(v2.len() - 8);
+        v1.extend_from_slice(&v2[..14]);
+        v1.extend_from_slice(&v2[22..]);
+        v1[0] = 1;
+        let back = UplinkMsg::from_bytes(&v1).unwrap();
+        assert_eq!(back.weight.to_bits(), msg.weight.to_bits());
+        assert_eq!(back.train_loss.to_bits(), msg.train_loss.to_bits());
+        assert_eq!(back.trained_round, UplinkMsg::FRESH);
+        match back.payload {
+            UplinkPayload::DenseDelta(v) => assert_eq!(bits_of(&v), bits_of(&[0.25, -0.5])),
+            other => panic!("wrong payload kind {}", other.kind_name()),
+        }
+        // and a truncated v1 head still errors
+        assert!(UplinkMsg::from_bytes(&v1[..13]).is_err());
     }
 
     fn plan_fixture() -> RoundPlan {

@@ -11,6 +11,7 @@ use crate::compress::{self, Encoded};
 use crate::mask::{empirical_bpp, sample_mask, BetaAggregator, MaskAggregator, ProbMask};
 use crate::util::BitVec;
 
+use super::aggregator::{AggKind, AggregateMsg};
 use super::comm::RoundComm;
 use super::protocol::{UplinkMsg, UplinkPayload};
 
@@ -87,6 +88,32 @@ impl Server {
         Ok(())
     }
 
+    /// Ingest one edge tier's merged partial sums (hierarchical
+    /// aggregation, DESIGN.md §Fleet): elementwise-add the cohort-local
+    /// eq. 8 numerators into the round accumulator and credit the
+    /// constituent uplinks' communication accounting. Bit-identical to
+    /// receiving those uplinks directly in order for integer |D_i|
+    /// weights (grouping-exact f64 sums).
+    pub fn receive_aggregate(&mut self, msg: &AggregateMsg, comm: &mut RoundComm) -> Result<()> {
+        ensure!(
+            msg.kind == AggKind::MaskSum,
+            "mask server expects a mask-sum aggregate, got {:?}",
+            msg.kind
+        );
+        ensure!(
+            msg.acc.len() == self.n_params,
+            "aggregate covers {} params, server has {}",
+            msg.acc.len(),
+            self.n_params
+        );
+        comm.add_uplinks(msg.ul_bits, msg.est_bpp_sum, msg.reporters as usize);
+        match &mut self.agg {
+            Agg::Mean(a) => a.merge_sums(&msg.acc, msg.weight_sum, msg.reporters as usize),
+            Agg::Bayes(a) => a.merge_sums(&msg.acc, msg.weight_sum, msg.reporters as usize),
+        }
+        Ok(())
+    }
+
     /// Close the round: theta(t+1) from the configured aggregator.
     pub fn finish_round(&mut self) -> Result<()> {
         let n = match &self.agg {
@@ -143,7 +170,12 @@ mod tests {
     }
 
     fn uplink(enc: Encoded, weight: f64) -> UplinkMsg {
-        UplinkMsg { weight, train_loss: 0.0, payload: UplinkPayload::CodedMask(enc) }
+        UplinkMsg {
+            weight,
+            train_loss: 0.0,
+            trained_round: UplinkMsg::FRESH,
+            payload: UplinkPayload::CodedMask(enc),
+        }
     }
 
     #[test]
@@ -184,6 +216,7 @@ mod tests {
         let msg = UplinkMsg {
             weight: 1.0,
             train_loss: 0.0,
+            trained_round: UplinkMsg::FRESH,
             payload: UplinkPayload::DenseDelta(vec![0.0; 16]),
         };
         assert!(srv.receive_uplink(&msg, &mut comm).is_err());

@@ -39,9 +39,26 @@
 //!   (the `dropout` config key) is decided device-side from the same
 //!   seeded [`Participation::drops`] the engine uses, shipped as a tiny
 //!   `Dropped` frame so accounting matches the simulation bit-for-bit.
+//!   A device may also carry a [`DelayProfile`]: it then decides
+//!   deterministically — in virtual ticks, no wall clock — whether it
+//!   would have blown the deadline and self-reports `Dropped`, so the
+//!   deadline→dropout path is testable without sleep calibration.
 //!   An uplink that fully arrived before its connection died still
 //!   counts: dead connections park their parsed inbox as dead letters
 //!   for the round to collect.
+//! * **Buffered-async mode** — with `aggregation=buffered<K>`
+//!   (DESIGN.md §Fleet) the round barrier closes after `K` folds
+//!   instead of the whole cohort. A straggler is not dropped: its
+//!   position is parked, and its uplink — v2 envelopes carry the round
+//!   they trained against — folds at a later round's start,
+//!   staleness-discounted via [`ServerLogic::fold_uplink_stale`],
+//!   counting toward that round's `K`. In sync mode a stale envelope on
+//!   a live connection is a protocol error and is discarded.
+//! * **Edge tier** — with `edges=N` the cohort's fresh uplinks fold
+//!   into cohort-local [`EdgeAggregator`]s; each reporting edge ships
+//!   one merged [`AggregateMsg`] envelope upstream (serialized and
+//!   re-validated), bit-identical to the flat fold for the
+//!   grouping-exact accumulators all three strategies use.
 //! * **Accounting** — [`crate::fl::RoundComm`] records the serialized
 //!   envelope bytes exactly as the in-process engine does (the envelope
 //!   is byte-identical on the socket); [`SessionStats`] additionally
@@ -67,11 +84,13 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::algos::{build_server, RoundStats, ServerLogic};
 use crate::compress::DownlinkMode;
-use crate::config::ExperimentConfig;
+use crate::config::{Aggregation, ExperimentConfig};
 use crate::coordinator::RoundEngine;
 use crate::data::{load_experiment_data, partition_fleet};
+use crate::fl::aggregator::{AggregateMsg, EdgeAggregator};
 use crate::fl::chaos::{ChaosSpec, ChaosStream};
 use crate::fl::client::derive_client_seed;
+use crate::fl::fleet::DelayProfile;
 use crate::fl::protocol::{DownlinkMsg, RoundPlan};
 use crate::fl::transport::{
     is_timeout, run_fingerprint, write_frame, Conn, FrameBuf, FrameKind, Hello, Welcome,
@@ -104,6 +123,14 @@ pub struct SessionConfig {
     /// `downlink=qdelta`: a reconnecting device that missed chain links
     /// needs a full-state `Sync` frame before its next round.
     pub needs_state_sync: bool,
+    /// `aggregation=sync|buffered<K>`: sync waits out the whole cohort;
+    /// buffered closes the round after `K` folds and carries the
+    /// stragglers' uplinks forward (staleness-discounted).
+    pub aggregation: Aggregation,
+    /// Staleness discount exponent for carried uplinks.
+    pub staleness_beta: f64,
+    /// Edge aggregators per round (`edges` config key; 0 = flat folds).
+    pub edges: usize,
 }
 
 impl SessionConfig {
@@ -121,6 +148,9 @@ impl SessionConfig {
             deadline,
             wave,
             needs_state_sync: matches!(cfg.downlink, DownlinkMode::QDelta { .. }),
+            aggregation: cfg.aggregation,
+            staleness_beta: cfg.staleness_beta,
+            edges: cfg.edges,
         }
     }
 }
@@ -142,6 +172,9 @@ pub struct SessionStats {
     pub syncs: usize,
     /// Corrupt frames / protocol violations that cost a connection.
     pub protocol_errors: usize,
+    /// Carried uplinks folded staleness-discounted into a later round
+    /// (buffered-async mode only).
+    pub late_folds: usize,
     /// Zero-progress sweeps that slept one [`NAP`]. The readiness loop's
     /// only sleep — a busy fleet keeps this near zero.
     pub idle_naps: u64,
@@ -182,6 +215,13 @@ pub struct Session {
     dead_letters: Vec<Option<(u64, VecDeque<(FrameKind, Vec<u8>)>)>>,
     /// Which ids have ever registered (re-registration = reconnect).
     seen: Vec<bool>,
+    /// Buffered mode: uplinks still owed from rounds that closed over
+    /// them, keyed by (device id, the generation their broadcast went
+    /// out on). Collected at the start of every later round.
+    stale_pending: Vec<(usize, u64)>,
+    /// Buffered mode: fully-arrived carried uplinks awaiting their
+    /// staleness-discounted fold at the next round's start.
+    stale_buf: Vec<(usize, UplinkMsg)>,
     next_gen: u64,
     cfg: SessionConfig,
     rounds_completed: usize,
@@ -244,6 +284,8 @@ impl Session {
             pending: Vec::new(),
             dead_letters,
             seen,
+            stale_pending: Vec::new(),
+            stale_buf: Vec::new(),
             next_gen: 0,
             cfg,
             rounds_completed: 0,
@@ -597,17 +639,49 @@ impl Session {
         comm: &mut RoundComm,
     ) -> Result<RoundStats> {
         let n = self.cfg.expected;
+        let beta = self.cfg.staleness_beta;
+        let buffered_k = match self.cfg.aggregation {
+            Aggregation::Buffered { k } => Some(k.max(1)),
+            Aggregation::Sync => None,
+        };
         let cohort = participation.sample_round(n, plan.seed, plan.round);
         let msg = server.begin_round(plan)?;
         let payload = round_payload(plan, &msg);
         let prev = fleet_state.take();
-        // Stale uplinks parked by a previous round's disconnects answer
-        // an older broadcast; never fold them into this round.
+        // Pick up reconnects — and, in buffered mode, carried uplinks —
+        // that arrived between rounds, BEFORE voiding dead letters (a
+        // parked straggler's envelope may be waiting there).
+        self.sweep()?;
+        let mut folds = 0usize;
+        if buffered_k.is_some() {
+            let pending = std::mem::take(&mut self.stale_pending);
+            for (id, gen) in pending {
+                match self.take_reply(id, gen) {
+                    Some((kind, bytes)) => {
+                        if let Some(up) = self.classify_reply(id, kind, &bytes) {
+                            self.stale_buf.push((id, up));
+                        }
+                    }
+                    None if self.reply_possible(id, gen) => self.stale_pending.push((id, gen)),
+                    None => {} // connection gone before the uplink landed
+                }
+            }
+            // Carried uplinks fold first — oldest training round first,
+            // then device id — staleness-discounted; they count toward
+            // this round's K.
+            let mut late = std::mem::take(&mut self.stale_buf);
+            late.sort_by(|a, b| (a.1.trained_round, a.0).cmp(&(b.1.trained_round, b.0)));
+            for (_, up) in &late {
+                server.fold_uplink_stale(up, plan, beta, comm)?;
+                self.stats.late_folds += 1;
+                folds += 1;
+            }
+        }
+        // Remaining stale frames from a previous round's disconnects
+        // answer an older broadcast; in sync mode they never fold.
         for slot in &mut self.dead_letters {
             *slot = None;
         }
-        // Pick up reconnects that arrived between rounds.
-        self.sweep()?;
         // A frame chain link must reach every device (one missed link
         // and the chain is undecodable); stateless broadcasts only the
         // cohort. Mirrors the engine's receiver accounting exactly.
@@ -629,7 +703,13 @@ impl Session {
         let mut gens = vec![0u64; m];
         let mut sent = 0usize;
         let mut frontier = 0usize;
-        while frontier < m {
+        // Hierarchical aggregation: fresh folds route through
+        // cohort-local edge accumulators (DESIGN.md §Fleet).
+        let n_edges = self.cfg.edges.min(m);
+        let mut edge_tier: Vec<EdgeAggregator> = (0..n_edges)
+            .map(|_| EdgeAggregator::new(server.agg_kind(), comm.n_params))
+            .collect();
+        'round: while frontier < m {
             // (a) broadcast up to `wave` positions ahead of the frontier
             while sent < m && sent < frontier + wave {
                 let id = cohort[sent];
@@ -656,8 +736,29 @@ impl Session {
                 }
                 let id = cohort[pos];
                 if let Some((kind, bytes)) = self.take_reply(id, gens[pos]) {
-                    resolved[pos] = Some(self.classify_reply(id, kind, &bytes));
                     advanced = true;
+                    match self.classify_reply(id, kind, &bytes) {
+                        Some(up) if up.trained_round < plan.round as u64 => {
+                            // An uplink owed from an earlier round,
+                            // surfacing on the same connection ahead of
+                            // this round's reply. The position itself
+                            // stays in flight.
+                            if buffered_k.is_some() {
+                                server.fold_uplink_stale(&up, plan, beta, comm)?;
+                                self.stats.late_folds += 1;
+                                folds += 1;
+                                self.stale_pending.retain(|&(p, g)| (p, g) != (id, gens[pos]));
+                            } else {
+                                eprintln!(
+                                    "session: device {id} sent a round-{} uplink into \
+                                     round {}; discarding (sync mode)",
+                                    up.trained_round, plan.round
+                                );
+                                self.stats.protocol_errors += 1;
+                            }
+                        }
+                        outcome => resolved[pos] = Some(outcome),
+                    }
                 } else if !self.reply_possible(id, gens[pos]) {
                     eprintln!(
                         "session: device {id} connection lost mid-round; treating as dropout"
@@ -665,6 +766,14 @@ impl Session {
                     resolved[pos] = Some(None);
                     advanced = true;
                 } else if Instant::now() > deadlines[pos] {
+                    if buffered_k.is_some() {
+                        // Buffered mode never voids a straggler: stop
+                        // waiting, let the uplink carry forward.
+                        self.stale_pending.push((id, gens[pos]));
+                        resolved[pos] = Some(None);
+                        advanced = true;
+                        continue;
+                    }
                     eprintln!(
                         "session: device {id} missed the {:.0?} straggler deadline; \
                          treating as dropout",
@@ -680,18 +789,52 @@ impl Session {
             }
             // (d) ordered streaming fold: envelopes fold strictly in
             // cohort order, so the aggregate is bit-identical to the
-            // in-process engine.
+            // in-process engine (which routes through the same edge
+            // tier when `edges` is set).
             while frontier < m && resolved[frontier].is_some() {
+                if buffered_k.is_some_and(|k| folds >= k) {
+                    break; // quota hit mid-drain: the surplus carries
+                }
                 if let Some(Some(up)) = resolved[frontier].take() {
-                    server.fold_uplink(&up, comm)?;
+                    if n_edges > 0 {
+                        let e = frontier * n_edges / m;
+                        edge_tier[e].fold(&up, plan.round, beta)?;
+                    } else {
+                        server.fold_uplink(&up, comm)?;
+                    }
+                    folds += 1;
                 }
                 frontier += 1;
                 advanced = true;
+            }
+            // Buffered round quota: exactly K folds close the round.
+            // Arrived-but-unfolded envelopes carry as already-late work;
+            // still-in-flight positions carry as owed replies.
+            if let Some(k) = buffered_k {
+                if folds >= k {
+                    for pos in frontier..sent {
+                        match resolved[pos].take() {
+                            Some(Some(up)) => self.stale_buf.push((cohort[pos], up)),
+                            Some(None) => {}
+                            None => self.stale_pending.push((cohort[pos], gens[pos])),
+                        }
+                    }
+                    break 'round;
+                }
             }
             if !progress && !advanced && frontier < m {
                 self.stats.idle_naps += 1;
                 std::thread::sleep(NAP);
             }
+        }
+        // Each reporting edge ships one merged envelope upstream —
+        // serialized and re-validated exactly as a remote edge would be.
+        for edge in &edge_tier {
+            if edge.reporters() == 0 {
+                continue;
+            }
+            let agg = AggregateMsg::from_bytes(&edge.finish().to_bytes())?;
+            server.fold_aggregate(&agg, comm)?;
         }
         *fleet_state = Some(msg.decode_state(prev.as_deref())?);
         self.rounds_completed = plan.round;
@@ -800,6 +943,13 @@ pub struct DeviceOpts {
     /// Wrap the socket in a seeded fault injector (armed only after a
     /// clean handshake). `None` = a plain TCP stream.
     pub chaos: Option<ChaosSpec>,
+    /// Simulated compute-latency profile: when set, the device decides
+    /// deterministically — pure virtual ticks, no wall clock or sleeps
+    /// — whether it would have blown the server's straggler deadline
+    /// and self-reports `Dropped` for that round instead of an uplink.
+    pub delay: Option<DelayProfile>,
+    /// Virtual-tick deadline paired with [`DeviceOpts::delay`].
+    pub deadline_ticks: u64,
 }
 
 /// What one device run did (printed by `fedsrn device`).
@@ -946,7 +1096,16 @@ pub fn run_device(cfg: &ExperimentConfig, opts: &DeviceOpts) -> Result<DeviceRep
                         let up = task
                             .run(&rt, &train, &mut client, &dl, prev_state.as_deref(), &plan)?;
                         report.trained += 1;
+                        // The device trained, but its uplink never
+                        // lands: the seeded failure model, or — with a
+                        // delay profile — a deterministic self-reported
+                        // straggler (compute ticks exceed the deadline).
+                        let late = opts.delay.is_some_and(|p| {
+                            p.delay_ticks(cfg.seed, opts.device_id as u64, plan.round as u64)
+                                > opts.deadline_ticks
+                        });
                         sent = if participation.drops(pos, plan.seed, plan.round, opts.device_id)
+                            || late
                         {
                             report.dropped += 1;
                             conn.send(FrameKind::Dropped, &[])
@@ -1017,6 +1176,9 @@ mod tests {
             deadline: Duration::from_millis(deadline_ms),
             wave: 0,
             needs_state_sync: false,
+            aggregation: Aggregation::Sync,
+            staleness_beta: 1.0,
+            edges: 0,
         };
         let session = Session::bind("127.0.0.1:0", cfg).unwrap();
         let addr = session.local_addr().unwrap().to_string();
@@ -1051,11 +1213,25 @@ mod tests {
         }
     }
 
-    fn mask_uplink(weight: f64) -> Vec<u8> {
+    fn mask_uplink(weight: f64, trained_round: usize) -> Vec<u8> {
         let mask = BitVec::from_iter_len((0..N_PARAMS).map(|i| i % 3 == 0), N_PARAMS);
         UplinkMsg {
             weight,
             train_loss: 0.5,
+            trained_round: trained_round as u64,
+            payload: UplinkPayload::CodedMask(compress::encode(&mask)),
+        }
+        .to_bytes()
+    }
+
+    /// Uplink with a per-device mask and integer weight, so edge-tier
+    /// grouping tests exercise distinct exact contributions.
+    fn device_uplink(id: usize, trained_round: usize) -> Vec<u8> {
+        let mask = BitVec::from_iter_len((0..N_PARAMS).map(|i| (i + id) % 3 == 0), N_PARAMS);
+        UplinkMsg {
+            weight: id as f64 + 1.0,
+            train_loss: 0.5,
+            trained_round: trained_round as u64,
             payload: UplinkPayload::CodedMask(compress::encode(&mask)),
         }
         .to_bytes()
@@ -1072,7 +1248,7 @@ mod tests {
             let (kind, payload) = conn.recv().unwrap();
             assert_eq!(kind, FrameKind::Round);
             parse_round(&payload).unwrap();
-            conn.send(FrameKind::Uplink, &mask_uplink(10.0)).unwrap();
+            conn.send(FrameKind::Uplink, &mask_uplink(10.0, 1)).unwrap();
             // stay alive until the server is done with the round
             let _ = conn.recv();
         });
@@ -1113,6 +1289,125 @@ mod tests {
     }
 
     #[test]
+    fn buffered_round_closes_at_quota_and_folds_the_straggler_stale() {
+        let (mut session, addr) = test_session(2, 60_000);
+        session.cfg.aggregation = Aggregation::Buffered { k: 1 };
+        // device 0 answers both rounds promptly
+        let a0 = addr.clone();
+        let t0 = thread::spawn(move || {
+            let mut conn = fake_handshake(&a0, 0xFEED, 0, 0);
+            conn.recv_expect(FrameKind::Welcome).unwrap();
+            for _ in 0..2 {
+                let (kind, payload) = conn.recv().unwrap();
+                assert_eq!(kind, FrameKind::Round);
+                let (p, _) = parse_round(&payload).unwrap();
+                conn.send(FrameKind::Uplink, &mask_uplink(10.0, p.round)).unwrap();
+            }
+            let _ = conn.recv(); // Done
+        });
+        // device 1 holds its round-1 uplink until that round has closed,
+        // then delivers it late — buffered mode must carry it, not drop it
+        let (release, park) = mpsc::channel::<()>();
+        let a1 = addr.clone();
+        let t1 = thread::spawn(move || {
+            let mut conn = fake_handshake(&a1, 0xFEED, 1, 0);
+            conn.recv_expect(FrameKind::Welcome).unwrap();
+            let (kind, _) = conn.recv().unwrap(); // the round-1 broadcast
+            assert_eq!(kind, FrameKind::Round);
+            let _ = park.recv(); // parked past the round-1 close
+            conn.send(FrameKind::Uplink, &mask_uplink(10.0, 1)).unwrap();
+            loop {
+                match conn.recv() {
+                    Ok((FrameKind::Round, payload)) => {
+                        let (p, _) = parse_round(&payload).unwrap();
+                        conn.send(FrameKind::Uplink, &mask_uplink(10.0, p.round)).unwrap();
+                    }
+                    _ => return, // Done (or server close)
+                }
+            }
+        });
+        session.wait_for_fleet(Duration::from_secs(5)).unwrap();
+        let mut server = MaskStrategy::new(N_PARAMS, 1, MaskMode::Stochastic);
+        let mut fleet_state = None;
+        // round 1, quota K=1: device 0 folds, device 1 is parked — with a
+        // 60s deadline the round still closes immediately at the quota
+        let mut comm = RoundComm::new(N_PARAMS);
+        let mut p = plan();
+        session
+            .run_round(&mut server, &mut fleet_state, Participation::default(), &p, &mut comm)
+            .unwrap();
+        assert_eq!(comm.clients, 1, "quota of 1 closes the round after one fold");
+        assert_eq!(session.stats.stragglers, 0, "buffered mode never drops a straggler");
+        assert_eq!(session.stats.late_folds, 0);
+        assert_eq!(session.connected(), 2, "the parked device keeps its connection");
+        // release the straggler; its round-1 uplink folds into round 2
+        // staleness-discounted and counts toward that round's quota
+        drop(release);
+        session.cfg.aggregation = Aggregation::Buffered { k: 2 };
+        p.round = 2;
+        let mut comm = RoundComm::new(N_PARAMS);
+        session
+            .run_round(&mut server, &mut fleet_state, Participation::default(), &p, &mut comm)
+            .unwrap();
+        assert_eq!(session.stats.late_folds, 1, "the carried uplink folds stale");
+        assert_eq!(comm.clients, 2, "round 2 = one stale + one fresh fold");
+        assert_eq!(session.stats.stragglers, 0);
+        session.finish().unwrap();
+        t0.join().unwrap();
+        t1.join().unwrap();
+    }
+
+    #[test]
+    fn edge_tier_folds_bit_identical_to_flat() {
+        // the same four distinct weighted uplinks, folded flat vs through
+        // a two-edge tier, must produce bit-identical round statistics
+        // (integer weights x 0/1 bits: the partial sums are exact)
+        let run = |edges: usize| {
+            let (mut session, addr) = test_session(4, 5_000);
+            session.cfg.edges = edges;
+            let handles: Vec<_> = (0..4usize)
+                .map(|id| {
+                    let addr = addr.clone();
+                    thread::spawn(move || {
+                        let mut conn = fake_handshake(&addr, 0xFEED, id as u64, 0);
+                        conn.recv_expect(FrameKind::Welcome).unwrap();
+                        let (kind, _) = conn.recv().unwrap();
+                        assert_eq!(kind, FrameKind::Round);
+                        conn.send(FrameKind::Uplink, &device_uplink(id, 1)).unwrap();
+                        let _ = conn.recv(); // Done
+                    })
+                })
+                .collect();
+            session.wait_for_fleet(Duration::from_secs(5)).unwrap();
+            let mut server = MaskStrategy::new(N_PARAMS, 4, MaskMode::Stochastic);
+            let mut fleet_state = None;
+            let mut comm = RoundComm::new(N_PARAMS);
+            let stats = session
+                .run_round(
+                    &mut server,
+                    &mut fleet_state,
+                    Participation::default(),
+                    &plan(),
+                    &mut comm,
+                )
+                .unwrap();
+            session.finish().unwrap();
+            for h in handles {
+                h.join().unwrap();
+            }
+            (stats, comm)
+        };
+        let (flat, flat_comm) = run(0);
+        let (edged, edged_comm) = run(2);
+        assert_eq!(flat_comm.clients, 4);
+        assert_eq!(edged_comm.clients, 4, "edge tier credits every constituent uplink");
+        assert_eq!(flat_comm.ul_bits, edged_comm.ul_bits);
+        assert_eq!(flat.mean_theta.to_bits(), edged.mean_theta.to_bits());
+        assert_eq!(flat.mask_density.to_bits(), edged.mask_density.to_bits());
+        assert_eq!(flat.train_loss.to_bits(), edged.train_loss.to_bits());
+    }
+
+    #[test]
     fn handshake_rejects_fingerprint_mismatch_and_bad_id() {
         let (mut session, addr) = test_session(1, 1000);
         let t = thread::spawn(move || {
@@ -1146,7 +1441,7 @@ mod tests {
             let (kind, payload) = conn.recv().unwrap();
             assert_eq!(kind, FrameKind::Round);
             assert_eq!(parse_round(&payload).unwrap().0.round, 4);
-            conn.send(FrameKind::Uplink, &mask_uplink(10.0)).unwrap();
+            conn.send(FrameKind::Uplink, &mask_uplink(10.0, 4)).unwrap();
             drop(conn);
             // reconnect already in sync with round 4: Welcome, then the
             // round-5 broadcast with NO Sync in between
@@ -1155,7 +1450,7 @@ mod tests {
             let (kind, payload) = conn.recv().unwrap();
             assert_eq!(kind, FrameKind::Round);
             assert_eq!(parse_round(&payload).unwrap().0.round, 5);
-            conn.send(FrameKind::Uplink, &mask_uplink(10.0)).unwrap();
+            conn.send(FrameKind::Uplink, &mask_uplink(10.0, 5)).unwrap();
             let _ = conn.recv(); // Done
         });
         session.wait_for_fleet(Duration::from_secs(5)).unwrap();
@@ -1200,7 +1495,7 @@ mod tests {
                     let (kind, payload) = conn.recv().unwrap();
                     assert_eq!(kind, FrameKind::Round);
                     parse_round(&payload).unwrap();
-                    conn.send(FrameKind::Uplink, &mask_uplink(1.0)).unwrap();
+                    conn.send(FrameKind::Uplink, &mask_uplink(1.0, 1)).unwrap();
                     conn.recv_expect(FrameKind::Done).unwrap();
                 })
             })

@@ -4,6 +4,7 @@
 //!   train              one experiment from a config file / overrides
 //!   serve              run the federation server over real TCP sessions
 //!   device             run one remote device against a server
+//!   fleet              simulate a 100k-device federation (no sockets)
 //!   figure fig1|fig2|summary   regenerate the paper's figures
 //!   eval               evaluate a saved checkpoint
 //!   analyze            summarize a run's JSONL metrics log
@@ -37,7 +38,11 @@ USAGE:
                [--deadline-ms 30000] [--register-timeout-ms 120000] [--wave N]
   fedsrn device --id N [--addr 127.0.0.1:7878] [--config FILE]
                [--set key=value]... [--connect-timeout-ms 60000]
-               [--chaos-seed S]
+               [--chaos-seed S] [--delay-base B] [--delay-jitter J]
+               [--deadline-ticks T]
+  fedsrn fleet --devices N [--rounds R] [--config FILE] [--set key=value]...
+               [--n-params P] [--churn F] [--deadline-ticks T]
+               [--delay-base B] [--delay-jitter J]
   fedsrn figure fig1 [--dataset mnist|cifar10|cifar100] [--model M]
                      [--rounds N] [--clients K] [--seed S] [--out DIR]
   fedsrn figure fig2 [--dataset mnist|cifar10] [--model M] [--rounds N]
@@ -54,8 +59,8 @@ USAGE:
 Config keys for --set (see rust/src/config/mod.rs): model dataset
 algorithm partition clients rounds local_epochs lambda lr topk_frac
 server_lr train_samples test_samples eval_every optimizer adam
-participation dropout bayes_prior downlink threads seed artifacts_dir
-out
+participation dropout bayes_prior downlink aggregation staleness_beta
+edges threads seed artifacts_dir out
 
 model names the built-in native registry entry or an exported artifact:
 mlp_tiny | mlp_mnist | mlp_cifar10 | mlp_cifar100 (dense) and conv_tiny
@@ -80,6 +85,23 @@ injector (seeded delays, split writes, corrupted frames, mid-round
 disconnects) armed after a clean handshake — for torture-testing the
 server's readiness loop; every failure must surface as a typed
 dropout/reconnect, never a hang or a wrong aggregate.
+
+aggregation selects the round barrier: sync (wait out the whole
+cohort) or buffered<K> (close after K folds; stragglers' uplinks
+carry forward, discounted by 1/(1+staleness)^staleness_beta).
+edges=N folds each cohort through N edge aggregators that each ship
+one merged envelope upstream — bit-identical to the flat fold
+(DESIGN.md §Fleet). partition=dirichlet:<alpha> draws per-client
+class mixtures from a symmetric Dirichlet (smaller alpha = more
+label skew).
+
+fleet simulates a sync or buffered-async federation at fleet scale
+(100k+ devices, no OS threads or sockets): seeded churn, per-device
+compute-delay profiles, virtual-tick straggler deadlines. Prints
+rounds/sec and peak RSS and writes both as fleet/* entries into
+$BENCH_JSON_DIR/BENCH_components.json. --delay-base/--delay-jitter
+on `device` give one real device the same deterministic
+self-straggler behavior (DESIGN.md §Fleet).
 
 audit lints the crate sources for the contracts the test suite can
 only spot-check: wire-decode panic-freedom, aggregate determinism,
@@ -113,6 +135,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "device" => cmd_device(&args),
+        "fleet" => cmd_fleet(&args),
         "figure" => cmd_figure(&args),
         "eval" => cmd_eval(&args),
         "analyze" => cmd_analyze(&args),
@@ -243,9 +266,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_device(args: &Args) -> Result<()> {
-    use fedsrn::fl::{run_device, ChaosSpec, DeviceOpts};
+    use fedsrn::fl::{run_device, ChaosSpec, DelayProfile, DeviceOpts};
     use std::time::Duration;
-    args.ensure_known_flags(&["config", "addr", "id", "connect-timeout-ms", "chaos-seed"])?;
+    args.ensure_known_flags(&[
+        "config",
+        "addr",
+        "id",
+        "connect-timeout-ms",
+        "chaos-seed",
+        "delay-base",
+        "delay-jitter",
+        "deadline-ticks",
+    ])?;
     let mut cfg = match args.flag("config") {
         Some(path) => ExperimentConfig::from_file(Path::new(path))?,
         None => ExperimentConfig::default(),
@@ -266,6 +298,18 @@ fn cmd_device(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    // --delay-base opts this device into the deterministic virtual-tick
+    // self-straggler path (DESIGN.md §Fleet): its per-device speed class
+    // is derived from the shared experiment seed, so every process in
+    // the fleet agrees on who the stragglers are.
+    let delay = match args.flag("delay-base") {
+        Some(_) => {
+            let base = args.flag_parse("delay-base", 0u64)?;
+            let jitter = args.flag_parse("delay-jitter", 0u64)?;
+            Some(DelayProfile::for_device(cfg.seed, id as u64, base, jitter))
+        }
+        None => None,
+    };
     let opts = DeviceOpts {
         addr: args.flag_or("addr", "127.0.0.1:7878"),
         device_id: id,
@@ -273,6 +317,8 @@ fn cmd_device(args: &Args) -> Result<()> {
             args.flag_parse("connect-timeout-ms", 60_000u64)?,
         ),
         chaos,
+        delay,
+        deadline_ticks: args.flag_parse("deadline-ticks", 150u64)?,
     };
     match &opts.chaos {
         Some(spec) => eprintln!(
@@ -292,6 +338,102 @@ fn cmd_device(args: &Args) -> Result<()> {
         report.tx_bytes as f64 / 1e6,
         report.rx_bytes as f64 / 1e6
     );
+    Ok(())
+}
+
+/// Peak resident set size in MB from `/proc/self/status` (`VmHWM`, in
+/// kB), or `None` off Linux / when unreadable.
+fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
+/// Run the fleet-scale simulator and emit its trajectory metrics in the
+/// same machine-readable schema as the bench harnesses.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use fedsrn::fl::{run_fleet, FleetOpts};
+    use std::time::Instant;
+    args.ensure_known_flags(&[
+        "config",
+        "devices",
+        "rounds",
+        "n-params",
+        "churn",
+        "deadline-ticks",
+        "delay-base",
+        "delay-jitter",
+    ])?;
+    let mut cfg = match args.flag("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    for (k, v) in &args.overrides {
+        cfg.apply(k, v)?;
+    }
+    cfg.validate()?;
+    let devices: usize = args.flag_parse("devices", 100_000usize)?;
+    let rounds: usize = args.flag_parse("rounds", 3usize)?;
+    let mut opts = FleetOpts::new(devices, rounds);
+    opts.algorithm = cfg.algorithm;
+    opts.aggregation = cfg.aggregation;
+    opts.staleness_beta = cfg.staleness_beta;
+    opts.edges = cfg.edges;
+    opts.participation = cfg.participation;
+    opts.seed = cfg.seed;
+    opts.n_params = args.flag_parse("n-params", opts.n_params)?;
+    opts.churn = args.flag_parse("churn", opts.churn)?;
+    opts.deadline_ticks = args.flag_parse("deadline-ticks", opts.deadline_ticks)?;
+    opts.delay_base = args.flag_parse("delay-base", opts.delay_base)?;
+    opts.delay_jitter = args.flag_parse("delay-jitter", opts.delay_jitter)?;
+    eprintln!(
+        "fleet: {} devices x {} rounds, algo={} aggregation={:?} edges={} churn={}",
+        opts.devices,
+        opts.rounds,
+        opts.algorithm.name(),
+        opts.aggregation,
+        opts.edges,
+        opts.churn
+    );
+    let t0 = Instant::now();
+    let report = run_fleet(&opts)?;
+    let elapsed = t0.elapsed();
+    println!(
+        "fleet: rounds={} folds={} stale_folds={} dropouts={} churned={} carried={} \
+         ticks={} digest={:#018x} loss={:.4}",
+        report.rounds_completed,
+        report.folds,
+        report.stale_folds,
+        report.dropouts,
+        report.churned,
+        report.carried,
+        report.ticks,
+        report.model_digest,
+        report.final_loss
+    );
+    let rounds_per_sec = report.rounds_completed as f64 / elapsed.as_secs_f64();
+    println!(
+        "fleet: {:.2} rounds/sec ({} devices, {:.2}s wall)",
+        rounds_per_sec,
+        opts.devices,
+        elapsed.as_secs_f64()
+    );
+    let mut json = fedsrn::util::bench::BenchJson::new();
+    json.record_raw(
+        "fleet/rounds_per_sec",
+        report.rounds_completed,
+        elapsed.as_nanos() as f64 / report.rounds_completed.max(1) as f64,
+        None,
+    );
+    if let Some(rss_mb) = peak_rss_mb() {
+        println!("fleet: peak RSS {rss_mb:.1} MB");
+        json.record_raw("fleet/peak_rss_mb", 1, rss_mb, None);
+    }
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::PathBuf::from(dir).join("BENCH_components.json");
+    json.write_file(&path)?;
+    println!("fleet: wrote {} trajectory entries -> {}", json.len(), path.display());
     Ok(())
 }
 

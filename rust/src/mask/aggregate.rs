@@ -65,6 +65,23 @@ impl MaskAggregator {
         self.n_clients += 1;
     }
 
+    /// Fold a cohort-local partial sum produced by an edge aggregator
+    /// (`fl::aggregator`, DESIGN.md §Fleet): elementwise add of the
+    /// per-parameter weighted sums plus the scalar tallies. This is the
+    /// grouping step of eq. 8 — each entry of `acc` is the same f64 sum
+    /// of the same integer-weighted terms the flat fold would have
+    /// accumulated, so for integer |D_i| weights the merged state is
+    /// bit-identical to folding the constituent masks directly.
+    pub fn merge_sums(&mut self, acc: &[f64], weight_sum: f64, n_clients: usize) {
+        assert_eq!(acc.len(), self.acc.len(), "partial-sum length mismatch");
+        assert!(weight_sum > 0.0 && n_clients > 0, "empty partial sum");
+        for (a, &p) in self.acc.iter_mut().zip(acc) {
+            *a += p;
+        }
+        self.weight_sum += weight_sum;
+        self.n_clients += n_clients;
+    }
+
     pub fn n_clients(&self) -> usize {
         self.n_clients
     }
@@ -114,6 +131,19 @@ impl BetaAggregator {
         }
         self.weight_sum += weight;
         self.n_clients += 1;
+    }
+
+    /// Edge-tier partial-sum fold — same contract as
+    /// [`MaskAggregator::merge_sums`]; the Beta posterior only ever sees
+    /// the summed one-counts, so grouping exactness carries over.
+    pub fn merge_sums(&mut self, ones: &[f64], weight_sum: f64, n_clients: usize) {
+        assert_eq!(ones.len(), self.ones.len(), "partial-sum length mismatch");
+        assert!(weight_sum > 0.0 && n_clients > 0, "empty partial sum");
+        for (a, &p) in self.ones.iter_mut().zip(ones) {
+            *a += p;
+        }
+        self.weight_sum += weight_sum;
+        self.n_clients += n_clients;
     }
 
     pub fn n_clients(&self) -> usize {

@@ -1,0 +1,224 @@
+//! Fleet-scale aggregation invariants (DESIGN.md §Fleet): hierarchical
+//! two-tier folds must be **bit-identical** to flat ordered folds for
+//! every strategy family, staleness-discounted folds must be exactly a
+//! weighted fresh fold, and the 100k-device simulator must be a pure
+//! function of its options — same opts, same report, bit for bit.
+//!
+//! The inputs are built grouping-exact on purpose: integer |D_i|
+//! weights, 0/1 mask bits, ±1 signs, dyadic-grid dense values and
+//! dyadic-grid losses, so every f64 accumulator sum is exact and any
+//! fold order or contiguous edge grouping must produce identical bits.
+
+use fedsrn::algos::{EvalModel, FedAvg, MaskMode, MaskStrategy, RoundStats, ServerLogic, SignSgd};
+use fedsrn::compress::{self, DownlinkMode};
+use fedsrn::config::{Aggregation, Algorithm};
+use fedsrn::fl::{
+    run_fleet, staleness_scale, AggKind, AggregateMsg, EdgeAggregator, FleetOpts, RoundComm,
+    RoundPlan, UplinkMsg, UplinkPayload,
+};
+use fedsrn::util::{BitVec, Xoshiro256};
+
+const N: usize = 96;
+
+fn plan(round: usize) -> RoundPlan {
+    RoundPlan {
+        round,
+        seed: 9,
+        lambda: 0.0,
+        lr: 0.1,
+        local_epochs: 1,
+        topk_frac: 0.3,
+        server_lr: 0.05,
+        adam: false,
+    }
+}
+
+/// A value on the dyadic grid k/1024, |v| <= 1: exactly representable,
+/// so f64 sums of weight × value never round.
+fn dyadic(rng: &mut Xoshiro256) -> f32 {
+    (rng.below(2048) as f32 - 1024.0) / 1024.0
+}
+
+fn make(name: &str) -> Box<dyn ServerLogic> {
+    let mut rng = Xoshiro256::new(0xD0);
+    let dense: Vec<f32> = (0..N).map(|_| dyadic(&mut rng)).collect();
+    match name {
+        "fedpm" => Box::new(MaskStrategy::new(N, 5, MaskMode::Stochastic)),
+        "signsgd" => Box::new(SignSgd::new(dense, DownlinkMode::Float32)),
+        _ => Box::new(FedAvg::new(dense, DownlinkMode::Float32)),
+    }
+}
+
+/// One synthetic device uplink with grouping-exact contents.
+fn synth(kind: AggKind, seed: u64, device: u64) -> UplinkMsg {
+    let mut rng = Xoshiro256::new(seed ^ device.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let payload = match kind {
+        AggKind::MaskSum => {
+            let m = BitVec::from_iter_len((0..N).map(|_| rng.next_f64() < 0.4), N);
+            UplinkPayload::CodedMask(compress::encode(&m))
+        }
+        AggKind::SignTally => {
+            let m = BitVec::from_iter_len((0..N).map(|_| rng.next_f64() < 0.5), N);
+            UplinkPayload::SignVector(compress::encode(&m))
+        }
+        AggKind::DenseSum => {
+            UplinkPayload::DenseDelta((0..N).map(|_| dyadic(&mut rng)).collect())
+        }
+    };
+    UplinkMsg {
+        weight: (1 + rng.below(16)) as f64,
+        // dyadic losses keep the f64 loss sum exact under any grouping,
+        // so whole-RoundStats comparisons can be bit-strict
+        train_loss: rng.below(256) as f32 / 256.0,
+        trained_round: 1,
+        payload,
+    }
+}
+
+fn stats_bits(s: &RoundStats) -> [u64; 3] {
+    [s.train_loss.to_bits(), s.mean_theta.to_bits(), s.mask_density.to_bits()]
+}
+
+fn eval_bits(server: &dyn ServerLogic, round: usize) -> Vec<u32> {
+    match server.eval_model(round) {
+        EvalModel::Masked(w) | EvalModel::Dense(w) => w.iter().map(|v| v.to_bits()).collect(),
+    }
+}
+
+/// Fold `ups` directly into the server in the given order.
+fn run_flat(
+    mut server: Box<dyn ServerLogic>,
+    ups: &[UplinkMsg],
+    order: &[usize],
+) -> ([u64; 3], Vec<u32>, RoundComm) {
+    let p = plan(1);
+    server.begin_round(&p).unwrap();
+    let mut comm = RoundComm::new(N);
+    for &i in order {
+        server.fold_uplink(&ups[i], &mut comm).unwrap();
+    }
+    let stats = server.end_round(&p).unwrap();
+    (stats_bits(&stats), eval_bits(server.as_ref(), 1), comm)
+}
+
+/// Fold `ups` through a tier of `n_edges` edge aggregators (contiguous
+/// slices, like the engine and the session route them), shipping each
+/// edge's merged envelope upstream through a full serialize/deserialize
+/// round trip.
+fn run_edged(
+    mut server: Box<dyn ServerLogic>,
+    ups: &[UplinkMsg],
+    n_edges: usize,
+) -> ([u64; 3], Vec<u32>, RoundComm) {
+    let p = plan(1);
+    server.begin_round(&p).unwrap();
+    let mut comm = RoundComm::new(N);
+    let m = ups.len();
+    let mut edges: Vec<EdgeAggregator> =
+        (0..n_edges).map(|_| EdgeAggregator::new(server.agg_kind(), N)).collect();
+    for (pos, up) in ups.iter().enumerate() {
+        edges[pos * n_edges / m].fold(up, 1, 1.0).unwrap();
+    }
+    for e in &edges {
+        if e.reporters() == 0 {
+            continue;
+        }
+        let agg = AggregateMsg::from_bytes(&e.finish().to_bytes()).unwrap();
+        server.fold_aggregate(&agg, &mut comm).unwrap();
+    }
+    let stats = server.end_round(&p).unwrap();
+    (stats_bits(&stats), eval_bits(server.as_ref(), 1), comm)
+}
+
+#[test]
+fn two_tier_folds_bit_identical_to_flat_for_all_strategies() {
+    for (name, kind) in [
+        ("fedpm", AggKind::MaskSum),
+        ("signsgd", AggKind::SignTally),
+        ("fedavg", AggKind::DenseSum),
+    ] {
+        let m = 23;
+        let ups: Vec<UplinkMsg> = (0..m).map(|d| synth(kind, 0xFEE7, d as u64)).collect();
+        let in_order: Vec<usize> = (0..m).collect();
+        let (flat_stats, flat_eval, flat_comm) = run_flat(make(name), &ups, &in_order);
+        // exact accumulators: any fold ORDER gives identical sums…
+        let mut shuffled: Vec<usize> = (0..m).collect();
+        Xoshiro256::new(3).shuffle(&mut shuffled);
+        assert_ne!(shuffled, in_order, "shuffle must actually permute");
+        let (p_stats, p_eval, _) = run_flat(make(name), &ups, &shuffled);
+        assert_eq!(flat_stats, p_stats, "{name}: permuted fold order changed stats");
+        assert_eq!(flat_eval, p_eval, "{name}: permuted fold order changed the model");
+        // …and any contiguous GROUPING through an edge tier is
+        // bit-identical too, envelope round trip included
+        for n_edges in [1usize, 3, 7] {
+            let (e_stats, e_eval, e_comm) = run_edged(make(name), &ups, n_edges);
+            assert_eq!(flat_stats, e_stats, "{name}/{n_edges} edges: stats");
+            assert_eq!(flat_eval, e_eval, "{name}/{n_edges} edges: model");
+            assert_eq!(flat_comm.clients, e_comm.clients, "{name}/{n_edges} edges: clients");
+            assert_eq!(flat_comm.ul_bits, e_comm.ul_bits, "{name}/{n_edges} edges: UL bits");
+        }
+    }
+}
+
+#[test]
+fn stale_fold_is_exactly_a_weighted_fresh_fold() {
+    // the contract values
+    assert_eq!(staleness_scale(0, 1.0).to_bits(), 1.0f64.to_bits());
+    assert!((staleness_scale(1, 1.0) - 0.5).abs() < 1e-15);
+    assert!((staleness_scale(3, 1.0) - 0.25).abs() < 1e-15);
+    assert!((staleness_scale(4, 0.5) - 1.0 / 5f64.sqrt()).abs() < 1e-15);
+    assert_eq!(staleness_scale(9, 0.0).to_bits(), 1.0f64.to_bits());
+    // end to end: gap-1 uplinks under beta=1 fold bit-identically to
+    // fresh uplinks carrying the discounted weight
+    let ups: Vec<UplinkMsg> = (0..6).map(|d| synth(AggKind::MaskSum, 0xA9, d)).collect();
+    let p2 = plan(2);
+    let mut stale_srv = make("fedpm");
+    stale_srv.begin_round(&p2).unwrap();
+    let mut comm = RoundComm::new(N);
+    for up in &ups {
+        // trained_round 1 landing in round 2: gap 1
+        stale_srv.fold_uplink_stale(up, &p2, 1.0, &mut comm).unwrap();
+    }
+    let s_stats = stats_bits(&stale_srv.end_round(&p2).unwrap());
+    let mut fresh_srv = make("fedpm");
+    fresh_srv.begin_round(&p2).unwrap();
+    let mut comm = RoundComm::new(N);
+    for up in &ups {
+        let mut fresh = up.clone();
+        fresh.trained_round = 2;
+        fresh.weight *= staleness_scale(1, 1.0);
+        fresh_srv.fold_uplink(&fresh, &mut comm).unwrap();
+    }
+    let f_stats = stats_bits(&fresh_srv.end_round(&p2).unwrap());
+    assert_eq!(s_stats, f_stats);
+    assert_eq!(eval_bits(stale_srv.as_ref(), 2), eval_bits(fresh_srv.as_ref(), 2));
+}
+
+#[test]
+fn fleet_simulator_is_deterministic_and_edge_invariant() {
+    for algo in [Algorithm::FedPMReg, Algorithm::SignSGD, Algorithm::FedAvg] {
+        for aggregation in [Aggregation::Sync, Aggregation::Buffered { k: 256 }] {
+            let mut opts = FleetOpts::new(2000, 3);
+            opts.algorithm = algo;
+            opts.aggregation = aggregation;
+            opts.churn = 0.02;
+            let label = format!("{algo:?}/{aggregation:?}");
+            let a = run_fleet(&opts).unwrap();
+            let b = run_fleet(&opts).unwrap();
+            assert_eq!(a, b, "{label}: same opts must replay bit-for-bit");
+            assert_eq!(a.rounds_completed, 3, "{label}");
+            assert!(a.folds > 0, "{label}");
+            // an 8-edge tier regroups the same exact sums: the model
+            // digest and fold counts cannot move (loss is a regrouped
+            // f64 sum of arbitrary f32s — ulp-close, not bit-equal)
+            let mut edged = opts.clone();
+            edged.edges = 8;
+            let e = run_fleet(&edged).unwrap();
+            assert_eq!(a.model_digest, e.model_digest, "{label}: edge tier moved the model");
+            assert_eq!(a.folds, e.folds, "{label}");
+            assert_eq!(a.stale_folds, e.stale_folds, "{label}");
+            assert_eq!(a.dropouts, e.dropouts, "{label}");
+            assert!((a.final_loss - e.final_loss).abs() < 1e-9, "{label}");
+        }
+    }
+}

@@ -160,6 +160,8 @@ fn arb_uplink(rng: &mut Xoshiro256) -> UplinkMsg {
     UplinkMsg {
         weight: 1.0 + rng.below(1000) as f64,
         train_loss: rng.next_f32(),
+        // mix v1-style fresh envelopes with round-tagged v2 ones
+        trained_round: if rng.below(4) == 0 { UplinkMsg::FRESH } else { rng.below(1 << 20) },
         payload,
     }
 }
@@ -194,6 +196,7 @@ fn prop_uplink_envelope_roundtrip_bit_identical() {
         let back = UplinkMsg::from_bytes(&bytes).unwrap();
         assert_eq!(back.weight.to_bits(), msg.weight.to_bits(), "case {case}");
         assert_eq!(back.train_loss.to_bits(), msg.train_loss.to_bits(), "case {case}");
+        assert_eq!(back.trained_round, msg.trained_round, "case {case}");
         assert_eq!(back.to_bytes(), bytes, "case {case}: reserialization must be stable");
     });
 }

@@ -14,8 +14,8 @@ use fedsrn::compress::DownlinkMode;
 use fedsrn::config::{Algorithm, ExperimentConfig, Partition};
 use fedsrn::coordinator::{Experiment, RunSummary};
 use fedsrn::fl::{
-    run_device, run_fingerprint, ChaosSpec, DeviceOpts, DeviceReport, MetricsSink,
-    Participation, RoundRecord, Session, SessionConfig, SessionStats,
+    run_device, run_fingerprint, ChaosSpec, DelayProfile, DeviceOpts, DeviceReport,
+    MetricsSink, Participation, RoundRecord, Session, SessionConfig, SessionStats,
 };
 
 fn config(algo: Algorithm, downlink: DownlinkMode) -> ExperimentConfig {
@@ -66,6 +66,8 @@ fn run_networked(
                     device_id: id,
                     connect_timeout: Duration::from_secs(30),
                     chaos: None,
+                    delay: None,
+                    deadline_ticks: u64::MAX,
                 };
                 run_device(&cfg, &opts)
             })
@@ -303,6 +305,8 @@ fn chaos_schedules_end_bit_identical_or_typed() {
                         device_id: id,
                         connect_timeout: Duration::from_secs(2),
                         chaos: Some(spec),
+                        delay: None,
+                        deadline_ticks: u64::MAX,
                     };
                     run_device(&cfg, &opts)
                 })
@@ -360,6 +364,65 @@ fn chaos_schedules_end_bit_identical_or_typed() {
 }
 
 #[test]
+fn delay_profile_self_straggler_is_deterministic() {
+    // The deadline→dropout path, exercised without wall-clock races: a
+    // device whose virtual compute delay always exceeds the tick
+    // deadline self-reports `Dropped` every round — no `thread::sleep`,
+    // no server-side straggler timer involved — and two runs of the
+    // same federation are bit-identical.
+    let cfg = config(Algorithm::FedPMReg, DownlinkMode::Float32);
+    let run = || {
+        let mut exp = Experiment::build(cfg.clone()).unwrap();
+        let fingerprint = run_fingerprint(&exp.cfg, &exp.runtime().manifest);
+        let scfg =
+            SessionConfig::from_experiment(&exp.cfg, fingerprint, Duration::from_secs(30), 0);
+        let mut session = Session::bind("127.0.0.1:0", scfg).unwrap();
+        let addr = session.local_addr().unwrap().to_string();
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|id| {
+                let cfg = cfg.clone();
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    let opts = DeviceOpts {
+                        addr,
+                        device_id: id,
+                        connect_timeout: Duration::from_secs(30),
+                        chaos: None,
+                        // device 3 computes slower than the virtual
+                        // deadline every round; everyone else is fast
+                        delay: (id == 3).then_some(DelayProfile { base: 500, jitter: 100 }),
+                        deadline_ticks: 100,
+                    };
+                    run_device(&cfg, &opts)
+                })
+            })
+            .collect();
+        session.wait_for_fleet(Duration::from_secs(30)).unwrap();
+        let mut sink = MetricsSink::new("", 10_000).unwrap();
+        let summary = exp.run_served(&mut session, &mut sink).unwrap();
+        session.finish().unwrap();
+        let reports: Vec<DeviceReport> =
+            handles.into_iter().map(|h| h.join().unwrap().unwrap()).collect();
+        (summary, session.stats, reports)
+    };
+    let (a_sum, a_stats, a_reports) = run();
+    let (b_sum, b_stats, b_reports) = run();
+    assert_eq!(a_stats.stragglers, 0, "no wall-clock deadline fired");
+    assert_eq!(b_stats.stragglers, 0);
+    assert_eq!(a_reports[3].trained, cfg.rounds, "the slow device still trains");
+    assert_eq!(a_reports[3].dropped, cfg.rounds, "…but self-straggles every round");
+    for rep in &a_reports[..3] {
+        assert_eq!(rep.dropped, 0, "fast devices never self-straggle");
+    }
+    assert_eq!(
+        a_sum.final_accuracy.to_bits(),
+        b_sum.final_accuracy.to_bits(),
+        "self-straggling is deterministic"
+    );
+    assert_eq!(a_reports[3].dropped, b_reports[3].dropped);
+}
+
+#[test]
 fn mismatched_device_is_rejected_and_fleet_times_out() {
     let cfg = config(Algorithm::FedPMReg, DownlinkMode::Float32);
     let exp = Experiment::build(cfg.clone()).unwrap();
@@ -378,6 +441,8 @@ fn mismatched_device_is_rejected_and_fleet_times_out() {
             device_id: 0,
             connect_timeout: Duration::from_secs(10),
             chaos: None,
+            delay: None,
+            deadline_ticks: u64::MAX,
         };
         run_device(&other, &opts)
     });
