@@ -240,6 +240,58 @@ fn main() {
         );
     }
 
+    // --- packed popcount tier vs blocked f32 forward (§Packed-tier) -------
+    // Masked inference at p = 0.5. The blocked side materializes
+    // w_eff = w * m outside the timed region (as the f32 eval path
+    // does per call) and runs the float graph; the packed side
+    // consumes the sign/keep bitplanes directly. Target: >= 4x on the
+    // MLP dense forward (ISSUE 9); CI's kernel wall gates the ratio.
+    for (model, rows, seed) in [("mlp_mnist", 64usize, 31u64), ("conv4", 16, 32), ("conv6", 16, 33)]
+    {
+        let packed_name = format!("kernels/packed_vs_blocked/{model}");
+        let blocked_name = format!("kernels/forward_blocked/{model}");
+        if !(should_run(&filter, &packed_name) || should_run(&filter, &blocked_name)) {
+            continue;
+        }
+        use fedsrn::runtime::graph::{Plan, Workspace};
+        use fedsrn::runtime::packed::PackedModel;
+        use fedsrn::runtime::Manifest;
+        let man = Manifest::builtin(model).expect("builtin model");
+        let plan = Plan::build(&man).expect("plan");
+        let weights = man.load_weights().expect("weights");
+        let mut rng = Xoshiro256::new(seed);
+        let mask: Vec<f32> =
+            (0..man.n_params).map(|_| if rng.next_f64() < 0.5 { 1.0 } else { 0.0 }).collect();
+        let w_eff: Vec<f32> = weights.iter().zip(&mask).map(|(&w, &m)| w * m).collect();
+        let pm = PackedModel::try_build(&plan, &weights, &mask).expect("builtins pack");
+        let x: Vec<f32> =
+            (0..rows * man.input_dim).map(|_| rng.next_normal() as f32).collect();
+        let mut ws_p = Workspace::for_eval(&plan, rows);
+        let mut ws_b = Workspace::for_eval(&plan, rows);
+        let pr = suite.pair(
+            &packed_name,
+            &blocked_name,
+            1.0,
+            100,
+            || {
+                plan.forward_packed(&pm, &x, rows, &mut ws_p);
+                std::hint::black_box(&ws_p.acts);
+            },
+            || {
+                plan.forward(&w_eff, &x, rows, &mut ws_b);
+                std::hint::black_box(&ws_b.acts);
+            },
+        );
+        let ar = BenchResult { name: packed_name, timing: pr.a };
+        ar.print(&format!("{:>7.1} rows/s", rows as f64 / pr.a.mean_s));
+        let br = BenchResult { name: blocked_name, timing: pr.b };
+        br.print(&format!("{:>7.1} rows/s", rows as f64 / pr.b.mean_s));
+        println!(
+            "  kernels/{model}: packed forward is {:.2}x the blocked f32 path",
+            pr.speedup_a_over_b()
+        );
+    }
+
     // --- model-program call path (tiny model: overhead-dominated) ----------
     if let Ok(rt) = ModelRuntime::load(std::path::Path::new("artifacts"), "mlp_tiny") {
         let be = rt.backend_name();

@@ -17,7 +17,7 @@ mod lexer;
 mod rules;
 
 pub use lexer::{sanitize, Comment, Sanitized};
-pub use rules::{check_file, parse_directives, Directives, Finding, UNSAFE_BUDGET_FILE};
+pub use rules::{check_file, parse_directives, Directives, Finding, UNSAFE_BUDGET_FILES};
 
 use std::fs;
 use std::path::{Path, PathBuf};

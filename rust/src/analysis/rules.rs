@@ -29,8 +29,10 @@
 //!   `vec![]`, `Vec::`/`String::`/`Box::` constructors, `.clone()`,
 //!   `.to_vec()`, `.to_owned()`, `.collect()` are forbidden.
 //! * **unsafe-budget** (always on, no annotation) — `unsafe` may only
-//!   appear in `runtime/pjrt.rs`, and every occurrence there must have
-//!   a `// SAFETY:` comment within the 8 preceding lines.
+//!   appear in the budgeted files (`runtime/pjrt.rs` for the PJRT FFI
+//!   boundary, `runtime/packed.rs` for the `std::arch` SIMD
+//!   intrinsics), and every occurrence there must have a `// SAFETY:`
+//!   comment within the 8 preceding lines.
 
 use super::lexer::{Comment, Sanitized};
 
@@ -227,8 +229,9 @@ fn is_const_name(text: &str) -> bool {
         && text.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
 }
 
-/// The single file `unsafe` is budgeted to.
-pub const UNSAFE_BUDGET_FILE: &str = "runtime/pjrt.rs";
+/// The files `unsafe` is budgeted to: the PJRT FFI boundary and the
+/// `std::arch` SIMD intrinsics of the packed compute tier.
+pub const UNSAFE_BUDGET_FILES: [&str; 2] = ["runtime/pjrt.rs", "runtime/packed.rs"];
 
 fn has_safety_comment(comments: &[Comment], line: usize) -> bool {
     comments
@@ -260,11 +263,11 @@ pub fn check_file(file: &str, san: &Sanitized) -> (Directives, Vec<Finding>) {
 
         // unsafe-budget: always on, waivers do not apply.
         if t.word && t.text == "unsafe" {
-            if file != UNSAFE_BUDGET_FILE {
+            if !UNSAFE_BUDGET_FILES.contains(&file) {
                 out.push(finding(
                     line,
                     "unsafe-budget",
-                    format!("`unsafe` outside the budgeted {UNSAFE_BUDGET_FILE}"),
+                    format!("`unsafe` outside the budgeted {}", UNSAFE_BUDGET_FILES.join(" / ")),
                 ));
             } else if !has_safety_comment(&san.comments, line) {
                 out.push(finding(
@@ -500,11 +503,13 @@ mod tests {
 
     #[test]
     fn unsafe_needs_a_safety_comment_even_in_budget() {
-        let bare = "fn f() { unsafe { work() } }\n";
-        assert_eq!(rules(&run(UNSAFE_BUDGET_FILE, bare)), ["unsafe-budget"]);
-        let documented = "// SAFETY: work() has no preconditions here.\n\
-                          fn f() { unsafe { work() } }\n";
-        assert!(run(UNSAFE_BUDGET_FILE, documented).is_empty());
+        for file in UNSAFE_BUDGET_FILES {
+            let bare = "fn f() { unsafe { work() } }\n";
+            assert_eq!(rules(&run(file, bare)), ["unsafe-budget"], "{file}");
+            let documented = "// SAFETY: work() has no preconditions here.\n\
+                              fn f() { unsafe { work() } }\n";
+            assert!(run(file, documented).is_empty(), "{file}");
+        }
     }
 
     #[test]

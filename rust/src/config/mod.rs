@@ -18,6 +18,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::compress::DownlinkMode;
+use crate::runtime::Compute;
 
 /// Which algorithm drives the federation (paper + baselines).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -145,6 +146,13 @@ pub struct ExperimentConfig {
     /// quantized sparse deltas with residual feedback (`qdelta<bits>`,
     /// DESIGN.md §Downlink). Clients train on exactly what this ships.
     pub downlink: DownlinkMode,
+    /// Masked-eval forward implementation (`compute = blocked |
+    /// packed`). `packed` runs evaluation through the bit-packed
+    /// sign-select tier (falling back to blocked whenever the mask /
+    /// weights pair is not packable); training always runs the blocked
+    /// f32 path, so this is an eval-throughput knob, not a semantics
+    /// knob (results agree within f32 reassociation tolerance).
+    pub compute: Compute,
     /// Worker threads for the parallel round engine (0 = all cores,
     /// 1 = sequential reference path). Results are bit-identical at any
     /// value — this is a throughput knob, not a semantics knob.
@@ -182,6 +190,7 @@ impl Default for ExperimentConfig {
             staleness_beta: 1.0,
             edges: 0,
             downlink: DownlinkMode::Float32,
+            compute: Compute::Blocked,
             threads: 0,
             seed: 2023,
             artifacts_dir: "artifacts".into(),
@@ -270,6 +279,7 @@ impl ExperimentConfig {
             "staleness_beta" => self.staleness_beta = val.parse()?,
             "edges" => self.edges = val.parse()?,
             "downlink" => self.downlink = DownlinkMode::parse(val)?,
+            "compute" => self.compute = Compute::parse(val)?,
             "optimizer" => {
                 self.adam = match val {
                     "adam" => true,
@@ -466,6 +476,18 @@ mod tests {
         cfg.validate().unwrap();
         cfg.staleness_beta = -1.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn compute_key_parses_and_defaults_to_blocked() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.compute, Compute::Blocked);
+        cfg.apply("compute", "packed").unwrap();
+        assert_eq!(cfg.compute, Compute::Packed);
+        cfg.validate().unwrap();
+        assert!(cfg.apply("compute", "fast").is_err());
+        let cfg = ExperimentConfig::from_toml_str("[experiment]\ncompute = \"packed\"\n").unwrap();
+        assert_eq!(cfg.compute, Compute::Packed);
     }
 
     #[test]

@@ -64,8 +64,9 @@ impl Experiment {
     /// Build everything from a validated config.
     pub fn build(cfg: ExperimentConfig) -> Result<Self> {
         cfg.validate()?;
-        let rt = ModelRuntime::load(Path::new(&cfg.artifacts_dir), &cfg.model)
+        let mut rt = ModelRuntime::load(Path::new(&cfg.artifacts_dir), &cfg.model)
             .with_context(|| format!("loading model '{}'", cfg.model))?;
+        rt.set_compute(cfg.compute);
 
         // --- data: real if present, synthetic otherwise ----------------
         let (train, test) = Self::load_data(&cfg, rt.manifest.input_dim, rt.manifest.n_classes)?;

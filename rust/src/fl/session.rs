@@ -1004,8 +1004,9 @@ pub fn run_device(cfg: &ExperimentConfig, opts: &DeviceOpts) -> Result<DeviceRep
         opts.device_id,
         cfg.clients
     );
-    let rt = ModelRuntime::load(Path::new(&cfg.artifacts_dir), &cfg.model)
+    let mut rt = ModelRuntime::load(Path::new(&cfg.artifacts_dir), &cfg.model)
         .with_context(|| format!("loading model '{}'", cfg.model))?;
+    rt.set_compute(cfg.compute);
     let (train, _test) =
         load_experiment_data(cfg, rt.manifest.input_dim, rt.manifest.n_classes)?;
     let shard = partition_fleet(cfg, &train)

@@ -29,9 +29,10 @@
 //! The contracts above are enforced by tooling, not convention: the
 //! [`analysis`] module implements `fedsrn audit`, a zero-dependency
 //! invariant linter run as a required CI gate (DESIGN.md
-//! §Static-analysis). `unsafe` is budgeted to `runtime/pjrt.rs` alone
-//! (denied crate-wide here, allowed on that module with per-impl
-//! `SAFETY:` justifications), and clippy's `disallowed_methods` /
+//! §Static-analysis). `unsafe` is budgeted to `runtime/pjrt.rs` (FFI)
+//! and `runtime/packed.rs` (`std::arch` SIMD) — denied crate-wide
+//! here, allowed on those modules with per-impl `SAFETY:`
+//! justifications — and clippy's `disallowed_methods` /
 //! `disallowed_types` (clippy.toml) police the determinism contract
 //! from the compiler's side.
 

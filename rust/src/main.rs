@@ -508,11 +508,12 @@ fn cmd_figure(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    args.ensure_known_flags(&["checkpoint", "dataset", "samples", "artifacts", "seed"])?;
+    args.ensure_known_flags(&["checkpoint", "dataset", "samples", "artifacts", "seed", "compute"])?;
     let ck_path = args.flag("checkpoint").context("--checkpoint FILE required")?;
     let ck = Checkpoint::load(Path::new(ck_path))?;
     let dir = args.flag_or("artifacts", "artifacts");
-    let rt = ModelRuntime::load(Path::new(&dir), &ck.model)?;
+    let mut rt = ModelRuntime::load(Path::new(&dir), &ck.model)?;
+    rt.set_compute(fedsrn::runtime::Compute::parse(&args.flag_or("compute", "blocked"))?);
     let dataset = args.flag_or("dataset", "tiny");
     let samples: usize = args.flag_parse("samples", 512usize)?;
     // Pass the experiment's seed to reproduce its exact test draw

@@ -30,6 +30,7 @@ use super::kernels::{
     col2im_add, gemm_nn, gemm_nt, gemm_tn, im2col, maxpool_bwd, maxpool_fwd, relu_bwd,
     relu_fwd, ConvGeom,
 };
+use super::packed::{packed_gemm, PackedModel};
 
 /// Activation geometry between nodes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -295,6 +296,68 @@ impl Plan {
                         relu_fwd(&mut acts[node.buf][..rows * out_elems]);
                     } else {
                         // leading relu: input buffer is the caller's x
+                        let out = &mut acts[node.buf][..rows * out_elems];
+                        out.copy_from_slice(&x[..rows * out_elems]);
+                        relu_fwd(out);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Packed-tier forward: identical graph walk to [`Plan::forward`],
+    /// but dense/conv matmuls run as sign-select popcount-style
+    /// accumulation over the bitplanes in `pm` instead of f32 GEMM over
+    /// effective weights. Structural nodes (pool/flatten/relu) and the
+    /// im2col unfold are shared with the reference path. Results are
+    /// tolerance-equivalent (not bitwise) to the blocked path: the
+    /// magnitude scale is applied once per output element instead of
+    /// per product. Eval-only — the STE gradient stays on the f32 path.
+    pub fn forward_packed(&self, pm: &PackedModel, x: &[f32], rows: usize, ws: &mut Workspace) {
+        debug_assert!(rows <= ws.rows, "workspace sized for {} rows", ws.rows);
+        let acts = &mut ws.acts;
+        let col = &mut ws.col;
+        let col_node = &mut ws.col_node;
+        let pool_idx = &mut ws.pool_idx;
+        for (ni, node) in self.nodes.iter().enumerate() {
+            let out_elems = node.out_shape.elems();
+            match node.spec {
+                LayerSpec::Dense { k, n } => {
+                    let blk = pm.block(ni).expect("packed model built from this plan");
+                    let (a, out) = in_out(acts, node.in_buf, node.buf, x);
+                    packed_gemm(&a[..rows * k], blk, &mut out[..rows * n], rows);
+                }
+                LayerSpec::Conv2d { .. } => {
+                    let blk = pm.block(ni).expect("packed model built from this plan");
+                    let g = node.geom.expect("conv node carries geometry");
+                    let (a, out) = in_out(acts, node.in_buf, node.buf, x);
+                    let m = g.col_rows(rows);
+                    let cw = &mut col[..m * g.patch()];
+                    im2col(&a[..rows * g.h * g.w * g.cin], cw, g, rows);
+                    *col_node = Some((ni, rows));
+                    packed_gemm(cw, blk, &mut out[..m * g.cout], m);
+                }
+                LayerSpec::MaxPool { size } => {
+                    let Shape::Spatial { h, w: iw, c } = node.in_shape else {
+                        unreachable!("validated at plan build")
+                    };
+                    let (a, out) = in_out(acts, node.in_buf, node.buf, x);
+                    maxpool_fwd(
+                        &a[..rows * h * iw * c],
+                        &mut out[..rows * out_elems],
+                        &mut pool_idx[ni][..rows * out_elems],
+                        h,
+                        iw,
+                        c,
+                        size,
+                        rows,
+                    );
+                }
+                LayerSpec::Flatten => {}
+                LayerSpec::Relu => {
+                    if node.in_buf == node.buf {
+                        relu_fwd(&mut acts[node.buf][..rows * out_elems]);
+                    } else {
                         let out = &mut acts[node.buf][..rows * out_elems];
                         out.copy_from_slice(&x[..rows * out_elems]);
                         relu_fwd(out);

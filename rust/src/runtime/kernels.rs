@@ -20,9 +20,21 @@
 //! The blocking strategy is deliberately simple: process `MR = 4` rows
 //! of the left operand at a time so each row of the right operand is
 //! streamed from cache once per 4 output rows instead of once per row.
-//! On post-ReLU activations the `a == 0` skip prunes whole saxpy rows.
+//! On post-ReLU activations the `a == 0` skip prunes whole saxpy rows
+//! (the `!=` compares values, so `-0.0` rows are skipped too — either
+//! sign of zero adds exactly `+0.0` everywhere, keeping the skip
+//! bitwise-neutral).
+//!
+//! The saxpy / 4-column-dot inner loops dispatch through
+//! [`super::packed::SimdTier`] (runtime-detected SSE2/AVX2 on x86-64,
+//! scalar elsewhere). The SIMD forms are lanewise multiply-then-add
+//! with no FMA contraction and per-lane-independent accumulator
+//! chains, so every tier is bit-identical to the scalar reference
+//! loops — the bit-compatibility promise above survives dispatch.
 //!
 //! audit: deterministic
+
+use super::packed::SimdTier;
 
 // audit:no-alloc-begin
 /// Left-operand row block: B rows reused per pass.
@@ -35,23 +47,58 @@ const MR: usize = 4;
 /// post-ReLU activations make this branch worth its cost.
 pub fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+    let tier = SimdTier::detect();
     let mut i0 = 0;
-    while i0 < m {
-        let mb = MR.min(m - i0);
-        for kk in 0..k {
-            let b_row = &b[kk * n..kk * n + n];
-            for r in 0..mb {
-                let av = a[(i0 + r) * k + kk];
-                if av != 0.0 {
-                    let c_row = &mut c[(i0 + r) * n..(i0 + r) * n + n];
-                    for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                        *cv += av * bv;
-                    }
-                }
+    while i0 + MR <= m {
+        gemm_nn_block(tier, a, b, c, i0, MR, k, n);
+        i0 += MR;
+    }
+    if i0 < m {
+        gemm_nn_tail(tier, a, b, c, i0, m - i0, k, n);
+    }
+}
+
+/// One MR-row block of [`gemm_nn`]; shared by the hot loop and the tail.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_block(
+    tier: SimdTier,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    i0: usize,
+    mb: usize,
+    k: usize,
+    n: usize,
+) {
+    for kk in 0..k {
+        let b_row = &b[kk * n..kk * n + n];
+        for r in 0..mb {
+            let av = a[(i0 + r) * k + kk];
+            // value compare: skips -0.0 as well; either zero contributes
+            // exactly +0.0 per lane, so skipping is bitwise-neutral.
+            if av != 0.0 {
+                let c_row = &mut c[(i0 + r) * n..(i0 + r) * n + n];
+                tier.axpy(av, b_row, c_row);
             }
         }
-        i0 += mb;
     }
+}
+
+/// Remainder rows (`m % MR`), kept out of the hot path so the full-block
+/// loop above stays branch-lean for large batches.
+#[cold]
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_tail(
+    tier: SimdTier,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    i0: usize,
+    mb: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm_nn_block(tier, a, b, c, i0, mb, k, n);
 }
 
 /// C[k x n] += Aᵀ · G, with A[m x k], G[m x n] (the dW = aᵀg update).
@@ -59,6 +106,7 @@ pub fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
 /// Per-element accumulation runs over rows `r` ascending.
 pub fn gemm_tn(a: &[f32], g: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert!(a.len() >= m * k && g.len() >= m * n && c.len() >= k * n);
+    let tier = SimdTier::detect();
     let mut r0 = 0;
     while r0 < m {
         let mb = MR.min(m - r0);
@@ -68,9 +116,7 @@ pub fn gemm_tn(a: &[f32], g: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
                 if av != 0.0 {
                     let g_row = &g[r * n..r * n + n];
                     let c_row = &mut c[kk * n..kk * n + n];
-                    for (cv, &gv) in c_row.iter_mut().zip(g_row) {
-                        *cv += av * gv;
-                    }
+                    tier.axpy(av, g_row, c_row);
                 }
             }
         }
@@ -84,21 +130,33 @@ pub fn gemm_tn(a: &[f32], g: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
 /// columns share one pass over the G row.
 pub fn gemm_nt(g: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
     debug_assert!(g.len() >= m * n && b.len() >= k * n && c.len() >= m * k);
+    let tier = SimdTier::detect();
     for i in 0..m {
         let g_row = &g[i * n..i * n + n];
         let c_row = &mut c[i * k..i * k + k];
         let mut k0 = 0;
-        while k0 < k {
-            let kb = MR.min(k - k0);
-            for (dk, cv) in c_row[k0..k0 + kb].iter_mut().enumerate() {
-                let b_row = &b[(k0 + dk) * n..(k0 + dk) * n + n];
-                let mut s = 0.0f32;
-                for (&gv, &bv) in g_row.iter().zip(b_row) {
-                    s += gv * bv;
-                }
-                *cv += s;
+        while k0 + MR <= k {
+            // four output columns share one pass over the G row; each
+            // lane keeps an independent ascending chain (bit-exact).
+            let s = tier.dot4(
+                g_row,
+                &b[k0 * n..k0 * n + n],
+                &b[(k0 + 1) * n..(k0 + 1) * n + n],
+                &b[(k0 + 2) * n..(k0 + 2) * n + n],
+                &b[(k0 + 3) * n..(k0 + 3) * n + n],
+            );
+            for (cv, sv) in c_row[k0..k0 + MR].iter_mut().zip(s) {
+                *cv += sv;
             }
-            k0 += kb;
+            k0 += MR;
+        }
+        for (dk, cv) in c_row[k0..].iter_mut().enumerate() {
+            let b_row = &b[(k0 + dk) * n..(k0 + dk) * n + n];
+            let mut s = 0.0f32;
+            for (&gv, &bv) in g_row.iter().zip(b_row) {
+                s += gv * bv;
+            }
+            *cv += s;
         }
     }
 }
@@ -132,6 +190,11 @@ impl ConvGeom {
 /// Unfold NHWC input `[rows, h, w, cin]` into `col[rows*oh*ow, k*k*cin]`
 /// so the convolution becomes one `gemm_nn` against the
 /// `[k*k*cin, cout]` weight block. Out-of-bounds taps are zeroed.
+///
+/// When a whole kernel row lies in bounds, its `k` taps are contiguous
+/// in both the NHWC source and the patch row (stride `cin` each), so
+/// the row moves as one `k*cin`-float `copy_from_slice` instead of `k`
+/// per-tap copies — the common case everywhere but the padded border.
 pub fn im2col(x: &[f32], col: &mut [f32], g: ConvGeom, rows: usize) {
     let (k, cin) = (g.kernel, g.cin);
     let patch = g.patch();
@@ -141,6 +204,13 @@ pub fn im2col(x: &[f32], col: &mut [f32], g: ConvGeom, rows: usize) {
                 let row = ((b * g.oh + oy) * g.ow + ox) * patch;
                 for ky in 0..k {
                     let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    let ix0 = (ox * g.stride) as isize - g.pad as isize;
+                    if iy >= 0 && (iy as usize) < g.h && ix0 >= 0 && (ix0 as usize) + k <= g.w {
+                        let src = ((b * g.h + iy as usize) * g.w + ix0 as usize) * cin;
+                        let dst = &mut col[row + ky * k * cin..][..k * cin];
+                        dst.copy_from_slice(&x[src..src + k * cin]);
+                        continue;
+                    }
                     for kx in 0..k {
                         let ix = (ox * g.stride + kx) as isize - g.pad as isize;
                         let dst = &mut col[row + (ky * k + kx) * cin..][..cin];
@@ -334,7 +404,7 @@ mod tests {
     #[test]
     fn gemm_nn_matches_naive_bitwise() {
         // odd sizes exercise the partial row-block tail
-        for (m, k, n) in [(1, 1, 1), (5, 7, 3), (8, 16, 10), (13, 9, 17)] {
+        for (m, k, n) in [(1, 1, 1), (2, 4, 6), (3, 5, 8), (5, 7, 3), (8, 16, 10), (13, 9, 17)] {
             let a = rand_vec(m * k, 1);
             let b = rand_vec(k * n, 2);
             let mut c0 = vec![0.0f32; m * n];
@@ -347,6 +417,32 @@ mod tests {
                 "m={m} k={k} n={n}: blocked gemm must keep accumulation order"
             );
         }
+    }
+
+    #[test]
+    fn gemm_nn_zero_skip_handles_negative_zero() {
+        // the `av != 0.0` skip fires for -0.0 too; both zeros contribute
+        // exactly +0.0 per output lane (the accumulator starts at +0.0
+        // and exact cancellation also yields +0.0, so no lane is ever
+        // -0.0), making the skip bitwise-identical to the non-skipping
+        // naive loop.
+        let (m, k, n) = (5, 6, 7);
+        let mut a = rand_vec(m * k, 10);
+        for (i, v) in a.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = if i % 2 == 0 { 0.0 } else { -0.0 };
+            }
+        }
+        assert!(a.iter().any(|v| v == &0.0 && v.is_sign_negative()));
+        let b = rand_vec(k * n, 11);
+        let mut c0 = vec![0.0f32; m * n];
+        let mut c1 = vec![0.0f32; m * n];
+        gemm_nn_naive(&a, &b, &mut c0, m, k, n);
+        gemm_nn(&a, &b, &mut c1, m, k, n);
+        assert_eq!(
+            c0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            c1.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]
@@ -425,6 +521,43 @@ mod tests {
         // output (0,0): taps rows -1..1 x cols -1..1
         let first = &col[..9];
         assert_eq!(first, &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn im2col_matches_per_tap_reference_with_padding() {
+        // mixed fast/slow rows: pad 1 puts border kernel rows on the
+        // per-tap path while interior rows take the contiguous copy.
+        let g = geom(6, 5, 3, 1, 3, 1, 1);
+        let rows = 2;
+        let x = rand_vec(rows * g.h * g.w * g.cin, 12);
+        let mut col = vec![7.0f32; g.col_rows(rows) * g.patch()];
+        im2col(&x, &mut col, g, rows);
+        for b in 0..rows {
+            for oy in 0..g.oh {
+                for ox in 0..g.ow {
+                    let row = ((b * g.oh + oy) * g.ow + ox) * g.patch();
+                    for ky in 0..g.kernel {
+                        for kx in 0..g.kernel {
+                            for ci in 0..g.cin {
+                                let iy = (oy + ky) as isize - 1;
+                                let ix = (ox + kx) as isize - 1;
+                                let inb = iy >= 0
+                                    && (iy as usize) < g.h
+                                    && ix >= 0
+                                    && (ix as usize) < g.w;
+                                let want = if inb {
+                                    x[((b * g.h + iy as usize) * g.w + ix as usize) * g.cin + ci]
+                                } else {
+                                    0.0
+                                };
+                                let got = col[row + (ky * g.kernel + kx) * g.cin + ci];
+                                assert_eq!(got.to_bits(), want.to_bits());
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

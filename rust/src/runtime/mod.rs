@@ -25,9 +25,12 @@ pub mod artifacts;
 pub mod graph;
 pub mod kernels;
 pub mod native;
-// The crate denies `unsafe_code`; the PJRT FFI boundary is the one
-// budgeted exception, and `fedsrn audit` additionally requires every
-// `unsafe` there to carry a `SAFETY:` justification.
+// The crate denies `unsafe_code`; the budgeted exceptions are the PJRT
+// FFI boundary and the `std::arch` SIMD intrinsics in `packed`, and
+// `fedsrn audit` additionally requires every `unsafe` in either file to
+// carry a `SAFETY:` justification.
+#[allow(unsafe_code)]
+pub mod packed;
 #[cfg(feature = "pjrt")]
 #[allow(unsafe_code)]
 pub mod pjrt;
@@ -35,6 +38,7 @@ pub mod pjrt;
 pub mod xla_stub;
 
 pub use artifacts::{available_models, Manifest};
+pub use packed::Compute;
 
 use std::path::Path;
 use std::time::Instant;
@@ -96,6 +100,8 @@ pub struct ModelRuntime {
     backend: Backend,
     /// Host copy (used by baselines that mutate weights, e.g. SignSGD).
     weights_host: Vec<f32>,
+    /// Forward implementation for masked eval (`compute=` config key).
+    compute: Compute,
     /// Per-program wall-clock accounting for the perf pass. Sharded by
     /// calling thread so the parallel round engine's workers accumulate
     /// without contending; read with [`ShardedTimers::snapshot`].
@@ -129,7 +135,26 @@ impl ModelRuntime {
     pub fn from_manifest(manifest: Manifest) -> Result<Self> {
         let weights_host = manifest.load_weights()?;
         let backend = Self::build_backend(&manifest, &weights_host)?;
-        Ok(Self { manifest, backend, weights_host, timers: ShardedTimers::new() })
+        Ok(Self {
+            manifest,
+            backend,
+            weights_host,
+            compute: Compute::Blocked,
+            timers: ShardedTimers::new(),
+        })
+    }
+
+    /// Select the forward implementation for masked eval. `Blocked` is
+    /// the default; `Packed` is the bit-packed sign-select tier, which
+    /// falls back to blocked per call whenever the (mask, weights) pair
+    /// is not packable. Training is unaffected either way.
+    pub fn set_compute(&mut self, compute: Compute) {
+        self.compute = compute;
+    }
+
+    /// The currently selected compute tier (telemetry / tests).
+    pub fn compute(&self) -> Compute {
+        self.compute
     }
 
     #[cfg(feature = "pjrt")]
@@ -227,7 +252,7 @@ impl ModelRuntime {
         ensure!(x.len() == y.len() * m.input_dim, "x/y size mismatch");
         let t0 = Instant::now();
         let out = match &self.backend {
-            Backend::Native(b) => b.eval_mask(mask_f32, &self.weights_host, x, y),
+            Backend::Native(b) => b.eval_mask(mask_f32, &self.weights_host, x, y, self.compute),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(b) => b.eval_padded(m, mask_f32, None, x, y),
         };
@@ -250,7 +275,9 @@ impl ModelRuntime {
         ensure!(x.len() == y.len() * m.input_dim, "x/y size mismatch");
         let t0 = Instant::now();
         let out = match &self.backend {
-            Backend::Native(b) => b.eval_mask(mask_f32, weights, x, y),
+            // dense baselines pass trained (non-constant) weights — the
+            // packed contract can't hold, so don't even probe it.
+            Backend::Native(b) => b.eval_mask(mask_f32, weights, x, y, Compute::Blocked),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(b) => b.eval_padded(m, mask_f32, Some(weights), x, y),
         };

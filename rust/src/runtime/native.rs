@@ -35,6 +35,7 @@ use crate::util::{sigmoid, SeedSequence};
 use super::artifacts::Manifest;
 use super::graph::{Plan, Workspace};
 use super::kernels::{softmax_xent_grad, softmax_xent_stats};
+use super::packed::{Compute, PackedModel};
 use super::{EvalMetrics, TrainMetrics};
 
 /// Reserved [`SeedSequence`] child tag for the end-of-call sparsity
@@ -190,13 +191,26 @@ impl NativeBackend {
     /// `examples`, so accuracy/mean_loss denominators stay correct on
     /// padded batches). Processed in row chunks so peak activation
     /// memory is bounded regardless of test-set size.
+    ///
+    /// `compute` selects the forward implementation: `Packed` routes
+    /// through the bit-packed sign-select tier when the `(mask,
+    /// weights)` pair satisfies the packed contract (strictly binary
+    /// mask, per-block constant magnitude — see
+    /// [`PackedModel::try_build`]), silently falling back to the blocked
+    /// reference path otherwise, so the key is safe to set on any model.
     pub fn eval_mask(
         &self,
         mask_f32: &[f32],
         weights: &[f32],
         x: &[f32],
         y: &[i32],
+        compute: Compute,
     ) -> Result<EvalMetrics> {
+        if compute == Compute::Packed {
+            if let Some(pm) = PackedModel::try_build(&self.plan, weights, mask_f32) {
+                return self.eval_packed(&pm, x, y);
+            }
+        }
         // Chunk rows to a scratch budget, not a fixed count: a conv
         // plan's per-row im2col + activation footprint is orders of
         // magnitude bigger than an MLP's (conv4: ~67k floats/row).
@@ -211,6 +225,30 @@ impl NativeBackend {
             let take = (rows - start).min(chunk_rows);
             let xc = &x[start * self.input_dim..(start + take) * self.input_dim];
             self.plan.forward(&w_eff, xc, take, &mut ws);
+            let logits = &ws.acts[self.plan.logits_buf()][..take * self.n_classes];
+            let (loss_sum, correct, valid) =
+                softmax_xent_stats(logits, &y[start..start + take], self.n_classes);
+            out.loss_sum += loss_sum;
+            out.correct += correct;
+            out.examples += valid;
+            start += take;
+        }
+        Ok(out)
+    }
+
+    /// Packed-tier twin of the blocked eval loop above: same chunking,
+    /// same metric accumulation, but the forward runs over bitplanes
+    /// instead of an effective-weight vector (no `w_eff` materialized).
+    fn eval_packed(&self, pm: &PackedModel, x: &[f32], y: &[i32]) -> Result<EvalMetrics> {
+        let chunk_rows = self.scratch_chunk_rows(false);
+        let rows = y.len();
+        let mut ws = Workspace::for_eval(&self.plan, rows.min(chunk_rows).max(1));
+        let mut out = EvalMetrics::default();
+        let mut start = 0;
+        while start < rows {
+            let take = (rows - start).min(chunk_rows);
+            let xc = &x[start * self.input_dim..(start + take) * self.input_dim];
+            self.plan.forward_packed(pm, xc, take, &mut ws);
             let logits = &ws.acts[self.plan.logits_buf()][..take * self.n_classes];
             let (loss_sum, correct, valid) =
                 softmax_xent_stats(logits, &y[start..start + take], self.n_classes);

@@ -1,0 +1,810 @@
+//! Bit-packed popcount compute tier for masked inference
+//! (DESIGN.md §Compute-core, §Packed-tier).
+//!
+//! The paper's model *is* a binary mask over signed-constant weights:
+//! within one layer every weight is `±scale` with a single per-layer
+//! magnitude, so the masked forward contraction
+//!
+//! ```text
+//! Σ_i w_i · m_i · x_i  =  scale · Σ_{i ∈ keep} ±x_i
+//! ```
+//!
+//! is sign-select + accumulate, not general f32 GEMM. This module stores
+//! each parameterized node as two bitplanes — `keep` (the mask) and
+//! `neg` (the weight sign, a subset of `keep`) — and evaluates the
+//! contraction by iterating set bits with `trailing_zeros()` /
+//! `count_ones()` per 64-lane word, applying the magnitude once per
+//! output in a scale epilogue. For the all-ones-activation case the
+//! per-word contribution collapses to the popcount identity
+//! `signed_popcount(keep, neg) = popcount(keep) − 2·popcount(keep & neg)`
+//! (see [`signed_popcount`], which the tests pin against the float path).
+//!
+//! The blocked f32 kernels in [`super::kernels`] remain the default and
+//! the bit-exact reference; the packed tier is an *eval-only* fast path
+//! (`compute=packed`) that is numerically equivalent within f32
+//! reassociation tolerance (`scale · Σ ±x` vs `Σ ±scale·x`). The STE
+//! gradient always runs in float — training numerics never change.
+//!
+//! This module also hosts [`SimdTier`]: the runtime-detected
+//! `std::arch` x86-64 SSE2/AVX2 dispatch used by the blocked GEMM
+//! kernels. Every SIMD form preserves the documented
+//! ascending-contraction accumulation order lanewise, so the f32 tier
+//! is bit-identical to the scalar loops it replaces (no FMA — a lane is
+//! one multiply then one add, exactly like the scalar form).
+//!
+//! `unsafe` here is confined to the `#[target_feature]` intrinsic
+//! functions and their guarded call sites; `fedsrn audit` budgets this
+//! file and requires a `SAFETY:` justification within 8 lines of every
+//! occurrence.
+//!
+//! audit: deterministic
+
+use anyhow::{bail, Result};
+
+use crate::mask::layers::LayerSpec;
+use crate::util::BitVec;
+
+use super::graph::Plan;
+
+/// Which forward implementation evaluation uses (`compute=` config key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Compute {
+    /// Blocked f32 kernels — the default and the reference path.
+    #[default]
+    Blocked,
+    /// Bit-packed sign-select kernels for masked eval; falls back to
+    /// blocked whenever the (mask, weights) pair is not packable.
+    Packed,
+}
+
+impl Compute {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "blocked" => Compute::Blocked,
+            "packed" => Compute::Packed,
+            other => bail!("compute must be blocked | packed, got '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Compute::Blocked => "blocked",
+            Compute::Packed => "packed",
+        }
+    }
+}
+
+/// Runtime-detected SIMD capability for the f32 kernels.
+///
+/// Detection is a cached `std::arch` feature probe: `Avx2` on machines
+/// with AVX2, otherwise `Sse2` on any x86-64 (SSE2 is baseline there),
+/// and `Scalar` everywhere else. Every tier computes bit-identical
+/// results — the enum only selects how many independent lanes run the
+/// same mul-then-add per element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdTier {
+    Scalar,
+    Sse2,
+    Avx2,
+}
+
+impl SimdTier {
+    /// Probe the running CPU (cached by std after the first call).
+    #[inline]
+    pub fn detect() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                SimdTier::Avx2
+            } else {
+                SimdTier::Sse2
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            SimdTier::Scalar
+        }
+    }
+
+    // audit:no-alloc-begin
+    /// `c[i] += a * b[i]` over `c.len()` elements — the saxpy inner loop
+    /// of `gemm_nn`/`gemm_tn`. Lanes are independent and each element is
+    /// one multiply then one add, so every tier is bit-identical.
+    #[inline]
+    pub fn axpy(self, a: f32, b: &[f32], c: &mut [f32]) {
+        debug_assert!(b.len() >= c.len());
+        match self {
+            SimdTier::Scalar => axpy_scalar(a, b, c),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Sse2 tier is only produced by detect() on
+            // x86-64, where SSE2 is an architectural baseline.
+            SimdTier::Sse2 => unsafe { axpy_sse2(a, b, c) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx2 tier is only produced by detect() after
+            // is_x86_feature_detected!("avx2") returned true.
+            SimdTier::Avx2 => unsafe { axpy_avx2(a, b, c) },
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => axpy_scalar(a, b, c),
+        }
+    }
+
+    /// Four simultaneous dot products `Σ_j g[j] * b_r[j]` (ascending
+    /// `j`), the 4-column block of `gemm_nt`. Lane `r` accumulates its
+    /// own chain in the scalar order, so the result is bit-identical to
+    /// four scalar passes.
+    #[inline]
+    pub fn dot4(self, g: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+        debug_assert!(
+            b0.len() >= g.len() && b1.len() >= g.len() && b2.len() >= g.len() && b3.len() >= g.len()
+        );
+        match self {
+            SimdTier::Scalar => dot4_scalar(g, b0, b1, b2, b3),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: both tiers imply SSE2 (baseline on x86-64, and a
+            // strict subset of AVX2); detect() never returns them
+            // elsewhere. dot4 stays 4-wide on AVX2 machines on purpose:
+            // widening would split each column's accumulation chain.
+            SimdTier::Sse2 | SimdTier::Avx2 => unsafe { dot4_sse2(g, b0, b1, b2, b3) },
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => dot4_scalar(g, b0, b1, b2, b3),
+        }
+    }
+}
+
+#[inline]
+fn axpy_scalar(a: f32, b: &[f32], c: &mut [f32]) {
+    for (cv, &bv) in c.iter_mut().zip(b) {
+        *cv += a * bv;
+    }
+}
+
+#[inline]
+fn dot4_scalar(g: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    let mut s = [0.0f32; 4];
+    for (j, &gv) in g.iter().enumerate() {
+        s[0] += gv * b0[j];
+        s[1] += gv * b1[j];
+        s[2] += gv * b2[j];
+        s[3] += gv * b3[j];
+    }
+    s
+}
+
+/// 4-lane saxpy with a scalar tail; per-element math identical to
+/// [`axpy_scalar`] (loadu/mul/add/storeu, no FMA).
+// SAFETY: caller guarantees SSE2; loads/stores stay within the slices.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn axpy_sse2(a: f32, b: &[f32], c: &mut [f32]) {
+    use std::arch::x86_64::{_mm_add_ps, _mm_loadu_ps, _mm_mul_ps, _mm_set1_ps, _mm_storeu_ps};
+    let n = c.len();
+    let av = _mm_set1_ps(a);
+    let mut i = 0;
+    while i + 4 <= n {
+        let bv = _mm_loadu_ps(b.as_ptr().add(i));
+        let cv = _mm_loadu_ps(c.as_ptr().add(i));
+        _mm_storeu_ps(c.as_mut_ptr().add(i), _mm_add_ps(cv, _mm_mul_ps(av, bv)));
+        i += 4;
+    }
+    while i < n {
+        c[i] += a * b[i];
+        i += 1;
+    }
+}
+
+/// 8-lane saxpy with a scalar tail; per-element math identical to
+/// [`axpy_scalar`] (loadu/mul/add/storeu, no FMA).
+// SAFETY: caller guarantees AVX2; loads/stores stay within the slices.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(a: f32, b: &[f32], c: &mut [f32]) {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+    let n = c.len();
+    let av = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i + 8 <= n {
+        let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+        let cv = _mm256_loadu_ps(c.as_ptr().add(i));
+        _mm256_storeu_ps(c.as_mut_ptr().add(i), _mm256_add_ps(cv, _mm256_mul_ps(av, bv)));
+        i += 8;
+    }
+    while i < n {
+        c[i] += a * b[i];
+        i += 1;
+    }
+}
+
+/// Four dot products, one per lane: lane `r` accumulates
+/// `g[j] * b_r[j]` over ascending `j` — the same chain as the scalar
+/// column loop, so the result is bit-identical to it.
+// SAFETY: caller guarantees SSE2; all lane gathers are in-bounds reads.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn dot4_sse2(g: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    use std::arch::x86_64::{
+        _mm_add_ps, _mm_mul_ps, _mm_set1_ps, _mm_set_ps, _mm_setzero_ps, _mm_storeu_ps,
+    };
+    let mut acc = _mm_setzero_ps();
+    for (j, &gv) in g.iter().enumerate() {
+        // _mm_set_ps lists lanes high-to-low: lane 0 carries b0.
+        let bv = _mm_set_ps(b3[j], b2[j], b1[j], b0[j]);
+        acc = _mm_add_ps(acc, _mm_mul_ps(_mm_set1_ps(gv), bv));
+    }
+    let mut out = [0.0f32; 4];
+    _mm_storeu_ps(out.as_mut_ptr(), acc);
+    out
+}
+// audit:no-alloc-end
+
+/// `popcount(keep) − 2·popcount(keep & neg)`: the sum of the ±1 signs
+/// selected by one word of the two bitplanes — the popcount identity
+/// the packed kernel realizes when every activation is 1.
+#[inline]
+pub fn signed_popcount(keep: u64, neg: u64) -> i64 {
+    keep.count_ones() as i64 - 2 * (keep & neg).count_ones() as i64
+}
+
+/// One parameterized node's weights × mask, packed as row-aligned
+/// bitplanes over the output dimension.
+///
+/// Layout: contraction row `r` (dense input feature / conv patch
+/// element) owns words `keep[r*wpr .. (r+1)*wpr]`, bit `j % 64` of word
+/// `j / 64` standing for output lane `j`. Slack bits of each row's last
+/// word are zero, so whole-word scans never need re-masking. `neg` is a
+/// subset of `keep`: a set bit means the kept weight is `−scale`.
+#[derive(Debug, Clone)]
+pub struct PackedBlock {
+    /// Contraction length (dense `k` / conv `patch()`).
+    k: usize,
+    /// Output lanes (dense `n` / conv `cout`).
+    n: usize,
+    /// Words per bitplane row: `ceil(n / 64)`.
+    wpr: usize,
+    /// The single weight magnitude of this block.
+    scale: f32,
+    keep: Vec<u64>,
+    neg: Vec<u64>,
+}
+
+impl PackedBlock {
+    /// Pack one `[k, n]` weight block against the global mask bits.
+    /// Returns `None` unless every weight in the block has the same
+    /// finite nonzero magnitude (the signed-constant contract).
+    fn build(bits: &BitVec, w: &[f32], offset: usize, k: usize, n: usize) -> Option<Self> {
+        let scale = w.first()?.abs();
+        if !(scale.is_finite() && scale > 0.0) {
+            return None;
+        }
+        let scale_bits = scale.to_bits();
+        if w.iter().any(|v| v.abs().to_bits() != scale_bits) {
+            return None;
+        }
+        let wpr = n.div_ceil(64);
+        let mut keep = vec![0u64; k * wpr];
+        let mut neg = vec![0u64; k * wpr];
+        for r in 0..k {
+            let krow = &mut keep[r * wpr..(r + 1) * wpr];
+            copy_bits(bits.words(), offset + r * n, n, krow);
+            for (wi, &kw) in krow.iter().enumerate() {
+                let mut rest = kw;
+                let mut nw = 0u64;
+                while rest != 0 {
+                    let bit = rest.trailing_zeros() as usize;
+                    if w[r * n + wi * 64 + bit].is_sign_negative() {
+                        nw |= 1 << bit;
+                    }
+                    rest &= rest - 1;
+                }
+                neg[r * wpr + wi] = nw;
+            }
+        }
+        Some(Self { k, n, wpr, scale, keep, neg })
+    }
+
+    /// Output lanes (tests/benches).
+    pub fn out_dim(&self) -> usize {
+        self.n
+    }
+
+    /// The block's weight magnitude (tests/benches).
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+}
+
+/// Bitplane packing of a whole plan's (weights, mask) pair, indexed
+/// parallel to `plan.nodes` (non-parameterized nodes hold `None`).
+#[derive(Debug, Clone)]
+pub struct PackedModel {
+    blocks: Vec<Option<PackedBlock>>,
+}
+
+impl PackedModel {
+    /// Pack `mask ⊙ weights` for every parameterized node of `plan`.
+    ///
+    /// Returns `None` — caller falls back to the blocked path — unless
+    /// the inputs satisfy the packed contract: vectors cover exactly
+    /// `plan.n_params`, the mask is strictly binary (every entry `0.0`
+    /// or `1.0`; `-0.0` counts as zero, which is safe because the
+    /// blocked kernels multiply it away identically), and each block's
+    /// weights share one finite nonzero magnitude.
+    pub fn try_build(plan: &Plan, weights: &[f32], mask_f32: &[f32]) -> Option<Self> {
+        if weights.len() != plan.n_params || mask_f32.len() != plan.n_params {
+            return None;
+        }
+        if !mask_f32.iter().all(|&m| m == 0.0 || m == 1.0) {
+            return None;
+        }
+        let bits = BitVec::from_f32_threshold(mask_f32);
+        let mut blocks = Vec::with_capacity(plan.nodes.len());
+        for node in &plan.nodes {
+            let kn = match node.spec {
+                LayerSpec::Dense { k, n } => Some((k, n)),
+                LayerSpec::Conv2d { .. } => {
+                    let g = node.geom.expect("conv node carries geometry");
+                    Some((g.patch(), g.cout))
+                }
+                _ => None,
+            };
+            match kn {
+                Some((k, n)) => {
+                    let w = &weights[node.offset..node.offset + k * n];
+                    blocks.push(Some(PackedBlock::build(&bits, w, node.offset, k, n)?));
+                }
+                None => blocks.push(None),
+            }
+        }
+        Some(Self { blocks })
+    }
+
+    /// The packed block for plan node `ni` (`None` for structural nodes).
+    pub fn block(&self, ni: usize) -> Option<&PackedBlock> {
+        self.blocks.get(ni).and_then(|b| b.as_ref())
+    }
+}
+
+/// Copy `len` bits starting at absolute bit `start` of `src`
+/// (little-endian bit order within each word) into `dst`, zeroing the
+/// slack bits of the last destination word. `dst.len()` must be
+/// `len.div_ceil(64)`.
+fn copy_bits(src: &[u64], start: usize, len: usize, dst: &mut [u64]) {
+    debug_assert_eq!(dst.len(), len.div_ceil(64));
+    debug_assert!(src.len() * 64 >= start + len);
+    let s = start % 64;
+    for (d, out) in dst.iter_mut().enumerate() {
+        let wi = start / 64 + d;
+        // Shift counts of 64 are rejected by Rust, so the word-aligned
+        // case must read directly instead of shifting by zero/64.
+        *out = if s == 0 {
+            src[wi]
+        } else {
+            (src[wi] >> s) | (src.get(wi + 1).copied().unwrap_or(0) << (64 - s))
+        };
+    }
+    let rem = len % 64;
+    if rem != 0 {
+        if let Some(last) = dst.last_mut() {
+            *last &= (1u64 << rem) - 1;
+        }
+    }
+}
+
+/// Left-operand rows processed per AVX2 pass (they share each word's
+/// lane-mask expansion).
+const PMR: usize = 4;
+
+// audit:no-alloc-begin
+/// `out[rows × n] = scale · Σ_kk ±a[i, kk]`, signs and lanes selected
+/// by the bitplanes of `blk` — the packed replacement for
+/// `out.fill(0); gemm_nn(a, w_eff, out, ..)` on a sign-select block.
+///
+/// Accumulation per output element runs over `kk` ascending with the
+/// magnitude applied once in the epilogue, so the scalar and AVX2 forms
+/// are bit-identical to each other (and equivalent to the blocked f32
+/// reference within reassociation tolerance — `scale·Σ±x` vs `Σ±sx`).
+pub fn packed_gemm(a: &[f32], blk: &PackedBlock, out: &mut [f32], rows: usize) {
+    debug_assert!(a.len() >= rows * blk.k && out.len() >= rows * blk.n);
+    let out = &mut out[..rows * blk.n];
+    out.fill(0.0);
+    let tier = SimdTier::detect();
+    let mut i0 = 0;
+    while i0 < rows {
+        let rb = PMR.min(rows - i0);
+        if rb == PMR && tier == SimdTier::Avx2 {
+            packed_rows4(a, blk, out, i0);
+        } else {
+            packed_rows_scalar(a, blk, out, i0, rb);
+        }
+        i0 += rb;
+    }
+    for v in out.iter_mut() {
+        *v *= blk.scale;
+    }
+}
+
+/// Scalar sign-select accumulate for `rb` rows: iterate set bits of
+/// each keep word (positives then negatives — each output lane is
+/// touched at most once per `kk`, so intra-word order is free).
+fn packed_rows_scalar(a: &[f32], blk: &PackedBlock, out: &mut [f32], i0: usize, rb: usize) {
+    let (k, n, wpr) = (blk.k, blk.n, blk.wpr);
+    for r in 0..rb {
+        let i = i0 + r;
+        let a_row = &a[i * k..i * k + k];
+        let o_row = &mut out[i * n..i * n + n];
+        for (kk, &v) in a_row.iter().enumerate() {
+            // Post-ReLU activations are mostly zero: skipping them here
+            // is bitwise-neutral because a +0.0-seeded accumulator can
+            // never be -0.0 (see the kernels.rs zero-skip note).
+            if v == 0.0 {
+                continue;
+            }
+            let keep = &blk.keep[kk * wpr..kk * wpr + wpr];
+            let neg = &blk.neg[kk * wpr..kk * wpr + wpr];
+            for (wi, (&kw, &nw)) in keep.iter().zip(neg).enumerate() {
+                if kw == 0 {
+                    continue;
+                }
+                let base = wi * 64;
+                let mut pos = kw & !nw;
+                while pos != 0 {
+                    o_row[base + pos.trailing_zeros() as usize] += v;
+                    pos &= pos - 1;
+                }
+                let mut sub = kw & nw;
+                while sub != 0 {
+                    o_row[base + sub.trailing_zeros() as usize] -= v;
+                    sub &= sub - 1;
+                }
+            }
+        }
+    }
+}
+
+/// Four-row AVX2 pass: the rows share each word's byte→lane-mask
+/// expansion. Falls back to the scalar form off x86-64 (unreachable in
+/// practice: the Avx2 tier is never detected there).
+#[inline]
+fn packed_rows4(a: &[f32], blk: &PackedBlock, out: &mut [f32], i0: usize) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: only reached when SimdTier::detect() returned Avx2, i.e.
+    // after is_x86_feature_detected!("avx2") succeeded on this CPU.
+    unsafe {
+        packed_rows4_avx2(a, blk, out, i0)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    packed_rows_scalar(a, blk, out, i0, PMR);
+}
+
+/// Expand each keep/neg byte to eight 32-bit lane masks, then add
+/// `±v` to the selected lanes of four output rows per load/store pair.
+/// Per output element this is the same ascending-`kk`, once-per-`kk`
+/// ±v accumulation as [`packed_rows_scalar`], hence bit-identical.
+// SAFETY: caller guarantees AVX2. Vector loads/stores only touch
+// chunks with `j0 + 8 <= n`, inside the `out` row; the row tail falls
+// back to in-bounds scalar indexing.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn packed_rows4_avx2(a: &[f32], blk: &PackedBlock, out: &mut [f32], i0: usize) {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_and_ps, _mm256_and_si256, _mm256_castsi256_ps, _mm256_cmpeq_epi32,
+        _mm256_loadu_ps, _mm256_set1_epi32, _mm256_set1_ps, _mm256_set_epi32, _mm256_storeu_ps,
+        _mm256_xor_ps,
+    };
+    let (k, n, wpr) = (blk.k, blk.n, blk.wpr);
+    // lane L of bitsv carries 1 << L: comparing (byte & bitsv) == bitsv
+    // expands a keep/neg byte into eight all-ones/all-zeros lane masks.
+    let bitsv = _mm256_set_epi32(128, 64, 32, 16, 8, 4, 2, 1);
+    let signv = _mm256_set1_epi32(i32::MIN);
+    for kk in 0..k {
+        let row = kk * wpr;
+        for wi in 0..wpr {
+            let kw = blk.keep[row + wi];
+            if kw == 0 {
+                continue;
+            }
+            let nw = blk.neg[row + wi];
+            for c in 0..8usize {
+                let j0 = wi * 64 + c * 8;
+                if j0 >= n {
+                    break;
+                }
+                let kb = (kw >> (c * 8)) & 0xFF;
+                if kb == 0 {
+                    continue;
+                }
+                if j0 + 8 <= n {
+                    let km = _mm256_cmpeq_epi32(
+                        _mm256_and_si256(_mm256_set1_epi32(kb as i32), bitsv),
+                        bitsv,
+                    );
+                    let nb = (nw >> (c * 8)) & 0xFF;
+                    let nm = _mm256_cmpeq_epi32(
+                        _mm256_and_si256(_mm256_set1_epi32(nb as i32), bitsv),
+                        bitsv,
+                    );
+                    // A kept lane contributes v with its sign bit
+                    // flipped where neg is set; dropped lanes add +0.0,
+                    // which is bitwise-neutral on a never--0.0 sum.
+                    let flip = _mm256_castsi256_ps(_mm256_and_si256(nm, signv));
+                    let keepm = _mm256_castsi256_ps(km);
+                    for r in 0..PMR {
+                        let v = a[(i0 + r) * k + kk];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let addend = _mm256_and_ps(_mm256_xor_ps(_mm256_set1_ps(v), flip), keepm);
+                        let p = out.as_mut_ptr().add((i0 + r) * n + j0);
+                        _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), addend));
+                    }
+                } else {
+                    // Row tail (n % 8 lanes, e.g. 10-class logits):
+                    // scalar bit loop so lanes past n are never touched.
+                    let nb = (nw >> (c * 8)) & 0xFF;
+                    for r in 0..PMR {
+                        let v = a[(i0 + r) * k + kk];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let o = (i0 + r) * n + j0;
+                        let mut rest = kb;
+                        while rest != 0 {
+                            let bit = rest.trailing_zeros() as usize;
+                            if (nb >> bit) & 1 == 1 {
+                                out[o + bit] -= v;
+                            } else {
+                                out[o + bit] += v;
+                            }
+                            rest &= rest - 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+// audit:no-alloc-end
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+    use crate::util::Xoshiro256;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n).map(|_| rng.next_normal() as f32).collect()
+    }
+
+    /// Signed-constant weights: ±scale with a seeded sign pattern.
+    fn sign_weights(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| if rng.next_u64() & 1 == 1 { -scale } else { scale })
+            .collect()
+    }
+
+    fn rand_mask(n: usize, p: f64, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| if (rng.next_u64() as f64 / u64::MAX as f64) < p { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn compute_parses_and_defaults_to_blocked() {
+        assert_eq!(Compute::default(), Compute::Blocked);
+        assert_eq!(Compute::parse("blocked").unwrap(), Compute::Blocked);
+        assert_eq!(Compute::parse("Packed").unwrap(), Compute::Packed);
+        assert!(Compute::parse("simd").is_err());
+        assert_eq!(Compute::Packed.name(), "packed");
+    }
+
+    #[test]
+    fn axpy_tiers_are_bitwise_identical() {
+        let tier = SimdTier::detect();
+        for n in [0, 1, 3, 4, 7, 8, 15, 64, 257] {
+            let b = rand_vec(n, 10 + n as u64);
+            let mut c_ref = rand_vec(n, 20 + n as u64);
+            let mut c_simd = c_ref.clone();
+            axpy_scalar(0.37, &b, &mut c_ref);
+            tier.axpy(0.37, &b, &mut c_simd);
+            assert_eq!(
+                c_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                c_simd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "n={n} tier={tier:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot4_tiers_are_bitwise_identical() {
+        let tier = SimdTier::detect();
+        for n in [1, 2, 5, 16, 33, 100] {
+            let g = rand_vec(n, 30 + n as u64);
+            let bs: Vec<Vec<f32>> = (0..4).map(|r| rand_vec(n, 40 + r + n as u64)).collect();
+            let s_ref = dot4_scalar(&g, &bs[0], &bs[1], &bs[2], &bs[3]);
+            let s_simd = tier.dot4(&g, &bs[0], &bs[1], &bs[2], &bs[3]);
+            assert_eq!(
+                s_ref.map(f32::to_bits),
+                s_simd.map(f32::to_bits),
+                "n={n} tier={tier:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn copy_bits_matches_per_bit_extraction() {
+        let src: Vec<u64> = (0..6).map(|i| 0x9E37_79B9_7F4A_7C15u64.rotate_left(i * 11)).collect();
+        for start in [0, 1, 63, 64, 65, 100, 127, 128] {
+            for len in [1, 7, 63, 64, 65, 128, 200] {
+                if start + len > src.len() * 64 {
+                    continue;
+                }
+                let mut dst = vec![0u64; len.div_ceil(64)];
+                copy_bits(&src, start, len, &mut dst);
+                for j in 0..len {
+                    let want = (src[(start + j) / 64] >> ((start + j) % 64)) & 1;
+                    let got = (dst[j / 64] >> (j % 64)) & 1;
+                    assert_eq!(got, want, "start={start} len={len} bit {j}");
+                }
+                // slack bits of the last word are zero
+                let rem = len % 64;
+                if rem != 0 {
+                    assert_eq!(dst[len / 64] & !((1u64 << rem) - 1), 0, "slack start={start}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signed_popcount_identity() {
+        let mut rng = Xoshiro256::new(99);
+        for _ in 0..100 {
+            let keep = rng.next_u64();
+            let neg = rng.next_u64() & keep;
+            let mut want = 0i64;
+            for b in 0..64 {
+                if (keep >> b) & 1 == 1 {
+                    want += if (neg >> b) & 1 == 1 { -1 } else { 1 };
+                }
+            }
+            assert_eq!(signed_popcount(keep, neg), want);
+            // the docs' form of the identity: popcount(AND) over
+            // positives = popcount(keep) - popcount(keep & neg)
+            let pos = (keep & !neg).count_ones() as i64;
+            assert_eq!(signed_popcount(keep, neg), 2 * pos - keep.count_ones() as i64);
+        }
+    }
+
+    /// Dense reference: out = a · (mask ⊙ w) in full f64 (the packed
+    /// path reassociates, so comparisons are tolerance-based).
+    fn masked_gemm_ref(
+        a: &[f32],
+        w: &[f32],
+        mask: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f64; rows * n];
+        for i in 0..rows {
+            for kk in 0..k {
+                let av = a[i * k + kk] as f64;
+                for j in 0..n {
+                    out[i * n + j] += av * (w[kk * n + j] * mask[kk * n + j]) as f64;
+                }
+            }
+        }
+        out.iter().map(|&v| v as f32).collect()
+    }
+
+    #[test]
+    fn packed_gemm_matches_masked_reference() {
+        let (k, n) = (37, 70); // odd word/lane tails on purpose
+        let w = sign_weights(k * n, 0.125, 5);
+        for p in [0.0, 0.01, 0.5, 1.0] {
+            for rows in [1, 3, 4, 5, 9] {
+                let mask = rand_mask(k * n, p, 60 + (p * 100.0) as u64);
+                let a = rand_vec(rows * k, 70 + rows as u64);
+                let bits = BitVec::from_f32_threshold(&mask);
+                let blk = PackedBlock::build(&bits, &w, 0, k, n).unwrap();
+                let mut out = vec![7.0f32; rows * n];
+                packed_gemm(&a, &blk, &mut out, rows);
+                let want = masked_gemm_ref(&a, &w, &mask, rows, k, n);
+                for (i, (&got, &exp)) in out.iter().zip(&want).enumerate() {
+                    assert!(
+                        (got - exp).abs() <= 1e-3 + 1e-3 * exp.abs(),
+                        "p={p} rows={rows} out[{i}]: {got} vs {exp}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_rows_are_independent_of_blocking() {
+        // The 4-row AVX2 pass (when detected) must be bit-identical to
+        // the scalar path: evaluate 8 rows at once (vector blocks) and
+        // one row at a time (always scalar), compare bitwise.
+        let (k, n) = (29, 130);
+        let w = sign_weights(k * n, 0.25, 8);
+        let mask = rand_mask(k * n, 0.5, 9);
+        let bits = BitVec::from_f32_threshold(&mask);
+        let blk = PackedBlock::build(&bits, &w, 0, k, n).unwrap();
+        let rows = 8;
+        let mut a = rand_vec(rows * k, 10);
+        // sprinkle zeros to exercise the skip in both paths
+        for v in a.iter_mut().step_by(5) {
+            *v = 0.0;
+        }
+        let mut all = vec![0.0f32; rows * n];
+        packed_gemm(&a, &blk, &mut all, rows);
+        for i in 0..rows {
+            let mut one = vec![0.0f32; n];
+            packed_gemm(&a[i * k..(i + 1) * k], &blk, &mut one, 1);
+            assert_eq!(
+                all[i * n..(i + 1) * n].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                one.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn try_build_accepts_builtin_models() {
+        for model in ["mlp_tiny", "conv_tiny"] {
+            let man = Manifest::builtin(model).unwrap();
+            let plan = Plan::build(&man).unwrap();
+            let w = man.load_weights().unwrap();
+            let mask = rand_mask(man.n_params, 0.5, 11);
+            let pm = PackedModel::try_build(&plan, &w, &mask).expect("builtin packs");
+            let packed_nodes = (0..plan.nodes.len()).filter(|&ni| pm.block(ni).is_some()).count();
+            let param_nodes =
+                plan.nodes.iter().filter(|nd| nd.spec.params() > 0).count();
+            assert_eq!(packed_nodes, param_nodes, "{model}");
+        }
+    }
+
+    #[test]
+    fn try_build_rejects_unpackable_inputs() {
+        let man = Manifest::builtin("mlp_tiny").unwrap();
+        let plan = Plan::build(&man).unwrap();
+        let w = man.load_weights().unwrap();
+        let ones = vec![1.0f32; man.n_params];
+        // wrong lengths
+        assert!(PackedModel::try_build(&plan, &w[1..], &ones).is_none());
+        assert!(PackedModel::try_build(&plan, &w, &ones[1..]).is_none());
+        // non-binary mask (trained probabilities)
+        let mut soft = ones.clone();
+        soft[3] = 0.7;
+        assert!(PackedModel::try_build(&plan, &w, &soft).is_none());
+        // non-constant magnitudes (trained dense weights)
+        let mut trained = w.clone();
+        trained[0] *= 1.5;
+        assert!(PackedModel::try_build(&plan, &trained, &ones).is_none());
+        // zero / non-finite magnitude
+        let zeros = vec![0.0f32; man.n_params];
+        let nans = vec![f32::NAN; man.n_params];
+        assert!(PackedModel::try_build(&plan, &zeros, &ones).is_none());
+        assert!(PackedModel::try_build(&plan, &nans, &ones).is_none());
+        // -0.0 mask entries count as zero, not as a reject
+        let mut mz = ones;
+        mz[5] = -0.0;
+        let pm = PackedModel::try_build(&plan, &w, &mz).expect("-0.0 is a valid zero");
+        assert!(pm.block(0).is_some());
+    }
+
+    #[test]
+    fn packed_block_reports_scale_and_dims() {
+        let w = sign_weights(8 * 64, 0.5, 12);
+        let mask = vec![1.0f32; 8 * 64];
+        let bits = BitVec::from_f32_threshold(&mask);
+        let blk = PackedBlock::build(&bits, &w, 0, 8, 64).unwrap();
+        assert_eq!(blk.out_dim(), 64);
+        assert_eq!(blk.scale(), 0.5);
+        // all-ones mask at p=1: every keep word of a full row is !0
+        assert!(blk.keep.iter().all(|&kw| kw == u64::MAX));
+    }
+}

@@ -5,6 +5,14 @@
 //! coder in [`crate::compress`] pushes the *actual* uplink below that
 //! whenever the mask is sparse.
 //!
+//! Invariant: the slack bits of the last word (positions `len..` when
+//! `len % 64 != 0`) are always zero. `zeros` allocates zeroed words and
+//! `set` bounds-checks `i < len` with a hard assert, so no constructor
+//! or mutation can raise a slack bit. Consumers — `count_ones`,
+//! `iter_ones`, and the packed compute tier
+//! ([`crate::runtime::packed`]) — rely on this to scan whole words
+//! without re-masking the tail.
+//!
 //! audit: deterministic
 
 /// A fixed-length packed bit vector.
@@ -62,9 +70,12 @@ impl BitVec {
         (self.words[i / 64] >> (i % 64)) & 1 == 1
     }
 
+    /// Set bit `i`. Hard-asserts `i < len` even in release builds: an
+    /// out-of-range set could raise a slack bit of the last word and
+    /// silently break every whole-word consumer (see module invariant).
     #[inline]
     pub fn set(&mut self, i: usize, b: bool) {
-        debug_assert!(i < self.len);
+        assert!(i < self.len, "bit index {i} out of range for BitVec of len {}", self.len);
         let (w, s) = (i / 64, i % 64);
         if b {
             self.words[w] |= 1 << s;
@@ -119,6 +130,10 @@ impl BitVec {
     }
 
     /// Raw words (little-endian bit order within each word).
+    ///
+    /// Contract: slack bits of the last word are zero (module
+    /// invariant), so callers may `count_ones()` / AND / scan whole
+    /// words — including the last — without masking off the tail.
     pub fn words(&self) -> &[u64] {
         &self.words
     }
@@ -203,5 +218,39 @@ mod tests {
         assert!(v.get(5));
         v.set(5, false);
         assert!(!v.get(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn set_out_of_range_panics_in_release_too() {
+        // index 70 lands inside the second allocated word of a len-70
+        // vector... but 70 >= len, so it MUST panic: allowing it would
+        // raise a slack bit and break the whole-word contract.
+        let mut v = BitVec::zeros(70);
+        v.set(70, true);
+    }
+
+    #[test]
+    fn slack_bits_stay_zero_around_word_boundaries() {
+        // every constructor, at lengths straddling the 64-bit boundary
+        for len in [1usize, 63, 64, 65, 127, 128, 129, 191] {
+            let all = BitVec::from_iter_len((0..len).map(|_| true), len);
+            let thr: Vec<f32> = (0..len).map(|i| if i % 2 == 0 { 1.0 } else { 0.2 }).collect();
+            let v2 = BitVec::from_f32_threshold(&thr);
+            let mut v3 = BitVec::zeros(len);
+            for i in (0..len).rev() {
+                v3.set(i, true);
+            }
+            for v in [&all, &v2, &v3] {
+                let rem = len % 64;
+                if rem != 0 {
+                    let last = *v.words().last().unwrap();
+                    assert_eq!(last & !((1u64 << rem) - 1), 0, "len={len} slack dirty");
+                }
+            }
+            assert_eq!(all.count_ones(), len);
+            assert_eq!(v2.count_ones(), len.div_ceil(2));
+            assert_eq!(v3.count_ones(), len);
+        }
     }
 }

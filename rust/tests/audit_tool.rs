@@ -8,7 +8,7 @@
 use std::fs;
 use std::path::Path;
 
-use fedsrn::analysis::{audit_file, audit_tree, UNSAFE_BUDGET_FILE};
+use fedsrn::analysis::{audit_file, audit_tree, UNSAFE_BUDGET_FILES};
 
 fn fixture(name: &str) -> String {
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/audit_fixtures").join(name);
@@ -68,16 +68,20 @@ fn no_alloc_fixture_passes_with_workspace_buffers() {
 
 #[test]
 fn unsafe_fixture_trips_with_and_without_budget() {
-    let undocumented = findings(UNSAFE_BUDGET_FILE, "unsafe_bad.rs");
-    assert_eq!(undocumented, [("unsafe-budget", 4)], "no SAFETY comment");
+    for file in UNSAFE_BUDGET_FILES {
+        let undocumented = findings(file, "unsafe_bad.rs");
+        assert_eq!(undocumented, [("unsafe-budget", 4)], "no SAFETY comment in {file}");
+    }
     let outside = findings("fl/fixture.rs", "unsafe_bad.rs");
-    assert_eq!(outside, [("unsafe-budget", 4)], "outside the budgeted file");
+    assert_eq!(outside, [("unsafe-budget", 4)], "outside the budgeted files");
 }
 
 #[test]
 fn unsafe_fixture_passes_documented_in_budget() {
-    let got = findings(UNSAFE_BUDGET_FILE, "unsafe_good.rs");
-    assert!(got.is_empty(), "{got:?}");
+    for file in UNSAFE_BUDGET_FILES {
+        let got = findings(file, "unsafe_good.rs");
+        assert!(got.is_empty(), "{file}: {got:?}");
+    }
 }
 
 #[test]

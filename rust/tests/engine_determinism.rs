@@ -15,6 +15,7 @@ use fedsrn::compress::DownlinkMode;
 use fedsrn::config::{Algorithm, ExperimentConfig, Partition};
 use fedsrn::coordinator::Experiment;
 use fedsrn::fl::{MetricsSink, RoundRecord};
+use fedsrn::runtime::Compute;
 
 fn base_cfg(threads: usize) -> ExperimentConfig {
     ExperimentConfig {
@@ -187,6 +188,39 @@ fn conv_model_bit_identical_at_1_2_8_threads() {
         let (records, model) = run(mk(threads));
         assert_records_identical(&ref_records, &records, &format!("conv threads={threads}"));
         assert_eq!(ref_model, model, "conv threads={threads}: final mask must be bit-identical");
+    }
+}
+
+#[test]
+fn packed_eval_keeps_training_bit_identical_at_1_2_8_threads() {
+    // `compute=packed` (DESIGN.md §Packed-tier) reroutes eval-time
+    // forward passes only; mask training — STE gradients, aggregation,
+    // every uplink — must stay on the f32 path untouched. So a packed
+    // run is (a) bit-identical to itself at any worker count and
+    // (b) ends on the exact final model of the blocked run; only the
+    // evaluated metrics may move, within the packed-kernel tolerance.
+    let mk = |threads| {
+        let mut cfg = base_cfg(threads);
+        cfg.compute = Compute::Packed;
+        cfg
+    };
+    let (ref_records, ref_model) = run(mk(1));
+    for threads in [2, 8] {
+        let (records, model) = run(mk(threads));
+        assert_records_identical(&ref_records, &records, &format!("packed threads={threads}"));
+        assert_eq!(ref_model, model, "packed threads={threads}: final mask differs");
+    }
+    let (blocked_records, blocked_model) = run(base_cfg(1));
+    assert_eq!(ref_model, blocked_model, "packed eval must not perturb training");
+    for (p, b) in ref_records.iter().zip(&blocked_records) {
+        assert_eq!(p.train_loss.to_bits(), b.train_loss.to_bits(), "r{}", p.round);
+        assert!(
+            (p.accuracy - b.accuracy).abs() <= 0.05,
+            "r{}: packed accuracy {} vs blocked {}",
+            p.round,
+            p.accuracy,
+            b.accuracy
+        );
     }
 }
 

@@ -1,0 +1,146 @@
+//! Packed popcount tier == blocked f32 reference (DESIGN.md §Packed-tier).
+//!
+//! The packed forward path reorders the contraction — sign-select
+//! adds over bitplane words instead of per-element multiplies — so it
+//! is tolerance-equivalent to the blocked kernels, never bitwise.
+//! These tests pin that equivalence for every layer kind the graph
+//! executes (dense, conv2d, maxpool, flatten, relu) across mask
+//! densities, prove the `compute=packed` runtime knob agrees with the
+//! blocked default end-to-end, and prove the packed probe degrades to
+//! the blocked path bit-for-bit when the packed contract cannot hold.
+
+use std::path::Path;
+
+use fedsrn::runtime::graph::{Plan, Workspace};
+use fedsrn::runtime::packed::PackedModel;
+use fedsrn::runtime::{Compute, Manifest, ModelRuntime};
+use fedsrn::util::Xoshiro256;
+
+/// A strictly-binary mask at density `p` (endpoints exact: every bit
+/// off at 0.0, every bit on at 1.0).
+fn mask_at_density(n: usize, p: f64, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| {
+            if p <= 0.0 {
+                0.0
+            } else if p >= 1.0 {
+                1.0
+            } else if rng.next_f64() < p {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+fn close(packed: f32, blocked: f32) -> bool {
+    (packed - blocked).abs() <= 1e-3 + 1e-3 * blocked.abs()
+}
+
+/// Run one model's full graph forward both ways and compare every
+/// activation buffer elementwise: Dense/Conv2d land through the packed
+/// GEMM, MaxPool/Flatten/Relu must pass the (tolerance-close) values
+/// through identically.
+fn assert_forward_equivalent(model: &str, p: f64, rows: usize, seed: u64) {
+    let man = Manifest::builtin(model).expect("builtin model");
+    let plan = Plan::build(&man).expect("plan builds");
+    let weights = man.load_weights().expect("weights");
+    let mask = mask_at_density(man.n_params, p, seed);
+    let pm = PackedModel::try_build(&plan, &weights, &mask)
+        .expect("binary mask over signed-constant weights must pack");
+    let w_eff: Vec<f32> = weights.iter().zip(&mask).map(|(&w, &m)| w * m).collect();
+    let mut rng = Xoshiro256::new(seed ^ 0xABCD);
+    let x: Vec<f32> = (0..rows * man.input_dim).map(|_| rng.next_normal() as f32).collect();
+    let mut ws_b = Workspace::for_eval(&plan, rows);
+    let mut ws_p = Workspace::for_eval(&plan, rows);
+    plan.forward(&w_eff, &x, rows, &mut ws_b);
+    plan.forward_packed(&pm, &x, rows, &mut ws_p);
+    for (buf, (bb, pb)) in ws_b.acts.iter().zip(&ws_p.acts).enumerate() {
+        for (i, (&b, &pv)) in bb.iter().zip(pb).enumerate() {
+            assert!(
+                close(pv, b),
+                "{model} p={p}: buffer {buf} elem {i}: packed {pv} vs blocked {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_relu_stack_matches_blocked_at_all_densities() {
+    for (i, &p) in [0.0, 0.01, 0.5, 1.0].iter().enumerate() {
+        assert_forward_equivalent("mlp_tiny", p, 5, 100 + i as u64);
+    }
+}
+
+#[test]
+fn conv_pool_flatten_stack_matches_blocked_at_all_densities() {
+    for (i, &p) in [0.0, 0.01, 0.5, 1.0].iter().enumerate() {
+        assert_forward_equivalent("conv_tiny", p, 3, 200 + i as u64);
+    }
+}
+
+/// End-to-end: the `compute=packed` knob routes `eval_mask` through
+/// the packed tier and produces the same metrics the blocked default
+/// does, up to the kernel tolerance. `correct` may differ only where a
+/// borderline argmax tie flips under the reordered sum.
+#[test]
+fn eval_mask_packed_agrees_with_blocked_end_to_end() {
+    for model in ["mlp_tiny", "conv_tiny"] {
+        let mut rt =
+            ModelRuntime::load(Path::new("artifacts"), model).expect("model resolves");
+        let man = &rt.manifest;
+        let (n, dim, classes) = (man.n_params, man.input_dim, man.n_classes);
+        let mask = mask_at_density(n, 0.5, 17);
+        let mut rng = Xoshiro256::new(23);
+        let x: Vec<f32> = (0..64 * dim).map(|_| rng.next_normal() as f32).collect();
+        let y: Vec<i32> = (0..64).map(|_| rng.below(classes as u64) as i32).collect();
+        let mb = rt.eval_mask(&mask, &x, &y).unwrap();
+        rt.set_compute(Compute::Packed);
+        let mp = rt.eval_mask(&mask, &x, &y).unwrap();
+        assert_eq!(mb.examples, mp.examples, "{model}");
+        assert!(
+            (mb.loss_sum - mp.loss_sum).abs() <= 1e-3 * (1.0 + mb.loss_sum.abs()),
+            "{model}: packed loss_sum {} vs blocked {}",
+            mp.loss_sum,
+            mb.loss_sum
+        );
+        assert!(
+            (mb.correct - mp.correct).abs() <= 1.0,
+            "{model}: packed correct {} vs blocked {}",
+            mp.correct,
+            mb.correct
+        );
+    }
+}
+
+/// A soft (probabilistic) mask violates the packed contract; the probe
+/// must reject it and `compute=packed` must fall through to the
+/// blocked path bit-for-bit — the knob can never change semantics for
+/// inputs the packed tier cannot represent.
+#[test]
+fn packed_probe_falls_back_bitwise_on_soft_masks() {
+    let mut rt =
+        ModelRuntime::load(Path::new("artifacts"), "mlp_tiny").expect("model resolves");
+    let plan = Plan::build(&rt.manifest).expect("plan builds");
+    let (n, dim, classes) =
+        (rt.manifest.n_params, rt.manifest.input_dim, rt.manifest.n_classes);
+    let mut rng = Xoshiro256::new(31);
+    let mask: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+    assert!(
+        PackedModel::try_build(&plan, rt.weights(), &mask).is_none(),
+        "a soft mask must not pack"
+    );
+    let x: Vec<f32> = (0..16 * dim).map(|_| rng.next_normal() as f32).collect();
+    let y: Vec<i32> = (0..16).map(|_| rng.below(classes as u64) as i32).collect();
+    let mb = rt.eval_mask(&mask, &x, &y).unwrap();
+    rt.set_compute(Compute::Packed);
+    let mp = rt.eval_mask(&mask, &x, &y).unwrap();
+    assert_eq!(
+        mb.loss_sum.to_bits(),
+        mp.loss_sum.to_bits(),
+        "fallback must be the blocked path bit-for-bit"
+    );
+    assert_eq!(mb.correct.to_bits(), mp.correct.to_bits());
+}

@@ -892,3 +892,38 @@ fn prop_checkpoint_roundtrip() {
         std::fs::remove_file(&path).ok();
     });
 }
+
+// ---------------------------------------------------------------------------
+// BitVec word-representation invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bitvec_slack_bits_zero_at_word_boundaries() {
+    // The tail-word contract behind the packed compute tier and the
+    // word-scan aggregator (util/bitvec.rs module doc): slack bits of
+    // the last u64 are zero under EVERY constructor and mutation, so
+    // `words()` consumers may popcount whole words. Fuzz lengths
+    // hugging the 64-bit boundaries, where the slack math can go wrong.
+    forall(200, |rng, case| {
+        let base = 64 * (1 + rng.below(6) as usize);
+        let delta = rng.below(5) as i64 - 2; // base - 2 ..= base + 2
+        let len = (base as i64 + delta).max(1) as usize;
+        let p = rng.next_f64();
+        let mut m = BitVec::from_iter_len((0..len).map(|_| rng.next_f64() < p), len);
+        // flip a handful of random bits through set(), both directions
+        for _ in 0..8 {
+            let i = rng.below(len as u64) as usize;
+            m.set(i, rng.next_f64() < 0.5);
+        }
+        let ones: usize = (0..len).filter(|&i| m.get(i)).count();
+        assert_eq!(m.count_ones(), ones, "case {case}: len={len}");
+        let words = m.words();
+        assert_eq!(words.len(), len.div_ceil(64), "case {case}: len={len}");
+        let word_ones: u32 = words.iter().map(|w| w.count_ones()).sum();
+        assert_eq!(word_ones as usize, ones, "case {case}: slack bits leaked (len={len})");
+        if len % 64 != 0 {
+            let slack = *words.last().unwrap() >> (len % 64);
+            assert_eq!(slack, 0, "case {case}: nonzero slack in tail word (len={len})");
+        }
+    });
+}
