@@ -1,0 +1,399 @@
+//! FedMRN: federated masked random noise (arxiv 2408.03220).
+//!
+//! Where the FedPM family masks the runtime's frozen *weights*, FedMRN
+//! masks a frozen random *noise* tensor that exists only as a 64-bit
+//! seed: the effective model is `m ⊙ noise(seed)`. The reconstruction
+//! contract is therefore different from every other strategy —
+//!
+//!   1. DL: `begin_round` emits a [`DownlinkMsg::NoiseTheta`] (v2-only
+//!      wire kind) carrying the global mask probabilities AND the noise
+//!      seed; the device expands [`noise_from_seed`] locally, so the
+//!      n-element noise tensor never crosses the wire.
+//!   2. Each device ([`FedMrnClientTask`]) runs STE score-SGD against
+//!      the masked noise through the dense-gradient program: per step
+//!      the forward mask is `1[s >= 0]`, the score update is
+//!      `s -= lr * g ⊙ noise` (straight-through estimator).
+//!   3. UL: one Bernoulli(sigma(s)) mask, entropy-coded in an
+//!      [`UplinkPayload::NoiseMask`] envelope (~1 Bpp) sampled from its
+//!      own seed stream (tag [`NOISE_MASK_STREAM`], disjoint from the
+//!      FedPM family's 0xA24B tree).
+//!   4. Server: `fold_uplink` decodes and folds the |D_i|-weighted mask
+//!      sum the moment the envelope lands (eq. 8 shape, O(n_params)
+//!      state); `end_round` sets theta(t+1) = acc / weight_sum.
+//!
+//! The downlink is always a `NoiseTheta` envelope: `downlink=qdelta`
+//! is rejected at config validation because the seed must ride every
+//! broadcast (a delta chain has nowhere to carry it).
+//!
+//! Noise values live on the dyadic grid k/4096, k in [-1024, 1024), so
+//! every weighted fold over them is grouping-exact (the §Fleet edge
+//! associativity condition) and magnitudes sit near the signed-constant
+//! Kaiming scale of the small models this repo ships.
+//!
+//! audit: wire-decode, deterministic
+
+use anyhow::{bail, ensure, Result};
+
+use crate::compress::{self};
+use crate::data::Dataset;
+use crate::fl::protocol::{DownlinkMsg, RoundPlan, UplinkMsg, UplinkPayload};
+use crate::fl::{Client, RoundComm};
+use crate::mask::{empirical_bpp, sample_mask, ProbMask};
+use crate::runtime::ModelRuntime;
+use crate::util::{logit, BitVec, SeedSequence, Xoshiro256};
+
+use super::{AggKind, AggregateMsg, ClientTask, EvalModel, RoundStats, ServerLogic};
+
+/// Seed-tree tag of the frozen noise tensor (child of the experiment
+/// seed, disjoint from every other reserved stream).
+const NOISE_CHILD: u64 = 0x4015E;
+/// Seed-tree tag of the uplink mask-sampling stream — deliberately NOT
+/// the FedPM family's 0xA24B so the two families never share draws.
+const NOISE_MASK_STREAM: u64 = 0x4E4D;
+
+/// Expand a noise seed into the frozen noise tensor. Pure in
+/// `(seed, n)`: server and every device reconstruct the identical
+/// tensor from the 8 bytes on the wire. Values are dyadic
+/// (k/4096, |k| <= 1024) so weighted f64 folds over masked noise are
+/// grouping-exact.
+pub fn noise_from_seed(seed: u64, n: usize) -> Vec<f32> {
+    let s = SeedSequence::new(seed).child(NOISE_CHILD).seed();
+    let mut rng = Xoshiro256::new(s);
+    (0..n).map(|_| (rng.below(2048) as f32 - 1024.0) / 4096.0).collect()
+}
+
+/// FedMRN server logic: global mask probabilities over seeded noise.
+pub struct FedMrn {
+    /// Global keep-probabilities theta in [0,1]^n.
+    theta: Vec<f32>,
+    /// Seed of the frozen noise tensor — the only "weights" shipped.
+    noise_seed: u64,
+    /// The expanded noise tensor (server-side copy for evaluation).
+    noise: Vec<f32>,
+    /// Streaming |D_i|-weighted mask sum (eq. 8 shape).
+    acc: Vec<f64>,
+    weight_sum: f64,
+    /// Summed (not running-mean) client losses: a plain sum merges with
+    /// edge-tier partial sums in any grouping, unlike a running mean.
+    loss_sum: f64,
+    reporters: usize,
+}
+
+impl FedMrn {
+    /// `seed` is the experiment seed; the noise seed is derived from it
+    /// via the reserved [`NOISE_CHILD`] stream.
+    pub fn new(n_params: usize, seed: u64) -> Self {
+        let noise_seed = SeedSequence::new(seed).child(NOISE_CHILD).seed();
+        Self {
+            theta: vec![0.5; n_params],
+            noise_seed,
+            noise: noise_from_seed(noise_seed, n_params),
+            acc: vec![0.0; n_params],
+            weight_sum: 0.0,
+            loss_sum: 0.0,
+            reporters: 0,
+        }
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// The deterministic evaluation mask: keep where theta >= 1/2.
+    fn eval_mask(&self) -> BitVec {
+        BitVec::from_iter_len(self.theta.iter().map(|&t| t >= 0.5), self.theta.len())
+    }
+}
+
+/// Device half: STE score-SGD against masked seeded noise.
+pub struct FedMrnClientTask;
+
+impl ClientTask for FedMrnClientTask {
+    fn run(
+        &self,
+        rt: &ModelRuntime,
+        data: &Dataset,
+        client: &mut Client,
+        msg: &DownlinkMsg,
+        prev_state: Option<&[f32]>,
+        plan: &RoundPlan,
+    ) -> Result<UplinkMsg> {
+        let DownlinkMsg::NoiseTheta { noise_seed, .. } = msg else {
+            bail!("fedmrn client expects a noise-theta broadcast, got {}", msg.kind_name());
+        };
+        // The device works from the theta it decoded off the wire and
+        // expands the noise tensor from the seed that rode the envelope.
+        let theta = msg.decode_state(prev_state)?;
+        ensure!(
+            theta.len() == rt.manifest.n_params,
+            "noise-theta broadcast for {} params, model has {}",
+            theta.len(),
+            rt.manifest.n_params
+        );
+        let noise = noise_from_seed(*noise_seed, theta.len());
+        let mut scores: Vec<f32> = theta.iter().map(|&t| logit(t)).collect();
+        let batch = rt.manifest.batch;
+        let steps = client.steps_per_round(batch, plan.local_epochs).max(1);
+        let mut w = vec![0.0f32; scores.len()];
+        let mut last_loss = 0.0f32;
+        for _ in 0..steps {
+            // Deterministic forward mask m = 1[s >= 0] (sigma(s) >= 1/2).
+            for ((wi, &s), &nz) in w.iter_mut().zip(&scores).zip(&noise) {
+                *wi = if s >= 0.0 { nz } else { 0.0 };
+            }
+            let (xs, ys) = client.gather_call_batches(data, 1, batch);
+            let (grads, loss, _correct) = rt.dense_grad(&w, &xs, &ys)?;
+            // Straight-through estimator: d loss / d s = g * noise.
+            for ((s, &g), &nz) in scores.iter_mut().zip(&grads).zip(&noise) {
+                *s -= plan.lr * g * nz;
+            }
+            last_loss = loss;
+        }
+        // One Bernoulli(sigma(s)) mask per (round, client), sampled from
+        // the FedMRN-reserved stream so the aggregate is unbiased and
+        // the draw replays at any thread count.
+        let theta_hat = ProbMask::from_scores(&scores);
+        let mask_seed = SeedSequence::new(plan.seed)
+            .child(NOISE_MASK_STREAM)
+            .child(plan.round as u64)
+            .child(client.id as u64)
+            .seed();
+        let mask = sample_mask(&theta_hat, mask_seed);
+        Ok(UplinkMsg {
+            weight: client.weight(),
+            train_loss: last_loss,
+            trained_round: plan.round as u64,
+            payload: UplinkPayload::NoiseMask(compress::encode(&mask)),
+        })
+    }
+}
+
+impl ServerLogic for FedMrn {
+    fn name(&self) -> &'static str {
+        "fedmrn"
+    }
+
+    fn begin_round(&mut self, _plan: &RoundPlan) -> Result<DownlinkMsg> {
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        self.weight_sum = 0.0;
+        self.loss_sum = 0.0;
+        self.reporters = 0;
+        Ok(DownlinkMsg::NoiseTheta { noise_seed: self.noise_seed, theta: self.theta.clone() })
+    }
+
+    fn fold_uplink(&mut self, msg: &UplinkMsg, comm: &mut RoundComm) -> Result<()> {
+        let UplinkPayload::NoiseMask(enc) = &msg.payload else {
+            bail!(
+                "fedmrn server expects a noise-mask uplink, got {}",
+                msg.payload.kind_name()
+            );
+        };
+        let mask = compress::decode(enc, self.theta.len())?;
+        comm.add_uplink(msg.wire_bits(), empirical_bpp(&mask));
+        for (i, bit) in mask.iter().enumerate() {
+            if bit {
+                self.acc[i] += msg.weight;
+            }
+        }
+        self.weight_sum += msg.weight;
+        self.reporters += 1;
+        self.loss_sum += msg.train_loss as f64;
+        Ok(())
+    }
+
+    fn agg_kind(&self) -> AggKind {
+        AggKind::NoiseMaskSum
+    }
+
+    fn fold_aggregate(&mut self, msg: &AggregateMsg, comm: &mut RoundComm) -> Result<()> {
+        ensure!(
+            msg.kind == AggKind::NoiseMaskSum,
+            "fedmrn server expects a noise-mask-sum aggregate, got {:?}",
+            msg.kind
+        );
+        ensure!(
+            msg.acc.len() == self.theta.len(),
+            "aggregate covers {} params, model has {}",
+            msg.acc.len(),
+            self.theta.len()
+        );
+        comm.add_uplinks(msg.ul_bits, msg.est_bpp_sum, msg.reporters as usize);
+        for (a, &p) in self.acc.iter_mut().zip(&msg.acc) {
+            *a += p;
+        }
+        self.weight_sum += msg.weight_sum;
+        self.reporters += msg.reporters as usize;
+        self.loss_sum += msg.loss_sum;
+        Ok(())
+    }
+
+    fn end_round(&mut self, _plan: &RoundPlan) -> Result<RoundStats> {
+        ensure!(self.weight_sum > 0.0, "no uplinks received this round");
+        for (t, &a) in self.theta.iter_mut().zip(&self.acc) {
+            // A weighted mean of 0/1 terms lands in [0,1]; the clamp
+            // pins the wire invariant against last-ulp rounding.
+            *t = ((a / self.weight_sum) as f32).clamp(0.0, 1.0);
+        }
+        let mean_theta =
+            self.theta.iter().map(|&t| t as f64).sum::<f64>() / self.theta.len().max(1) as f64;
+        Ok(RoundStats {
+            train_loss: self.loss_sum / self.reporters.max(1) as f64,
+            mean_theta,
+            mask_density: self.eval_mask().density(),
+        })
+    }
+
+    fn client_task(&self) -> Box<dyn ClientTask> {
+        Box::new(FedMrnClientTask)
+    }
+
+    fn eval_model(&self, _round: usize) -> EvalModel {
+        // The deployed model is m ⊙ noise — dense values, so the
+        // evaluator runs the dense path (the mask selects noise entries,
+        // not the runtime's frozen weights).
+        let mask = self.eval_mask();
+        let w: Vec<f32> = self
+            .noise
+            .iter()
+            .enumerate()
+            .map(|(i, &nz)| if mask.get(i) { nz } else { 0.0 })
+            .collect();
+        EvalModel::Dense(w)
+    }
+
+    fn storage_bits(&self) -> u64 {
+        // noise seed (64b) + coded threshold mask — the strong-LTH
+        // seed+mask storage story, with noise instead of weights.
+        64 + compress::encode(&self.eval_mask()).wire_bytes() as u64 * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> RoundPlan {
+        RoundPlan {
+            round: 1,
+            seed: 7,
+            lambda: 0.0,
+            lr: 0.1,
+            local_epochs: 1,
+            topk_frac: 0.3,
+            server_lr: 0.1,
+            adam: false,
+        }
+    }
+
+    fn mask_msg(bits: &[bool], weight: f64) -> UplinkMsg {
+        let m = BitVec::from_bools(bits);
+        UplinkMsg {
+            weight,
+            train_loss: 0.5,
+            trained_round: UplinkMsg::FRESH,
+            payload: UplinkPayload::NoiseMask(compress::encode(&m)),
+        }
+    }
+
+    #[test]
+    fn noise_is_pure_dyadic_and_seed_sensitive() {
+        let a = noise_from_seed(9, 512);
+        assert_eq!(a, noise_from_seed(9, 512), "noise must be pure in (seed, n)");
+        assert_ne!(a, noise_from_seed(10, 512), "the seed must matter");
+        for &v in &a {
+            assert!((-0.25..0.25).contains(&v), "{v}");
+            let scaled = v * 4096.0;
+            assert_eq!(scaled, scaled.trunc(), "noise must sit on the dyadic grid");
+        }
+    }
+
+    #[test]
+    fn begin_round_ships_the_noise_seed() {
+        let mut srv = FedMrn::new(64, 3);
+        match srv.begin_round(&plan()).unwrap() {
+            DownlinkMsg::NoiseTheta { noise_seed, theta } => {
+                assert_eq!(theta, vec![0.5; 64]);
+                assert_eq!(
+                    noise_from_seed(noise_seed, 64),
+                    srv.noise,
+                    "devices must expand the server's exact noise tensor"
+                );
+            }
+            other => panic!("fedmrn must broadcast noise-theta, got {}", other.kind_name()),
+        }
+    }
+
+    #[test]
+    fn streaming_fold_is_weighted_mask_mean() {
+        let mut srv = FedMrn::new(4, 1);
+        let mut comm = RoundComm::new(4);
+        srv.begin_round(&plan()).unwrap();
+        srv.fold_uplink(&mask_msg(&[true, true, false, false], 1.0), &mut comm).unwrap();
+        srv.fold_uplink(&mask_msg(&[true, false, true, false], 3.0), &mut comm).unwrap();
+        srv.end_round(&plan()).unwrap();
+        // theta = (1*m1 + 3*m2) / 4
+        assert_eq!(srv.theta(), &[1.0, 0.25, 0.75, 0.0]);
+        assert_eq!(comm.clients, 2);
+    }
+
+    #[test]
+    fn fold_rejects_wrong_payload_and_empty_round() {
+        let mut srv = FedMrn::new(8, 1);
+        let mut comm = RoundComm::new(8);
+        srv.begin_round(&plan()).unwrap();
+        let wrong = UplinkMsg {
+            weight: 1.0,
+            train_loss: 0.0,
+            trained_round: UplinkMsg::FRESH,
+            payload: UplinkPayload::CodedMask(compress::encode(&BitVec::zeros(8))),
+        };
+        assert!(
+            srv.fold_uplink(&wrong, &mut comm).is_err(),
+            "a coded-mask uplink must not fold as a noise mask"
+        );
+        assert!(srv.end_round(&plan()).is_err(), "zero uplinks cannot average");
+    }
+
+    #[test]
+    fn eval_model_is_masked_noise() {
+        let mut srv = FedMrn::new(6, 5);
+        let mut comm = RoundComm::new(6);
+        srv.begin_round(&plan()).unwrap();
+        srv.fold_uplink(&mask_msg(&[true, false, true, false, true, false], 2.0), &mut comm)
+            .unwrap();
+        srv.end_round(&plan()).unwrap();
+        let EvalModel::Dense(w) = srv.eval_model(1) else {
+            panic!("fedmrn evaluates dense masked noise")
+        };
+        for (i, &v) in w.iter().enumerate() {
+            if i % 2 == 0 {
+                assert_eq!(v, srv.noise[i], "kept entries must equal the noise");
+            } else {
+                assert_eq!(v, 0.0, "dropped entries must be zero");
+            }
+        }
+    }
+
+    #[test]
+    fn client_task_rejects_other_broadcast_kinds() {
+        let srv = FedMrn::new(16, 1);
+        let task = srv.client_task();
+        let data = crate::data::Synthetic::new(crate::data::SynthSpec::tiny(), 1)
+            .generate(40, 1);
+        let shards = crate::data::partition_iid(&data, 1, 1);
+        let mut client = Client::new(shards[0].clone(), 5);
+        let rt = ModelRuntime::load(std::path::Path::new("artifacts"), "mlp_tiny").unwrap();
+        let msg = DownlinkMsg::Theta(vec![0.5; rt.manifest.n_params]);
+        assert!(task.run(&rt, &data, &mut client, &msg, None, &plan()).is_err());
+    }
+
+    #[test]
+    fn storage_is_seed_plus_coded_mask() {
+        let srv = FedMrn::new(50_000, 1);
+        let bits = srv.storage_bits();
+        // uniform theta -> threshold density ~1 -> about 1 Bpp coded,
+        // and always the 64-bit seed on top
+        assert!(bits > 64, "{bits}");
+        assert!(bits < 64 + 60_000, "{bits}");
+    }
+}

@@ -1,14 +1,27 @@
-//! Federated algorithms: the paper's method + every baseline it
-//! compares against (sec. IV).
+//! Federated algorithms: the paper's method, every baseline it
+//! compares against (sec. IV), and the related strategy families that
+//! speak the same envelope protocol at other points of the Bpp
+//! spectrum (`fedsrn figures --compare` runs all five side by side).
 //!
 //! * [`MaskStrategy`] — the FedPM family over frozen random weights:
 //!   stochastic masks with the entropy-proxy regularizer (**ours**,
 //!   lambda > 0), plain FedPM (lambda = 0), FedMask-style deterministic
 //!   masking, and Top-k score masking. One implementation, four uplink /
-//!   sampling modes — exactly how the paper frames them.
+//!   sampling modes — exactly how the paper frames them. ~1 Bpp up.
+//! * [`FedMrn`] — masked random noise (arxiv 2408.03220): the mask
+//!   selects entries of a seeded frozen *noise* tensor; the downlink
+//!   carries theta plus the 64-bit noise seed, never the tensor. ~1 Bpp
+//!   up, distinct reconstruction contract.
+//! * [`SpaFl`] — trainable per-filter pruning thresholds
+//!   (arxiv 2406.00431) over the manifest's layer telemetry: only
+//!   n_filters floats travel, orders of magnitude below 1 Bpp.
 //! * [`SignSgd`] — Majority-Vote SignSGD (Bernstein et al. '18): dense
 //!   weights, 1-bit sign uplink, majority-vote server step.
 //! * [`FedAvg`] — dense float FedAvg as the 32 Bpp reference point.
+//!
+//! DESIGN.md §Strategy-family states the contract each entry satisfies
+//! (envelope variant, fold semantics, staleness behavior, Bpp
+//! accounting, edge-fold associativity conditions).
 //!
 //! Since the protocol redesign (DESIGN.md §Protocol) a strategy no
 //! longer "runs a round" — it **speaks the wire protocol** of
@@ -28,12 +41,16 @@
 //! serializable messages crosses between the two halves.
 
 pub mod fedavg;
+pub mod fedmrn;
 pub mod mask_training;
 pub mod signsgd;
+pub mod spafl;
 
 pub use fedavg::FedAvg;
+pub use fedmrn::FedMrn;
 pub use mask_training::{MaskMode, MaskStrategy};
 pub use signsgd::SignSgd;
+pub use spafl::SpaFl;
 
 use anyhow::Result;
 
@@ -43,6 +60,7 @@ use crate::fl::aggregator::{staleness_scale, AggKind, AggregateMsg};
 use crate::fl::protocol::{DownlinkMsg, RoundPlan, UplinkMsg};
 use crate::fl::server::AggMode;
 use crate::fl::{Client, RoundComm};
+use crate::mask::LayerSlice;
 use crate::runtime::ModelRuntime;
 
 /// Aggregation mode from config: bayes_prior > 0 turns on the
@@ -79,6 +97,40 @@ pub struct RoundStats {
 /// `begin_round -> (fold_uplink)* -> end_round`; the driver may call
 /// `fold_uplink` in any cohort order it can reproduce (the engine uses
 /// cohort order — DESIGN.md §Parallel round engine).
+///
+/// # Example
+///
+/// One streaming round driven by hand — exactly the calls the round
+/// engine makes, minus the worker threads:
+///
+/// ```
+/// use fedsrn::algos::{FedMrn, ServerLogic};
+/// use fedsrn::compress;
+/// use fedsrn::fl::{RoundComm, RoundPlan, UplinkMsg, UplinkPayload};
+/// use fedsrn::util::BitVec;
+///
+/// let mut server = FedMrn::new(8, 42);
+/// let plan = RoundPlan { round: 1, seed: 42, lambda: 0.0, lr: 0.1,
+///     local_epochs: 1, topk_frac: 0.3, server_lr: 0.1, adam: false };
+/// let mut comm = RoundComm::new(8);
+///
+/// let broadcast = server.begin_round(&plan).unwrap();
+/// assert_eq!(broadcast.n(), 8);
+///
+/// // One device's envelope lands and folds immediately (O(n) state).
+/// let mask = BitVec::from_bools(&[true; 8]);
+/// let up = UplinkMsg {
+///     weight: 1.0,
+///     train_loss: 0.3,
+///     trained_round: 1,
+///     payload: UplinkPayload::NoiseMask(compress::encode(&mask)),
+/// };
+/// server.fold_uplink(&up, &mut comm).unwrap();
+///
+/// let stats = server.end_round(&plan).unwrap();
+/// assert_eq!(stats.mask_density, 1.0);
+/// assert_eq!(comm.clients, 1);
+/// ```
 pub trait ServerLogic {
     fn name(&self) -> &'static str;
 
@@ -147,6 +199,33 @@ pub trait ServerLogic {
 /// one uplink envelope. `prev_state` is the state this device
 /// reconstructed from the previous broadcast — required to decode a
 /// `downlink=qdelta` frame chain, shape-checked otherwise.
+///
+/// # Example
+///
+/// A device runs the task its server half hands out; the result is the
+/// envelope the server's `fold_uplink` expects:
+///
+/// ```
+/// use fedsrn::algos::{FedAvg, ServerLogic};
+/// use fedsrn::compress::DownlinkMode;
+/// use fedsrn::data::{partition_iid, SynthSpec, Synthetic};
+/// use fedsrn::fl::{Client, RoundPlan};
+/// use fedsrn::runtime::ModelRuntime;
+///
+/// let rt = ModelRuntime::load(std::path::Path::new("artifacts"), "mlp_tiny").unwrap();
+/// let data = Synthetic::new(SynthSpec::tiny(), 1).generate(64, 1);
+/// let shards = partition_iid(&data, 1, 1);
+/// let mut client = Client::new(shards[0].clone(), 7);
+///
+/// let mut server = FedAvg::new(rt.weights().to_vec(), DownlinkMode::Float32);
+/// let plan = RoundPlan { round: 1, seed: 7, lambda: 0.0, lr: 0.1,
+///     local_epochs: 1, topk_frac: 0.3, server_lr: 0.1, adam: false };
+/// let broadcast = server.begin_round(&plan).unwrap();
+///
+/// let task = server.client_task();
+/// let up = task.run(&rt, &data, &mut client, &broadcast, None, &plan).unwrap();
+/// assert_eq!(up.payload.kind_name(), "dense_delta");
+/// ```
 pub trait ClientTask: Send + Sync {
     fn run(
         &self,
@@ -160,10 +239,13 @@ pub trait ClientTask: Send + Sync {
 }
 
 /// Instantiate the server logic an experiment config asks for.
+/// `layers` is the manifest's layout telemetry — SpaFL derives its
+/// filter structure from it; every other strategy ignores it.
 pub fn build_server(
     cfg: &ExperimentConfig,
     n_params: usize,
     init_weights: &[f32],
+    layers: &[LayerSlice],
 ) -> Box<dyn ServerLogic> {
     match cfg.algorithm {
         Algorithm::FedPMReg | Algorithm::FedPM => Box::new(MaskStrategy::with_agg(
@@ -189,5 +271,9 @@ pub fn build_server(
         )),
         Algorithm::SignSGD => Box::new(SignSgd::new(init_weights.to_vec(), cfg.downlink)),
         Algorithm::FedAvg => Box::new(FedAvg::new(init_weights.to_vec(), cfg.downlink)),
+        Algorithm::FedMRN => Box::new(FedMrn::new(n_params, cfg.seed)),
+        Algorithm::SpaFL => {
+            Box::new(SpaFl::new(init_weights.to_vec(), layers, cfg.downlink))
+        }
     }
 }

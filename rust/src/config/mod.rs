@@ -35,6 +35,12 @@ pub enum Algorithm {
     SignSGD,
     /// Dense FedAvg (float uplink reference point).
     FedAvg,
+    /// Masked random noise (arxiv 2408.03220): binary mask over a
+    /// seeded frozen noise tensor, seed rides the downlink envelope.
+    FedMRN,
+    /// SpaFL (arxiv 2406.00431): per-filter trainable pruning
+    /// thresholds are the only uplink payload.
+    SpaFL,
 }
 
 impl Algorithm {
@@ -46,6 +52,8 @@ impl Algorithm {
             "topk" | "top-k" => Algorithm::TopK,
             "signsgd" | "mv-signsgd" | "mv_signsgd" => Algorithm::SignSGD,
             "fedavg" => Algorithm::FedAvg,
+            "fedmrn" | "mrn" => Algorithm::FedMRN,
+            "spafl" => Algorithm::SpaFL,
             other => bail!("unknown algorithm '{other}'"),
         })
     }
@@ -58,12 +66,16 @@ impl Algorithm {
             Algorithm::TopK => "topk",
             Algorithm::SignSGD => "signsgd",
             Algorithm::FedAvg => "fedavg",
+            Algorithm::FedMRN => "fedmrn",
+            Algorithm::SpaFL => "spafl",
         }
     }
 
-    /// Does this algorithm ship binary masks (vs dense floats) uplink?
+    /// Does this algorithm ship binary payloads (vs float vectors)
+    /// uplink? FedAvg uploads dense weights and SpaFL uploads per-filter
+    /// float thresholds; everything else codes bits.
     pub fn uplink_is_binary(&self) -> bool {
-        !matches!(self, Algorithm::FedAvg)
+        !matches!(self, Algorithm::FedAvg | Algorithm::SpaFL)
     }
 }
 
@@ -346,6 +358,11 @@ impl ExperimentConfig {
         if self.bayes_prior < 0.0 {
             bail!("bayes_prior must be >= 0");
         }
+        if self.algorithm == Algorithm::FedMRN && self.downlink != DownlinkMode::Float32 {
+            // The noise seed rides every noise-theta envelope; a qdelta
+            // frame chain has nowhere to carry it.
+            bail!("fedmrn requires downlink=float32 (the noise seed rides the broadcast)");
+        }
         Ok(())
     }
 
@@ -403,6 +420,8 @@ mod tests {
     fn algorithm_parse_aliases() {
         assert_eq!(Algorithm::parse("ours").unwrap(), Algorithm::FedPMReg);
         assert_eq!(Algorithm::parse("MV-SignSGD").unwrap(), Algorithm::SignSGD);
+        assert_eq!(Algorithm::parse("fedmrn").unwrap(), Algorithm::FedMRN);
+        assert_eq!(Algorithm::parse("SpaFL").unwrap(), Algorithm::SpaFL);
         assert!(Algorithm::parse("sgd").is_err());
     }
 
@@ -432,7 +451,20 @@ mod tests {
     #[test]
     fn uplink_kind() {
         assert!(Algorithm::FedPMReg.uplink_is_binary());
+        assert!(Algorithm::FedMRN.uplink_is_binary());
         assert!(!Algorithm::FedAvg.uplink_is_binary());
+        assert!(!Algorithm::SpaFL.uplink_is_binary());
+    }
+
+    #[test]
+    fn fedmrn_rejects_qdelta_downlink() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.algorithm = Algorithm::FedMRN;
+        cfg.validate().unwrap();
+        cfg.apply("downlink", "qdelta8").unwrap();
+        assert!(cfg.validate().is_err(), "the seed cannot ride a delta chain");
+        cfg.algorithm = Algorithm::SpaFL;
+        cfg.validate().unwrap();
     }
 
     #[test]

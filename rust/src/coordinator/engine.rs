@@ -204,7 +204,9 @@ impl RoundEngine {
         let msg = server.begin_round(plan)?;
         let receivers = match msg {
             DownlinkMsg::Frame(_) => clients.len(),
-            DownlinkMsg::RawF32(_) | DownlinkMsg::Theta(_) => cohort.len(),
+            DownlinkMsg::RawF32(_) | DownlinkMsg::Theta(_) | DownlinkMsg::NoiseTheta { .. } => {
+                cohort.len()
+            }
         };
         for _ in 0..receivers {
             comm.add_downlink_msg(&msg);

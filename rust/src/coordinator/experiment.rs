@@ -103,7 +103,8 @@ impl Experiment {
             })
             .collect();
 
-        let server = build_server(&cfg, rt.manifest.n_params, rt.weights());
+        let server =
+            build_server(&cfg, rt.manifest.n_params, rt.weights(), &rt.manifest.layers);
         let engine =
             RoundEngine::new(cfg.threads).with_edges(cfg.edges, cfg.staleness_beta);
         Ok(Self {

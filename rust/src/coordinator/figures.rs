@@ -4,6 +4,11 @@
 //!   FedPM + regularizer (lambda = 1), per dataset.
 //! * [`run_fig2`] — non-IID trade-off (Fig. 2): lambda sweep vs FedPM,
 //!   Top-k and MV-SignSGD, per dataset, c in {2, 4}.
+//! * [`run_compare`] — the five-strategy family (FedPM+reg, MV-SignSGD,
+//!   FedAvg, FedMRN, SpaFL) at one matched communication budget: same
+//!   model, cohort and round count for every strategy, accuracy plotted
+//!   against the uplink Bpp each actually spent. Emits the fig-1-style
+//!   table plus a machine-readable `compare.json`.
 //! * [`summary_table`] — the sec. IV text numbers: Bpp saved vs FedPM
 //!   and accuracy deltas for every run pair.
 //!
@@ -196,6 +201,79 @@ pub fn run_fig2(
     Ok(curves)
 }
 
+/// `figures --compare`: every strategy family the crate implements,
+/// run at one matched communication budget (identical model, dataset,
+/// cohort, round count and seed), so the table reads as the fig-1
+/// accuracy-vs-Bpp trade-off across the whole family — from FedAvg's
+/// 32 Bpp down through the ~1 Bpp mask families to SpaFL's per-filter
+/// thresholds.
+pub fn run_compare(
+    dataset: &str,
+    model: &str,
+    rounds: usize,
+    clients: usize,
+    seed: u64,
+    out_dir: &str,
+) -> Result<Vec<Curve>> {
+    let mk = |algo: Algorithm, lambda: f32| {
+        let mut cfg = base_cfg(model, dataset, rounds, seed);
+        cfg.algorithm = algo;
+        cfg.lambda = lambda;
+        cfg.clients = clients;
+        cfg.partition = Partition::Iid;
+        cfg
+    };
+    let curves = vec![
+        run_curve("fedpm_reg_l1", mk(Algorithm::FedPMReg, 1.0), out_dir)?,
+        run_curve("mv_signsgd", mk(Algorithm::SignSGD, 0.0), out_dir)?,
+        run_curve("fedavg", mk(Algorithm::FedAvg, 0.0), out_dir)?,
+        run_curve("fedmrn", mk(Algorithm::FedMRN, 0.0), out_dir)?,
+        run_curve("spafl", mk(Algorithm::SpaFL, 0.0), out_dir)?,
+    ];
+    print_summaries(
+        &format!("Strategy comparison ({dataset}, IID, {clients} devices, {rounds} rounds)"),
+        &curves,
+    );
+    print_series(&curves);
+    let json = compare_json(&curves);
+    if out_dir.is_empty() {
+        println!("\n# compare.json\n{json}");
+    } else {
+        let path = format!("{out_dir}/compare.json");
+        std::fs::write(&path, &json)?;
+        println!("\nwrote {path}");
+    }
+    Ok(curves)
+}
+
+/// Hand-rolled JSON for the comparison (anyhow is the crate's only
+/// dependency — no serde): an array of per-strategy objects, each the
+/// accuracy/Bpp/storage point that strategy reached under the shared
+/// budget.
+fn compare_json(curves: &[Curve]) -> String {
+    let mut out = String::from("[\n");
+    for (i, c) in curves.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"strategy\": \"{}\", \"final_accuracy\": {:.6}, \
+             \"avg_est_bpp\": {:.6}, \"avg_coded_bpp\": {:.6}, \
+             \"avg_dl_bpp\": {:.6}, \"total_ul_mb\": {:.6}, \
+             \"total_dl_mb\": {:.6}, \"storage_bits\": {}, \"rounds\": {}}}{}\n",
+            c.label,
+            c.summary.final_accuracy,
+            c.summary.avg_est_bpp,
+            c.summary.avg_coded_bpp,
+            c.summary.avg_dl_bpp,
+            c.summary.total_ul_mb,
+            c.summary.total_dl_mb,
+            c.summary.storage_bits,
+            c.summary.rounds,
+            if i + 1 < curves.len() { "," } else { "" }
+        ));
+    }
+    out.push(']');
+    out
+}
+
 /// Sec. IV text numbers: per-dataset IID Bpp savings of reg vs FedPM.
 pub fn summary_table(curves_by_dataset: &[(String, Vec<Curve>)]) {
     println!("\n## Paper-vs-measured summary (sec. IV text numbers)");
@@ -213,5 +291,36 @@ pub fn summary_table(curves_by_dataset: &[(String, Vec<Curve>)]) {
             base.summary.avg_est_bpp - reg.summary.avg_est_bpp,
             reg.summary.final_accuracy - base.summary.final_accuracy,
         );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compare_json_is_well_formed() {
+        let mk = |label: &str, acc: f64, bpp: f64| Curve {
+            label: label.into(),
+            summary: RunSummary {
+                algorithm: label.into(),
+                final_accuracy: acc,
+                avg_est_bpp: bpp,
+                avg_coded_bpp: bpp,
+                avg_dl_bpp: 32.0,
+                total_ul_mb: 1.0,
+                total_dl_mb: 2.0,
+                storage_bits: 64,
+                rounds: 3,
+            },
+            series: vec![(1, acc, bpp, bpp)],
+        };
+        let json = compare_json(&[mk("fedavg", 0.9, 32.0), mk("spafl", 0.8, 0.005)]);
+        assert!(json.starts_with('[') && json.ends_with(']'));
+        assert_eq!(json.matches("\"strategy\"").count(), 2);
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches("},").count(), 1, "one separator between two objects");
+        assert!(!json.contains(",\n]"), "no trailing comma before the closing bracket");
+        assert!(json.contains("\"avg_est_bpp\": 0.005000"));
     }
 }

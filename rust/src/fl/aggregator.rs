@@ -1,9 +1,10 @@
 //! Hierarchical edge-tier aggregation (DESIGN.md §Fleet).
 //!
 //! At fleet scale a single server folding every uplink is a fan-in
-//! bottleneck. All three strategies' round states are associative sums —
-//! eq. 8 weighted mask sums, MV-SignSGD sign tallies, FedAvg weighted
-//! averages — so a cohort can be split across edge aggregators that each
+//! bottleneck. Every strategy's round state is an associative sum —
+//! eq. 8 weighted mask sums (FedPM family and FedMRN's noise masks),
+//! MV-SignSGD sign tallies, FedAvg weighted averages, SpaFL's weighted
+//! per-filter threshold sums — so a cohort can be split across edge aggregators that each
 //! fold their slice into one O(n_params) accumulator and ship a single
 //! merged [`AggregateMsg`] envelope upstream. The top-tier fold of those
 //! partial sums is bit-identical to the flat ordered fold whenever the
@@ -29,6 +30,8 @@ use super::protocol::{UplinkMsg, UplinkPayload, PROTOCOL_VERSION, PROTOCOL_VERSI
 const AGG_MASK_SUM: u8 = 0;
 const AGG_SIGN_TALLY: u8 = 1;
 const AGG_DENSE_SUM: u8 = 2;
+const AGG_NOISE_MASK_SUM: u8 = 3;
+const AGG_THRESHOLD_SUM: u8 = 4;
 
 /// Aggregate envelope header: version + kind bytes, u32 sum count, then
 /// f64 weight_sum, f64 loss_sum, u64 reporters, u64 ul_bits and
@@ -44,6 +47,12 @@ pub enum AggKind {
     SignTally,
     /// FedAvg: per-parameter sum of |D_i| × local weight.
     DenseSum,
+    /// FedMRN: per-parameter sum of |D_i| × noise-mask bit (v2 wire
+    /// kind; identical arithmetic to `MaskSum`, distinct payload).
+    NoiseMaskSum,
+    /// SpaFL: per-FILTER sum of |D_i| × threshold — the accumulator is
+    /// O(n_filters), not O(n_params), sized lazily from the first fold.
+    ThresholdSum,
 }
 
 impl AggKind {
@@ -52,6 +61,8 @@ impl AggKind {
             AggKind::MaskSum => AGG_MASK_SUM,
             AggKind::SignTally => AGG_SIGN_TALLY,
             AggKind::DenseSum => AGG_DENSE_SUM,
+            AggKind::NoiseMaskSum => AGG_NOISE_MASK_SUM,
+            AggKind::ThresholdSum => AGG_THRESHOLD_SUM,
         }
     }
 }
@@ -136,8 +147,16 @@ impl AggregateMsg {
             AGG_MASK_SUM => AggKind::MaskSum,
             AGG_SIGN_TALLY => AggKind::SignTally,
             AGG_DENSE_SUM => AggKind::DenseSum,
+            AGG_NOISE_MASK_SUM => AggKind::NoiseMaskSum,
+            AGG_THRESHOLD_SUM => AggKind::ThresholdSum,
             other => bail!("unknown aggregate kind {other}"),
         };
+        ensure!(
+            bytes[0] >= 2 || bytes[1] < AGG_NOISE_MASK_SUM,
+            "aggregate kind {} requires protocol v2, envelope is v{}",
+            bytes[1],
+            bytes[0]
+        );
         let n = u32::from_le_bytes(bytes[2..6].try_into()?) as usize;
         ensure!(
             bytes.len() == AGG_HEAD + 8 * n,
@@ -178,6 +197,9 @@ impl AggregateMsg {
 pub struct EdgeAggregator {
     kind: AggKind,
     acc: Vec<f64>,
+    /// Model parameter count (Bpp denominator; for `ThresholdSum` this
+    /// differs from the accumulator length).
+    n_params: usize,
     weight_sum: f64,
     loss_sum: f64,
     reporters: u64,
@@ -187,9 +209,14 @@ pub struct EdgeAggregator {
 
 impl EdgeAggregator {
     pub fn new(kind: AggKind, n_params: usize) -> Self {
+        // A ThresholdSum edge folds O(n_filters) sums, a count only the
+        // strategy knows — size the accumulator lazily from the first
+        // folded payload instead of from n_params.
+        let acc = if kind == AggKind::ThresholdSum { Vec::new() } else { vec![0.0; n_params] };
         Self {
             kind,
-            acc: vec![0.0; n_params],
+            acc,
+            n_params,
             weight_sum: 0.0,
             loss_sum: 0.0,
             reporters: 0,
@@ -238,6 +265,32 @@ impl EdgeAggregator {
                     *a += w * x as f64;
                 }
                 self.est_bpp_sum += 32.0;
+            }
+            (AggKind::NoiseMaskSum, UplinkPayload::NoiseMask(enc)) => {
+                let mask = compress::decode(enc, n)?;
+                self.est_bpp_sum += empirical_bpp(&mask);
+                for (a, bit) in self.acc.iter_mut().zip(mask.iter()) {
+                    if bit {
+                        *a += w;
+                    }
+                }
+            }
+            (AggKind::ThresholdSum, UplinkPayload::Thresholds(v)) => {
+                if self.acc.is_empty() && self.reporters == 0 {
+                    self.acc = vec![0.0; v.len()];
+                }
+                ensure!(
+                    v.len() == self.acc.len(),
+                    "thresholds uplink carries {} filters, edge expects {}",
+                    v.len(),
+                    self.acc.len()
+                );
+                for (a, &t) in self.acc.iter_mut().zip(v) {
+                    *a += w * t as f64;
+                }
+                // Same expression as the flat fold's estimate, so the
+                // upstream est-Bpp totals match bit for bit.
+                self.est_bpp_sum += 32.0 * v.len() as f64 / self.n_params.max(1) as f64;
             }
             (kind, payload) => bail!(
                 "edge aggregator for {kind:?} cannot fold a {} uplink",
@@ -351,6 +404,73 @@ mod tests {
         };
         assert!(edge.fold(&up, 1, 1.0).is_err());
         assert_eq!(edge.reporters(), 0, "rejected uplinks must not be accounted");
+    }
+
+    #[test]
+    fn noise_mask_edge_folds_like_mask_sum() {
+        let mut edge = EdgeAggregator::new(AggKind::NoiseMaskSum, 4);
+        let m = BitVec::from_bools(&[true, true, false, false]);
+        let up = UplinkMsg {
+            weight: 3.0,
+            train_loss: 0.5,
+            trained_round: UplinkMsg::FRESH,
+            payload: UplinkPayload::NoiseMask(compress::encode(&m)),
+        };
+        edge.fold(&up, 1, 1.0).unwrap();
+        let msg = edge.finish();
+        assert_eq!(msg.kind, AggKind::NoiseMaskSum);
+        assert_eq!(msg.acc, vec![3.0, 3.0, 0.0, 0.0]);
+        let back = AggregateMsg::from_bytes(&msg.to_bytes()).unwrap();
+        assert_eq!(back, msg);
+        // a coded-mask uplink must not fold into a noise-mask edge
+        let wrong = UplinkMsg {
+            payload: UplinkPayload::CodedMask(compress::encode(&m)),
+            ..up.clone()
+        };
+        assert!(edge.fold(&wrong, 1, 1.0).is_err());
+    }
+
+    #[test]
+    fn threshold_edge_sizes_lazily_and_roundtrips() {
+        // n_params = 100, but the strategy folds 3 per-filter sums
+        let mut edge = EdgeAggregator::new(AggKind::ThresholdSum, 100);
+        let up = |tau: Vec<f32>, w: f64| UplinkMsg {
+            weight: w,
+            train_loss: 0.5,
+            trained_round: UplinkMsg::FRESH,
+            payload: UplinkPayload::Thresholds(tau),
+        };
+        edge.fold(&up(vec![0.5, 0.25, 0.0], 2.0), 1, 1.0).unwrap();
+        edge.fold(&up(vec![0.25, 0.5, 1.0], 2.0), 1, 1.0).unwrap();
+        // a filter-count mismatch after sizing must be rejected
+        assert!(edge.fold(&up(vec![0.5; 4], 1.0), 1, 1.0).is_err());
+        let msg = edge.finish();
+        assert_eq!(msg.kind, AggKind::ThresholdSum);
+        assert_eq!(msg.acc, vec![1.5, 1.5, 2.0]);
+        assert_eq!(msg.reporters, 2);
+        // est Bpp carries the n_params denominator, not n_filters
+        assert!((msg.est_bpp_sum - 2.0 * 32.0 * 3.0 / 100.0).abs() < 1e-15);
+        let back = AggregateMsg::from_bytes(&msg.to_bytes()).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn v2_only_aggregate_kinds_reject_a_v1_stamp() {
+        let mut edge = EdgeAggregator::new(AggKind::ThresholdSum, 10);
+        let up = UplinkMsg {
+            weight: 1.0,
+            train_loss: 0.0,
+            trained_round: UplinkMsg::FRESH,
+            payload: UplinkPayload::Thresholds(vec![0.5]),
+        };
+        edge.fold(&up, 1, 1.0).unwrap();
+        let mut bytes = edge.finish().to_bytes();
+        assert!(AggregateMsg::from_bytes(&bytes).is_ok());
+        bytes[0] = 1;
+        assert!(
+            AggregateMsg::from_bytes(&bytes).is_err(),
+            "a v1 envelope cannot carry a v2-only aggregate kind"
+        );
     }
 
     #[test]

@@ -29,6 +29,12 @@
 //! (`tests/transport_e2e.rs`): every schedule ends in a bit-identical
 //! run summary or a typed dropout/reconnect/error — never a hang, a
 //! panic, or a silently wrong aggregate.
+//!
+//! Audit policy: intentionally unannotated — this is the fault
+//! *injector*, test-harness-only code that deliberately corrupts I/O;
+//! it parses nothing and contributes nothing to any aggregate. The
+//! modules it attacks (`fl/transport.rs`, `fl/session.rs`) carry the
+//! real `wire-decode` policies.
 
 use std::io::{Error, ErrorKind, Read, Result, Write};
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -33,18 +33,22 @@
 //! Uplinks are synthesized, not trained: integer `|D_i|` weights and
 //! 0/1 / ±1 / dyadic-grid payloads keep every fold grouping-exact (see
 //! DESIGN.md §Fleet), so the simulator doubles as the determinism and
-//! hierarchy-equivalence test bed for all three strategy families.
+//! hierarchy-equivalence test bed for every strategy family.
 //!
 //! audit: deterministic
 
 use anyhow::{ensure, Result};
 
-use crate::algos::{EvalModel, FedAvg, MaskMode, MaskStrategy, ServerLogic, SignSgd};
+use crate::algos::spafl::filters_from_layers;
+use crate::algos::{
+    EvalModel, FedAvg, FedMrn, MaskMode, MaskStrategy, ServerLogic, SignSgd, SpaFl,
+};
 use crate::compress::{self, DownlinkMode};
 use crate::config::{Aggregation, Algorithm};
 use crate::fl::aggregator::{AggKind, AggregateMsg, EdgeAggregator};
 use crate::fl::protocol::{RoundPlan, UplinkMsg, UplinkPayload};
 use crate::fl::{Participation, RoundComm};
+use crate::mask::{LayerSlice, LayerSpec};
 use crate::util::{BitVec, SeedSequence, Xoshiro256};
 
 /// Per-device compute latency in **virtual ticks**: a device sampled
@@ -166,8 +170,29 @@ fn build_sim_server(opts: &FleetOpts) -> Box<dyn ServerLogic> {
         Algorithm::FedAvg => Box::new(FedAvg::new(sim_dense(n, opts.seed), DownlinkMode::Float32)),
         Algorithm::FedMask => Box::new(MaskStrategy::new(n, opts.seed, MaskMode::Deterministic)),
         Algorithm::TopK => Box::new(MaskStrategy::new(n, opts.seed, MaskMode::TopK { frac: 0.3 })),
-        _ => Box::new(MaskStrategy::new(n, opts.seed, MaskMode::Stochastic)),
+        Algorithm::FedMRN => Box::new(FedMrn::new(n, opts.seed)),
+        Algorithm::SpaFL => Box::new(SpaFl::new(
+            sim_dense(n, opts.seed),
+            &sim_layers(n),
+            DownlinkMode::Float32,
+        )),
+        Algorithm::FedPMReg | Algorithm::FedPM => {
+            Box::new(MaskStrategy::new(n, opts.seed, MaskMode::Stochastic))
+        }
     }
+}
+
+/// The simulated model's layer telemetry: one Dense block so SpaFL has
+/// real column filters (8 strided columns when `n` divides; one
+/// whole-row column otherwise). Shared by the sim server and
+/// [`synth_uplink`] so the filter counts always agree.
+fn sim_layers(n: usize) -> Vec<LayerSlice> {
+    let spec = if n >= 8 && n % 8 == 0 {
+        LayerSpec::Dense { k: n / 8, n: 8 }
+    } else {
+        LayerSpec::Dense { k: 1, n }
+    };
+    vec![LayerSlice { index: 0, spec, offset: 0 }]
 }
 
 /// Seeded dyadic-grid floats in [-1, 1): exactly representable, so
@@ -198,6 +223,19 @@ fn synth_uplink(kind: AggKind, n: usize, seed: u64, device: u64, round: usize) -
         AggKind::DenseSum => {
             let w = (0..n).map(|_| (rng.below(2048) as f32 - 1024.0) / 1024.0).collect();
             UplinkPayload::DenseDelta(w)
+        }
+        AggKind::NoiseMaskSum => {
+            // density 1/2 keeps the folded theta straddling the 0.5 eval
+            // threshold, so the final mask (and digest) stays seed-rich
+            let m = BitVec::from_iter_len((0..n).map(|_| rng.next_f64() < 0.5), n);
+            UplinkPayload::NoiseMask(compress::encode(&m))
+        }
+        AggKind::ThresholdSum => {
+            // one non-negative dyadic threshold per simulated filter —
+            // exact under weighted f64 folds, like every other payload
+            let n_filters = filters_from_layers(&sim_layers(n), n).len();
+            let tau = (0..n_filters).map(|_| rng.below(1024) as f32 / 1024.0).collect();
+            UplinkPayload::Thresholds(tau)
         }
     };
     UplinkMsg { weight, train_loss, trained_round: round as u64, payload }
@@ -370,7 +408,13 @@ mod tests {
 
     #[test]
     fn same_opts_same_report_bit_for_bit() {
-        for algo in [Algorithm::FedPMReg, Algorithm::SignSGD, Algorithm::FedAvg] {
+        for algo in [
+            Algorithm::FedPMReg,
+            Algorithm::SignSGD,
+            Algorithm::FedAvg,
+            Algorithm::FedMRN,
+            Algorithm::SpaFL,
+        ] {
             for agg in [Aggregation::Sync, Aggregation::Buffered { k: 64 }] {
                 let mut o = opts(algo);
                 o.aggregation = agg;
@@ -407,7 +451,13 @@ mod tests {
 
     #[test]
     fn edge_tier_is_bit_identical_to_flat_folds() {
-        for algo in [Algorithm::FedPMReg, Algorithm::SignSGD, Algorithm::FedAvg] {
+        for algo in [
+            Algorithm::FedPMReg,
+            Algorithm::SignSGD,
+            Algorithm::FedAvg,
+            Algorithm::FedMRN,
+            Algorithm::SpaFL,
+        ] {
             let flat = opts(algo);
             let mut edged = flat.clone();
             edged.edges = 7;

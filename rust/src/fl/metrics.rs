@@ -3,6 +3,12 @@
 //! Dependency-free JSON emission (flat records only — nothing here needs
 //! nesting). One record per round is the contract the figure harnesses
 //! and the plotting snippets in EXPERIMENTS.md consume.
+//!
+//! Audit policy: intentionally unannotated. This module only *emits*
+//! bytes — it never parses untrusted input (no `wire-decode` surface)
+//! and never feeds a value back into aggregation (no `deterministic`
+//! obligation). Protocol role: observer of round outcomes, downstream
+//! of [`crate::fl::comm`]'s accounting.
 
 use std::fmt::Write as _;
 use std::fs::File;

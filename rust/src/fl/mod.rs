@@ -10,6 +10,16 @@
 //! rounds across independent server/device processes (`fedsrn serve` /
 //! `fedsrn device` — DESIGN.md §Transport), bit-identical to the
 //! in-process path.
+//!
+//! Audit policy map (DESIGN.md §Static-analysis; enforced by
+//! `fedsrn audit`): the modules that parse untrusted bytes —
+//! [`protocol`], [`transport`], [`aggregator`] — carry
+//! `//! audit: wire-decode, deterministic`; [`session`]'s readiness
+//! loop carries `panic-free` (its parse regions are fenced); the
+//! aggregate-affecting state modules — [`client`], [`comm`], [`fleet`],
+//! [`participation`] — carry `deterministic`. [`chaos`], [`metrics`],
+//! and [`server`] are intentionally unannotated; each states why in its
+//! own module doc.
 
 pub mod aggregator;
 pub mod chaos;

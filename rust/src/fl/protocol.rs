@@ -11,11 +11,15 @@
 //!
 //! * **Downlink** — one broadcast per round: raw f32 weights (the dense
 //!   baselines), a coded delta frame (`downlink=qdelta`, a link in the
-//!   stateful chain of DESIGN.md §Downlink), or a theta broadcast (the
-//!   mask family's global probability mask).
+//!   stateful chain of DESIGN.md §Downlink), a theta broadcast (the
+//!   mask family's global probability mask), or a noise-theta broadcast
+//!   (FedMRN: theta plus the frozen-noise seed the device expands
+//!   locally — the noise tensor itself never crosses the wire).
 //! * **Uplink** — one envelope per device: an entropy-coded binary mask
-//!   (FedPM family), a coded sign vector (MV-SignSGD), or a dense f32
-//!   delta (FedAvg), plus the |D_i| aggregation weight and the local
+//!   (FedPM family), a coded sign vector (MV-SignSGD), a dense f32
+//!   delta (FedAvg), a coded mask over frozen noise (FedMRN), or a
+//!   per-filter pruning-threshold vector (SpaFL, orders of magnitude
+//!   below 1 Bpp), plus the |D_i| aggregation weight and the local
 //!   train loss the server folds into its round stats.
 //! * **[`RoundPlan`]** — the typed per-round hyperparameter set the
 //!   server side owns (replaces the old `RoundCtx` grab-bag); it is
@@ -45,10 +49,16 @@ pub const PROTOCOL_VERSION_MIN: u8 = 1;
 const DL_RAW_F32: u8 = 0;
 const DL_FRAME: u8 = 1;
 const DL_THETA: u8 = 2;
+/// v2-only: theta + frozen-noise seed (FedMRN).
+const DL_NOISE_THETA: u8 = 3;
 
 const UL_CODED_MASK: u8 = 0;
 const UL_SIGN_VECTOR: u8 = 1;
 const UL_DENSE_DELTA: u8 = 2;
+/// v2-only: coded mask over frozen noise (FedMRN).
+const UL_NOISE_MASK: u8 = 3;
+/// v2-only: per-filter pruning thresholds (SpaFL).
+const UL_THRESHOLDS: u8 = 4;
 
 /// Envelope header size shared by both directions: version + kind bytes.
 const ENVELOPE_HEAD: usize = 2;
@@ -103,6 +113,18 @@ pub enum DownlinkMsg {
     /// The mask family's global probability mask theta in [0,1]^n
     /// (`downlink=float32`).
     Theta(Vec<f32>),
+    /// FedMRN's broadcast (v2-only): the global mask probabilities plus
+    /// the seed of the frozen noise tensor the mask selects from. The
+    /// reconstruction contract differs from [`DownlinkMsg::Theta`]: the
+    /// device expands `noise_seed` into the full noise tensor locally
+    /// (`algos::fedmrn::noise_from_seed`), so the n-element noise vector
+    /// never crosses the wire — only its 8-byte seed does.
+    NoiseTheta {
+        /// Seed of the frozen noise tensor shared by server and fleet.
+        noise_seed: u64,
+        /// Global mask probabilities in [0,1]^n.
+        theta: Vec<f32>,
+    },
 }
 
 impl DownlinkMsg {
@@ -124,6 +146,7 @@ impl DownlinkMsg {
             DownlinkMsg::RawF32(_) => "raw_f32",
             DownlinkMsg::Frame(_) => "frame",
             DownlinkMsg::Theta(_) => "theta",
+            DownlinkMsg::NoiseTheta { .. } => "noise_theta",
         }
     }
 
@@ -132,6 +155,7 @@ impl DownlinkMsg {
         match self {
             DownlinkMsg::RawF32(v) | DownlinkMsg::Theta(v) => v.len(),
             DownlinkMsg::Frame(f) => f.n(),
+            DownlinkMsg::NoiseTheta { theta, .. } => theta.len(),
         }
     }
 
@@ -141,6 +165,7 @@ impl DownlinkMsg {
         match self {
             DownlinkMsg::RawF32(v) | DownlinkMsg::Theta(v) => ENVELOPE_HEAD + 4 + 4 * v.len(),
             DownlinkMsg::Frame(f) => ENVELOPE_HEAD + 4 + f.wire_bytes(),
+            DownlinkMsg::NoiseTheta { theta, .. } => ENVELOPE_HEAD + 8 + 4 + 4 * theta.len(),
         }
     }
 
@@ -168,6 +193,11 @@ impl DownlinkMsg {
                 out.push(DL_THETA);
                 put_f32s(&mut out, v);
             }
+            DownlinkMsg::NoiseTheta { noise_seed, theta } => {
+                out.push(DL_NOISE_THETA);
+                out.extend_from_slice(&noise_seed.to_le_bytes());
+                put_f32s(&mut out, theta);
+            }
         }
         out
     }
@@ -178,6 +208,14 @@ impl DownlinkMsg {
     /// is an error — truncated or corrupt envelopes never decode.
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let kind = check_header(bytes, "downlink")?;
+        // Kinds introduced with v2 never decode from a v1-stamped
+        // envelope — a v1 peer cannot have produced them, so the stamp
+        // is corruption, not back-compat.
+        ensure!(
+            bytes[0] >= 2 || kind < DL_NOISE_THETA,
+            "downlink kind {kind} requires protocol v2, envelope is v{}",
+            bytes[0]
+        );
         let body = &bytes[ENVELOPE_HEAD..];
         match kind {
             DL_RAW_F32 => {
@@ -208,6 +246,16 @@ impl DownlinkMsg {
                     DownlinkFrame::from_bytes(&body[4..]).context("downlink frame body")?;
                 Ok(DownlinkMsg::Frame(frame))
             }
+            DL_NOISE_THETA => {
+                ensure!(body.len() >= 8, "noise-theta downlink seed field truncated");
+                let noise_seed = u64::from_le_bytes(bytes[2..10].try_into()?);
+                let theta = take_f32s(&body[8..], "noise-theta downlink")?;
+                ensure!(
+                    theta.iter().all(|t| t.is_finite() && (0.0..=1.0).contains(t)),
+                    "noise-theta downlink carries values outside [0,1]"
+                );
+                Ok(DownlinkMsg::NoiseTheta { noise_seed, theta })
+            }
             other => bail!("unknown downlink message kind {other}"),
         }
     }
@@ -217,7 +265,9 @@ impl DownlinkMsg {
     /// previous broadcast; stateless kinds only check it for shape.
     pub fn decode_state(&self, prev: Option<&[f32]>) -> Result<Vec<f32>> {
         match self {
-            DownlinkMsg::RawF32(v) | DownlinkMsg::Theta(v) => {
+            DownlinkMsg::RawF32(v)
+            | DownlinkMsg::Theta(v)
+            | DownlinkMsg::NoiseTheta { theta: v, .. } => {
                 if let Some(p) = prev {
                     ensure!(
                         p.len() == v.len(),
@@ -242,6 +292,15 @@ pub enum UplinkPayload {
     SignVector(Encoded),
     /// Dense f32 local model (FedAvg, the 32 Bpp reference point).
     DenseDelta(Vec<f32>),
+    /// Entropy-coded binary mask over the frozen noise tensor (FedMRN,
+    /// v2-only). Same coded layout as [`UplinkPayload::CodedMask`] but a
+    /// distinct kind: the bits select noise entries, not magnitudes, and
+    /// only a [`DownlinkMsg::NoiseTheta`]-speaking server may fold it.
+    NoiseMask(Encoded),
+    /// Per-filter pruning thresholds (SpaFL, v2-only): one finite
+    /// non-negative f32 per filter of the layer graph — orders of
+    /// magnitude fewer entries than the model has parameters.
+    Thresholds(Vec<f32>),
 }
 
 impl UplinkPayload {
@@ -250,6 +309,8 @@ impl UplinkPayload {
             UplinkPayload::CodedMask(_) => "coded_mask",
             UplinkPayload::SignVector(_) => "sign_vector",
             UplinkPayload::DenseDelta(_) => "dense_delta",
+            UplinkPayload::NoiseMask(_) => "noise_mask",
+            UplinkPayload::Thresholds(_) => "thresholds",
         }
     }
 }
@@ -282,10 +343,10 @@ impl UplinkMsg {
     pub fn wire_bytes(&self) -> usize {
         UPLINK_HEAD
             + match &self.payload {
-                UplinkPayload::CodedMask(e) | UplinkPayload::SignVector(e) => {
-                    4 + e.wire_bytes()
-                }
-                UplinkPayload::DenseDelta(v) => 4 + 4 * v.len(),
+                UplinkPayload::CodedMask(e)
+                | UplinkPayload::SignVector(e)
+                | UplinkPayload::NoiseMask(e) => 4 + e.wire_bytes(),
+                UplinkPayload::DenseDelta(v) | UplinkPayload::Thresholds(v) => 4 + 4 * v.len(),
             }
     }
 
@@ -301,19 +362,25 @@ impl UplinkMsg {
             UplinkPayload::CodedMask(_) => UL_CODED_MASK,
             UplinkPayload::SignVector(_) => UL_SIGN_VECTOR,
             UplinkPayload::DenseDelta(_) => UL_DENSE_DELTA,
+            UplinkPayload::NoiseMask(_) => UL_NOISE_MASK,
+            UplinkPayload::Thresholds(_) => UL_THRESHOLDS,
         };
         out.push(kind);
         out.extend_from_slice(&self.weight.to_le_bytes());
         out.extend_from_slice(&self.train_loss.to_le_bytes());
         out.extend_from_slice(&self.trained_round.to_le_bytes());
         match &self.payload {
-            UplinkPayload::CodedMask(e) | UplinkPayload::SignVector(e) => {
+            UplinkPayload::CodedMask(e)
+            | UplinkPayload::SignVector(e)
+            | UplinkPayload::NoiseMask(e) => {
                 let eb = e.to_bytes();
                 // audit:checked(a coded mask is at most ~n/8 bytes, far below 2^32)
                 out.extend_from_slice(&(eb.len() as u32).to_le_bytes());
                 out.extend_from_slice(&eb);
             }
-            UplinkPayload::DenseDelta(v) => put_f32s(&mut out, v),
+            UplinkPayload::DenseDelta(v) | UplinkPayload::Thresholds(v) => {
+                put_f32s(&mut out, v)
+            }
         }
         out
     }
@@ -324,6 +391,13 @@ impl UplinkMsg {
     /// own headers through [`Encoded::from_bytes`]).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let kind = check_header(bytes, "uplink")?;
+        // v2-introduced kinds (noise mask, thresholds) never decode from
+        // a v1-stamped envelope: no v1 peer could have produced them.
+        ensure!(
+            bytes[0] >= 2 || kind < UL_NOISE_MASK,
+            "uplink kind {kind} requires protocol v2, envelope is v{}",
+            bytes[0]
+        );
         let head = if bytes[0] >= 2 { UPLINK_HEAD } else { UPLINK_HEAD_V1 };
         ensure!(bytes.len() >= head, "uplink header truncated ({} bytes)", bytes.len());
         let weight = f64::from_le_bytes(bytes[2..10].try_into()?);
@@ -340,7 +414,7 @@ impl UplinkMsg {
             (Self::FRESH, &bytes[UPLINK_HEAD_V1..])
         };
         let payload = match kind {
-            UL_CODED_MASK | UL_SIGN_VECTOR => {
+            UL_CODED_MASK | UL_SIGN_VECTOR | UL_NOISE_MASK => {
                 ensure!(body.len() >= 4, "uplink payload length field truncated");
                 let elen = u32::from_le_bytes(body[..4].try_into()?) as usize;
                 ensure!(
@@ -349,10 +423,10 @@ impl UplinkMsg {
                     body.len() - 4
                 );
                 let enc = Encoded::from_bytes(&body[4..]).context("uplink coded payload")?;
-                if kind == UL_CODED_MASK {
-                    UplinkPayload::CodedMask(enc)
-                } else {
-                    UplinkPayload::SignVector(enc)
+                match kind {
+                    UL_CODED_MASK => UplinkPayload::CodedMask(enc),
+                    UL_SIGN_VECTOR => UplinkPayload::SignVector(enc),
+                    _ => UplinkPayload::NoiseMask(enc),
                 }
             }
             UL_DENSE_DELTA => {
@@ -362,6 +436,14 @@ impl UplinkMsg {
                     "dense uplink carries non-finite values"
                 );
                 UplinkPayload::DenseDelta(values)
+            }
+            UL_THRESHOLDS => {
+                let values = take_f32s(body, "thresholds uplink")?;
+                ensure!(
+                    values.iter().all(|v| v.is_finite() && *v >= 0.0),
+                    "thresholds uplink carries negative or non-finite values"
+                );
+                UplinkPayload::Thresholds(values)
             }
             other => bail!("unknown uplink message kind {other}"),
         };
@@ -485,6 +567,7 @@ mod tests {
             DownlinkMsg::Theta(theta.clone()),
             DownlinkMsg::RawF32(weights.clone()),
             DownlinkMsg::Frame(frame.clone()),
+            DownlinkMsg::NoiseTheta { noise_seed: 0xDEAD_BEEF, theta: theta.clone() },
         ] {
             let bytes = msg.to_bytes();
             assert_eq!(bytes.len(), msg.wire_bytes(), "{}", msg.kind_name());
@@ -509,10 +592,13 @@ mod tests {
         let mask = BitVec::from_iter_len((0..900).map(|i| i % 7 == 0), 900);
         let enc = compress::encode(&mask);
         let dense: Vec<f32> = uniform(300, 5).iter().map(|v| v - 0.5).collect();
+        let thresholds: Vec<f32> = uniform(24, 6);
         for payload in [
             UplinkPayload::CodedMask(enc.clone()),
             UplinkPayload::SignVector(enc.clone()),
             UplinkPayload::DenseDelta(dense.clone()),
+            UplinkPayload::NoiseMask(enc.clone()),
+            UplinkPayload::Thresholds(thresholds.clone()),
         ] {
             let msg = UplinkMsg { weight: 37.0, train_loss: 1.25, trained_round: 12, payload };
             let bytes = msg.to_bytes();
@@ -524,11 +610,13 @@ mod tests {
             assert_eq!(back.payload.kind_name(), msg.payload.kind_name());
             match (&back.payload, &msg.payload) {
                 (UplinkPayload::CodedMask(a), UplinkPayload::CodedMask(b))
-                | (UplinkPayload::SignVector(a), UplinkPayload::SignVector(b)) => {
+                | (UplinkPayload::SignVector(a), UplinkPayload::SignVector(b))
+                | (UplinkPayload::NoiseMask(a), UplinkPayload::NoiseMask(b)) => {
                     assert_eq!(a.to_bytes(), b.to_bytes());
                     assert_eq!(compress::decode(a, mask.len()).unwrap(), mask);
                 }
-                (UplinkPayload::DenseDelta(a), UplinkPayload::DenseDelta(b)) => {
+                (UplinkPayload::DenseDelta(a), UplinkPayload::DenseDelta(b))
+                | (UplinkPayload::Thresholds(a), UplinkPayload::Thresholds(b)) => {
                     assert_eq!(bits_of(a), bits_of(b));
                 }
                 _ => unreachable!(),
@@ -603,6 +691,68 @@ mod tests {
                 payload: UplinkPayload::DenseDelta(vec![0.0; 2]),
             };
             assert!(UplinkMsg::from_bytes(&msg.to_bytes()).is_err(), "weight={weight}");
+        }
+        // thresholds must be finite and non-negative
+        for bad in [-0.5f32, f32::NAN] {
+            let msg = UplinkMsg {
+                weight: 1.0,
+                train_loss: 0.0,
+                trained_round: UplinkMsg::FRESH,
+                payload: UplinkPayload::Thresholds(vec![0.25, bad]),
+            };
+            assert!(UplinkMsg::from_bytes(&msg.to_bytes()).is_err(), "threshold={bad}");
+        }
+        // noise-theta values obey the theta range contract
+        let bad = DownlinkMsg::NoiseTheta { noise_seed: 1, theta: vec![0.5, 2.0] };
+        assert!(DownlinkMsg::from_bytes(&bad.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn noise_theta_carries_the_seed_across_the_wire() {
+        let msg = DownlinkMsg::NoiseTheta { noise_seed: 0x5EED_CAFE, theta: uniform(33, 9) };
+        match DownlinkMsg::from_bytes(&msg.to_bytes()).unwrap() {
+            DownlinkMsg::NoiseTheta { noise_seed, theta } => {
+                assert_eq!(noise_seed, 0x5EED_CAFE);
+                assert_eq!(theta.len(), 33);
+                // decode_state yields theta and shape-checks prev
+                let state = msg.decode_state(Some(&[0.0; 33])).unwrap();
+                assert_eq!(bits_of(&state), bits_of(&theta));
+                assert!(msg.decode_state(Some(&[0.0; 32])).is_err());
+            }
+            other => panic!("wrong kind {}", other.kind_name()),
+        }
+    }
+
+    #[test]
+    fn v2_only_kinds_reject_a_v1_stamp() {
+        // A v1 peer cannot emit noise-theta / noise-mask / thresholds:
+        // a v1-stamped envelope of those kinds must be a decode error,
+        // never a silent reinterpretation under the v1 head layout.
+        let mut dl =
+            DownlinkMsg::NoiseTheta { noise_seed: 3, theta: vec![0.5; 4] }.to_bytes();
+        dl[0] = 1;
+        assert!(DownlinkMsg::from_bytes(&dl).is_err());
+        for payload in [
+            UplinkPayload::NoiseMask(compress::encode(&BitVec::zeros(64))),
+            UplinkPayload::Thresholds(vec![0.1, 0.2]),
+        ] {
+            let v2 = UplinkMsg {
+                weight: 2.0,
+                train_loss: 0.25,
+                trained_round: 7,
+                payload,
+            }
+            .to_bytes();
+            // v1 splice: drop the trained_round tag, restamp the version
+            let mut v1 = Vec::with_capacity(v2.len() - 8);
+            v1.extend_from_slice(&v2[..14]);
+            v1.extend_from_slice(&v2[22..]);
+            v1[0] = 1;
+            assert!(UplinkMsg::from_bytes(&v1).is_err());
+            // a bare restamp (v2 length, v1 version byte) errors too
+            let mut restamped = v2.clone();
+            restamped[0] = 1;
+            assert!(UplinkMsg::from_bytes(&restamped).is_err());
         }
     }
 

@@ -4,6 +4,14 @@
 //! masks, and produces the evaluation masks. The server never sees raw
 //! client data — only coded masks — mirroring the paper's privacy
 //! setting.
+//!
+//! Audit policy: intentionally unannotated. Untrusted bytes are decoded
+//! and validated one layer down (`fl/protocol.rs`, `compress/`, both
+//! under `wire-decode`); by the time this module runs, every input is a
+//! typed, validated value. Determinism is enforced structurally — the
+//! only collections here are `Vec`s folded in arrival order — and
+//! proven end-to-end by `tests/engine_determinism.rs`. Protocol role:
+//! the mask-family server state behind [`crate::algos::MaskStrategy`].
 
 use anyhow::{bail, ensure, Result};
 

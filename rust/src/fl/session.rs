@@ -1016,7 +1016,8 @@ pub fn run_device(cfg: &ExperimentConfig, opts: &DeviceOpts) -> Result<DeviceRep
     let mut client = Client::new(shard, derive_client_seed(cfg.seed, opts.device_id));
     // The pure device half of the strategy; the throwaway server object
     // only exists to hand it out.
-    let task = build_server(cfg, rt.manifest.n_params, rt.weights()).client_task();
+    let task = build_server(cfg, rt.manifest.n_params, rt.weights(), &rt.manifest.layers)
+        .client_task();
     let participation = Participation::new(cfg.participation, cfg.dropout);
     let fingerprint = run_fingerprint(cfg, &rt.manifest);
 

@@ -5,7 +5,8 @@
 //!   serve              run the federation server over real TCP sessions
 //!   device             run one remote device against a server
 //!   fleet              simulate a 100k-device federation (no sockets)
-//!   figure fig1|fig2|summary   regenerate the paper's figures
+//!   figure fig1|fig2|summary|compare   regenerate the paper's figures
+//!                      (`figures --compare` = the five-strategy Bpp table)
 //!   eval               evaluate a saved checkpoint
 //!   analyze            summarize a run's JSONL metrics log
 //!   inspect-artifacts  list AOT artifacts and their manifests
@@ -49,6 +50,9 @@ USAGE:
                      [--clients K] [--classes C] [--lambdas 0.1,1]
                      [--seed S] [--out DIR]
   fedsrn figure summary [--rounds N] [--out DIR]   # all IID datasets
+  fedsrn figures --compare [--dataset D] [--model M] [--rounds N]
+                 [--clients K] [--seed S] [--out DIR]
+                 # all five strategies at one matched budget -> compare.json
   fedsrn eval --checkpoint FILE [--dataset D] [--samples N] [--seed S]
   fedsrn analyze --run FILE.jsonl [--tail 5]
   fedsrn inspect-artifacts [--dir artifacts]
@@ -136,7 +140,7 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(&args),
         "device" => cmd_device(&args),
         "fleet" => cmd_fleet(&args),
-        "figure" => cmd_figure(&args),
+        "figure" | "figures" => cmd_figure(&args),
         "eval" => cmd_eval(&args),
         "analyze" => cmd_analyze(&args),
         "inspect-artifacts" => cmd_inspect(&args),
@@ -459,12 +463,18 @@ fn save_checkpoint(exp: &Experiment, path: &str) -> Result<()> {
 
 fn cmd_figure(args: &Args) -> Result<()> {
     args.ensure_known_flags(&[
-        "dataset", "model", "rounds", "clients", "classes", "lambdas", "seed", "out",
+        "dataset", "model", "rounds", "clients", "classes", "lambdas", "seed", "out", "compare",
     ])?;
-    let which = args
-        .positional
-        .first()
-        .context("figure needs a name: fig1 | fig2 | summary")?;
+    // `fedsrn figures --compare` and `fedsrn figure compare` are the
+    // same harness.
+    let compare = "compare".to_string();
+    let which = if args.has_flag("compare") {
+        &compare
+    } else {
+        args.positional
+            .first()
+            .context("figure needs a name: fig1 | fig2 | summary | compare")?
+    };
     let dataset = args.flag_or("dataset", "mnist");
     let model = args.flag_or("model", figures::default_model_for(&dataset));
     let seed: u64 = args.flag_parse("seed", 2023u64)?;
@@ -485,6 +495,11 @@ fn cmd_figure(args: &Args) -> Result<()> {
                 .map(|s| s.trim().parse::<f32>().context("parsing --lambdas"))
                 .collect::<Result<_>>()?;
             figures::run_fig2(&dataset, &model, rounds, clients, c, &lambdas, seed, &out)?;
+        }
+        "compare" => {
+            let rounds = args.flag_parse("rounds", 20usize)?;
+            let clients = args.flag_parse("clients", 10usize)?;
+            figures::run_compare(&dataset, &model, rounds, clients, seed, &out)?;
         }
         "summary" => {
             let rounds = args.flag_parse("rounds", 30usize)?;

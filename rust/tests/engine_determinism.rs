@@ -86,6 +86,8 @@ fn every_strategy_is_thread_count_invariant() {
         Algorithm::TopK,
         Algorithm::SignSGD,
         Algorithm::FedAvg,
+        Algorithm::FedMRN,
+        Algorithm::SpaFL,
     ] {
         let mk = |threads| {
             let mut cfg = base_cfg(threads);
@@ -97,6 +99,26 @@ fn every_strategy_is_thread_count_invariant() {
         let (records, model) = run(mk(4));
         assert_records_identical(&ref_records, &records, &format!("{algo:?}"));
         assert_eq!(ref_model, model, "{algo:?}: final model must be bit-identical");
+    }
+}
+
+#[test]
+fn fedmrn_and_spafl_bit_identical_at_1_2_8_threads() {
+    // The two newest strategy families get the full thread ladder the
+    // seed strategies got: sequential reference, then 2 and 8 workers.
+    for algo in [Algorithm::FedMRN, Algorithm::SpaFL] {
+        let mk = |threads| {
+            let mut cfg = base_cfg(threads);
+            cfg.algorithm = algo;
+            cfg.rounds = 3;
+            cfg
+        };
+        let (ref_records, ref_model) = run(mk(1));
+        for threads in [2, 8] {
+            let (records, model) = run(mk(threads));
+            assert_records_identical(&ref_records, &records, &format!("{algo:?} threads={threads}"));
+            assert_eq!(ref_model, model, "{algo:?} threads={threads}: final model differs");
+        }
     }
 }
 
@@ -143,12 +165,15 @@ fn qdelta_downlink_bit_identical_at_1_2_8_threads() {
 
 #[test]
 fn qdelta_every_strategy_is_thread_count_invariant() {
+    // FedMRN is absent by design: config::validate rejects the
+    // fedmrn+qdelta pairing (the noise seed must ride every broadcast).
     for algo in [
         Algorithm::FedPM,
         Algorithm::FedMask,
         Algorithm::TopK,
         Algorithm::SignSGD,
         Algorithm::FedAvg,
+        Algorithm::SpaFL,
     ] {
         let mk = |threads| {
             let mut cfg = base_cfg(threads);

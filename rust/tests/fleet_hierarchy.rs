@@ -9,16 +9,21 @@
 //! dyadic-grid losses, so every f64 accumulator sum is exact and any
 //! fold order or contiguous edge grouping must produce identical bits.
 
-use fedsrn::algos::{EvalModel, FedAvg, MaskMode, MaskStrategy, RoundStats, ServerLogic, SignSgd};
+use fedsrn::algos::{
+    EvalModel, FedAvg, FedMrn, MaskMode, MaskStrategy, RoundStats, ServerLogic, SignSgd, SpaFl,
+};
 use fedsrn::compress::{self, DownlinkMode};
 use fedsrn::config::{Aggregation, Algorithm};
 use fedsrn::fl::{
     run_fleet, staleness_scale, AggKind, AggregateMsg, EdgeAggregator, FleetOpts, RoundComm,
     RoundPlan, UplinkMsg, UplinkPayload,
 };
+use fedsrn::mask::{LayerSlice, LayerSpec};
 use fedsrn::util::{BitVec, Xoshiro256};
 
 const N: usize = 96;
+/// The SpaFL layout below (one dense 12×8 layer) yields 8 column filters.
+const N_FILTERS: usize = 8;
 
 fn plan(round: usize) -> RoundPlan {
     RoundPlan {
@@ -45,6 +50,15 @@ fn make(name: &str) -> Box<dyn ServerLogic> {
     match name {
         "fedpm" => Box::new(MaskStrategy::new(N, 5, MaskMode::Stochastic)),
         "signsgd" => Box::new(SignSgd::new(dense, DownlinkMode::Float32)),
+        "fedmrn" => Box::new(FedMrn::new(N, 5)),
+        "spafl" => {
+            let layers = vec![LayerSlice {
+                index: 0,
+                spec: LayerSpec::Dense { k: N / N_FILTERS, n: N_FILTERS },
+                offset: 0,
+            }];
+            Box::new(SpaFl::new(dense, &layers, DownlinkMode::Float32))
+        }
         _ => Box::new(FedAvg::new(dense, DownlinkMode::Float32)),
     }
 }
@@ -64,6 +78,14 @@ fn synth(kind: AggKind, seed: u64, device: u64) -> UplinkMsg {
         AggKind::DenseSum => {
             UplinkPayload::DenseDelta((0..N).map(|_| dyadic(&mut rng)).collect())
         }
+        AggKind::NoiseMaskSum => {
+            let m = BitVec::from_iter_len((0..N).map(|_| rng.next_f64() < 0.5), N);
+            UplinkPayload::NoiseMask(compress::encode(&m))
+        }
+        AggKind::ThresholdSum => UplinkPayload::Thresholds(
+            // dyadic, non-negative: weight × tau sums stay exact
+            (0..N_FILTERS).map(|_| rng.below(1024) as f32 / 1024.0).collect(),
+        ),
     };
     UplinkMsg {
         weight: (1 + rng.below(16)) as f64,
@@ -136,6 +158,8 @@ fn two_tier_folds_bit_identical_to_flat_for_all_strategies() {
         ("fedpm", AggKind::MaskSum),
         ("signsgd", AggKind::SignTally),
         ("fedavg", AggKind::DenseSum),
+        ("fedmrn", AggKind::NoiseMaskSum),
+        ("spafl", AggKind::ThresholdSum),
     ] {
         let m = 23;
         let ups: Vec<UplinkMsg> = (0..m).map(|d| synth(kind, 0xFEE7, d as u64)).collect();
@@ -196,7 +220,13 @@ fn stale_fold_is_exactly_a_weighted_fresh_fold() {
 
 #[test]
 fn fleet_simulator_is_deterministic_and_edge_invariant() {
-    for algo in [Algorithm::FedPMReg, Algorithm::SignSGD, Algorithm::FedAvg] {
+    for algo in [
+        Algorithm::FedPMReg,
+        Algorithm::SignSGD,
+        Algorithm::FedAvg,
+        Algorithm::FedMRN,
+        Algorithm::SpaFL,
+    ] {
         for aggregation in [Aggregation::Sync, Aggregation::Buffered { k: 256 }] {
             let mut opts = FleetOpts::new(2000, 3);
             opts.algorithm = algo;

@@ -135,9 +135,13 @@ fn arb_f32s(rng: &mut Xoshiro256, unit: bool) -> Vec<f32> {
 }
 
 fn arb_downlink(rng: &mut Xoshiro256) -> (DownlinkMsg, Option<Vec<f32>>) {
-    match rng.below(3) {
+    match rng.below(4) {
         0 => (DownlinkMsg::Theta(arb_f32s(rng, true)), None),
         1 => (DownlinkMsg::RawF32(arb_f32s(rng, false)), None),
+        2 => (
+            DownlinkMsg::NoiseTheta { noise_seed: rng.next_u64(), theta: arb_f32s(rng, true) },
+            None,
+        ),
         _ => {
             let a = arb_f32s(rng, true);
             let b: Vec<f32> = a
@@ -152,9 +156,14 @@ fn arb_downlink(rng: &mut Xoshiro256) -> (DownlinkMsg, Option<Vec<f32>>) {
 }
 
 fn arb_uplink(rng: &mut Xoshiro256) -> UplinkMsg {
-    let payload = match rng.below(3) {
+    let payload = match rng.below(5) {
         0 => UplinkPayload::CodedMask(compress::encode(&arb_mask(rng))),
         1 => UplinkPayload::SignVector(compress::encode(&arb_mask(rng))),
+        2 => UplinkPayload::NoiseMask(compress::encode(&arb_mask(rng))),
+        3 => UplinkPayload::Thresholds(
+            // per-filter pruning thresholds: finite and non-negative
+            arb_f32s(rng, true).into_iter().map(|v| v * 4.0).collect(),
+        ),
         _ => UplinkPayload::DenseDelta(arb_f32s(rng, false)),
     };
     UplinkMsg {
@@ -240,6 +249,149 @@ fn prop_envelopes_reject_truncation_and_corruption() {
         let mut bad = ul_bytes.clone();
         bad[1] = 0xEE;
         assert!(UplinkMsg::from_bytes(&bad).is_err(), "case {case}: kind");
+    });
+}
+
+/// The v2-introduced envelope kinds (noise mask, thresholds, noise
+/// theta) torture-tested on their own: truncation at every random cut
+/// must be a typed error — never a panic — and any single-byte flip
+/// either fails to decode or decodes to a *visibly different* envelope
+/// (reserialization ≠ original bytes). The envelope layer carries no
+/// checksum — the transport frame does — so "silently canonicalized
+/// back to the original" is the one outcome corruption must never have.
+#[test]
+fn prop_new_envelope_kinds_truncation_and_flips_never_pass_silently() {
+    forall(50, |rng, case| {
+        let noise_mask = UplinkMsg {
+            weight: 1.0 + rng.below(1000) as f64,
+            train_loss: rng.next_f32(),
+            trained_round: rng.below(1 << 20),
+            payload: UplinkPayload::NoiseMask(compress::encode(&arb_mask(rng))),
+        };
+        let thresholds = UplinkMsg {
+            weight: 1.0 + rng.below(1000) as f64,
+            train_loss: rng.next_f32(),
+            trained_round: rng.below(1 << 20),
+            payload: UplinkPayload::Thresholds(
+                arb_f32s(rng, true).into_iter().map(|v| v * 4.0).collect(),
+            ),
+        };
+        for msg in [&noise_mask, &thresholds] {
+            let wire = msg.to_bytes();
+            for _ in 0..6 {
+                let cut = rng.below(wire.len() as u64) as usize;
+                let out = std::panic::catch_unwind(|| UplinkMsg::from_bytes(&wire[..cut]));
+                match out {
+                    Ok(res) => assert!(
+                        res.is_err(),
+                        "case {case}: truncated {} decoded at {cut}/{}",
+                        msg.payload.kind_name(),
+                        wire.len()
+                    ),
+                    Err(_) => panic!("case {case}: truncation at {cut} panicked"),
+                }
+            }
+            for _ in 0..8 {
+                let at = rng.below(wire.len() as u64) as usize;
+                let mut bad = wire.clone();
+                bad[at] ^= 1 + rng.below(255) as u8;
+                if let Ok(back) = UplinkMsg::from_bytes(&bad) {
+                    assert_ne!(
+                        back.to_bytes(),
+                        wire,
+                        "case {case}: flip at byte {at} canonicalized back to the original",
+                    );
+                }
+            }
+        }
+        // the downlink's noise-theta kind gets the same torture
+        let dl = DownlinkMsg::NoiseTheta { noise_seed: rng.next_u64(), theta: arb_f32s(rng, true) };
+        let wire = dl.to_bytes();
+        for _ in 0..6 {
+            let cut = rng.below(wire.len() as u64) as usize;
+            let out = std::panic::catch_unwind(|| DownlinkMsg::from_bytes(&wire[..cut]));
+            match out {
+                Ok(res) => assert!(res.is_err(), "case {case}: truncated noise theta at {cut}"),
+                Err(_) => panic!("case {case}: noise-theta truncation at {cut} panicked"),
+            }
+        }
+        for _ in 0..8 {
+            let at = rng.below(wire.len() as u64) as usize;
+            let mut bad = wire.clone();
+            bad[at] ^= 1 + rng.below(255) as u8;
+            if let Ok(back) = DownlinkMsg::from_bytes(&bad) {
+                assert_ne!(back.to_bytes(), wire, "case {case}: noise-theta flip at {at}");
+            }
+        }
+    });
+}
+
+/// Version-skew contract for the v2-introduced kinds: a v1-stamped
+/// envelope can only carry the kinds a v1 peer could have produced.
+/// Restamping a noise-mask, thresholds, or noise-theta envelope as v1
+/// (including the full v1 header splice, which drops the staleness tag)
+/// must be a typed decode error — while the same splice on a v1-era
+/// kind still decodes, as FRESH.
+#[test]
+fn prop_v2_only_kinds_reject_v1_stamp() {
+    // serialized layout: [version, kind, weight:8, loss:4, round:8, …]
+    const V2_HEAD: usize = 22;
+    const V1_HEAD: usize = 14;
+    let v1_splice = |wire: &[u8]| -> Vec<u8> {
+        let mut v1 = wire[..V1_HEAD].to_vec();
+        v1[0] = 1;
+        v1.extend_from_slice(&wire[V2_HEAD..]);
+        v1
+    };
+    forall(40, |rng, case| {
+        let coded = compress::encode(&arb_mask(rng));
+        for payload in [
+            UplinkPayload::NoiseMask(coded.clone()),
+            UplinkPayload::Thresholds(
+                arb_f32s(rng, true).into_iter().map(|v| v * 4.0).collect(),
+            ),
+        ] {
+            let msg = UplinkMsg {
+                weight: 1.0 + rng.below(1000) as f64,
+                train_loss: rng.next_f32(),
+                trained_round: rng.below(1 << 20),
+                payload,
+            };
+            let wire = msg.to_bytes();
+            // a bare version restamp (header otherwise intact)…
+            let mut restamped = wire.clone();
+            restamped[0] = 1;
+            assert!(
+                UplinkMsg::from_bytes(&restamped).is_err(),
+                "case {case}: v1 restamp of {} decoded",
+                msg.payload.kind_name()
+            );
+            // …and the honest v1 header splice must both be rejected
+            assert!(
+                UplinkMsg::from_bytes(&v1_splice(&wire)).is_err(),
+                "case {case}: v1 splice of {} decoded",
+                msg.payload.kind_name()
+            );
+        }
+        // contrast: the identical splice on a v1-era kind still decodes,
+        // with the staleness tag defaulted to FRESH
+        let old = UplinkMsg {
+            weight: 2.0,
+            train_loss: 0.5,
+            trained_round: 7,
+            payload: UplinkPayload::CodedMask(coded.clone()),
+        };
+        let back = UplinkMsg::from_bytes(&v1_splice(&old.to_bytes())).unwrap();
+        assert_eq!(back.trained_round, UplinkMsg::FRESH, "case {case}");
+        // downlink side: a v1-stamped noise-theta envelope is an error
+        let dl =
+            DownlinkMsg::NoiseTheta { noise_seed: rng.next_u64(), theta: arb_f32s(rng, true) };
+        let mut bad = dl.to_bytes();
+        bad[0] = 1;
+        assert!(
+            DownlinkMsg::from_bytes(&bad).is_err(),
+            "case {case}: v1-stamped noise theta decoded"
+        );
     });
 }
 

@@ -91,7 +91,7 @@ fn model_bits(server: &dyn ServerLogic) -> Vec<u32> {
 /// Reference: the in-process engine path every experiment uses.
 fn run_in_process(cfg: &ExperimentConfig) -> Outcome {
     let (rt, train, mut clients) = setup(cfg);
-    let mut server = build_server(cfg, rt.manifest.n_params, rt.weights());
+    let mut server = build_server(cfg, rt.manifest.n_params, rt.weights(), &rt.manifest.layers);
     let engine = RoundEngine::new(1);
     let mut fleet_state: Option<Vec<f32>> = None;
     let mut out = Outcome {
@@ -134,7 +134,7 @@ fn run_in_process(cfg: &ExperimentConfig) -> Outcome {
 /// is re-parsed (with full validation) before use.
 fn run_over_wire_bytes(cfg: &ExperimentConfig) -> Outcome {
     let (rt, train, mut clients) = setup(cfg);
-    let mut server = build_server(cfg, rt.manifest.n_params, rt.weights());
+    let mut server = build_server(cfg, rt.manifest.n_params, rt.weights(), &rt.manifest.layers);
     // the device side's own reconstruction of the broadcast state
     let mut device_state: Option<Vec<f32>> = None;
     let mut out = Outcome {
@@ -196,19 +196,27 @@ fn run_over_wire_bytes(cfg: &ExperimentConfig) -> Outcome {
 
 #[test]
 fn wire_bytes_round_is_bit_identical_to_in_process() {
-    for algo in [Algorithm::FedPMReg, Algorithm::SignSGD, Algorithm::FedAvg] {
+    // FedMRN only rides float32 downlinks (the noise seed must be on
+    // every broadcast — config::validate rejects the qdelta pairing),
+    // so it gets a single-mode entry while the rest cover both modes.
+    let mut pairs: Vec<(Algorithm, DownlinkMode)> = Vec::new();
+    for algo in [Algorithm::FedPMReg, Algorithm::SignSGD, Algorithm::FedAvg, Algorithm::SpaFL] {
         for downlink in [DownlinkMode::Float32, DownlinkMode::QDelta { bits: 8 }] {
-            let cfg = config(algo, downlink);
-            let reference = run_in_process(&cfg);
-            let wired = run_over_wire_bytes(&cfg);
-            assert_eq!(
-                reference, wired,
-                "{algo:?}/{}: a round driven purely over serialized bytes \
-                 must match the in-process engine bit-for-bit",
-                downlink.name()
-            );
-            assert!(reference.ul_bits > 0 && reference.dl_bits > 0);
+            pairs.push((algo, downlink));
         }
+    }
+    pairs.push((Algorithm::FedMRN, DownlinkMode::Float32));
+    for (algo, downlink) in pairs {
+        let cfg = config(algo, downlink);
+        let reference = run_in_process(&cfg);
+        let wired = run_over_wire_bytes(&cfg);
+        assert_eq!(
+            reference, wired,
+            "{algo:?}/{}: a round driven purely over serialized bytes \
+             must match the in-process engine bit-for-bit",
+            downlink.name()
+        );
+        assert!(reference.ul_bits > 0 && reference.dl_bits > 0);
     }
 }
 
@@ -218,7 +226,7 @@ fn tampered_wire_bytes_never_fold() {
     // the aggregator — the server's fold state stays clean.
     let cfg = config(Algorithm::FedPMReg, DownlinkMode::Float32);
     let (rt, train, mut clients) = setup(&cfg);
-    let mut server = build_server(&cfg, rt.manifest.n_params, rt.weights());
+    let mut server = build_server(&cfg, rt.manifest.n_params, rt.weights(), &rt.manifest.layers);
     let plan = plan_for(&cfg, 1);
     let dl = DownlinkMsg::from_bytes(&server.begin_round(&plan).unwrap().to_bytes()).unwrap();
     let task = server.client_task();

@@ -115,32 +115,39 @@ fn assert_bit_identical(
 
 #[test]
 fn loopback_serve_device_bit_identical_to_in_process() {
-    for algo in [Algorithm::FedPMReg, Algorithm::SignSGD, Algorithm::FedAvg] {
+    // FedMRN is float32-downlink only (the noise seed rides every
+    // broadcast; config::validate rejects the qdelta pairing), so it
+    // contributes one pair while the others cover both wire formats.
+    let mut pairs: Vec<(Algorithm, DownlinkMode)> = Vec::new();
+    for algo in [Algorithm::FedPMReg, Algorithm::SignSGD, Algorithm::FedAvg, Algorithm::SpaFL] {
         for downlink in [DownlinkMode::Float32, DownlinkMode::QDelta { bits: 8 }] {
-            let cfg = config(algo, downlink);
-            let label = format!("{algo:?}/{}", downlink.name());
-            let reference = run_in_process(&cfg);
-            let (net_sum, net_recs, stats, reports) = run_networked(&cfg);
-            assert_bit_identical(&label, &reference, &net_sum, &net_recs);
-            // a clean loopback run has no degraded-path events
-            assert_eq!(stats.stragglers, 0, "{label}");
-            assert_eq!(stats.missing, 0, "{label}");
-            assert_eq!(stats.reconnects, 0, "{label}");
-            // the transport moved at least the envelope bytes, plus
-            // frame headers/checksums/handshakes
-            let envelope_bytes =
-                ((net_sum.total_ul_mb + net_sum.total_dl_mb) * 1e6) as u64;
-            assert!(
-                stats.tx_bytes + stats.rx_bytes > envelope_bytes,
-                "{label}: framed bytes {} must exceed envelope bytes {envelope_bytes}",
-                stats.tx_bytes + stats.rx_bytes
-            );
-            // every device saw every broadcast it was owed and trained
-            for (id, rep) in reports.iter().enumerate() {
-                assert_eq!(rep.trained, cfg.rounds, "{label}: device {id} trained");
-                assert_eq!(rep.dropped, 0, "{label}: device {id} dropped");
-                assert_eq!(rep.reconnects, 0, "{label}: device {id} reconnects");
-            }
+            pairs.push((algo, downlink));
+        }
+    }
+    pairs.push((Algorithm::FedMRN, DownlinkMode::Float32));
+    for (algo, downlink) in pairs {
+        let cfg = config(algo, downlink);
+        let label = format!("{algo:?}/{}", downlink.name());
+        let reference = run_in_process(&cfg);
+        let (net_sum, net_recs, stats, reports) = run_networked(&cfg);
+        assert_bit_identical(&label, &reference, &net_sum, &net_recs);
+        // a clean loopback run has no degraded-path events
+        assert_eq!(stats.stragglers, 0, "{label}");
+        assert_eq!(stats.missing, 0, "{label}");
+        assert_eq!(stats.reconnects, 0, "{label}");
+        // the transport moved at least the envelope bytes, plus
+        // frame headers/checksums/handshakes
+        let envelope_bytes = ((net_sum.total_ul_mb + net_sum.total_dl_mb) * 1e6) as u64;
+        assert!(
+            stats.tx_bytes + stats.rx_bytes > envelope_bytes,
+            "{label}: framed bytes {} must exceed envelope bytes {envelope_bytes}",
+            stats.tx_bytes + stats.rx_bytes
+        );
+        // every device saw every broadcast it was owed and trained
+        for (id, rep) in reports.iter().enumerate() {
+            assert_eq!(rep.trained, cfg.rounds, "{label}: device {id} trained");
+            assert_eq!(rep.dropped, 0, "{label}: device {id} dropped");
+            assert_eq!(rep.reconnects, 0, "{label}: device {id} reconnects");
         }
     }
 }
@@ -222,6 +229,8 @@ fn loopback_noniid_dropout_bit_identical_per_strategy() {
         (Algorithm::FedPMReg, DownlinkMode::QDelta { bits: 8 }),
         (Algorithm::SignSGD, DownlinkMode::Float32),
         (Algorithm::FedAvg, DownlinkMode::QDelta { bits: 8 }),
+        (Algorithm::FedMRN, DownlinkMode::Float32),
+        (Algorithm::SpaFL, DownlinkMode::QDelta { bits: 8 }),
     ] {
         let mut cfg = config(algo, downlink);
         cfg.partition = Partition::NonIid { c: 2 };
